@@ -1,0 +1,60 @@
+//! A5 permutation-composition state tracking (paper Fig. 1a).
+//!
+//!   cargo run --release --example a5_tracking [steps] [models] [depths]
+//!
+//! Trains each (model, depth) on the A5 word problem and reports accuracy;
+//! the paper's claim: KLA solves it at depth 1-2 where linear mixers
+//! (mamba/gla) and attention (gpt) need depth growing with length.
+
+use anyhow::Result;
+use kla::config::TrainConfig;
+use kla::data::task_by_name;
+use kla::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(400);
+    let models: Vec<String> = args
+        .get(2)
+        .map(|s| s.split(',').map(|x| x.to_string()).collect())
+        .unwrap_or_else(|| vec!["kla".into(), "mamba".into(), "gla".into(),
+                                "gpt".into()]);
+    let depths: Vec<usize> = args
+        .get(3)
+        .map(|s| s.split(',').map(|x| x.parse().unwrap()).collect())
+        .unwrap_or_else(|| vec![1, 2]);
+
+    let rt = Runtime::discover()?;
+    let task = task_by_name("a5").unwrap();
+    println!("A5 word problem (running products in the alternating group)");
+    println!("solved = accuracy >= 0.9 (paper protocol, G.1)\n");
+    println!("{:8} {}", "model",
+             depths.iter().map(|d| format!("  depth {d:>2}"))
+                 .collect::<String>());
+    for model in &models {
+        let mut row = format!("{model:8}");
+        for &depth in &depths {
+            let base = format!("a5_{model}_l{depth}");
+            if rt.meta(&format!("{base}_train")).is_err() {
+                row.push_str("      (n/a)");
+                continue;
+            }
+            let cfg = TrainConfig {
+                artifact: base,
+                steps,
+                seed: 0,
+                eval_every: 0,
+                eval_batches: 6,
+                log_every: steps,
+                checkpoint_dir: None,
+                target_accuracy: None,
+            };
+            let out = kla::train::run(&rt, &cfg, task.as_ref())?;
+            let solved = if out.accuracy() >= 0.9 { "*" } else { " " };
+            row.push_str(&format!("  {:>7.3}{solved}", out.accuracy()));
+        }
+        println!("{row}");
+    }
+    println!("\n(* = solved; deeper baselines need `make artifacts-full`)");
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! MAD synthetic suite (paper Fig. 5a) for one or more mixers.
+//!
+//!   cargo run --release --example mad_suite [steps] [models,comma,sep]
+//!
+//! Default: 150 steps, models "kla,gla".  Models with default-manifest
+//! artifacts: kla, kla_plus, mamba, gla, gdn, kla_nonoise, kla_noou.
+
+use anyhow::Result;
+use kla::config::TrainConfig;
+use kla::data::{task_by_name, MAD_TASKS};
+use kla::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(150);
+    let models: Vec<String> = args
+        .get(2)
+        .map(|s| s.split(',').map(|x| x.to_string()).collect())
+        .unwrap_or_else(|| vec!["kla".into(), "gla".into()]);
+
+    let rt = Runtime::discover()?;
+    println!("MAD suite: {} steps/task, models {models:?}", steps);
+    println!("{:16} {}", "task",
+             models.iter().map(|m| format!("{m:>12}"))
+                 .collect::<String>());
+    let mut averages = vec![0.0f64; models.len()];
+    for task_name in MAD_TASKS {
+        let task = task_by_name(task_name).unwrap();
+        let mut row = format!("{task_name:16}");
+        for (mi, model) in models.iter().enumerate() {
+            let cfg = TrainConfig {
+                artifact: format!("mad_{model}"),
+                steps,
+                seed: 0,
+                eval_every: 0,
+                eval_batches: 6,
+                log_every: steps,
+                checkpoint_dir: None,
+                target_accuracy: None,
+            };
+            let out = kla::train::run(&rt, &cfg, task.as_ref())?;
+            row.push_str(&format!("{:>12.4}", out.accuracy()));
+            averages[mi] += out.accuracy() / MAD_TASKS.len() as f64;
+        }
+        println!("{row}");
+    }
+    let mut avg_row = format!("{:16}", "AVERAGE");
+    for a in &averages {
+        avg_row.push_str(&format!("{a:>12.4}"));
+    }
+    println!("{avg_row}");
+    Ok(())
+}

@@ -1,0 +1,57 @@
+// instrumented pass-level timing of the chunked scan
+use kla::kla::{random_inputs, random_params, FilterParams, FilterInputs};
+use kla::kla::mobius::Mobius;
+use kla::util::{Pcg64, Timer};
+
+fn main() {
+    let (t_len, n, d) = (8192usize, 8usize, 64usize);
+    let s = n * d;
+    let mut rng = Pcg64::seeded(1);
+    let p: FilterParams = random_params(&mut rng, n, d);
+    let inp: FilterInputs = random_inputs(&mut rng, t_len, n, d);
+    let threads = 8;
+    let chunk_len = t_len.div_ceil(threads);
+
+    // pass 1 style loop, single chunk on main thread (FTZ off)
+    let tm = Timer::start();
+    let mut mob = vec![Mobius::IDENTITY; s];
+    for t in 0..chunk_len {
+        let k_t = &inp.k[t * n..(t + 1) * n];
+        let lv_t = &inp.lam_v[t * d..(t + 1) * d];
+        for ni in 0..n {
+            let k2 = k_t[ni] * k_t[ni];
+            for di in 0..d {
+                let idx = ni * d + di;
+                let m = Mobius::kla_step(p.abar[idx], p.pbar[idx], k2 * lv_t[di]);
+                mob[idx] = m.compose(&mob[idx]);
+            }
+        }
+    }
+    println!("compose pass ({chunk_len} steps): {:.1} ms", tm.elapsed_ms());
+    // how big do entries get?
+    let mx = mob.iter().fold(0f32, |a, m| a.max(m.a.abs()).max(m.d.abs()));
+    let mn = mob.iter().fold(f32::MAX, |a, m| a.min(m.a.abs().max(m.b.abs()).max(m.c.abs()).max(m.d.abs())));
+    println!("entry magnitude range after {chunk_len} composes: {mn:e} .. {mx:e}");
+
+    // replay-style pass
+    let tm = Timer::start();
+    let mut lam = vec![0.0f32; chunk_len * s];
+    let mut cur = p.lam0.clone();
+    for t in 0..chunk_len {
+        let k_t = &inp.k[t * n..(t + 1) * n];
+        let lv_t = &inp.lam_v[t * d..(t + 1) * d];
+        for ni in 0..n {
+            let k2 = k_t[ni] * k_t[ni];
+            for di in 0..d {
+                let idx = ni * d + di;
+                let abar = p.abar[idx];
+                let rho = 1.0 / (abar * abar + p.pbar[idx] * cur[idx]);
+                let l = (rho * cur[idx] + k2 * lv_t[di]).clamp(1e-6, 1e8);
+                lam[t * s + idx] = l;
+                cur[idx] = l;
+            }
+        }
+    }
+    println!("replay pass ({chunk_len} steps): {:.1} ms", tm.elapsed_ms());
+    std::hint::black_box(&lam);
+}

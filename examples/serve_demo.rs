@@ -1,0 +1,63 @@
+//! Serving demo: boot the belief-state server, fire concurrent requests,
+//! print per-request latency + the posterior-uncertainty signal, then
+//! shut down and report engine stats.
+//!
+//!   cargo run --release --example serve_demo [n_requests]
+
+use anyhow::Result;
+use kla::config::ServeConfig;
+use kla::runtime::Runtime;
+use kla::serve::{serve, Client};
+
+fn main() -> Result<()> {
+    let n_requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16);
+
+    let rt = Runtime::discover()?;
+    let init = rt.load("lm_kla_init")?;
+    let params = init.run(&[])?;
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        artifact: "serve_kla_b8".into(),
+        max_new_tokens: 8,
+        batch_window_us: 300,
+        ..Default::default()
+    };
+    let handle = serve(rt.dir().to_path_buf(), cfg.artifact.clone(),
+                       params, &cfg)?;
+    let addr = handle.addr.clone();
+    println!("server up on {addr}; sending {n_requests} concurrent \
+              requests (8 slots, continuous batching)\n");
+
+    let mut joins = Vec::new();
+    for i in 0..n_requests {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || -> Result<String> {
+            let mut c = Client::connect(&addr)?;
+            let prompt: Vec<i32> =
+                (0..4 + i % 5).map(|j| ((i * 7 + j) % 200) as i32).collect();
+            let r = c.request(&prompt, 8)?;
+            Ok(format!(
+                "req {i:>2}: {} tokens, total {:>7.1} ms, uncertainty {:.4}",
+                r.req("tokens")?.as_arr()?.len(),
+                r.req("total_ms")?.as_f64()?,
+                r.req("uncertainty")?.as_f64()?
+            ))
+        }));
+    }
+    for j in joins {
+        println!("{}", j.join().unwrap()?);
+    }
+
+    let stats = handle.stop()?;
+    println!("\nengine: {} requests, {} steps, {} tokens out",
+             stats.requests, stats.steps, stats.tokens_out);
+    println!("throughput {:.1} tok/s, mean step {:.2} ms, mean batch \
+              occupancy {:.2}",
+             stats.tokens_per_sec(), stats.mean_step_ms(),
+             stats.batch_occupancy.iter().sum::<f64>()
+                 / stats.batch_occupancy.len().max(1) as f64);
+    Ok(())
+}

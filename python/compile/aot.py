@@ -1,0 +1,254 @@
+"""AOT bridge: lower every manifest spec to HLO **text** + meta.json.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.  Artifacts are skipped when the output already
+exists and `--force` is not given, so re-running the manifest is cheap.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .models.common import flatten_params
+from .models.lm import init_lm
+from .models.decode import decode_init_state
+from .specs import ArtifactSpec, manifest
+from .train_step import (build_decode, build_eval_step, build_logits,
+                         build_score_step, build_train_step, build_variance)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True is ESSENTIAL: the default HLO printer
+    # elides big literals as `constant({...})`, which the text parser then
+    # refills with garbage — silently corrupting any weights baked into the
+    # graph (the init artifacts).  See integration_runtime.rs history.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _arr_meta(name, x):
+    return {"name": name, "shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+def _tie_params(x, params):
+    """Keep every parameter alive in the lowered module.
+
+    Roles that do not touch some parameters (e.g. `variance` never reads the
+    LM head) would otherwise get those parameters PRUNED from the HLO entry
+    signature, breaking the fixed ABI the Rust side feeds.  Adding a
+    zero-scaled sum ties them in without changing values.
+    """
+    z = sum(jnp.sum(p) for p in params) * 0.0
+    return x + z.astype(x.dtype)
+
+
+def build_role(spec: ArtifactSpec, role: str):
+    """Returns (fn, example_args, input_meta, output_meta, extra_meta)."""
+    cfg, B, T = spec.model, spec.batch, spec.seq
+    template = init_lm(cfg, seed=0)
+    flat = flatten_params(template)
+    names = [n for n, _ in flat]
+    pspecs = [_sds(a.shape) for _, a in flat]
+    # every role's leading inputs are the flattened params (group tag lets
+    # the Rust side count/slice them uniformly across roles)
+    pmeta = [{**_arr_meta(n, a), "group": "params"} for n, a in flat]
+    tok = _sds((B, T), jnp.int32)
+    tgt = _sds((B, T), jnp.int32)
+    msk = _sds((B, T), jnp.float32)
+    tok_meta = {"name": "tokens", "shape": [B, T], "dtype": "int32"}
+    tgt_meta = {"name": "targets", "shape": [B, T], "dtype": "int32"}
+    msk_meta = {"name": "mask", "shape": [B, T], "dtype": "float32"}
+
+    if role == "init":
+        def fn():
+            return tuple(a for _, a in flatten_params(init_lm(cfg, seed=0)))
+        return fn, [], [], pmeta, {}
+
+    if role == "train":
+        step_fn = build_train_step(cfg, spec.opt, template)
+
+        def fn(*args):
+            n = len(pspecs)
+            p, m, v = args[:n], args[n:2 * n], args[2 * n:3 * n]
+            step, tokens, targets, mask = args[3 * n:]
+            loss, p2, m2, v2 = step_fn(list(p), list(m), list(v), step,
+                                       tokens, targets, mask)
+            return (loss,) + tuple(p2) + tuple(m2) + tuple(v2)
+
+        ex = pspecs * 3 + [_sds(()), tok, tgt, msk]
+        imeta = ([{**d, "group": "params"} for d in pmeta]
+                 + [{**d, "group": "opt_m"} for d in pmeta]
+                 + [{**d, "group": "opt_v"} for d in pmeta]
+                 + [{"name": "step", "shape": [], "dtype": "float32"},
+                    {"name": "tokens", "shape": [B, T], "dtype": "int32"},
+                    {"name": "targets", "shape": [B, T], "dtype": "int32"},
+                    {"name": "mask", "shape": [B, T], "dtype": "float32"}])
+        ometa = ([{"name": "loss", "shape": [], "dtype": "float32"}]
+                 + [{**d, "group": "params"} for d in pmeta]
+                 + [{**d, "group": "opt_m"} for d in pmeta]
+                 + [{**d, "group": "opt_v"} for d in pmeta])
+        return fn, ex, imeta, ometa, {}
+
+    if role == "eval":
+        step_fn = build_eval_step(cfg, template)
+
+        def fn(*args):
+            p = list(args[:len(pspecs)])
+            tokens, targets, mask = args[len(pspecs):]
+            out = step_fn(p, tokens, targets, mask)
+            return (_tie_params(out[0], p),) + tuple(out[1:])
+
+        ex = pspecs + [tok, tgt, msk]
+        imeta = pmeta + [tok_meta, tgt_meta, msk_meta]
+        ometa = [{"name": k, "shape": [], "dtype": "float32"}
+                 for k in ("loss_sum", "correct", "count")]
+        return fn, ex, imeta, ometa, {}
+
+    if role == "score":
+        step_fn = build_score_step(cfg, template)
+
+        def fn(*args):
+            p = list(args[:len(pspecs)])
+            tokens, targets, mask = args[len(pspecs):]
+            return (_tie_params(step_fn(p, tokens, targets, mask), p),)
+
+        ex = pspecs + [tok, tgt, msk]
+        imeta = pmeta + [tok_meta, tgt_meta, msk_meta]
+        ometa = [{"name": "seq_logprob", "shape": [B], "dtype": "float32"}]
+        return fn, ex, imeta, ometa, {}
+
+    if role == "logits":
+        step_fn = build_logits(cfg, template)
+
+        def fn(*args):
+            p = list(args[:len(pspecs)])
+            return (_tie_params(step_fn(p, args[len(pspecs)]), p),)
+
+        ex = pspecs + [tok]
+        imeta = pmeta + [tok_meta]
+        ometa = [{"name": "logits", "shape": [B, T, cfg.vocab],
+                  "dtype": "float32"}]
+        return fn, ex, imeta, ometa, {}
+
+    if role == "variance":
+        step_fn = build_variance(cfg, template)
+
+        def fn(*args):
+            p = list(args[:len(pspecs)])
+            return (_tie_params(step_fn(p, args[len(pspecs)]), p),)
+
+        ex = pspecs + [tok]
+        imeta = pmeta + [tok_meta]
+        ometa = [{"name": "y_var", "shape": [B, T], "dtype": "float32"}]
+        return fn, ex, imeta, ometa, {}
+
+    if role == "decode":
+        step_fn = build_decode(cfg, template)
+        conv0, lam0, eta0 = decode_init_state(cfg, template, B)
+
+        def fn(*args):
+            n = len(pspecs)
+            p = list(args[:n])
+            token, conv, lam, eta = args[n:]
+            out = step_fn(p, token, conv, lam, eta)
+            return (_tie_params(out[0], p),) + tuple(out[1:])
+
+        ex = pspecs + [_sds((B,), jnp.int32), _sds(conv0.shape),
+                       _sds(lam0.shape), _sds(eta0.shape)]
+        imeta = pmeta + [{"name": "token", "shape": [B], "dtype": "int32"}]
+        smeta = [{"name": "conv", "shape": list(conv0.shape), "dtype": "float32"},
+                 {"name": "lam", "shape": list(lam0.shape), "dtype": "float32"},
+                 {"name": "eta", "shape": list(eta0.shape), "dtype": "float32"}]
+        imeta = imeta + smeta
+        ometa = ([{"name": "logits", "shape": [B, cfg.vocab],
+                   "dtype": "float32"}] + smeta)
+        return fn, ex, imeta, ometa, {"state": smeta}
+
+    raise ValueError(f"unknown role {role!r}")
+
+
+def emit(spec: ArtifactSpec, role: str, out_dir: str, force: bool) -> str:
+    name = spec.artifact_name(role)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    meta_path = os.path.join(out_dir, f"{name}.meta.json")
+    if not force and os.path.exists(hlo_path) and os.path.exists(meta_path):
+        return "cached"
+    t0 = time.time()
+    fn, ex_args, imeta, ometa, extra = build_role(spec, role)
+    lowered = jax.jit(fn).lower(*ex_args)
+    text = to_hlo_text(lowered)
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    meta = {
+        "name": name,
+        "family": spec.family,
+        "tag": spec.tag,
+        "role": role,
+        "model": spec.model.to_dict(),
+        "opt": spec.opt.to_dict(),
+        "batch": spec.batch,
+        "seq": spec.seq,
+        "inputs": imeta,
+        "outputs": ometa,
+        **extra,
+    }
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=1)
+    return f"{time.time() - t0:.1f}s, {len(text) // 1024} KiB"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--manifest", default="default")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact-name prefixes")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    specs = manifest(args.manifest)
+    names = []
+    for spec in specs:
+        for role in spec.roles:
+            name = spec.artifact_name(role)
+            if args.only and not any(name.startswith(p)
+                                     for p in args.only.split(",")):
+                continue
+            status = emit(spec, role, args.out, args.force)
+            names.append(name)
+            print(f"[aot] {name:40s} {status}", flush=True)
+    # manifest index for the Rust registry
+    idx_path = os.path.join(args.out, "manifest.json")
+    existing = []
+    if os.path.exists(idx_path):
+        with open(idx_path) as f:
+            existing = json.load(f)["artifacts"]
+    merged = sorted(set(existing) | set(names))
+    with open(idx_path, "w") as f:
+        json.dump({"artifacts": merged}, f, indent=1)
+    print(f"[aot] manifest: {len(merged)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

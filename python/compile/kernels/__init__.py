@@ -1,0 +1,30 @@
+"""L1 kernels: the KLA information filter in three interchangeable forms.
+
+- `kla_filter_ref*`  — sequential oracle (ref.py), the correctness signal;
+- `kla_filter_scan`  — time-parallel associative scans (scan.py),
+                       differentiable, used by training artifacts;
+- `kla_filter_pallas`— chunked Pallas kernel (pallas_kla.py), interpret-mode
+                       on CPU, custom-VJP'd through the scan form.
+
+`kla_filter(..., impl=...)` dispatches between them so L2 model code is
+implementation-agnostic.
+"""
+
+from .ref import (kla_filter_ref, kla_filter_ref_batched,
+                  kla_filter_ref_python, kla_posterior_moments,
+                  LAM_MIN, LAM_MAX)
+from .scan import kla_filter_scan, mobius_prefix_scan, affine_prefix_scan
+from .pallas_kla import kla_filter_pallas
+from .ou import constrain, discretise, discretise_raw
+
+_IMPLS = {
+    "ref": kla_filter_ref_batched,
+    "scan": kla_filter_scan,
+    "pallas": kla_filter_pallas,
+}
+
+
+def kla_filter(k, q, v, lam_v, abar, pbar, lam0, eta0, *, impl: str = "scan"):
+    """Batched KLA filter.  k, q: (B,T,N); v, lam_v: (B,T,D);
+    abar/pbar/lam0/eta0: (N,D).  Returns lam, eta: (B,T,N,D), y: (B,T,D)."""
+    return _IMPLS[impl](k, q, v, lam_v, abar, pbar, lam0, eta0)

@@ -1,0 +1,70 @@
+"""Ornstein-Uhlenbeck prior and its exact discretisation (paper Eq. 7-8).
+
+The continuous-time prior is dz = -a z dt + p dW.  Exact discretisation over
+a step of size dt gives the Gaussian transition
+
+    z_t | z_{t-1} ~ N( abar * z_{t-1},  pbar ),
+    abar = exp(-a dt),      pbar = p^2 / (2a) * (1 - exp(-2 a dt)).
+
+`abar`/`pbar` are coupled through the same (a, dt): the decay rate that
+controls forgetting also controls how much process noise accumulates between
+tokens -- the "multi-channel specialisation" of Section 4.1.
+
+Raw (unconstrained) parameters are mapped to their constrained domains here
+so every model variant shares one parameterisation:
+
+    a  = softplus(a_raw) + A_MIN          (> 0, mean reversion rate)
+    p  = softplus(p_raw)                  (>= 0, diffusion scale)
+    dt = DT_LO + sigmoid(dt_raw) * (DT_HI - DT_LO)   (paper: [0.001, 0.1])
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.nn import softplus, sigmoid
+
+A_MIN = 1e-4
+DT_LO, DT_HI = 1e-3, 1e-1
+PBAR_FLOOR = 1e-8
+
+
+def constrain(a_raw: jnp.ndarray, p_raw: jnp.ndarray, dt_raw: jnp.ndarray):
+    """Map unconstrained parameters to (a, p, dt) in their valid domains."""
+    a = softplus(a_raw) + A_MIN
+    p = softplus(p_raw)
+    dt = DT_LO + sigmoid(dt_raw) * (DT_HI - DT_LO)
+    return a, p, dt
+
+
+def discretise(a: jnp.ndarray, p: jnp.ndarray, dt: jnp.ndarray):
+    """Exact OU discretisation (Eq. 8).  Shapes broadcast elementwise.
+
+    Returns (abar, pbar) with abar in (0, 1) and pbar >= PBAR_FLOOR when
+    p > 0 (the floor keeps the Moebius recursion well-conditioned; with
+    pbar == 0 exactly the recursion degenerates to the linear special case
+    studied in the Fig. 6b ablation).
+    """
+    abar = jnp.exp(-a * dt)
+    pbar = p * p / (2.0 * a) * (1.0 - jnp.exp(-2.0 * a * dt))
+    return abar, pbar
+
+
+def discretise_raw(a_raw, p_raw, dt_raw, *, process_noise: bool = True,
+                   ou_exact: bool = True):
+    """Full raw->(abar, pbar) pipeline with the two paper ablation switches.
+
+    process_noise=False  -> pbar = 0 (Fig. 6b / Table 6: collapses the
+                            Moebius recursion to a fixed-gate linear update).
+    ou_exact=False       -> naive Euler discretisation abar = 1 - a*dt,
+                            pbar = p^2 * dt (Fig. 3b: 'no OU discretisation'
+                            ablation; less stable at depth).
+    """
+    a, p, dt = constrain(a_raw, p_raw, dt_raw)
+    if ou_exact:
+        abar, pbar = discretise(a, p, dt)
+    else:
+        abar = jnp.clip(1.0 - a * dt, 1e-4, 1.0)
+        pbar = p * p * dt
+    if not process_noise:
+        pbar = jnp.zeros_like(pbar)
+    return abar, pbar

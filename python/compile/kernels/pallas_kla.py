@@ -1,0 +1,138 @@
+"""L1: the KLA Moebius/affine filter as a Pallas kernel (chunked scan).
+
+Hardware adaptation (DESIGN.md §4).  The paper's CUDA kernel keeps the lifted
+scan states in SRAM and never materialises them in HBM.  The TPU-shaped
+equivalent implemented here:
+
+  * grid over the batch dimension — each program owns one sequence and holds
+    its (T, N) / (T, D) tiles plus the running (lam, eta) carry in VMEM;
+  * a two-level **chunked scan** inside the kernel: time is processed in
+    chunks of CHUNK steps; within a chunk the recurrence runs as an unrolled
+    elementwise FMA chain (VPU work), while only the (lam, eta) carry crosses
+    chunk boundaries.  On a real TPU the chunk loop would become a second
+    grid dimension with the carry in VMEM scratch and double-buffered HBM
+    loads; on the CPU backend (interpret=True — Mosaic custom-calls cannot
+    execute on CPU PJRT) the single-program-per-sequence form is equivalent
+    and keeps the lowered HLO compact.
+
+The kernel only materialises what the layer actually reads out downstream:
+lam and eta for every step (needed for the readout and the variance path).
+
+Autodiff: Pallas kernels have no VJP; `kla_filter_pallas` is wrapped in
+`jax.custom_vjp` whose backward pass rematerialises through the
+differentiable associative-scan formulation (`scan.py`).  Training
+artifacts may therefore call the Pallas forward directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import LAM_MIN, LAM_MAX
+from .scan import kla_filter_scan
+
+CHUNK = 16  # intra-chunk unroll length (VMEM-resident FMA chain)
+
+
+def _kla_kernel(k_ref, v_ref, lv_ref, abar_ref, pbar_ref, lam0_ref, eta0_ref,
+                lam_out_ref, eta_out_ref, *, seq_len: int, chunk: int):
+    """One program = one sequence.  Refs are VMEM blocks:
+    k: (T, N); v, lv: (T, D); abar/pbar/lam0/eta0: (N, D);
+    outputs lam, eta: (T, N, D).
+    """
+    abar = abar_ref[...]
+    pbar = pbar_ref[...]
+    abar2 = abar * abar
+    n_chunks = seq_len // chunk
+
+    def chunk_body(c, carry):
+        lam_c, eta_c = carry  # (N, D) each
+
+        def step_body(i, inner):
+            lam_p, eta_p = inner
+            t = c * chunk + i
+            k_t = k_ref[0, t, :]                    # (N,)
+            v_t = v_ref[0, t, :]                    # (D,)
+            lv_t = lv_ref[0, t, :]                  # (D,)
+            phi = (k_t[:, None] * k_t[:, None]) * lv_t[None, :]
+            rho = 1.0 / (abar2 + pbar * lam_p)
+            lam_t = jnp.clip(rho * lam_p + phi, LAM_MIN, LAM_MAX)
+            eta_t = (rho * abar) * eta_p + k_t[:, None] * (lv_t * v_t)[None, :]
+            lam_out_ref[0, t, :, :] = lam_t
+            eta_out_ref[0, t, :, :] = eta_t
+            return lam_t, eta_t
+
+        return jax.lax.fori_loop(0, chunk, step_body, (lam_c, eta_c))
+
+    lam0 = lam0_ref[...]
+    eta0 = eta0_ref[...]
+    jax.lax.fori_loop(0, n_chunks, chunk_body, (lam0, eta0))
+
+
+def _pallas_filter_raw(k, v, lam_v, abar, pbar, lam0, eta0):
+    """Batched Pallas call.  k: (B, T, N); v, lam_v: (B, T, D);
+    abar/pbar/lam0/eta0: (N, D).  Returns lam, eta: (B, T, N, D)."""
+    B, T, N = k.shape
+    D = v.shape[-1]
+    if T % CHUNK != 0:
+        # Pad time up to a chunk multiple; extra steps are discarded.
+        pad = CHUNK - T % CHUNK
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        lam_v = jnp.pad(lam_v, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=1.0)
+        Tp = T + pad
+    else:
+        Tp = T
+
+    kernel = functools.partial(_kla_kernel, seq_len=Tp, chunk=CHUNK)
+    lam, eta = pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, Tp, N), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, Tp, D), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, Tp, D), lambda b: (b, 0, 0)),
+            pl.BlockSpec((N, D), lambda b: (0, 0)),
+            pl.BlockSpec((N, D), lambda b: (0, 0)),
+            pl.BlockSpec((N, D), lambda b: (0, 0)),
+            pl.BlockSpec((N, D), lambda b: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Tp, N, D), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, Tp, N, D), lambda b: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Tp, N, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Tp, N, D), jnp.float32),
+        ],
+        interpret=True,
+    )(k, v, lam_v, abar, pbar, lam0, eta0)
+    return lam[:, :T], eta[:, :T]
+
+
+@jax.custom_vjp
+def kla_filter_pallas(k, q, v, lam_v, abar, pbar, lam0, eta0):
+    """Pallas-forward KLA filter with scan-based backward (same signature
+    and return as `kla_filter_scan`)."""
+    lam, eta = _pallas_filter_raw(k, v, lam_v, abar, pbar, lam0, eta0)
+    y = jnp.einsum("btn,btnd->btd", q, eta / lam)
+    return lam, eta, y
+
+
+def _fwd(k, q, v, lam_v, abar, pbar, lam0, eta0):
+    out = kla_filter_pallas(k, q, v, lam_v, abar, pbar, lam0, eta0)
+    return out, (k, q, v, lam_v, abar, pbar, lam0, eta0)
+
+
+def _bwd(residuals, cotangents):
+    # Rematerialise through the differentiable associative-scan formulation.
+    _, vjp = jax.vjp(kla_filter_scan, *residuals)
+    return vjp(cotangents)
+
+
+kla_filter_pallas.defvjp(_fwd, _bwd)

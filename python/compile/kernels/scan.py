@@ -1,0 +1,117 @@
+"""Time-parallel KLA filtering via `jax.lax.associative_scan`.
+
+This is the differentiable "Torch associative scan" analogue of the paper
+(Section 5.2, implementation (ii)): the mathematical reparameterisation with
+no kernel fusion.  Training artifacts are built from this path because
+`associative_scan` is composed of primitive ops and therefore supports
+reverse-mode autodiff out of the box.
+
+Two scans (paper Cor. 1.1 / Cor. 2.1):
+
+1.  Precision scan.  Each token contributes a Moebius map represented by a
+    2x2 matrix  M_t = [[1 + pbar*phi_t, abar^2*phi_t], [pbar, abar^2]]
+    acting on lam via  M(lam) = (a*lam + b) / (c*lam + d).  Moebius maps
+    compose by matrix multiplication, which is associative; the scan
+    computes all prefix products M_{1:t} and applies them to lam0.
+    Matrices are defined only up to scale, so each combine renormalises by
+    the max-abs entry — this is what keeps T=8192 prefix products inside
+    f32 range (the paper's kernel does the same implicitly by working with
+    the ratio form).
+
+2.  Mean scan.  Given the precision path, eta evolves affinely:
+    eta_t = f_t * eta_{t-1} + b_t with f_t = abar * rho_t; affine maps
+    (f, b) compose associatively as (f2*f1, f2*b1 + b2).
+
+Shapes as in ref.py: k, q: (B, T, N); v, lam_v: (B, T, D);
+abar, pbar, lam0, eta0: (N, D).  Returns lam, eta: (B, T, N, D), y: (B, T, D).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ref import LAM_MIN, LAM_MAX
+
+
+def _mobius_combine(right, left):
+    """Compose two batches of Moebius maps: result = right ∘ left.
+
+    Each element is a 4-tuple (a, b, c, d) of identically-shaped arrays;
+    composition is the 2x2 matrix product  M_r @ M_l, renormalised.
+    NOTE on argument order: `lax.associative_scan` passes (earlier, later)
+    as (first, second); we want prefix products applying the EARLIER map
+    first, i.e. combined = later ∘ earlier, so the wrapper below flips.
+    """
+    ra, rb, rc, rd = right
+    la, lb, lc, ld = left
+    a = ra * la + rb * lc
+    b = ra * lb + rb * ld
+    c = rc * la + rd * lc
+    d = rc * lb + rd * ld
+    # Scale-invariance of Moebius maps: renormalise for f32 stability.
+    s = jnp.maximum(jnp.maximum(jnp.abs(a), jnp.abs(b)),
+                    jnp.maximum(jnp.abs(c), jnp.abs(d)))
+    s = jnp.maximum(s, 1e-30)
+    return a / s, b / s, c / s, d / s
+
+
+def mobius_prefix_scan(phi, abar, pbar, lam0):
+    """All posterior precisions via one associative scan.
+
+    phi: (B, T, N, D) token precision contributions  k_t^2 * lam_v_t.
+    abar, pbar, lam0: (N, D).
+    Returns lam: (B, T, N, D).
+    """
+    abar2 = abar * abar                              # (N, D)
+    ones = jnp.ones_like(phi)
+    a = ones + pbar * phi                            # (B, T, N, D)
+    b = abar2 * phi
+    c = jnp.broadcast_to(pbar, phi.shape) * ones
+    d = jnp.broadcast_to(abar2, phi.shape) * ones
+
+    def combine(first, second):
+        return _mobius_combine(second, first)        # later ∘ earlier
+
+    pa, pb, pc, pd = jax.lax.associative_scan(combine, (a, b, c, d), axis=1)
+    lam = (pa * lam0 + pb) / (pc * lam0 + pd)
+    return jnp.clip(lam, LAM_MIN, LAM_MAX)
+
+
+def affine_prefix_scan(f, b, init):
+    """All information means via one associative scan.
+
+    f, b: (B, T, N, D) per-step gate and additive evidence; init: (N, D).
+    eta_t = (prod_{s<=t} f_s) * init + sum-with-gates(b)  — computed via the
+    standard first-order-recurrence associative operator.
+    """
+    def combine(first, second):
+        f1, b1 = first
+        f2, b2 = second
+        return f2 * f1, f2 * b1 + b2
+
+    pf, pb = jax.lax.associative_scan(combine, (f, b), axis=1)
+    return pf * init + pb
+
+
+def kla_filter_scan(k, q, v, lam_v, abar, pbar, lam0, eta0):
+    """Full two-pass scan-parallel KLA filter (batched).
+
+    Pass 1 computes the precision path (Moebius scan); pass 2 reuses it to
+    form the history-dependent forget gates and runs the affine scan for
+    the information mean.  Cost: O(T) work, O(log T) depth, exactly the
+    profile of Mamba/GLA-style mixers (paper C1/C2).
+    """
+    phi = (k[..., :, None] ** 2) * lam_v[..., None, :]        # (B, T, N, D)
+    lam = mobius_prefix_scan(phi, abar, pbar, lam0)
+
+    lam_prev = jnp.concatenate(
+        [jnp.broadcast_to(lam0, lam[:, :1].shape), lam[:, :-1]], axis=1)
+    rho = 1.0 / (abar * abar + pbar * lam_prev)               # (B, T, N, D)
+    f = rho * abar
+    evid = k[..., :, None] * (lam_v * v)[..., None, :]        # (B, T, N, D)
+    eta = affine_prefix_scan(f, evid, eta0)
+
+    mu = eta / lam
+    y = jnp.einsum("btn,btnd->btd", q, mu)
+    return lam, eta, y

@@ -1,0 +1,201 @@
+"""Baseline sequence mixers (paper Section 5.1), matched on state size.
+
+All sub-quadratic baselines share the KLA scaffold (RMSNorm -> causal conv ->
+SiLU -> mixer -> SiLU-gate -> out-proj -> residual) so that accuracy
+differences isolate the *update mechanism*, exactly as the paper's
+single-block protocol prescribes.
+
+- Mamba (S6): input-dependent (selective) diagonal SSM; token-dependent
+  Delta_t overloads discretisation with selection (contrast: KLA's global
+  dynamics + uncertainty gating).
+- GLA: gated linear attention, H_t = g_t ⊙ H_{t-1} + k_t v_t^T.
+- GDN (Gated DeltaNet): delta-rule write with scalar forget gate
+  S_t = a_t (I - b_t k_t k_t^T) S_{t-1} + b_t k_t v_t^T  (sequential scan:
+  the rank-one erase term is non-diagonal, so no associative form is used).
+- GPT: causal multi-head softmax attention + MLP (the O(T^2) reference).
+
+mLSTM is omitted (DESIGN.md §5 — documented substitution).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.nn import sigmoid, softplus
+
+from ..kernels.scan import affine_prefix_scan
+from .common import causal_conv1d, dense_init, l2norm, rmsnorm, silu
+
+
+# ----------------------------------------------------------------- Mamba ---
+
+def init_mamba_block(rng, d, n_state, conv_kernel=4):
+    N = n_state
+    return {
+        "norm": jnp.ones((d,), jnp.float32),
+        "conv_w": jnp.asarray(rng.normal(0, 0.2, (conv_kernel, d)), jnp.float32),
+        "conv_b": jnp.zeros((d,), jnp.float32),
+        "a_log": jnp.asarray(np.log(rng.uniform(0.5, 8.0, (N, d))), jnp.float32),
+        "w_dt": dense_init(rng, d, d, scale=0.5),
+        "b_dt": jnp.full((d,), -2.0, jnp.float32),
+        "w_b": dense_init(rng, d, N),
+        "w_c": dense_init(rng, d, N),
+        "skip_d": jnp.ones((d,), jnp.float32),
+        "wg": dense_init(rng, d, d),
+        "wo": dense_init(rng, d, d, scale=0.5),
+    }
+
+
+def mamba_block(p, x):
+    """Selective SSM (S6) block.  h_t = exp(-A dt_t) h_{t-1} + dt_t B_t x_t,
+    y_t = C_t^T h_t + D x_t, all per channel with N slots."""
+    xn = rmsnorm(x, p["norm"])
+    c = silu(causal_conv1d(xn, p["conv_w"], p["conv_b"]))
+    dt = softplus(c @ p["w_dt"] + p["b_dt"])                 # (B,T,D)
+    bt = c @ p["w_b"]                                        # (B,T,N)
+    ct = c @ p["w_c"]                                        # (B,T,N)
+    A = jnp.exp(p["a_log"])                                  # (N,D) > 0
+    abar = jnp.exp(-A[None, None] * dt[:, :, None, :])       # (B,T,N,D)
+    drive = dt[:, :, None, :] * bt[..., None] * c[:, :, None, :]
+    h = affine_prefix_scan(abar, drive, jnp.zeros(A.shape, jnp.float32))
+    y = jnp.einsum("btn,btnd->btd", ct, h) + p["skip_d"] * c
+    gate = silu(xn @ p["wg"])
+    return x + (y * gate) @ p["wo"]
+
+
+# ------------------------------------------------------------------- GLA ---
+
+def init_gla_block(rng, d, n_state, conv_kernel=4):
+    N = n_state
+    return {
+        "norm": jnp.ones((d,), jnp.float32),
+        "conv_w": jnp.asarray(rng.normal(0, 0.2, (conv_kernel, d)), jnp.float32),
+        "conv_b": jnp.zeros((d,), jnp.float32),
+        "wk": dense_init(rng, d, N),
+        "wq": dense_init(rng, d, N),
+        "wv": dense_init(rng, d, d),
+        "w_f": dense_init(rng, d, N, scale=0.5),
+        "b_f": jnp.full((N,), 2.0, jnp.float32),  # open forget gate at init
+        "wg": dense_init(rng, d, d),
+        "wo": dense_init(rng, d, d, scale=0.5),
+    }
+
+
+def gla_block(p, x):
+    """Gated linear attention: H_t = g_t ⊙ H_{t-1} + k_t v_t^T, y = q^T H."""
+    xn = rmsnorm(x, p["norm"])
+    c = silu(causal_conv1d(xn, p["conv_w"], p["conv_b"]))
+    k = l2norm(c @ p["wk"])                                  # (B,T,N)
+    q = l2norm(c @ p["wq"])
+    v = c @ p["wv"]                                          # (B,T,D)
+    g = sigmoid(c @ p["w_f"] + p["b_f"])                     # (B,T,N)
+    N, D = k.shape[-1], v.shape[-1]
+    f = jnp.broadcast_to(g[..., None], k.shape + (D,))       # (B,T,N,D)
+    drive = k[..., None] * v[:, :, None, :]
+    h = affine_prefix_scan(f, drive, jnp.zeros((N, D), jnp.float32))
+    y = jnp.einsum("btn,btnd->btd", q, h)
+    gate = silu(xn @ p["wg"])
+    return x + (y * gate) @ p["wo"]
+
+
+# ------------------------------------------------------------------- GDN ---
+
+def init_gdn_block(rng, d, n_state, conv_kernel=4):
+    N = n_state
+    return {
+        "norm": jnp.ones((d,), jnp.float32),
+        "conv_w": jnp.asarray(rng.normal(0, 0.2, (conv_kernel, d)), jnp.float32),
+        "conv_b": jnp.zeros((d,), jnp.float32),
+        "wk": dense_init(rng, d, N),
+        "wq": dense_init(rng, d, N),
+        "wv": dense_init(rng, d, d),
+        "w_alpha": dense_init(rng, d, 1, scale=0.5),
+        "b_alpha": jnp.full((1,), 3.0, jnp.float32),
+        "w_beta": dense_init(rng, d, 1, scale=0.5),
+        "b_beta": jnp.zeros((1,), jnp.float32),
+        "wg": dense_init(rng, d, d),
+        "wo": dense_init(rng, d, d, scale=0.5),
+    }
+
+
+def gdn_block(p, x):
+    """Gated DeltaNet: S_t = a_t (I - b_t k_t k_t^T) S_{t-1} + b_t k_t v_t^T.
+
+    The erase term couples state rows, so this runs as a sequential
+    `lax.scan` over time (matching the reference implementation; the paper's
+    chunked parallel form is a kernel-level optimisation, not a different
+    mathematical object)."""
+    xn = rmsnorm(x, p["norm"])
+    c = silu(causal_conv1d(xn, p["conv_w"], p["conv_b"]))
+    k = l2norm(c @ p["wk"])                                  # (B,T,N)
+    q = l2norm(c @ p["wq"])
+    v = c @ p["wv"]                                          # (B,T,D)
+    alpha = sigmoid(c @ p["w_alpha"] + p["b_alpha"])[..., 0]  # (B,T)
+    beta = sigmoid(c @ p["w_beta"] + p["b_beta"])[..., 0]     # (B,T)
+    N, D = k.shape[-1], v.shape[-1]
+
+    def step(S, inp):
+        k_t, v_t, a_t, b_t = inp                  # (B,N),(B,D),(B,),(B,)
+        kS = jnp.einsum("bn,bnd->bd", k_t, S)     # k^T S
+        S = a_t[:, None, None] * (S - b_t[:, None, None]
+                                  * k_t[:, :, None] * kS[:, None, :])
+        S = S + b_t[:, None, None] * k_t[:, :, None] * v_t[:, None, :]
+        return S, S
+
+    B = x.shape[0]
+    S0 = jnp.zeros((B, N, D), jnp.float32)
+    xs = (jnp.swapaxes(k, 0, 1), jnp.swapaxes(v, 0, 1),
+          jnp.swapaxes(alpha, 0, 1), jnp.swapaxes(beta, 0, 1))
+    _, S_all = jax.lax.scan(step, S0, xs)          # (T,B,N,D)
+    y = jnp.einsum("btn,btnd->btd", q, jnp.swapaxes(S_all, 0, 1))
+    gate = silu(xn @ p["wg"])
+    return x + (y * gate) @ p["wo"]
+
+
+# ------------------------------------------------------------------- GPT ---
+
+def init_gpt_block(rng, d, n_heads=4, mlp_mult=4):
+    return {
+        "norm1": jnp.ones((d,), jnp.float32),
+        "wq": dense_init(rng, d, d),
+        "wk": dense_init(rng, d, d),
+        "wv": dense_init(rng, d, d),
+        "wo": dense_init(rng, d, d, scale=0.5),
+        "norm2": jnp.ones((d,), jnp.float32),
+        "w1": dense_init(rng, d, mlp_mult * d),
+        "w2": dense_init(rng, mlp_mult * d, d, scale=0.5),
+        "n_heads": None,  # placeholder removed below (keep params arrays only)
+    }
+
+
+def _split_heads(x, h):
+    B, T, D = x.shape
+    return jnp.transpose(x.reshape(B, T, h, D // h), (0, 2, 1, 3))
+
+
+def gpt_block(p, x, n_heads=4):
+    """Pre-norm causal MHA + MLP (the paper's O(T^2) softmax reference)."""
+    xn = rmsnorm(x, p["norm1"])
+    q = _split_heads(xn @ p["wq"], n_heads)
+    k = _split_heads(xn @ p["wk"], n_heads)
+    v = _split_heads(xn @ p["wv"], n_heads)
+    dh = q.shape[-1]
+    att = jnp.einsum("bhtd,bhsd->bhts", q, k) / np.sqrt(dh)
+    T = x.shape[1]
+    mask = jnp.tril(jnp.ones((T, T), jnp.float32))
+    att = jnp.where(mask[None, None] > 0, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    ctx = jnp.einsum("bhts,bhsd->bhtd", att, v)
+    B = x.shape[0]
+    ctx = jnp.transpose(ctx, (0, 2, 1, 3)).reshape(B, T, -1)
+    x = x + ctx @ p["wo"]
+    xn2 = rmsnorm(x, p["norm2"])
+    return x + silu(xn2 @ p["w1"]) @ p["w2"]
+
+
+def init_gpt_block_fixed(rng, d, n_heads=4, mlp_mult=4):
+    """init_gpt_block without the placeholder key (params must be arrays)."""
+    p = init_gpt_block(rng, d, n_heads, mlp_mult)
+    p.pop("n_heads")
+    return p

@@ -1,0 +1,127 @@
+"""Shared L2 building blocks: initialisers, norms, causal conv, losses.
+
+Parameters are plain nested dicts (name -> array or sub-dict).  The AOT
+bridge flattens them in sorted-key order (`flatten_params`) and the Rust
+side consumes the layout from the artifact's meta.json, so the ordering
+here is a wire format — keep it deterministic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------- params ---
+
+def dense_init(rng: np.random.Generator, d_in: int, d_out: int,
+               scale: float = 1.0) -> jnp.ndarray:
+    """LeCun-normal style init (fp32)."""
+    std = scale / np.sqrt(d_in)
+    return jnp.asarray(rng.normal(0.0, std, size=(d_in, d_out)),
+                       dtype=jnp.float32)
+
+
+def flatten_params(params: dict, prefix: str = ""):
+    """Deterministic (sorted-key) flattening of a nested param dict.
+
+    Returns a list of (name, array).  This ordering IS the artifact ABI.
+    """
+    out = []
+    for key in sorted(params.keys()):
+        val = params[key]
+        name = f"{prefix}{key}"
+        if isinstance(val, dict):
+            out.extend(flatten_params(val, prefix=name + "."))
+        else:
+            out.append((name, val))
+    return out
+
+
+def unflatten_params(template: dict, flat_list):
+    """Inverse of flatten_params given the same template structure."""
+    it = iter(flat_list)
+
+    def rec(node):
+        out = {}
+        for key in sorted(node.keys()):
+            val = node[key]
+            out[key] = rec(val) if isinstance(val, dict) else next(it)
+        return out
+
+    result = rec(template)
+    rest = list(it)
+    assert not rest, f"{len(rest)} leftover arrays in unflatten"
+    return result
+
+
+# ---------------------------------------------------------------- layers ---
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * scale
+
+
+def l2norm(x: jnp.ndarray, eps: float = 1e-6):
+    """QK-norm (paper Fig. 7): L2-normalise over the last axis."""
+    n = jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True) + eps)
+    return x / n
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray):
+    """Depthwise causal 1-D convolution, kernel size K (paper: K=4).
+
+    x: (B, T, D); w: (K, D); b: (D,).  Output (B, T, D); position t sees
+    inputs t-K+1..t (left-padded with zeros).
+    """
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):  # K is tiny and static: unrolled adds fuse in XLA
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def conv_state_step(state: jnp.ndarray, x_t: jnp.ndarray, w: jnp.ndarray,
+                    b: jnp.ndarray):
+    """O(1) decode-time counterpart of `causal_conv1d`.
+
+    state: (B, K-1, D) previous inputs; x_t: (B, D) current input.
+    Returns (y_t, new_state)."""
+    K = w.shape[0]
+    window = jnp.concatenate([state, x_t[:, None, :]], axis=1)  # (B, K, D)
+    y = jnp.einsum("bkd,kd->bd", window, w) + b
+    return y, window[:, 1:, :]
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# ---------------------------------------------------------------- losses ---
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray,
+                  mask: jnp.ndarray):
+    """Masked mean cross-entropy.  logits: (B, T, V); targets: (B, T) i32;
+    mask: (B, T) f32 in {0, 1}."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    total = jnp.sum(mask)
+    return -jnp.sum(ll * mask) / jnp.maximum(total, 1.0)
+
+
+def token_accuracy(logits, targets, mask):
+    """(correct_count, total_count) over masked positions."""
+    pred = jnp.argmax(logits, axis=-1)
+    correct = jnp.sum((pred == targets).astype(jnp.float32) * mask)
+    return correct, jnp.sum(mask)
+
+
+def sequence_logprob(logits, targets, mask):
+    """Per-sequence summed log-probability of `targets` over masked
+    positions — the zero-shot multiple-choice scoring primitive.
+    Returns (B,)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.sum(ll * mask, axis=-1)

@@ -1,0 +1,57 @@
+"""O(1) recurrent decode step for KLA LMs (the serving hot path, and the
+Fig. 4 / Fig. 9 'naive recurrent (time-stepped) Kalman' baseline when the
+coordinator drives it once per token).
+
+State per KLA block:
+    conv: (B, K-1, D)   causal-conv window
+    lam:  (B, N, D)     posterior precision
+    eta:  (B, N, D)     posterior information mean
+Stacked over layers into (L, B, ...) arrays so the artifact ABI stays flat
+regardless of depth.  Only pure-KLA models are supported on the recurrent
+path (hybrids contain softmax attention, which has no O(1) state).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.nn import softplus
+
+from .common import rmsnorm
+from .kla import LAM0_FLOOR, kla_block_step
+from .lm import ModelConfig
+
+
+def decode_init_state(cfg: ModelConfig, params: dict, batch: int):
+    """Fresh belief state for `batch` sequences: (conv, lam, eta) stacked
+    over layers.  lam starts at the learned prior precision lam0."""
+    L, K, D, N = (cfg.n_layers, cfg.conv_kernel, cfg.d_model, cfg.n_state)
+    conv = jnp.zeros((L, batch, K - 1, D), jnp.float32)
+    lams, etas = [], []
+    for name in sorted(params["blocks"].keys()):
+        bp = params["blocks"][name]
+        lam0 = softplus(bp["lam0_raw"]) + LAM0_FLOOR          # (N, D)
+        lams.append(jnp.broadcast_to(lam0, (batch, N, D)))
+        etas.append(jnp.zeros((batch, N, D), jnp.float32))
+    return conv, jnp.stack(lams), jnp.stack(etas)
+
+
+def decode_step(cfg: ModelConfig, params: dict, token: jnp.ndarray,
+                conv: jnp.ndarray, lam: jnp.ndarray, eta: jnp.ndarray):
+    """One autoregressive step.
+
+    token: (B,) int32; conv: (L,B,K-1,D); lam, eta: (L,B,N,D).
+    Returns (logits (B, V), conv', lam', eta')."""
+    assert cfg.kind in ("kla", "kla_plus"), "recurrent path is KLA-only"
+    h = params["embed"][token]                                # (B, D)
+    convs, lams, etas = [], [], []
+    for i, name in enumerate(sorted(params["blocks"].keys())):
+        bp = params["blocks"][name]
+        h, c_i, l_i, e_i = kla_block_step(
+            bp, h, conv[i], lam[i], eta[i],
+            process_noise=cfg.process_noise, ou_exact=cfg.ou_exact)
+        convs.append(c_i)
+        lams.append(l_i)
+        etas.append(e_i)
+    h = rmsnorm(h, params["norm_f"])
+    logits = h @ params["head"]
+    return logits, jnp.stack(convs), jnp.stack(lams), jnp.stack(etas)

@@ -1,0 +1,142 @@
+"""The KLA sequence-mixer block (paper Section 4.4, Algorithm 1, Figure 7).
+
+Block layout follows the Mamba fused-MLP design the paper adopts:
+
+    x ──RMSNorm──> xn ──causal-conv(K=4)──SiLU──> c
+    c ──Wk──l2norm──> k   (B,T,N)   observation operator
+    c ──Wq──l2norm──> q   (B,T,N)   readout operator          (QK-norm)
+    c ──Wv──────────> v   (B,T,D)   token evidence
+    c ──Wlam──softplus─> lam_v (B,T,D) value precision (>0)
+    (a, p, dt) learnable, TIME-INVARIANT (N,D)  ──OU-discretise──> abar, pbar
+    filter(k, q, v, lam_v, abar, pbar, lam0, 0) ──> lam, eta, y
+    out = (y * SiLU(xn Wg)) Wo                (gated output, residual outside)
+
+Selectivity comes *only* from the uncertainty ratios of the Moebius precision
+recursion — the dynamics parameters are global, unlike Mamba's
+token-dependent Delta_t (paper Section 4.1 'Multi-channel specialisation').
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from jax.nn import softplus
+
+from ..kernels import kla_filter, kla_posterior_moments
+from ..kernels.ou import discretise_raw
+from .common import causal_conv1d, dense_init, l2norm, rmsnorm, silu
+
+LAMV_FLOOR = 1e-4
+LAM0_FLOOR = 1e-3
+
+
+def init_kla_block(rng: np.random.Generator, d: int, n_state: int,
+                   conv_kernel: int = 4) -> dict:
+    """Parameter dict for one KLA block (see flatten_params for the ABI)."""
+    N = n_state
+    return {
+        "norm": jnp.ones((d,), jnp.float32),
+        "conv_w": jnp.asarray(rng.normal(0, 0.2, (conv_kernel, d)), jnp.float32),
+        "conv_b": jnp.zeros((d,), jnp.float32),
+        "wk": dense_init(rng, d, N),
+        "wq": dense_init(rng, d, N),
+        "wv": dense_init(rng, d, d),
+        "wlam": dense_init(rng, d, d, scale=0.5),
+        "blam": jnp.full((d,), 0.5413, jnp.float32),  # softplus(0.5413)=1.0
+        # OU prior: raw params -> (a, p, dt) via kernels.ou.constrain.
+        # p init 0.01 (paper G.2); softplus^{-1}(0.01) ~= -4.6.
+        "a_raw": jnp.asarray(rng.uniform(-1.0, 1.0, (N, d)), jnp.float32),
+        "p_raw": jnp.full((N, d), -4.6, jnp.float32),
+        "dt_raw": jnp.asarray(rng.uniform(-1.0, 1.0, (N, d)), jnp.float32),
+        "lam0_raw": jnp.full((N, d), 0.5413, jnp.float32),
+        "wg": dense_init(rng, d, d),
+        "wo": dense_init(rng, d, d, scale=0.5),
+    }
+
+
+def kla_dynamics(p: dict, *, process_noise: bool = True,
+                 ou_exact: bool = True):
+    """(abar, pbar, lam0) from raw block params — shared by the parallel
+    forward, the O(1) decode step, and the native-Rust export."""
+    abar, pbar = discretise_raw(p["a_raw"], p["p_raw"], p["dt_raw"],
+                                process_noise=process_noise,
+                                ou_exact=ou_exact)
+    lam0 = softplus(p["lam0_raw"]) + LAM0_FLOOR
+    return abar, pbar, lam0
+
+
+def kla_projections(p: dict, xn: jnp.ndarray):
+    """Token-dependent likelihood/readout parameters from the normed input.
+
+    xn: (B, T, D) (already RMS-normed).  Returns (k, q, v, lam_v, gate)."""
+    c = silu(causal_conv1d(xn, p["conv_w"], p["conv_b"]))
+    k = l2norm(c @ p["wk"])                       # (B, T, N)
+    q = l2norm(c @ p["wq"])                       # (B, T, N)
+    v = c @ p["wv"]                               # (B, T, D)
+    lam_v = softplus(c @ p["wlam"] + p["blam"]) + LAMV_FLOOR
+    gate = silu(xn @ p["wg"])
+    return k, q, v, lam_v, gate
+
+
+def kla_block(p: dict, x: jnp.ndarray, *, impl: str = "scan",
+              process_noise: bool = True, ou_exact: bool = True,
+              want_variance: bool = False):
+    """One residual KLA block.  x: (B, T, D) -> (B, T, D)[, y_var]."""
+    xn = rmsnorm(x, p["norm"])
+    k, q, v, lam_v, gate = kla_projections(p, xn)
+    abar, pbar, lam0 = kla_dynamics(p, process_noise=process_noise,
+                                    ou_exact=ou_exact)
+    eta0 = jnp.zeros_like(lam0)
+    lam, eta, y = kla_filter(k, q, v, lam_v, abar, pbar, lam0, eta0,
+                             impl=impl)
+    out = x + (y * gate) @ p["wo"]
+    if want_variance:
+        _, y_var = kla_posterior_moments(lam, eta, q)
+        return out, y_var
+    return out
+
+
+def kla_block_sample(p: dict, x: jnp.ndarray, eps: jnp.ndarray, *,
+                     impl: str = "scan", process_noise: bool = True,
+                     ou_exact: bool = True):
+    """KLA+ probabilistic decoding path: one posterior sample of the readout,
+    y_s = y_mu + sqrt(y_var) * eps  (eps: (B, T, D) standard normal).
+    Used by the Monte-Carlo marginal-likelihood loss (paper Eq. 24-25)."""
+    xn = rmsnorm(x, p["norm"])
+    k, q, v, lam_v, gate = kla_projections(p, xn)
+    abar, pbar, lam0 = kla_dynamics(p, process_noise=process_noise,
+                                    ou_exact=ou_exact)
+    eta0 = jnp.zeros_like(lam0)
+    lam, eta, _ = kla_filter(k, q, v, lam_v, abar, pbar, lam0, eta0,
+                             impl=impl)
+    y_mu, y_var = kla_posterior_moments(lam, eta, q)
+    y = y_mu + jnp.sqrt(jnp.maximum(y_var, 0.0)) * eps
+    return x + (y * gate) @ p["wo"]
+
+
+def kla_block_step(p: dict, x_t: jnp.ndarray, conv_state, lam_prev, eta_prev,
+                   *, process_noise: bool = True, ou_exact: bool = True):
+    """O(1) recurrent decode step (serving path; also the Fig. 4 'naive
+    recurrent Kalman' baseline when driven T times).
+
+    x_t: (B, D); conv_state: (B, K-1, D); lam_prev, eta_prev: (B, N, D).
+    Returns (out_t, conv_state', lam, eta).
+    """
+    from .common import conv_state_step
+    xn = rmsnorm(x_t, p["norm"])
+    cy, conv_state = conv_state_step(conv_state, xn, p["conv_w"], p["conv_b"])
+    c = silu(cy)
+    k = l2norm(c @ p["wk"])                       # (B, N)
+    q = l2norm(c @ p["wq"])
+    v = c @ p["wv"]                               # (B, D)
+    lam_v = softplus(c @ p["wlam"] + p["blam"]) + LAMV_FLOOR
+    abar, pbar, _ = kla_dynamics(p, process_noise=process_noise,
+                                 ou_exact=ou_exact)
+    phi = (k[:, :, None] ** 2) * lam_v[:, None, :]            # (B, N, D)
+    rho = 1.0 / (abar * abar + pbar * lam_prev)
+    lam = jnp.clip(rho * lam_prev + phi, 1e-6, 1e8)
+    eta = (rho * abar) * eta_prev + k[:, :, None] * (lam_v * v)[:, None, :]
+    y = jnp.einsum("bn,bnd->bd", q, eta / lam)
+    gate = silu(xn @ p["wg"])
+    out = x_t + (y * gate) @ p["wo"]
+    return out, conv_state, lam, eta

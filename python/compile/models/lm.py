@@ -1,0 +1,148 @@
+"""LM assembly: embed -> L mixer blocks -> RMSNorm -> head (paper Fig. 7).
+
+`ModelConfig.kind` selects the mixer; `hybrid_*` kinds replace ONLY the
+final block of a GPT backbone with the named SSM block (paper Section 5.5:
+'a single KLA layer improves a GPT').
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, asdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import dense_init, rmsnorm
+from .kla import init_kla_block, kla_block, kla_block_sample
+from .baselines import (gdn_block, gla_block, gpt_block, init_gdn_block,
+                        init_gla_block, init_gpt_block_fixed,
+                        init_mamba_block, mamba_block)
+
+KINDS = ("kla", "kla_plus", "mamba", "gla", "gdn", "gpt",
+         "hybrid_kla", "hybrid_mamba", "hybrid_gdn")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    kind: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_state: int = 8          # state-expansion factor N
+    n_heads: int = 4          # attention heads (gpt / hybrid backbones)
+    conv_kernel: int = 4
+    process_noise: bool = True   # False => Fig. 6b / Table 6 ablation
+    ou_exact: bool = True        # False => Fig. 3b ablation
+    impl: str = "scan"           # KLA kernel impl: scan | pallas | ref
+    mc_samples: int = 0          # >0 => KLA+ MC marginal-likelihood loss
+
+    def __post_init__(self):
+        assert self.kind in KINDS, self.kind
+        assert self.d_model % self.n_heads == 0
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def _block_kind(cfg: ModelConfig, layer: int) -> str:
+    if cfg.kind.startswith("hybrid_"):
+        inner = cfg.kind.split("_", 1)[1]
+        return inner if layer == cfg.n_layers - 1 else "gpt"
+    if cfg.kind == "kla_plus":
+        return "kla"
+    return cfg.kind
+
+
+_INITS = {
+    "kla": lambda rng, cfg: init_kla_block(rng, cfg.d_model, cfg.n_state,
+                                           cfg.conv_kernel),
+    "mamba": lambda rng, cfg: init_mamba_block(rng, cfg.d_model, cfg.n_state,
+                                               cfg.conv_kernel),
+    "gla": lambda rng, cfg: init_gla_block(rng, cfg.d_model, cfg.n_state,
+                                           cfg.conv_kernel),
+    "gdn": lambda rng, cfg: init_gdn_block(rng, cfg.d_model, cfg.n_state,
+                                           cfg.conv_kernel),
+    "gpt": lambda rng, cfg: init_gpt_block_fixed(rng, cfg.d_model,
+                                                 cfg.n_heads),
+}
+
+
+def init_lm(cfg: ModelConfig, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    params = {
+        "embed": jnp.asarray(rng.normal(0, 0.02, (cfg.vocab, cfg.d_model)),
+                             jnp.float32),
+        "norm_f": jnp.ones((cfg.d_model,), jnp.float32),
+        "head": dense_init(rng, cfg.d_model, cfg.vocab, scale=0.5),
+        "blocks": {},
+    }
+    for layer in range(cfg.n_layers):
+        bk = _block_kind(cfg, layer)
+        # zero-pad layer index so sorted-key flattening = layer order
+        params["blocks"][f"{layer:02d}_{bk}"] = _INITS[bk](rng, cfg)
+    return params
+
+
+def _apply_block(bk: str, bp: dict, h, cfg: ModelConfig):
+    if bk == "kla":
+        return kla_block(bp, h, impl=cfg.impl,
+                         process_noise=cfg.process_noise,
+                         ou_exact=cfg.ou_exact)
+    if bk == "mamba":
+        return mamba_block(bp, h)
+    if bk == "gla":
+        return gla_block(bp, h)
+    if bk == "gdn":
+        return gdn_block(bp, h)
+    if bk == "gpt":
+        return gpt_block(bp, h, n_heads=cfg.n_heads)
+    raise ValueError(bk)
+
+
+def lm_forward(cfg: ModelConfig, params: dict, tokens: jnp.ndarray):
+    """tokens: (B, T) int32 -> logits (B, T, V)."""
+    h = params["embed"][tokens]
+    for name in sorted(params["blocks"].keys()):
+        bk = name.split("_", 1)[1]
+        h = _apply_block(bk, params["blocks"][name], h, cfg)
+    h = rmsnorm(h, params["norm_f"])
+    return h @ params["head"]
+
+
+def lm_forward_sampled(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
+                       key: jax.Array):
+    """KLA+ forward: every KLA block emits one posterior sample instead of
+    the mean (paper 'probabilistic decoding').  Non-KLA blocks unchanged."""
+    h = params["embed"][tokens]
+    for name in sorted(params["blocks"].keys()):
+        bk = name.split("_", 1)[1]
+        bp = params["blocks"][name]
+        if bk == "kla":
+            key, sub = jax.random.split(key)
+            eps = jax.random.normal(sub, h.shape, h.dtype)
+            h = kla_block_sample(bp, h, eps, impl=cfg.impl,
+                                 process_noise=cfg.process_noise,
+                                 ou_exact=cfg.ou_exact)
+        else:
+            h = _apply_block(bk, bp, h, cfg)
+    h = rmsnorm(h, params["norm_f"])
+    return h @ params["head"]
+
+
+def lm_variance(cfg: ModelConfig, params: dict, tokens: jnp.ndarray):
+    """Posterior readout variance of the LAST KLA block, averaged over
+    channels: (B, T).  The Fig. 5b diagnostic."""
+    h = params["embed"][tokens]
+    y_var = None
+    for name in sorted(params["blocks"].keys()):
+        bk = name.split("_", 1)[1]
+        bp = params["blocks"][name]
+        if bk == "kla":
+            h, y_var = kla_block(bp, h, impl=cfg.impl,
+                                 process_noise=cfg.process_noise,
+                                 ou_exact=cfg.ou_exact, want_variance=True)
+        else:
+            h = _apply_block(bk, bp, h, cfg)
+    assert y_var is not None, "lm_variance requires at least one KLA block"
+    return jnp.mean(y_var, axis=-1)

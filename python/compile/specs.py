@@ -1,0 +1,172 @@
+"""Artifact manifest: every AOT-compiled XLA module the Rust coordinator
+may load, as declarative specs (DESIGN.md §6).
+
+A spec = (family, model kind + config, batch/seq shape, roles).  Artifact
+names are `{family}_{tag}_{role}` and each emits
+`artifacts/{name}.hlo.txt` + `artifacts/{name}.meta.json`.
+
+`default` manifest covers tests, examples and the default bench grids;
+`full` adds the deep/sweep configs (Fig. 1a depth sweep, MQAR dim sweep,
+Table 4 extra models, long-T scaling points).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .models.lm import ModelConfig
+from .train_step import OptConfig
+
+
+@dataclass(frozen=True)
+class ArtifactSpec:
+    family: str            # mad | mqar | a5 | lm | fig4 | serve
+    tag: str               # unique within family (model kind + variant)
+    model: ModelConfig
+    opt: OptConfig
+    batch: int
+    seq: int
+    roles: tuple           # subset of init/train/eval/score/logits/variance/decode
+
+    @property
+    def base_name(self) -> str:
+        return f"{self.family}_{self.tag}"
+
+    def artifact_name(self, role: str) -> str:
+        return f"{self.base_name}_{role}"
+
+
+# --------------------------------------------------------------- configs ---
+# Shapes are CPU-budget scaled versions of the paper's (Appendix F/G);
+# DESIGN.md §3 documents each substitution.
+
+MAD = dict(vocab=64, d_model=64, n_layers=1, n_state=8)
+MAD_B, MAD_T = 32, 128
+MAD_OPT = OptConfig(lr=2e-3, total_steps=400)
+
+MQAR = dict(vocab=64, n_layers=2, n_state=8)
+MQAR_B, MQAR_T = 16, 256
+MQAR_OPT = OptConfig(lr=2e-3, total_steps=600)
+
+A5 = dict(vocab=64, d_model=64, n_state=8)
+A5_B, A5_T = 32, 24
+A5_OPT = OptConfig(lr=1e-3, total_steps=600)
+
+LM = dict(vocab=512, d_model=128, n_layers=2, n_state=8)
+LM_B, LM_T = 16, 128
+LM_OPT = OptConfig(lr=1e-3, total_steps=800)
+
+TRAIN_ROLES = ("init", "train", "eval")
+
+
+def _mk(family, tag, model, opt, batch, seq, roles):
+    return ArtifactSpec(family, tag, model, opt, batch, seq, tuple(roles))
+
+
+def default_specs():
+    specs = []
+
+    # ---- Fig. 5a MAD suite: one artifact set per mixer (single block) ----
+    for kind in ("kla", "kla_plus", "mamba", "gla", "gdn"):
+        mc = 4 if kind == "kla_plus" else 0
+        m = ModelConfig(kind="kla" if kind == "kla_plus" else kind,
+                        mc_samples=mc, **MAD)
+        roles = list(TRAIN_ROLES)
+        if kind == "kla":
+            roles += ["variance", "logits"]   # Fig. 5b + attention maps
+        specs.append(_mk("mad", kind, m, MAD_OPT, MAD_B, MAD_T, roles))
+
+    # ---- Fig. 6b / Table 6: process-noise ablation ----
+    specs.append(_mk("mad", "kla_nonoise",
+                     ModelConfig(kind="kla", process_noise=False, **MAD),
+                     MAD_OPT, MAD_B, MAD_T, TRAIN_ROLES))
+
+    # ---- Fig. 3b: OU-discretisation ablation (depth 1 default) ----
+    specs.append(_mk("mad", "kla_noou",
+                     ModelConfig(kind="kla", ou_exact=False, **MAD),
+                     MAD_OPT, MAD_B, MAD_T, TRAIN_ROLES))
+
+    # ---- Fig. 6a MQAR (d=64 point in default; sweep in full) ----
+    for kind in ("kla", "mamba", "gla", "gdn"):
+        m = ModelConfig(kind=kind, d_model=64, **MQAR)
+        specs.append(_mk("mqar", f"{kind}_d64", m, MQAR_OPT,
+                         MQAR_B, MQAR_T, TRAIN_ROLES))
+
+    # ---- Fig. 1a A5 state tracking: depth sweep 1-2 in default ----
+    for kind in ("kla", "mamba", "gpt", "gla"):
+        for L in (1, 2):
+            m = ModelConfig(kind=kind, n_layers=L, **A5)
+            specs.append(_mk("a5", f"{kind}_l{L}", m, A5_OPT,
+                             A5_B, A5_T, TRAIN_ROLES))
+
+    # ---- Table 4 / Fig. 1b LM pretraining (scaled) ----
+    for kind in ("kla", "gpt", "hybrid_kla"):
+        m = ModelConfig(kind=kind, **LM)
+        specs.append(_mk("lm", kind, m, LM_OPT, LM_B, LM_T,
+                         list(TRAIN_ROLES) + ["score"]))
+
+    # ---- Serving / Fig. 4 recurrent path: KLA decode step ----
+    serve_model = ModelConfig(kind="kla", **LM)
+    specs.append(_mk("serve", "kla_b8", serve_model, LM_OPT, 8, 1,
+                     ("decode",)))
+    specs.append(_mk("serve", "kla_b1", serve_model, LM_OPT, 1, 1,
+                     ("decode",)))
+
+    # ---- Fig. 4 scan path: forward-only KLA block at growing T ----
+    fig4_model_scan = ModelConfig(kind="kla", impl="scan", **MAD)
+    fig4_model_pallas = ModelConfig(kind="kla", impl="pallas", **MAD)
+    for T in (128, 512, 2048):
+        specs.append(_mk("fig4", f"scan_t{T}", fig4_model_scan, MAD_OPT,
+                         1, T, ("logits",)))
+    specs.append(_mk("fig4", "pallas_t512", fig4_model_pallas, MAD_OPT,
+                     1, 512, ("logits",)))
+    # recurrent baseline at MAD shape (driven per-token from Rust)
+    specs.append(_mk("fig4", "kla_decode_b1",
+                     ModelConfig(kind="kla", **MAD), MAD_OPT, 1, 1,
+                     ("init", "decode")))
+    return specs
+
+
+def full_specs():
+    """Extra grid for the sweep benches (built by `make artifacts-full`)."""
+    specs = []
+    # MQAR dimension sweep
+    for kind in ("kla", "mamba", "gla", "gdn"):
+        for d in (32, 128):
+            m = ModelConfig(kind=kind, d_model=d, **MQAR)
+            specs.append(_mk("mqar", f"{kind}_d{d}", m, MQAR_OPT,
+                             MQAR_B, MQAR_T, TRAIN_ROLES))
+    # A5 deeper baselines (linear mixers need depth to track state)
+    for kind in ("mamba", "gpt", "gla"):
+        for L in (3, 4):
+            m = ModelConfig(kind=kind, n_layers=L, **A5)
+            specs.append(_mk("a5", f"{kind}_l{L}", m, A5_OPT,
+                             A5_B, A5_T, TRAIN_ROLES))
+    # Table 4 remaining mixers
+    for kind in ("mamba", "gdn", "hybrid_mamba", "hybrid_gdn"):
+        m = ModelConfig(kind=kind, **LM)
+        specs.append(_mk("lm", kind, m, LM_OPT, LM_B, LM_T,
+                         list(TRAIN_ROLES) + ["score"]))
+    # KLA+ at LM scale
+    specs.append(_mk("lm", "kla_plus", ModelConfig(kind="kla", mc_samples=4, **LM),
+                     LM_OPT, LM_B, LM_T, list(TRAIN_ROLES) + ["score"]))
+    # Fig. 3b deeper OU ablation
+    for ou, tag in ((True, "kla_l2"), (False, "kla_noou_l2"),
+                    (True, "kla_l4"), (False, "kla_noou_l4")):
+        L = int(tag[-1])
+        m = ModelConfig(kind="kla", ou_exact=ou,
+                        **{**MAD, "n_layers": L})
+        specs.append(_mk("mad", tag, m, MAD_OPT, MAD_B, MAD_T, TRAIN_ROLES))
+    # Long-T scaling point
+    specs.append(_mk("fig4", "scan_t8192",
+                     ModelConfig(kind="kla", impl="scan", **MAD),
+                     MAD_OPT, 1, 8192, ("logits",)))
+    return specs
+
+
+def manifest(name: str):
+    if name == "default":
+        return default_specs()
+    if name == "full":
+        return default_specs() + full_specs()
+    raise ValueError(f"unknown manifest {name!r}")

@@ -1,0 +1,185 @@
+"""Fused training/eval/scoring graphs (the L2 -> L3 ABI).
+
+Everything the Rust trainer needs per optimisation step is fused into ONE
+XLA module: forward, masked cross-entropy (optionally the KLA+ Monte-Carlo
+marginal-likelihood loss), backward, global-norm gradient clipping, the
+trapezoidal learning-rate schedule, and the AdamW update.  The coordinator
+keeps params and optimiser state device-resident and only ships the batch
+up / the loss scalar down (DESIGN.md §7 L3).
+
+Artifact signatures (all arrays fp32 unless noted; params/m/v are the
+flattened sorted-key param list of models.common.flatten_params):
+
+  init:   ()                                       -> (*params)
+  train:  (*params, *m, *v, step f32[], tokens i32[B,T], targets i32[B,T],
+           mask f32[B,T])                          -> (loss f32[], *params, *m, *v)
+  eval:   (*params, tokens, targets, mask)         -> (loss_sum, correct, count)
+  score:  (*params, tokens, targets, mask)         -> seq_logprob f32[B]
+  logits: (*params, tokens)                        -> logits f32[B,T,V]
+  variance: (*params, tokens)                      -> y_var f32[B,T]
+  decode: (*params, token i32[B], conv, lam, eta)  -> (logits, conv', lam', eta')
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .models.common import (cross_entropy, flatten_params, sequence_logprob,
+                            token_accuracy, unflatten_params)
+from .models.lm import ModelConfig, lm_forward, lm_forward_sampled, lm_variance
+from .models.decode import decode_step
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    """AdamW + schedule, following the paper's nanochat-style recipe
+    (Appendix G.6) scaled to this testbed."""
+    lr: float = 1e-3
+    beta1: float = 0.8
+    beta2: float = 0.95
+    eps: float = 1e-10
+    weight_decay: float = 0.1
+    grad_clip: float = 3.0
+    warmdown_frac: float = 0.4     # final fraction of steps: linear decay
+    total_steps: int = 1000
+    ssm_lr_mult: float = 0.1       # state-space params (a, p, dt, lam0)
+    mc_seed: int = 1234            # KLA+ sampling seed base
+
+    def to_dict(self):
+        from dataclasses import asdict
+        return asdict(self)
+
+
+_SSM_KEYS = ("a_raw", "p_raw", "dt_raw", "lam0_raw", "a_log")
+_NO_DECAY_SUBSTR = ("norm", "_b", "conv_b", "blam", "b_f", "b_alpha",
+                    "b_beta", "b_dt", "skip_d", "embed")
+
+
+def _param_groups(names):
+    """Per-parameter (lr_mult, wd_mult) following Appendix G.6: state-space
+    group at 0.1x LR with zero weight decay; 1-D/bias/norm/embed params
+    without weight decay."""
+    lr_mults, wd_mults = [], []
+    for name in names:
+        leaf = name.rsplit(".", 1)[-1]
+        if leaf in _SSM_KEYS:
+            lr_mults.append(0.1)
+            wd_mults.append(0.0)
+        elif any(s in leaf for s in _NO_DECAY_SUBSTR):
+            lr_mults.append(1.0)
+            wd_mults.append(0.0)
+        else:
+            lr_mults.append(1.0)
+            wd_mults.append(1.0)
+    return lr_mults, wd_mults
+
+
+def _schedule(step: jnp.ndarray, opt: OptConfig):
+    """Trapezoidal: constant, then linear warmdown over the final
+    `warmdown_frac` of training (no warmup), as in Appendix G.6."""
+    total = float(opt.total_steps)
+    down_start = total * (1.0 - opt.warmdown_frac)
+    frac = jnp.clip((total - step) / jnp.maximum(total - down_start, 1.0),
+                    0.0, 1.0)
+    return opt.lr * frac
+
+
+def make_loss_fn(cfg: ModelConfig, opt: OptConfig):
+    def loss_fn(params, tokens, targets, mask, step):
+        if cfg.mc_samples > 0:
+            # KLA+ : -log(1/S sum_s p(o_t | y_t^(s)))  (paper Eq. 24-25)
+            key = jax.random.fold_in(jax.random.PRNGKey(opt.mc_seed),
+                                     step.astype(jnp.int32))
+            logps = []
+            for s in range(cfg.mc_samples):
+                logits_s = lm_forward_sampled(cfg, params, tokens,
+                                              jax.random.fold_in(key, s))
+                logp = jax.nn.log_softmax(logits_s, axis=-1)
+                ll = jnp.take_along_axis(logp, targets[..., None],
+                                         axis=-1)[..., 0]
+                logps.append(ll)
+            # logsumexp over samples minus log S, per token
+            ll = jax.scipy.special.logsumexp(jnp.stack(logps), axis=0)
+            ll = ll - jnp.log(float(cfg.mc_samples))
+            total = jnp.maximum(jnp.sum(mask), 1.0)
+            return -jnp.sum(ll * mask) / total
+        logits = lm_forward(cfg, params, tokens)
+        return cross_entropy(logits, targets, mask)
+    return loss_fn
+
+
+def build_train_step(cfg: ModelConfig, opt: OptConfig, template: dict):
+    """Returns fn(flat_params, flat_m, flat_v, step, tokens, targets, mask)
+    -> (loss, flat_params', flat_m', flat_v')."""
+    names = [n for n, _ in flatten_params(template)]
+    lr_mults, wd_mults = _param_groups(names)
+    loss_fn = make_loss_fn(cfg, opt)
+
+    def train_step(flat_params, flat_m, flat_v, step, tokens, targets, mask):
+        params = unflatten_params(template, flat_params)
+        loss, grads = jax.value_and_grad(loss_fn)(params, tokens, targets,
+                                                  mask, step)
+        flat_grads = [g for _, g in flatten_params(grads)]
+        # global-norm clip (paper: 3.0)
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in flat_grads) + 1e-12)
+        scale = jnp.minimum(1.0, opt.grad_clip / gnorm)
+        lr = _schedule(step, opt)
+        t = step + 1.0
+        bc1 = 1.0 - opt.beta1 ** t
+        bc2 = 1.0 - opt.beta2 ** t
+        new_p, new_m, new_v = [], [], []
+        for p, m, v, g, lm_, wm in zip(flat_params, flat_m, flat_v,
+                                       flat_grads, lr_mults, wd_mults):
+            g = g * scale
+            m = opt.beta1 * m + (1.0 - opt.beta1) * g
+            v = opt.beta2 * v + (1.0 - opt.beta2) * g * g
+            update = (m / bc1) / (jnp.sqrt(v / bc2) + opt.eps)
+            p = p - lr * lm_ * (update + opt.weight_decay * wm * p)
+            new_p.append(p)
+            new_m.append(m)
+            new_v.append(v)
+        return (loss, new_p, new_m, new_v)
+
+    return train_step
+
+
+def build_eval_step(cfg: ModelConfig, template: dict):
+    def eval_step(flat_params, tokens, targets, mask):
+        params = unflatten_params(template, flat_params)
+        logits = lm_forward(cfg, params, tokens)
+        loss = cross_entropy(logits, targets, mask)
+        correct, count = token_accuracy(logits, targets, mask)
+        return loss * jnp.maximum(jnp.sum(mask), 1.0), correct, count
+    return eval_step
+
+
+def build_score_step(cfg: ModelConfig, template: dict):
+    def score_step(flat_params, tokens, targets, mask):
+        params = unflatten_params(template, flat_params)
+        logits = lm_forward(cfg, params, tokens)
+        return sequence_logprob(logits, targets, mask)
+    return score_step
+
+
+def build_logits(cfg: ModelConfig, template: dict):
+    def logits_fn(flat_params, tokens):
+        params = unflatten_params(template, flat_params)
+        return lm_forward(cfg, params, tokens)
+    return logits_fn
+
+
+def build_variance(cfg: ModelConfig, template: dict):
+    def var_fn(flat_params, tokens):
+        params = unflatten_params(template, flat_params)
+        return lm_variance(cfg, params, tokens)
+    return var_fn
+
+
+def build_decode(cfg: ModelConfig, template: dict):
+    def decode_fn(flat_params, token, conv, lam, eta):
+        params = unflatten_params(template, flat_params)
+        return decode_step(cfg, params, token, conv, lam, eta)
+    return decode_fn

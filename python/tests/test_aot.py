@@ -1,0 +1,98 @@
+"""AOT bridge tests: manifest coherence, HLO emission, meta ABI."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile.aot import build_role, to_hlo_text
+from compile.specs import ArtifactSpec, default_specs, full_specs, manifest
+from compile.models.lm import ModelConfig
+from compile.train_step import OptConfig
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def tiny_spec(role, kind="kla"):
+    m = ModelConfig(kind=kind, vocab=16, d_model=16, n_layers=1, n_state=2)
+    return ArtifactSpec("test", kind, m, OptConfig(total_steps=10), 2, 8,
+                        (role,))
+
+
+class TestSpecs:
+    def test_default_manifest_unique_names(self):
+        names = [s.artifact_name(r) for s in default_specs()
+                 for r in s.roles]
+        assert len(names) == len(set(names))
+
+    def test_full_superset(self):
+        d = {s.base_name for s in manifest("default")}
+        f = {s.base_name for s in manifest("full")}
+        assert d < f
+
+    def test_required_artifacts_present(self):
+        names = {s.artifact_name(r) for s in default_specs()
+                 for r in s.roles}
+        for required in ("mad_kla_train", "mad_kla_eval", "mad_kla_init",
+                         "mad_kla_nonoise_train", "mad_kla_noou_train",
+                         "mqar_kla_d64_train", "a5_kla_l1_train",
+                         "lm_hybrid_kla_train", "serve_kla_b8_decode",
+                         "fig4_scan_t2048_logits", "mad_kla_variance"):
+            assert required in names, required
+
+
+class TestBuildRole:
+    @pytest.mark.parametrize("role", ["init", "train", "eval", "score",
+                                      "logits", "variance", "decode"])
+    def test_lowering_produces_hlo(self, role):
+        import jax
+        spec = tiny_spec(role)
+        fn, ex, imeta, ometa, _ = build_role(spec, role)
+        text = to_hlo_text(jax.jit(fn).lower(*ex))
+        assert "ENTRY" in text and "main" in text
+        # input arity matches meta
+        assert len(ex) == len(imeta)
+
+    def test_train_meta_groups(self):
+        spec = tiny_spec("train")
+        _, ex, imeta, ometa, _ = build_role(spec, "train")
+        groups = [d.get("group") for d in imeta]
+        n_params = groups.count("params")
+        assert groups.count("opt_m") == n_params
+        assert groups.count("opt_v") == n_params
+        assert [d["name"] for d in imeta[-4:]] == ["step", "tokens",
+                                                   "targets", "mask"]
+        assert ometa[0]["name"] == "loss"
+        assert len(ometa) == 1 + 3 * n_params
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="run `make artifacts` first")
+class TestEmittedArtifacts:
+    def test_manifest_files_exist(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            names = json.load(f)["artifacts"]
+        assert len(names) >= 70
+        for n in names:
+            assert os.path.exists(os.path.join(ART, f"{n}.hlo.txt")), n
+            assert os.path.exists(os.path.join(ART, f"{n}.meta.json")), n
+
+    def test_meta_shapes_consistent(self):
+        with open(os.path.join(ART, "mad_kla_train.meta.json")) as f:
+            meta = json.load(f)
+        assert meta["role"] == "train"
+        assert meta["model"]["kind"] == "kla"
+        toks = [d for d in meta["inputs"] if d["name"] == "tokens"][0]
+        assert toks["shape"] == [meta["batch"], meta["seq"]]
+        n_params = sum(1 for d in meta["inputs"]
+                       if d.get("group") == "params")
+        assert len(meta["outputs"]) == 1 + 3 * n_params
+
+    def test_decode_meta_has_state(self):
+        with open(os.path.join(ART, "serve_kla_b8_decode.meta.json")) as f:
+            meta = json.load(f)
+        assert [s["name"] for s in meta["state"]] == ["conv", "lam", "eta"]
+        L = meta["model"]["n_layers"]
+        assert meta["state"][1]["shape"][0] == L

@@ -1,0 +1,254 @@
+"""Kernel correctness: ref (oracle) vs scan vs pallas, plus the pure-Python
+oracle's-oracle, under hypothesis-driven shape/parameter sweeps.
+
+This is the L1 correctness gate: assert_allclose against ref.py across
+shapes, dtypes-compatible ranges, and degenerate parameter regimes.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (kla_filter, kla_filter_ref_python,
+                             kla_posterior_moments)
+from compile.kernels.scan import mobius_prefix_scan, affine_prefix_scan
+from compile.kernels.ou import constrain, discretise, discretise_raw
+
+
+def make_inputs(rng, B, T, N, D, lam_v_lo=0.1, lam_v_hi=2.0):
+    return dict(
+        k=rng.normal(size=(B, T, N)).astype("f4"),
+        q=rng.normal(size=(B, T, N)).astype("f4"),
+        v=rng.normal(size=(B, T, D)).astype("f4"),
+        lam_v=rng.uniform(lam_v_lo, lam_v_hi, size=(B, T, D)).astype("f4"),
+        abar=rng.uniform(0.7, 0.999, size=(N, D)).astype("f4"),
+        pbar=rng.uniform(1e-3, 0.2, size=(N, D)).astype("f4"),
+        lam0=rng.uniform(0.5, 2.0, size=(N, D)).astype("f4"),
+        eta0=rng.normal(size=(N, D)).astype("f4") * 0.1,
+    )
+
+
+def run_impl(inp, impl):
+    return kla_filter(inp["k"], inp["q"], inp["v"], inp["lam_v"],
+                      inp["abar"], inp["pbar"], inp["lam0"], inp["eta0"],
+                      impl=impl)
+
+
+class TestImplsAgree:
+    @pytest.mark.parametrize("impl", ["scan", "pallas"])
+    @pytest.mark.parametrize("B,T,N,D", [(1, 8, 2, 4), (2, 64, 4, 8),
+                                         (3, 33, 8, 16), (1, 128, 1, 1)])
+    def test_matches_ref(self, impl, B, T, N, D):
+        rng = np.random.default_rng(B * 1000 + T)
+        inp = make_inputs(rng, B, T, N, D)
+        ref = run_impl(inp, "ref")
+        out = run_impl(inp, impl)
+        for r, o, name in zip(ref, out, ("lam", "eta", "y")):
+            np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                       rtol=3e-4, atol=3e-5, err_msg=name)
+
+    def test_ref_matches_pure_python(self):
+        rng = np.random.default_rng(7)
+        inp = make_inputs(rng, 1, 12, 3, 5)
+        ref = run_impl(inp, "ref")
+        py = kla_filter_ref_python(inp["k"][0], inp["q"][0], inp["v"][0],
+                                   inp["lam_v"][0], inp["abar"], inp["pbar"],
+                                   inp["lam0"], inp["eta0"])
+        for r, p in zip(ref, py):
+            np.testing.assert_allclose(np.asarray(r[0]), p, rtol=1e-5,
+                                       atol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(B=st.integers(1, 3), T=st.integers(1, 96), N=st.integers(1, 8),
+           D=st.integers(1, 12), seed=st.integers(0, 10_000))
+    def test_hypothesis_scan_vs_ref(self, B, T, N, D, seed):
+        rng = np.random.default_rng(seed)
+        inp = make_inputs(rng, B, T, N, D)
+        ref = run_impl(inp, "ref")
+        out = run_impl(inp, "scan")
+        for r, o in zip(ref, out):
+            np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                       rtol=5e-4, atol=5e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(T=st.integers(1, 64), N=st.integers(1, 4), D=st.integers(1, 8),
+           seed=st.integers(0, 1000))
+    def test_hypothesis_pallas_vs_ref(self, T, N, D, seed):
+        rng = np.random.default_rng(seed)
+        inp = make_inputs(rng, 1, T, N, D)
+        ref = run_impl(inp, "ref")
+        out = run_impl(inp, "pallas")
+        for r, o in zip(ref, out):
+            np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                       rtol=5e-4, atol=5e-5)
+
+
+class TestDegenerateRegimes:
+    def test_zero_process_noise_is_linear(self):
+        """pbar=0 collapses the Moebius recursion to a fixed-gate linear
+        update (Fig. 6b): lam becomes input-independent of history scaling."""
+        rng = np.random.default_rng(0)
+        inp = make_inputs(rng, 1, 32, 2, 4)
+        inp["pbar"] = np.zeros_like(inp["pbar"])
+        ref = run_impl(inp, "ref")
+        out = run_impl(inp, "scan")
+        for r, o in zip(ref, out):
+            np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                       rtol=1e-4, atol=1e-5)
+
+    def test_precision_positive_and_bounded(self):
+        """Nonzero pbar caps accumulated precision: lam stays positive and
+        below the no-noise accumulation (paper Section 5.6 stability)."""
+        rng = np.random.default_rng(1)
+        inp = make_inputs(rng, 1, 256, 2, 4, lam_v_lo=0.5, lam_v_hi=5.0)
+        lam, _, _ = run_impl(inp, "scan")
+        lam = np.asarray(lam)
+        assert (lam > 0).all()
+        inp0 = dict(inp, pbar=np.zeros_like(inp["pbar"]))
+        lam_nonoise, _, _ = run_impl(inp0, "scan")
+        # with noise, final precision must be strictly smaller (fading memory)
+        assert (np.asarray(lam)[0, -1] <= np.asarray(lam_nonoise)[0, -1] + 1e-3).all()
+
+    def test_high_value_precision_dominates(self):
+        """A token with huge precision should pull mu towards v/k."""
+        N, D = 1, 1
+        T = 8
+        k = np.ones((1, T, N), "f4")
+        q = np.ones((1, T, N), "f4")
+        v = np.zeros((1, T, D), "f4")
+        v[0, -1, 0] = 5.0
+        lam_v = np.full((1, T, D), 1e-3, "f4")
+        lam_v[0, -1, 0] = 1e5
+        abar = np.full((N, D), 0.9, "f4")
+        pbar = np.full((N, D), 0.01, "f4")
+        lam, eta, y = kla_filter(k, q, v, lam_v, abar, pbar,
+                                 np.ones((N, D), "f4"),
+                                 np.zeros((N, D), "f4"), impl="ref")
+        assert abs(float(y[0, -1, 0]) - 5.0) < 0.05
+
+    def test_variance_decreases_with_evidence(self):
+        """Posterior variance 1/lam shrinks as consistent evidence arrives
+        (the Fig. 5b mechanism)."""
+        rng = np.random.default_rng(3)
+        inp = make_inputs(rng, 1, 64, 2, 4, lam_v_lo=1.0, lam_v_hi=1.5)
+        lam, eta, _ = run_impl(inp, "ref")
+        _, y_var = kla_posterior_moments(lam, eta, jnp.asarray(inp["q"]))
+        y_var = np.asarray(y_var)[0].mean(-1)
+        assert y_var[-1] < y_var[0]
+
+
+class TestScanPrimitives:
+    def test_mobius_scan_matches_sequential(self):
+        rng = np.random.default_rng(5)
+        B, T, N, D = 2, 50, 3, 4
+        phi = rng.uniform(0.01, 2.0, (B, T, N, D)).astype("f4")
+        abar = rng.uniform(0.8, 0.99, (N, D)).astype("f4")
+        pbar = rng.uniform(0.001, 0.1, (N, D)).astype("f4")
+        lam0 = np.ones((N, D), "f4")
+        lam = np.asarray(mobius_prefix_scan(phi, abar, pbar, lam0))
+        # sequential reference
+        cur = np.broadcast_to(lam0, (B, N, D)).copy()
+        for t in range(T):
+            rho = 1.0 / (abar**2 + pbar * cur)
+            cur = rho * cur + phi[:, t]
+            np.testing.assert_allclose(lam[:, t], cur, rtol=3e-4, atol=3e-5)
+
+    def test_affine_scan_matches_sequential(self):
+        rng = np.random.default_rng(6)
+        B, T, N, D = 2, 40, 2, 3
+        f = rng.uniform(0.5, 0.99, (B, T, N, D)).astype("f4")
+        b = rng.normal(size=(B, T, N, D)).astype("f4")
+        init = rng.normal(size=(N, D)).astype("f4")
+        eta = np.asarray(affine_prefix_scan(f, b, init))
+        cur = np.broadcast_to(init, (B, N, D)).copy()
+        for t in range(T):
+            cur = f[:, t] * cur + b[:, t]
+            np.testing.assert_allclose(eta[:, t], cur, rtol=1e-4, atol=1e-5)
+
+    def test_long_sequence_stability(self):
+        """T=4096 prefix products stay finite thanks to the combine-time
+        renormalisation (scale invariance of Moebius maps)."""
+        rng = np.random.default_rng(8)
+        inp = make_inputs(rng, 1, 4096, 2, 2, lam_v_lo=0.5, lam_v_hi=4.0)
+        lam, eta, y = run_impl(inp, "scan")
+        assert np.isfinite(np.asarray(lam)).all()
+        assert np.isfinite(np.asarray(y)).all()
+        ref = run_impl(inp, "ref")
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref[2]),
+                                   rtol=2e-3, atol=2e-4)
+
+
+class TestOU:
+    def test_discretise_limits(self):
+        a = jnp.asarray([[1.0]]); p = jnp.asarray([[0.5]])
+        abar, pbar = discretise(a, p, jnp.asarray([[0.01]]))
+        assert 0.98 < float(abar.ravel()[0]) < 1.0
+        # stationary variance p^2/(2a) reached as dt -> inf
+        abar2, pbar2 = discretise(a, p, jnp.asarray([[100.0]]))
+        np.testing.assert_allclose(float(pbar2.ravel()[0]), 0.5**2 / 2, rtol=1e-5)
+        assert float(abar2.ravel()[0]) < 1e-10
+
+    def test_decay_noise_coupling(self):
+        """Faster decay (larger a) => abar smaller AND pbar saturates faster
+        — the coupled specialisation of Section 4.1."""
+        p = jnp.full((1, 1), 1.0)
+        dt = jnp.full((1, 1), 0.05)
+        ab_slow, pb_slow = discretise(jnp.full((1, 1), 0.5), p, dt)
+        ab_fast, pb_fast = discretise(jnp.full((1, 1), 8.0), p, dt)
+        assert float(ab_fast.ravel()[0]) < float(ab_slow.ravel()[0])
+        # fraction of stationary variance reached is higher for fast decay
+        frac_slow = float(pb_slow.ravel()[0]) / (1.0 / (2 * 0.5))
+        frac_fast = float(pb_fast.ravel()[0]) / (1.0 / (2 * 8.0))
+        assert frac_fast > frac_slow
+
+    def test_constrain_domains(self):
+        raw = jnp.asarray(np.linspace(-10, 10, 21), jnp.float32)
+        a, p, dt = constrain(raw, raw, raw)
+        assert (np.asarray(a) > 0).all()
+        assert (np.asarray(p) >= 0).all()
+        assert (np.asarray(dt) >= 1e-3 - 1e-9).all()
+        assert (np.asarray(dt) <= 0.1 + 1e-9).all()
+
+    def test_ablation_switches(self):
+        raw = jnp.zeros((2, 3), jnp.float32)
+        _, pbar = discretise_raw(raw, raw, raw, process_noise=False)
+        assert (np.asarray(pbar) == 0).all()
+        ab_e, _ = discretise_raw(raw, raw, raw, ou_exact=False)
+        ab_x, _ = discretise_raw(raw, raw, raw, ou_exact=True)
+        assert not np.allclose(np.asarray(ab_e), np.asarray(ab_x))
+
+
+class TestGradients:
+    def test_pallas_grads_match_scan(self):
+        rng = np.random.default_rng(11)
+        inp = make_inputs(rng, 1, 24, 2, 4)
+
+        def loss(impl):
+            def f(k, q, v, lam_v, abar, pbar):
+                lam, eta, y = kla_filter(k, q, v, lam_v, abar, pbar,
+                                         inp["lam0"], inp["eta0"], impl=impl)
+                return jnp.sum(y * y) + 0.01 * jnp.sum(jnp.log(lam))
+            return f
+
+        args = (inp["k"], inp["q"], inp["v"], inp["lam_v"], inp["abar"],
+                inp["pbar"])
+        g1 = jax.grad(loss("scan"), argnums=tuple(range(6)))(*args)
+        g2 = jax.grad(loss("pallas"), argnums=tuple(range(6)))(*args)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=5e-4, atol=5e-5)
+
+    def test_grad_finite_through_long_scan(self):
+        rng = np.random.default_rng(12)
+        inp = make_inputs(rng, 1, 512, 2, 4)
+
+        def f(k):
+            _, _, y = kla_filter(k, inp["q"], inp["v"], inp["lam_v"],
+                                 inp["abar"], inp["pbar"], inp["lam0"],
+                                 inp["eta0"], impl="scan")
+            return jnp.sum(y * y)
+
+        g = jax.grad(f)(inp["k"])
+        assert np.isfinite(np.asarray(g)).all()

@@ -1,0 +1,189 @@
+"""L2 model tests: shapes, causality, decode==parallel consistency,
+ablation switches, KLA+ sampling, and the hybrid wiring."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile.models.common import (causal_conv1d, conv_state_step,
+                                   cross_entropy, flatten_params, l2norm,
+                                   rmsnorm, sequence_logprob,
+                                   token_accuracy, unflatten_params)
+from compile.models.lm import (KINDS, ModelConfig, init_lm, lm_forward,
+                               lm_forward_sampled, lm_variance)
+from compile.models.decode import decode_init_state, decode_step
+
+CFG = dict(vocab=32, d_model=32, n_layers=2, n_state=4)
+
+
+def tiny_cfg(kind, **kw):
+    return ModelConfig(kind=kind, **{**CFG, **kw})
+
+
+class TestCommon:
+    def test_flatten_roundtrip(self):
+        cfg = tiny_cfg("kla")
+        p = init_lm(cfg, 0)
+        flat = flatten_params(p)
+        p2 = unflatten_params(p, [a for _, a in flat])
+        flat2 = flatten_params(p2)
+        assert [n for n, _ in flat] == [n for n, _ in flat2]
+        for (_, a), (_, b) in zip(flat, flat2):
+            assert a is b
+
+    def test_flatten_layer_order(self):
+        """Zero-padded block names keep layer order under sorted keys."""
+        cfg = tiny_cfg("kla", n_layers=12)
+        p = init_lm(cfg, 0)
+        names = [n for n, _ in flatten_params(p)]
+        block_ids = []
+        for n in names:
+            if n.startswith("blocks."):
+                block_ids.append(int(n.split(".")[1].split("_")[0]))
+        assert block_ids == sorted(block_ids)
+
+    def test_causal_conv_is_causal(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(1, 16, 4)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(4, 4)), jnp.float32)
+        b = jnp.zeros((4,), jnp.float32)
+        y = causal_conv1d(x, w, b)
+        x2 = x.at[0, 10].set(99.0)
+        y2 = causal_conv1d(x2, w, b)
+        np.testing.assert_allclose(np.asarray(y[0, :10]),
+                                   np.asarray(y2[0, :10]), atol=1e-6)
+        assert not np.allclose(np.asarray(y[0, 10]), np.asarray(y2[0, 10]))
+
+    def test_conv_state_step_matches_parallel(self):
+        rng = np.random.default_rng(1)
+        B, T, D, K = 2, 12, 4, 4
+        x = jnp.asarray(rng.normal(size=(B, T, D)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(K, D)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(D,)), jnp.float32)
+        y_par = causal_conv1d(x, w, b)
+        state = jnp.zeros((B, K - 1, D), jnp.float32)
+        for t in range(T):
+            y_t, state = conv_state_step(state, x[:, t], w, b)
+            np.testing.assert_allclose(np.asarray(y_t),
+                                       np.asarray(y_par[:, t]),
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_cross_entropy_mask(self):
+        logits = jnp.zeros((1, 4, 8), jnp.float32)
+        tgt = jnp.zeros((1, 4), jnp.int32)
+        full = cross_entropy(logits, tgt, jnp.ones((1, 4)))
+        half = cross_entropy(logits, tgt,
+                             jnp.asarray([[1.0, 1.0, 0.0, 0.0]]))
+        np.testing.assert_allclose(float(full), float(half), rtol=1e-6)
+        np.testing.assert_allclose(float(full), np.log(8), rtol=1e-5)
+
+    def test_sequence_logprob(self):
+        rng = np.random.default_rng(2)
+        logits = jnp.asarray(rng.normal(size=(2, 4, 8)), jnp.float32)
+        tgt = jnp.asarray(rng.integers(0, 8, (2, 4)), jnp.int32)
+        mask = jnp.ones((2, 4), jnp.float32)
+        lp = sequence_logprob(logits, tgt, mask)
+        assert lp.shape == (2,)
+        assert (np.asarray(lp) < 0).all()
+
+    def test_token_accuracy(self):
+        logits = jnp.eye(4)[None] * 10.0          # predicts identity
+        tgt = jnp.asarray([[0, 1, 2, 0]], jnp.int32)
+        correct, count = token_accuracy(logits, tgt, jnp.ones((1, 4)))
+        assert float(count) == 4.0
+        assert float(correct) == 3.0
+
+
+class TestForward:
+    @pytest.mark.parametrize("kind", list(KINDS))
+    def test_shapes(self, kind):
+        cfg = tiny_cfg(kind)
+        p = init_lm(cfg, 0)
+        toks = jnp.zeros((2, 16), jnp.int32)
+        out = lm_forward(cfg, p, toks)
+        assert out.shape == (2, 16, cfg.vocab)
+        assert np.isfinite(np.asarray(out)).all()
+
+    @pytest.mark.parametrize("kind", ["kla", "mamba", "gla", "gdn", "gpt",
+                                      "hybrid_kla"])
+    def test_causality(self, kind):
+        """Changing token t must not change logits at positions < t."""
+        cfg = tiny_cfg(kind)
+        p = init_lm(cfg, 0)
+        rng = np.random.default_rng(3)
+        toks = jnp.asarray(rng.integers(0, 32, (1, 16)), jnp.int32)
+        out1 = np.asarray(lm_forward(cfg, p, toks))
+        toks2 = toks.at[0, 10].set((int(toks[0, 10]) + 1) % 32)
+        out2 = np.asarray(lm_forward(cfg, p, toks2))
+        np.testing.assert_allclose(out1[0, :10], out2[0, :10],
+                                   rtol=1e-4, atol=1e-4)
+        assert not np.allclose(out1[0, 10:], out2[0, 10:], atol=1e-4)
+
+    def test_kla_impls_consistent_in_model(self):
+        toks = jnp.asarray(np.arange(16)[None] % 32, jnp.int32)
+        outs = []
+        for impl in ("scan", "pallas", "ref"):
+            cfg = tiny_cfg("kla", impl=impl)
+            p = init_lm(cfg, 0)
+            outs.append(np.asarray(lm_forward(cfg, p, toks)))
+        np.testing.assert_allclose(outs[0], outs[1], rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(outs[0], outs[2], rtol=2e-4, atol=2e-4)
+
+    def test_ablations_change_output(self):
+        toks = jnp.asarray(np.arange(16)[None] % 32, jnp.int32)
+        base = np.asarray(lm_forward(tiny_cfg("kla"),
+                                     init_lm(tiny_cfg("kla"), 0), toks))
+        for kw in ({"process_noise": False}, {"ou_exact": False}):
+            cfg = tiny_cfg("kla", **kw)
+            out = np.asarray(lm_forward(cfg, init_lm(cfg, 0), toks))
+            assert not np.allclose(base, out, atol=1e-5), kw
+
+    def test_hybrid_last_block_is_kla(self):
+        cfg = tiny_cfg("hybrid_kla", n_layers=3)
+        p = init_lm(cfg, 0)
+        kinds = [n.split("_", 1)[1] for n in sorted(p["blocks"])]
+        assert kinds == ["gpt", "gpt", "kla"]
+
+    def test_variance_positive(self):
+        cfg = tiny_cfg("kla")
+        p = init_lm(cfg, 0)
+        toks = jnp.zeros((2, 16), jnp.int32)
+        var = lm_variance(cfg, p, toks)
+        assert var.shape == (2, 16)
+        assert (np.asarray(var) > 0).all()
+
+    def test_sampled_forward_varies_with_key(self):
+        cfg = tiny_cfg("kla")
+        p = init_lm(cfg, 0)
+        toks = jnp.zeros((1, 8), jnp.int32)
+        a = np.asarray(lm_forward_sampled(cfg, p, toks, jax.random.PRNGKey(0)))
+        b = np.asarray(lm_forward_sampled(cfg, p, toks, jax.random.PRNGKey(1)))
+        assert not np.allclose(a, b)
+        assert np.isfinite(a).all()
+
+
+class TestDecode:
+    def test_decode_matches_parallel(self):
+        """The O(1) recurrent path must reproduce the scan path token by
+        token — this is the serving-correctness contract."""
+        cfg = tiny_cfg("kla")
+        p = init_lm(cfg, 0)
+        rng = np.random.default_rng(4)
+        B, T = 2, 12
+        toks = jnp.asarray(rng.integers(0, 32, (B, T)), jnp.int32)
+        full = np.asarray(lm_forward(cfg, p, toks))
+        conv, lam, eta = decode_init_state(cfg, p, B)
+        for t in range(T):
+            logits, conv, lam, eta = decode_step(cfg, p, toks[:, t],
+                                                 conv, lam, eta)
+            np.testing.assert_allclose(np.asarray(logits), full[:, t],
+                                       rtol=2e-3, atol=2e-3)
+
+    def test_decode_state_shapes(self):
+        cfg = tiny_cfg("kla", n_layers=3)
+        p = init_lm(cfg, 0)
+        conv, lam, eta = decode_init_state(cfg, p, 5)
+        assert conv.shape == (3, 5, cfg.conv_kernel - 1, cfg.d_model)
+        assert lam.shape == (3, 5, cfg.n_state, cfg.d_model)
+        assert (np.asarray(lam) > 0).all()

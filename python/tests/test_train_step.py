@@ -1,0 +1,158 @@
+"""Training-graph tests: convergence, schedule, clipping, param groups,
+KLA+ MC loss, and eval/score/decode builders."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile.models.common import flatten_params
+from compile.models.lm import ModelConfig, init_lm, lm_forward
+from compile.train_step import (OptConfig, _param_groups, _schedule,
+                                build_decode, build_eval_step, build_logits,
+                                build_score_step, build_train_step,
+                                build_variance)
+
+CFG = dict(vocab=32, d_model=32, n_layers=1, n_state=4)
+
+
+def setup(kind="kla", opt=None, **kw):
+    cfg = ModelConfig(kind=kind, **{**CFG, **kw})
+    opt = opt or OptConfig(lr=3e-3, total_steps=100)
+    tpl = init_lm(cfg, 0)
+    flat = [a for _, a in flatten_params(tpl)]
+    return cfg, opt, tpl, flat
+
+
+def pattern_batch(B=4, T=32, V=32):
+    pat = jnp.asarray(np.tile(np.arange(8), (B, T // 8)), jnp.int32)
+    return pat, jnp.roll(pat, -1, axis=1), jnp.ones((B, T), jnp.float32)
+
+
+def run_steps(cfg, opt, tpl, flat, steps=60):
+    ts = jax.jit(build_train_step(cfg, opt, tpl))
+    m = [jnp.zeros_like(a) for a in flat]
+    v = [jnp.zeros_like(a) for a in flat]
+    toks, tgt, mask = pattern_batch()
+    losses = []
+    for s in range(steps):
+        loss, flat, m, v = ts(flat, m, v, jnp.float32(s), toks, tgt, mask)
+        losses.append(float(loss))
+    return losses, flat
+
+
+class TestTrainStep:
+    @pytest.mark.parametrize("kind", ["kla", "mamba", "gla", "gpt"])
+    def test_converges(self, kind):
+        cfg, opt, tpl, flat = setup(kind)
+        losses, _ = run_steps(cfg, opt, tpl, flat)
+        assert losses[-1] < losses[0] * 0.4, (kind, losses[0], losses[-1])
+        assert all(np.isfinite(losses))
+
+    def test_gdn_converges(self):
+        cfg, opt, tpl, flat = setup("gdn")
+        losses, _ = run_steps(cfg, opt, tpl, flat, steps=80)
+        assert losses[-1] < losses[0] * 0.6
+
+    def test_kla_plus_mc_loss_converges(self):
+        cfg, opt, tpl, flat = setup("kla", mc_samples=2)
+        losses, _ = run_steps(cfg, opt, tpl, flat, steps=50)
+        assert losses[-1] < losses[0] * 0.6
+        assert all(np.isfinite(losses))
+
+    def test_nonoise_ablation_trains(self):
+        cfg, opt, tpl, flat = setup("kla", process_noise=False)
+        losses, _ = run_steps(cfg, opt, tpl, flat, steps=40)
+        assert all(np.isfinite(losses))
+
+    def test_schedule_trapezoidal(self):
+        opt = OptConfig(lr=1.0, total_steps=100, warmdown_frac=0.4)
+        assert float(_schedule(jnp.float32(0), opt)) == pytest.approx(1.0)
+        assert float(_schedule(jnp.float32(59), opt)) == pytest.approx(1.0)
+        mid = float(_schedule(jnp.float32(80), opt))
+        assert 0.4 < mid < 0.6
+        assert float(_schedule(jnp.float32(100), opt)) == pytest.approx(0.0)
+
+    def test_param_groups(self):
+        cfg, _, tpl, _ = setup("kla")
+        names = [n for n, _ in flatten_params(tpl)]
+        lr_mults, wd_mults = _param_groups(names)
+        by_name = dict(zip(names, zip(lr_mults, wd_mults)))
+        for n, (lm_, wm) in by_name.items():
+            leaf = n.rsplit(".", 1)[-1]
+            if leaf in ("a_raw", "p_raw", "dt_raw", "lam0_raw"):
+                assert lm_ == 0.1 and wm == 0.0, n
+            if leaf == "norm" or leaf == "embed":
+                assert wm == 0.0, n
+            if leaf in ("wk", "wv", "head"):
+                assert lm_ == 1.0 and wm == 1.0, n
+
+    def test_grad_clip_bounds_update(self):
+        """With a huge LR and tiny clip the update magnitude stays bounded."""
+        cfg, _, tpl, flat = setup("kla",
+                                  opt=OptConfig(lr=1e-3, grad_clip=1e-6,
+                                                total_steps=100))
+        opt = OptConfig(lr=1e-3, grad_clip=1e-6, total_steps=100)
+        ts = jax.jit(build_train_step(cfg, opt, tpl))
+        m = [jnp.zeros_like(a) for a in flat]
+        v = [jnp.zeros_like(a) for a in flat]
+        toks, tgt, mask = pattern_batch()
+        _, flat2, _, _ = ts(flat, m, v, jnp.float32(0), toks, tgt, mask)
+        # AdamW normalises by sqrt(v), so update ~ lr regardless; but with
+        # clip ~0 the first-step m/sqrt(v) ratio is finite; just assert all
+        # params remain finite and close to the originals.
+        for a, b in zip(flat, flat2):
+            assert np.isfinite(np.asarray(b)).all()
+            assert np.max(np.abs(np.asarray(a) - np.asarray(b))) < 0.01
+
+
+class TestOtherBuilders:
+    def test_eval_step(self):
+        cfg, _, tpl, flat = setup("kla")
+        ev = jax.jit(build_eval_step(cfg, tpl))
+        toks, tgt, mask = pattern_batch()
+        loss_sum, correct, count = ev(flat, toks, tgt, mask)
+        assert float(count) == float(mask.sum())
+        assert 0.0 <= float(correct) <= float(count)
+        assert float(loss_sum) > 0
+
+    def test_score_step_ranks_likely_continuation(self):
+        cfg, opt, tpl, flat = setup("kla")
+        _, trained = run_steps(cfg, opt, tpl, flat, steps=60)
+        sc = jax.jit(build_score_step(cfg, tpl))
+        toks, tgt, mask = pattern_batch(B=2)
+        good = sc(trained, toks, tgt, mask)
+        bad_tgt = (tgt + 3) % 32
+        bad = sc(trained, toks, bad_tgt, mask)
+        assert (np.asarray(good) > np.asarray(bad)).all()
+
+    def test_logits_matches_forward(self):
+        cfg, _, tpl, flat = setup("kla")
+        lg = jax.jit(build_logits(cfg, tpl))
+        toks, _, _ = pattern_batch(B=2)
+        np.testing.assert_allclose(np.asarray(lg(flat, toks)),
+                                   np.asarray(lm_forward(cfg, tpl, toks)),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_variance_builder(self):
+        cfg, _, tpl, flat = setup("kla")
+        vf = jax.jit(build_variance(cfg, tpl))
+        toks, _, _ = pattern_batch(B=2)
+        var = vf(flat, toks)
+        assert var.shape == toks.shape
+        assert (np.asarray(var) > 0).all()
+
+    def test_decode_builder_matches_logits(self):
+        from compile.models.decode import decode_init_state
+        cfg, _, tpl, flat = setup("kla")
+        dec = jax.jit(build_decode(cfg, tpl))
+        lg = jax.jit(build_logits(cfg, tpl))
+        rng = np.random.default_rng(0)
+        B, T = 2, 6
+        toks = jnp.asarray(rng.integers(0, 32, (B, T)), jnp.int32)
+        full = np.asarray(lg(flat, toks))
+        conv, lam, eta = decode_init_state(cfg, tpl, B)
+        for t in range(T):
+            logits, conv, lam, eta = dec(flat, toks[:, t], conv, lam, eta)
+            np.testing.assert_allclose(np.asarray(logits), full[:, t],
+                                       rtol=2e-3, atol=2e-3)

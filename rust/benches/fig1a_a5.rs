@@ -1,0 +1,47 @@
+//! Fig. 1a: A5 state-tracking expressivity — minimum depth to solve the
+//! word problem (accuracy >= 0.9, paper G.1).
+//!
+//! Claim shape: KLA solves at depth 1-2 (Moebius nonlinearity); linear
+//! SSMs / attention do not at the same depth.  Depths 3-4 for baselines
+//! come from `make artifacts-full`.
+
+use kla::bench::exp::{bench_seeds, bench_steps, have, train_mean_acc};
+use kla::bench::Suite;
+use kla::data::task_by_name;
+use kla::runtime::Runtime;
+
+fn main() {
+    let rt = match Runtime::discover() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP fig1a: {e}");
+            return;
+        }
+    };
+    let steps = bench_steps(400);
+    let seeds = bench_seeds(1);
+    let task = task_by_name("a5").unwrap();
+    let mut suite = Suite::new("fig1a_a5");
+    for model in ["kla", "mamba", "gla", "gpt"] {
+        let mut min_depth_solved: Option<usize> = None;
+        for depth in [1usize, 2, 3, 4] {
+            let base = format!("a5_{model}_l{depth}");
+            if !have(&rt, &base) {
+                continue;
+            }
+            let (acc, _) =
+                train_mean_acc(&rt, &base, task.as_ref(), steps, seeds)
+                    .unwrap();
+            suite.metric_row(&format!("{model}/l{depth}"),
+                             vec![("acc".into(), acc)]);
+            if acc >= 0.9 && min_depth_solved.is_none() {
+                min_depth_solved = Some(depth);
+            }
+        }
+        match min_depth_solved {
+            Some(d) => println!("{model:8} solves A5 at depth {d}"),
+            None => println!("{model:8} does not solve A5 at tested depths"),
+        }
+    }
+    suite.finish();
+}

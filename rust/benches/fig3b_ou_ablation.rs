@@ -1,0 +1,42 @@
+//! Fig. 3b: OU-prior discretisation ablation on Selective Copy.
+//!
+//! `kla_noou` replaces the exact OU discretisation with naive Euler;
+//! the paper finds exact OU improves accuracy and stability, especially
+//! at depth (deeper variants via `make artifacts-full`).
+
+use kla::bench::exp::{bench_seeds, bench_steps, have, train_mean_acc};
+use kla::bench::Suite;
+use kla::data::task_by_name;
+use kla::runtime::Runtime;
+
+fn main() {
+    let rt = match Runtime::discover() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP fig3b: {e}");
+            return;
+        }
+    };
+    let steps = bench_steps(150);
+    let seeds = bench_seeds(1);
+    let task = task_by_name("selective_copy").unwrap();
+    let mut suite = Suite::new("fig3b_ou_ablation");
+    let pairs = [
+        ("mad_kla", "ou/depth1"),
+        ("mad_kla_noou", "euler/depth1"),
+        ("mad_kla_l2", "ou/depth2"),
+        ("mad_kla_noou_l2", "euler/depth2"),
+        ("mad_kla_l4", "ou/depth4"),
+        ("mad_kla_noou_l4", "euler/depth4"),
+    ];
+    for (base, label) in pairs {
+        if !have(&rt, base) {
+            println!("({base} not built — `make artifacts-full` for depth)");
+            continue;
+        }
+        let (acc, _) =
+            train_mean_acc(&rt, base, task.as_ref(), steps, seeds).unwrap();
+        suite.metric_row(label, vec![("acc".into(), acc)]);
+    }
+    suite.finish();
+}

@@ -1,0 +1,49 @@
+//! Fig. 5a: MAD synthetic suite accuracy table across mixers.
+//!
+//! Paper: 6 tasks x {GDN, GLA, Mamba, mLSTM, KLA, KLA+}; ours drops mLSTM
+//! (DESIGN.md §5) and scales epochs to the CPU budget.  Env knobs:
+//! KLA_BENCH_STEPS (default 150), KLA_BENCH_SEEDS (default 1),
+//! KLA_BENCH_MODELS (comma list).
+
+use kla::bench::exp::{bench_seeds, bench_steps, have, train_mean_acc};
+use kla::bench::Suite;
+use kla::data::{task_by_name, MAD_TASKS};
+use kla::runtime::Runtime;
+
+fn main() {
+    let rt = match Runtime::discover() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP fig5a: {e}");
+            return;
+        }
+    };
+    let steps = bench_steps(150);
+    let seeds = bench_seeds(1);
+    let models: Vec<String> = std::env::var("KLA_BENCH_MODELS")
+        .map(|s| s.split(',').map(|x| x.to_string()).collect())
+        .unwrap_or_else(|_| {
+            ["kla", "kla_plus", "mamba", "gla", "gdn"]
+                .iter().map(|s| s.to_string()).collect()
+        });
+
+    let mut suite = Suite::new("fig5a_mad");
+    println!("MAD suite, {steps} steps x {seeds} seed(s)\n");
+    for task_name in MAD_TASKS {
+        let task = task_by_name(task_name).unwrap();
+        for model in &models {
+            let base = format!("mad_{model}");
+            if !have(&rt, &base) {
+                continue;
+            }
+            let (acc, step_ms) =
+                train_mean_acc(&rt, &base, task.as_ref(), steps, seeds)
+                    .unwrap();
+            suite.metric_row(
+                &format!("{task_name}/{model}"),
+                vec![("acc".into(), acc), ("step_ms".into(), step_ms)],
+            );
+        }
+    }
+    suite.finish();
+}

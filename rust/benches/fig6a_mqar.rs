@@ -1,0 +1,41 @@
+//! Fig. 6a: long-context MQAR accuracy vs model dimension.
+//!
+//! Paper: T=2048, V=256, d in {64,128,256}; ours: T=256, V=64, d in
+//! {32,64,128} (d=64 in the default manifest; 32/128 need
+//! `make artifacts-full`).  Claim shape to reproduce: KLA > Mamba >> GLA
+//! at the top dimension; GDN strongest at the smallest.
+
+use kla::bench::exp::{bench_seeds, bench_steps, have, train_mean_acc};
+use kla::bench::Suite;
+use kla::data::task_by_name;
+use kla::runtime::Runtime;
+
+fn main() {
+    let rt = match Runtime::discover() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP fig6a: {e}");
+            return;
+        }
+    };
+    let steps = bench_steps(250);
+    let seeds = bench_seeds(1);
+    let task = task_by_name("mqar").unwrap();
+    let mut suite = Suite::new("fig6a_mqar");
+    for d in [32usize, 64, 128] {
+        for model in ["kla", "mamba", "gla", "gdn"] {
+            let base = format!("mqar_{model}_d{d}");
+            if !have(&rt, &base) {
+                println!("({base} not built — `make artifacts-full`)");
+                continue;
+            }
+            let (acc, step_ms) =
+                train_mean_acc(&rt, &base, task.as_ref(), steps, seeds)
+                    .unwrap();
+            suite.metric_row(&format!("d{d}/{model}"),
+                             vec![("acc".into(), acc),
+                                  ("step_ms".into(), step_ms)]);
+        }
+    }
+    suite.finish();
+}

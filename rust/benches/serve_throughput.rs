@@ -1,0 +1,79 @@
+//! Serving throughput/latency: continuous batching vs batch-of-one, and
+//! batching-window sensitivity — the L3 coordinator's own performance
+//! characteristics (EXPERIMENTS.md §Perf / L3).
+
+use kla::bench::Suite;
+use kla::config::ServeConfig;
+use kla::runtime::Runtime;
+use kla::serve::{serve, Client};
+use kla::util::Stats;
+
+fn load_once(addr: &str, n_requests: usize, max_new: usize)
+             -> (f64, Stats) {
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for i in 0..n_requests {
+        let addr = addr.to_string();
+        joins.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            let prompt: Vec<i32> =
+                (0..4).map(|j| ((i * 13 + j) % 200) as i32).collect();
+            let r = c.request(&prompt, max_new).unwrap();
+            r.req("total_ms").unwrap().as_f64().unwrap()
+        }));
+    }
+    let mut lat = Stats::new();
+    for j in joins {
+        lat.push(j.join().unwrap());
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let toks = (n_requests * max_new) as f64;
+    (toks / wall_s, lat)
+}
+
+fn main() {
+    let rt = match Runtime::discover() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP serve bench: {e}");
+            return;
+        }
+    };
+    let init = rt.load("lm_kla_init").unwrap();
+    let params = init.run(&[]).unwrap();
+    let mut suite = Suite::new("serve_throughput");
+
+    for (artifact, label) in [("serve_kla_b8", "batch8"),
+                              ("serve_kla_b1", "batch1")] {
+        for window_us in [100u64, 1000] {
+            let cfg = ServeConfig {
+                addr: "127.0.0.1:0".into(),
+                artifact: artifact.into(),
+                batch_window_us: window_us,
+                max_new_tokens: 8,
+                ..Default::default()
+            };
+            let handle = serve(rt.dir().to_path_buf(), artifact.into(),
+                               params.clone(), &cfg).unwrap();
+            let addr = handle.addr.clone();
+            // warm the engine (first step compiles nothing but touches
+            // the executable)
+            let _ = load_once(&addr, 2, 2);
+            let (tps, lat) = load_once(&addr, 24, 8);
+            let stats = handle.stop().unwrap();
+            suite.metric_row(
+                &format!("{label}/window{window_us}us"),
+                vec![
+                    ("tokens_per_s".into(), tps),
+                    ("p50_ms".into(), lat.percentile(50.0)),
+                    ("p99_ms".into(), lat.percentile(99.0)),
+                    ("engine_step_ms".into(), stats.mean_step_ms()),
+                    ("occupancy".into(),
+                     stats.batch_occupancy.iter().sum::<f64>()
+                         / stats.batch_occupancy.len().max(1) as f64),
+                ],
+            );
+        }
+    }
+    suite.finish();
+}

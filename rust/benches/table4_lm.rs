@@ -1,0 +1,69 @@
+//! Table 4 / Fig. 1b (scaled): pretrain on the synthetic corpus, evaluate
+//! the 8-family zero-shot suite.  Paper: KLA competitive standalone;
+//! GPT+KLA (final layer swapped) beats pure GPT on average.
+//!
+//! Default manifest models: kla, gpt, hybrid_kla (mamba/gdn/hybrids via
+//! `make artifacts-full`).  KLA_BENCH_STEPS scales pretraining length.
+
+use kla::bench::exp::{bench_steps, have};
+use kla::bench::Suite;
+use kla::config::TrainConfig;
+use kla::data::corpus::CorpusLm;
+use kla::eval::ZeroShotSuite;
+use kla::runtime::{Runtime, ScoreSession, TrainSession};
+
+fn main() {
+    let rt = match Runtime::discover() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP table4: {e}");
+            return;
+        }
+    };
+    let steps = bench_steps(200);
+    let seed = 0u64;
+    let meta = rt.meta("lm_kla_train").unwrap();
+    let (lm_data, tok, corpus) =
+        CorpusLm::build(seed, 2_000_000, meta.model.vocab).unwrap();
+    let suite_items = ZeroShotSuite::build(&corpus, seed, 8);
+    let mut suite = Suite::new("table4_lm");
+
+    let models = ["kla", "gpt", "hybrid_kla", "mamba", "gdn",
+                  "hybrid_mamba", "hybrid_gdn", "kla_plus"];
+    for model in models {
+        let base = format!("lm_{model}");
+        if !have(&rt, &base) {
+            println!("({base} not built — `make artifacts-full`)");
+            continue;
+        }
+        let ckdir = std::env::temp_dir().join("kla_table4");
+        let ckdir_s = ckdir.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(
+            kla::train::checkpoint::path_for(&ckdir_s, &base));
+        let cfg = TrainConfig {
+            artifact: base.clone(),
+            steps,
+            seed,
+            eval_every: 0,
+            eval_batches: 3,
+            log_every: steps.max(1),
+            checkpoint_dir: Some(ckdir_s.clone()),
+            target_accuracy: None,
+        };
+        let outcome = kla::train::run(&rt, &cfg, &lm_data).unwrap();
+        let params = kla::train::checkpoint::load(
+            &kla::train::checkpoint::path_for(&ckdir_s, &base)).unwrap();
+        let scorer = ScoreSession::new(&rt, &base, params).unwrap();
+        let report = suite_items.evaluate(&scorer, &tok).unwrap();
+        let mut metrics: Vec<(String, f64)> = vec![
+            ("ppl_loss".into(), outcome.eval.mean_loss()),
+            ("next_tok_acc".into(), outcome.accuracy()),
+            ("zeroshot_avg".into(), report.average()),
+        ];
+        for (t, a, _) in &report.per_task {
+            metrics.push((t.clone(), *a));
+        }
+        suite.metric_row(&format!("lm/{model}"), metrics);
+    }
+    suite.finish();
+}

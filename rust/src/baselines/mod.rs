@@ -1,0 +1,165 @@
+//! Native baseline scan primitives (GLA-style gated linear scan), used by
+//! the Fig. 4 bench to compare KLA's Moebius scan against the linear scan
+//! it generalises — at identical state size and memory layout.
+
+use crate::util::pool::parallel_ranges;
+
+/// Sequential gated linear recurrence h_t = f_t ⊙ h_{t-1} + b_t over a
+/// time-major (T, S) grid.  The GLA/Mamba-style first-order update.
+pub fn linear_scan_sequential(t_len: usize, s: usize, f: &[f32], b: &[f32],
+                              init: &[f32]) -> Vec<f32> {
+    assert_eq!(f.len(), t_len * s);
+    assert_eq!(b.len(), t_len * s);
+    let mut out = vec![0.0f32; t_len * s];
+    let mut cur = init.to_vec();
+    for t in 0..t_len {
+        for i in 0..s {
+            cur[i] = f[t * s + i] * cur[i] + b[t * s + i];
+            out[t * s + i] = cur[i];
+        }
+    }
+    out
+}
+
+/// Chunked multi-threaded version: compose (F, B) per chunk, combine
+/// carries, replay.  Exactly the affine half of the KLA chunked scan.
+pub fn linear_scan_chunked(t_len: usize, s: usize, f: &[f32], b: &[f32],
+                           init: &[f32], threads: usize) -> Vec<f32> {
+    if t_len == 0 {
+        return vec![];
+    }
+    let threads = threads.clamp(1, t_len);
+    let chunk_len = t_len.div_ceil(threads);
+    let n_chunks = t_len.div_ceil(chunk_len);
+
+    // Pass 1: per-chunk (F, B) composition.
+    let mut summ: Vec<(Vec<f32>, Vec<f32>)> =
+        vec![(vec![1.0; s], vec![0.0; s]); n_chunks];
+    {
+        let cells: Vec<_> = summ.iter_mut().collect();
+        std::thread::scope(|scope| {
+            for (c, slot) in cells.into_iter().enumerate() {
+                scope.spawn(move || {
+                    let start = c * chunk_len;
+                    let end = ((c + 1) * chunk_len).min(t_len);
+                    for t in start..end {
+                        for i in 0..s {
+                            let ft = f[t * s + i];
+                            slot.0[i] *= ft;
+                            slot.1[i] = ft * slot.1[i] + b[t * s + i];
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    // Pass 2: carries.
+    let mut carries = vec![init.to_vec()];
+    for c in 0..n_chunks - 1 {
+        let prev = carries.last().unwrap();
+        let mut next = vec![0.0f32; s];
+        for i in 0..s {
+            next[i] = summ[c].0[i] * prev[i] + summ[c].1[i];
+        }
+        carries.push(next);
+    }
+
+    // Pass 3: replay.
+    let mut out = vec![0.0f32; t_len * s];
+    {
+        let mut parts: Vec<&mut [f32]> = Vec::with_capacity(n_chunks);
+        let mut rest = &mut out[..];
+        for c in 0..n_chunks {
+            let start = c * chunk_len;
+            let end = ((c + 1) * chunk_len).min(t_len);
+            let (head, tail) = rest.split_at_mut((end - start) * s);
+            parts.push(head);
+            rest = tail;
+        }
+        std::thread::scope(|scope| {
+            for (c, part) in parts.into_iter().enumerate() {
+                let carry = carries[c].clone();
+                scope.spawn(move || {
+                    let start = c * chunk_len;
+                    let end = ((c + 1) * chunk_len).min(t_len);
+                    let mut cur = carry;
+                    for (ti, t) in (start..end).enumerate() {
+                        for i in 0..s {
+                            cur[i] = f[t * s + i] * cur[i] + b[t * s + i];
+                            part[ti * s + i] = cur[i];
+                        }
+                    }
+                });
+            }
+        });
+    }
+    out
+}
+
+/// Blocked parallel-over-channels execution of the *sequential* recurrence
+/// (how a GPU would parallelise the naive recurrent baseline: time stays
+/// sequential, channels split across cores).
+pub fn linear_scan_channel_parallel(t_len: usize, s: usize, f: &[f32],
+                                    b: &[f32], init: &[f32],
+                                    threads: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; t_len * s];
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    parallel_ranges(s, threads, |_, lo, hi| {
+        let out_ptr = &out_ptr;
+        for i in lo..hi {
+            let mut cur = init[i];
+            for t in 0..t_len {
+                cur = f[t * s + i] * cur + b[t * s + i];
+                // SAFETY: each (t, i) cell is written by exactly one thread
+                // because channel ranges are disjoint.
+                unsafe { *out_ptr.0.add(t * s + i) = cur };
+            }
+        }
+    });
+    out
+}
+
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn rand_case(t: usize, s: usize, seed: u64)
+                 -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg64::seeded(seed);
+        let f: Vec<f32> = (0..t * s).map(|_| rng.range_f32(0.3, 0.99)).collect();
+        let b: Vec<f32> = (0..t * s).map(|_| rng.normal_f32()).collect();
+        let init: Vec<f32> = (0..s).map(|_| rng.normal_f32()).collect();
+        (f, b, init)
+    }
+
+    #[test]
+    fn chunked_matches_sequential() {
+        for &(t, s) in &[(1, 1), (17, 3), (128, 16), (100, 7)] {
+            let (f, b, init) = rand_case(t, s, t as u64);
+            let seq = linear_scan_sequential(t, s, &f, &b, &init);
+            for threads in [1, 2, 5, 8] {
+                let par = linear_scan_chunked(t, s, &f, &b, &init, threads);
+                for (i, (a, c)) in seq.iter().zip(&par).enumerate() {
+                    assert!((a - c).abs() < 1e-4, "t={t} th={threads} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn channel_parallel_matches() {
+        let (t, s) = (64, 32);
+        let (f, b, init) = rand_case(t, s, 9);
+        let seq = linear_scan_sequential(t, s, &f, &b, &init);
+        let par = linear_scan_channel_parallel(t, s, &f, &b, &init, 4);
+        for (a, c) in seq.iter().zip(&par) {
+            assert!((a - c).abs() < 1e-5);
+        }
+    }
+}

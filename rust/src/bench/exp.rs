@@ -1,0 +1,61 @@
+//! Shared experiment helpers for the per-figure benches.
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::data::TaskGen;
+use crate::runtime::Runtime;
+use crate::train::TrainOutcome;
+
+/// Steps per training-based bench point; override with KLA_BENCH_STEPS.
+pub fn bench_steps(default: usize) -> usize {
+    std::env::var("KLA_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Seeds per point; override with KLA_BENCH_SEEDS (paper: 5, ours: 1-3).
+pub fn bench_seeds(default: usize) -> usize {
+    std::env::var("KLA_BENCH_SEEDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Train `base` on `task`, return the outcome (accuracy etc.).
+pub fn train_point(rt: &Runtime, base: &str, task: &dyn TaskGen,
+                   steps: usize, seed: u64) -> Result<TrainOutcome> {
+    let cfg = TrainConfig {
+        artifact: base.to_string(),
+        steps,
+        seed,
+        eval_every: 0,
+        eval_batches: 6,
+        log_every: steps.max(1),
+        checkpoint_dir: None,
+        target_accuracy: None,
+    };
+    crate::train::run(rt, &cfg, task)
+}
+
+/// Mean accuracy over `seeds` runs.
+pub fn train_mean_acc(rt: &Runtime, base: &str, task: &dyn TaskGen,
+                      steps: usize, seeds: usize) -> Result<(f64, f64)> {
+    let mut accs = Vec::new();
+    let mut step_ms = 0.0;
+    for seed in 0..seeds.max(1) as u64 {
+        let out = train_point(rt, base, task, steps, seed)?;
+        accs.push(out.accuracy());
+        step_ms = out.mean_step_ms();
+    }
+    let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+    Ok((mean, step_ms))
+}
+
+/// Skip helper: true if the artifact exists (full-manifest sweeps).
+pub fn have(rt: &Runtime, base: &str) -> bool {
+    rt.meta(&format!("{base}_train")).is_ok()
+        || rt.meta(&format!("{base}_logits")).is_ok()
+        || rt.meta(&format!("{base}_decode")).is_ok()
+}

@@ -1,0 +1,209 @@
+//! Benchmark harness (offline stand-in for criterion).
+//!
+//! Each `rust/benches/*.rs` binary (harness = false) builds a `Suite`,
+//! registers closures, and calls `run()`, which warms up, measures until a
+//! time budget or iteration cap is hit, and prints a criterion-style table
+//! plus a machine-readable JSON report under `runs/bench/`.
+
+pub mod exp;
+
+use std::time::{Duration, Instant};
+
+use crate::util::{Json, Stats};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub min_ms: f64,
+    pub p50_ms: f64,
+    pub max_ms: f64,
+    /// Optional scalar payload (accuracy, tokens/s, ...) for table benches.
+    pub metrics: Vec<(String, f64)>,
+}
+
+impl BenchResult {
+    pub fn json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::str(&self.name)),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_ms", Json::num(self.mean_ms)),
+            ("std_ms", Json::num(self.std_ms)),
+            ("min_ms", Json::num(self.min_ms)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("max_ms", Json::num(self.max_ms)),
+        ];
+        for (k, v) in &self.metrics {
+            pairs.push((k.as_str(), Json::num(*v)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+pub struct Suite {
+    pub title: String,
+    pub max_iters: usize,
+    pub time_budget: Duration,
+    pub warmup: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Suite {
+    pub fn new(title: &str) -> Self {
+        Suite {
+            title: title.to_string(),
+            max_iters: 30,
+            time_budget: Duration::from_secs(5),
+            warmup: 2,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn quick(title: &str) -> Self {
+        let mut s = Suite::new(title);
+        s.max_iters = 10;
+        s.time_budget = Duration::from_secs(2);
+        s.warmup = 1;
+        s
+    }
+
+    /// Time `f` repeatedly; records wall-clock stats.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut stats = Stats::new();
+        let budget_start = Instant::now();
+        for _ in 0..self.max_iters {
+            let t = Instant::now();
+            f();
+            stats.push(t.elapsed().as_secs_f64() * 1e3);
+            if budget_start.elapsed() > self.time_budget {
+                break;
+            }
+        }
+        self.push_stats(name, stats, Vec::new())
+    }
+
+    /// Record an externally-measured sample set (e.g. per-step times from a
+    /// training run) instead of re-running a closure.
+    pub fn record(&mut self, name: &str, samples_ms: &[f64],
+                  metrics: Vec<(String, f64)>) -> &BenchResult {
+        let mut stats = Stats::new();
+        for &s in samples_ms {
+            stats.push(s);
+        }
+        self.push_stats(name, stats, metrics)
+    }
+
+    /// Record a single metric row (accuracy tables etc., no timing).
+    pub fn metric_row(&mut self, name: &str, metrics: Vec<(String, f64)>) {
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters: 0,
+            mean_ms: f64::NAN,
+            std_ms: f64::NAN,
+            min_ms: f64::NAN,
+            p50_ms: f64::NAN,
+            max_ms: f64::NAN,
+            metrics,
+        });
+    }
+
+    fn push_stats(&mut self, name: &str, stats: Stats,
+                  metrics: Vec<(String, f64)>) -> &BenchResult {
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: stats.count(),
+            mean_ms: stats.mean(),
+            std_ms: stats.std(),
+            min_ms: stats.min(),
+            p50_ms: stats.percentile(50.0),
+            max_ms: stats.max(),
+            metrics,
+        };
+        println!(
+            "{:44} {:>6} iters  mean {:>10.3} ms  p50 {:>10.3} ms  min {:>10.3} ms",
+            r.name, r.iters, r.mean_ms, r.p50_ms, r.min_ms
+        );
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print the summary table and write runs/bench/<title>.json.
+    pub fn finish(&self) {
+        println!("\n== {} ==", self.title);
+        for r in &self.results {
+            let mut line = format!("{:44}", r.name);
+            if r.iters > 0 {
+                line.push_str(&format!(" mean {:>10.3} ms", r.mean_ms));
+            }
+            for (k, v) in &r.metrics {
+                line.push_str(&format!("  {k}={v:.4}"));
+            }
+            println!("{line}");
+        }
+        let dir = std::path::Path::new("runs/bench");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let json = Json::obj(vec![
+                ("title", Json::str(&self.title)),
+                ("results",
+                 Json::Arr(self.results.iter().map(|r| r.json()).collect())),
+            ]);
+            let path = dir.join(format!(
+                "{}.json",
+                self.title.replace([' ', '/'], "_")
+            ));
+            let _ = std::fs::write(&path, json.to_pretty());
+            println!("[bench] wrote {}", path.display());
+        }
+    }
+}
+
+/// Prevent the optimiser from discarding a computed value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_stats() {
+        let mut s = Suite::quick("test");
+        s.max_iters = 5;
+        s.bench("noop", || {
+            black_box(1 + 1);
+        });
+        let r = &s.results()[0];
+        assert!(r.iters >= 1 && r.iters <= 5);
+        assert!(r.mean_ms >= 0.0);
+        assert!(r.min_ms <= r.mean_ms + 1e-9);
+    }
+
+    #[test]
+    fn record_external_samples() {
+        let mut s = Suite::quick("test2");
+        s.record("ext", &[1.0, 2.0, 3.0],
+                 vec![("acc".into(), 0.9)]);
+        let r = &s.results()[0];
+        assert_eq!(r.iters, 3);
+        assert!((r.mean_ms - 2.0).abs() < 1e-9);
+        assert_eq!(r.metrics[0].1, 0.9);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut s = Suite::quick("t3");
+        s.metric_row("row", vec![("acc".into(), 0.5)]);
+        let j = s.results()[0].json();
+        assert_eq!(j.req("acc").unwrap().as_f64().unwrap(), 0.5);
+    }
+}

@@ -1,0 +1,288 @@
+//! Declarative CLI argument parser (offline stand-in for clap).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, typed
+//! accessors with defaults, required arguments, and auto-generated help.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// One argument declaration.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+    pub required: bool,
+}
+
+/// A subcommand: name, help, arg specs.
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub args: Vec<ArgSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, args: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str,
+               help: &'static str) -> Self {
+        self.args.push(ArgSpec { name, help, default: Some(default),
+                                 is_flag: false, required: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec { name, help, default: None,
+                                 is_flag: false, required: true });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec { name, help, default: None,
+                                 is_flag: true, required: false });
+        self
+    }
+
+    fn usage(&self) -> String {
+        let mut s = format!("  {} — {}\n", self.name, self.about);
+        for a in &self.args {
+            let kind = if a.is_flag {
+                "".to_string()
+            } else if let Some(d) = a.default {
+                format!(" <value, default {d}>")
+            } else {
+                " <value, required>".to_string()
+            };
+            s.push_str(&format!("      --{}{}  {}\n", a.name, kind, a.help));
+        }
+        s
+    }
+}
+
+/// Parsed argument values for one invocation.
+#[derive(Debug)]
+pub struct Matches {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> Result<&str> {
+        self.values
+            .get(name)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("missing --{name}"))
+    }
+
+    pub fn get_string(&self, name: &str) -> Result<String> {
+        Ok(self.get(name)?.to_string())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.get(name)?
+            .parse()
+            .map_err(|e| anyhow!("--{name}: not a usize: {e}"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        self.get(name)?
+            .parse()
+            .map_err(|e| anyhow!("--{name}: not a u64: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.get(name)?
+            .parse()
+            .map_err(|e| anyhow!("--{name}: not a float: {e}"))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    /// Comma-separated list accessor.
+    pub fn get_list(&self, name: &str) -> Result<Vec<String>> {
+        Ok(self
+            .get(name)?
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.to_string())
+            .collect())
+    }
+}
+
+/// Top-level application.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl App {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        App { name, about, commands: Vec::new() }
+    }
+
+    pub fn command(mut self, cmd: Command) -> Self {
+        self.commands.push(cmd);
+        self
+    }
+
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nCOMMANDS:\n", self.name, self.about);
+        for c in &self.commands {
+            s.push_str(&c.usage());
+        }
+        s
+    }
+
+    /// Parse argv (without the binary name).
+    pub fn parse(&self, argv: &[String]) -> Result<Matches> {
+        let cmd_name = argv
+            .first()
+            .ok_or_else(|| anyhow!("no command given\n\n{}", self.help()))?;
+        if cmd_name == "help" || cmd_name == "--help" || cmd_name == "-h" {
+            bail!("{}", self.help());
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| {
+                anyhow!("unknown command {cmd_name:?}\n\n{}", self.help())
+            })?;
+
+        let mut values = BTreeMap::new();
+        let mut flags = BTreeMap::new();
+        for a in &cmd.args {
+            if let Some(d) = a.default {
+                values.insert(a.name.to_string(), d.to_string());
+            }
+        }
+
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            let stripped = tok
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --option, got {tok:?}"))?;
+            let (key, inline_val) = match stripped.split_once('=') {
+                Some((k, v)) => (k, Some(v.to_string())),
+                None => (stripped, None),
+            };
+            let spec = cmd
+                .args
+                .iter()
+                .find(|a| a.name == key)
+                .ok_or_else(|| {
+                    anyhow!("unknown option --{key} for {cmd_name}\n\n{}",
+                            cmd.usage())
+                })?;
+            if spec.is_flag {
+                if inline_val.is_some() {
+                    bail!("--{key} is a flag and takes no value");
+                }
+                flags.insert(key.to_string(), true);
+            } else {
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        argv.get(i)
+                            .cloned()
+                            .ok_or_else(|| anyhow!("--{key} needs a value"))?
+                    }
+                };
+                values.insert(key.to_string(), val);
+            }
+            i += 1;
+        }
+
+        for a in &cmd.args {
+            if a.required && !values.contains_key(a.name) {
+                bail!("missing required --{} for {}\n\n{}", a.name,
+                      cmd_name, cmd.usage());
+            }
+        }
+
+        Ok(Matches { command: cmd_name.clone(), values, flags })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App::new("repro", "test").command(
+            Command::new("train", "train a model")
+                .req("task", "task name")
+                .opt("steps", "100", "training steps")
+                .opt("lr", "0.001", "learning rate")
+                .flag("quiet", "suppress output"),
+        )
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_styles() {
+        let m = app()
+            .parse(&argv(&["train", "--task", "mad", "--steps=250",
+                           "--quiet"]))
+            .unwrap();
+        assert_eq!(m.command, "train");
+        assert_eq!(m.get("task").unwrap(), "mad");
+        assert_eq!(m.get_usize("steps").unwrap(), 250);
+        assert!((m.get_f64("lr").unwrap() - 0.001).abs() < 1e-12);
+        assert!(m.get_flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let m = app().parse(&argv(&["train", "--task", "x"])).unwrap();
+        assert_eq!(m.get_usize("steps").unwrap(), 100);
+        assert!(!m.get_flag("quiet"));
+    }
+
+    #[test]
+    fn missing_required_fails() {
+        assert!(app().parse(&argv(&["train"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_fails() {
+        assert!(app()
+            .parse(&argv(&["train", "--task", "x", "--nope", "1"]))
+            .is_err());
+    }
+
+    #[test]
+    fn unknown_command_fails() {
+        assert!(app().parse(&argv(&["zap"])).is_err());
+    }
+
+    #[test]
+    fn list_accessor() {
+        let m = app()
+            .parse(&argv(&["train", "--task", "a,b,c"]))
+            .unwrap();
+        assert_eq!(m.get_list("task").unwrap(), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn flag_with_value_fails() {
+        assert!(app()
+            .parse(&argv(&["train", "--task", "x", "--quiet=1"]))
+            .is_err());
+    }
+}

@@ -1,0 +1,233 @@
+//! Run configuration: typed experiment configs + a TOML-lite file format.
+//!
+//! The launcher accepts `--config runs/foo.toml` overridden by CLI options.
+//! The file format is a flat-section subset of TOML (sections, `key = value`
+//! with string/number/bool values, `#` comments) — enough for experiment
+//! configs without a serde dependency.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Flat `section.key -> string value` configuration store.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigMap {
+    values: BTreeMap<String, String>,
+}
+
+impl ConfigMap {
+    pub fn parse(src: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = match raw.find('#') {
+                Some(i) => &raw[..i],
+                None => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: bad section header {raw:?}", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value",
+                                       lineno + 1))?;
+            let key = key.trim();
+            let mut val = val.trim().to_string();
+            if val.starts_with('"') && val.ends_with('"') && val.len() >= 2 {
+                val = val[1..val.len() - 1].to_string();
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            values.insert(full, val);
+        }
+        Ok(ConfigMap { values })
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        Self::parse(&src)
+    }
+
+    pub fn set(&mut self, key: &str, val: &str) {
+        self.values.insert(key.to_string(), val.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|e| anyhow!("{key}: {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|e| anyhow!("{key}: {e}")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") => Ok(true),
+            Some("false") | Some("0") => Ok(false),
+            Some(s) => bail!("{key}: not a bool: {s:?}"),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+/// Trainer run configuration (consumed by `crate::train::Trainer`).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Artifact base name, e.g. "mad_kla" (roles are appended).
+    pub artifact: String,
+    pub steps: usize,
+    pub seed: u64,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub log_every: usize,
+    pub checkpoint_dir: Option<String>,
+    pub target_accuracy: Option<f64>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            artifact: String::new(),
+            steps: 200,
+            seed: 0,
+            eval_every: 50,
+            eval_batches: 4,
+            log_every: 25,
+            checkpoint_dir: None,
+            target_accuracy: None,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_map(map: &ConfigMap) -> Result<Self> {
+        Ok(TrainConfig {
+            artifact: map.get_or("train.artifact", ""),
+            steps: map.usize_or("train.steps", 200)?,
+            seed: map.usize_or("train.seed", 0)? as u64,
+            eval_every: map.usize_or("train.eval_every", 50)?,
+            eval_batches: map.usize_or("train.eval_batches", 4)?,
+            log_every: map.usize_or("train.log_every", 25)?,
+            checkpoint_dir: map.get("train.checkpoint_dir")
+                .map(|s| s.to_string()),
+            target_accuracy: match map.get("train.target_accuracy") {
+                Some(s) => Some(s.parse()?),
+                None => None,
+            },
+        })
+    }
+}
+
+/// Server configuration (consumed by `crate::serve`).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub addr: String,
+    pub artifact: String,
+    pub max_batch: usize,
+    /// Batching window: how long the batcher waits to fill a batch.
+    pub batch_window_us: u64,
+    pub max_new_tokens: usize,
+    pub state_pool: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7878".into(),
+            artifact: "serve_kla_b8".into(),
+            max_batch: 8,
+            batch_window_us: 500,
+            max_new_tokens: 32,
+            state_pool: 64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SRC: &str = r#"
+# experiment config
+[train]
+artifact = "mad_kla"
+steps = 400
+seed = 3
+target_accuracy = 0.9
+
+[serve]
+addr = "0.0.0.0:9000"  # comment after value
+"#;
+
+    #[test]
+    fn parse_sections_and_comments() {
+        let m = ConfigMap::parse(SRC).unwrap();
+        assert_eq!(m.get("train.artifact"), Some("mad_kla"));
+        assert_eq!(m.usize_or("train.steps", 0).unwrap(), 400);
+        assert_eq!(m.get("serve.addr"), Some("0.0.0.0:9000"));
+        assert_eq!(m.get("nope"), None);
+    }
+
+    #[test]
+    fn train_config_from_map() {
+        let m = ConfigMap::parse(SRC).unwrap();
+        let tc = TrainConfig::from_map(&m).unwrap();
+        assert_eq!(tc.artifact, "mad_kla");
+        assert_eq!(tc.steps, 400);
+        assert_eq!(tc.seed, 3);
+        assert_eq!(tc.target_accuracy, Some(0.9));
+        assert_eq!(tc.eval_every, 50); // default
+    }
+
+    #[test]
+    fn bad_lines_fail() {
+        assert!(ConfigMap::parse("[open").is_err());
+        assert!(ConfigMap::parse("novalue").is_err());
+    }
+
+    #[test]
+    fn overrides() {
+        let mut m = ConfigMap::parse(SRC).unwrap();
+        m.set("train.steps", "10");
+        assert_eq!(m.usize_or("train.steps", 0).unwrap(), 10);
+    }
+
+    #[test]
+    fn bool_parsing() {
+        let m = ConfigMap::parse("a = true\nb = 0\nc = nope").unwrap();
+        assert!(m.bool_or("a", false).unwrap());
+        assert!(!m.bool_or("b", true).unwrap());
+        assert!(m.bool_or("c", false).is_err());
+        assert!(m.bool_or("missing", true).unwrap());
+    }
+}

@@ -1,0 +1,198 @@
+//! A5 word problem (paper §5.4, Merrill et al. 2024): hard state tracking.
+//!
+//! The alternating group A5 (even permutations of 5 elements, |A5| = 60) is
+//! the smallest non-solvable group; computing running products of group
+//! elements is NC^1-complete, so linear/diagonal SSMs and fixed-depth
+//! transformers (TC^0) cannot solve it at growing length while KLA's
+//! Moebius (nonlinear) updates can (paper Fig. 1a).
+//!
+//! Tokens: element g_i at position t; target at t is the index of the
+//! running product g_1 * g_2 * ... * g_t.  Every position is supervised.
+//! Vocabulary: 0..59 = group elements (PAD-free: all positions used),
+//! artifact vocab 64 leaves room for specials.
+
+use super::{Sample, TaskGen};
+use crate::util::Pcg64;
+
+/// Precomputed A5: 60 even permutations of {0..4} and the Cayley table.
+pub struct A5 {
+    pub perms: Vec<[u8; 5]>,
+    /// table[a * 60 + b] = index of perm a ∘ perm b (apply b first).
+    pub table: Vec<u8>,
+}
+
+impl A5 {
+    pub fn new() -> Self {
+        // enumerate all permutations of 5 elements, keep even ones
+        let mut perms = Vec::with_capacity(60);
+        let mut items = [0u8, 1, 2, 3, 4];
+        permute(&mut items, 0, &mut |p| {
+            if parity(p) == 0 {
+                perms.push(*p);
+            }
+        });
+        perms.sort();
+        assert_eq!(perms.len(), 60);
+        let index = |p: &[u8; 5]| -> u8 {
+            perms.binary_search(p).expect("perm in A5") as u8
+        };
+        let mut table = vec![0u8; 60 * 60];
+        for (a, pa) in perms.iter().enumerate() {
+            for (b, pb) in perms.iter().enumerate() {
+                // (pa ∘ pb)(x) = pa[pb[x]]
+                let mut comp = [0u8; 5];
+                for (x, c) in comp.iter_mut().enumerate() {
+                    *c = pa[pb[x] as usize];
+                }
+                table[a * 60 + b] = index(&comp);
+            }
+        }
+        A5 { perms, table }
+    }
+
+    #[inline]
+    pub fn mul(&self, a: u8, b: u8) -> u8 {
+        self.table[a as usize * 60 + b as usize]
+    }
+
+    pub fn identity(&self) -> u8 {
+        self.perms
+            .iter()
+            .position(|p| p == &[0, 1, 2, 3, 4])
+            .unwrap() as u8
+    }
+}
+
+impl Default for A5 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn permute<F: FnMut(&[u8; 5])>(items: &mut [u8; 5], k: usize, f: &mut F) {
+    if k == 5 {
+        f(items);
+        return;
+    }
+    for i in k..5 {
+        items.swap(k, i);
+        permute(items, k + 1, f);
+        items.swap(k, i);
+    }
+}
+
+fn parity(p: &[u8; 5]) -> u8 {
+    let mut inv = 0;
+    for i in 0..5 {
+        for j in i + 1..5 {
+            if p[i] > p[j] {
+                inv += 1;
+            }
+        }
+    }
+    inv % 2
+}
+
+/// The sequence task over A5.
+pub struct A5Task {
+    group: A5,
+}
+
+impl A5Task {
+    pub fn new() -> Self {
+        A5Task { group: A5::new() }
+    }
+
+    pub fn group(&self) -> &A5 {
+        &self.group
+    }
+}
+
+impl Default for A5Task {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TaskGen for A5Task {
+    fn name(&self) -> &str {
+        "a5"
+    }
+
+    fn sample(&self, rng: &mut Pcg64, t: usize) -> Sample {
+        let mut s = Sample::with_capacity(t);
+        // new element each step; target = running product (composition
+        // convention: newest element applied LAST, i.e. prod = g_t ∘ prod)
+        let mut prod = self.group.identity();
+        for _ in 0..t {
+            let g = rng.below(60) as u8;
+            prod = self.group.mul(g, prod);
+            s.push(g as i32, prod as i32, true);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::property;
+
+    #[test]
+    fn group_axioms() {
+        let g = A5::new();
+        let e = g.identity();
+        // identity
+        for a in 0..60u8 {
+            assert_eq!(g.mul(e, a), a);
+            assert_eq!(g.mul(a, e), a);
+        }
+        // closure is by construction; associativity:
+        property("a5_assoc", 200, |gen| {
+            let (a, b, c) = (
+                gen.rng.below(60) as u8,
+                gen.rng.below(60) as u8,
+                gen.rng.below(60) as u8,
+            );
+            let left = g.mul(g.mul(a, b), c);
+            let right = g.mul(a, g.mul(b, c));
+            if left != right {
+                return Err(format!("({a}*{b})*{c} = {left} != {right}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn every_element_has_inverse() {
+        let g = A5::new();
+        let e = g.identity();
+        for a in 0..60u8 {
+            let found = (0..60u8).any(|b| g.mul(a, b) == e && g.mul(b, a) == e);
+            assert!(found, "no inverse for {a}");
+        }
+    }
+
+    #[test]
+    fn nonabelian() {
+        let g = A5::new();
+        let noncommuting = (0..60u8)
+            .flat_map(|a| (0..60u8).map(move |b| (a, b)))
+            .any(|(a, b)| g.mul(a, b) != g.mul(b, a));
+        assert!(noncommuting, "A5 must be non-abelian");
+    }
+
+    #[test]
+    fn task_targets_are_running_products() {
+        let task = A5Task::new();
+        let mut rng = Pcg64::seeded(0);
+        let s = task.sample(&mut rng, 24);
+        let g = task.group();
+        let mut prod = g.identity();
+        for i in 0..24 {
+            prod = g.mul(s.tokens[i] as u8, prod);
+            assert_eq!(s.targets[i], prod as i32);
+            assert_eq!(s.mask[i], 1.0);
+        }
+    }
+}

@@ -1,0 +1,407 @@
+//! MAD synthetic LM suite (paper Appendix F.1, Poli et al. 2024), scaled
+//! to the shared vocab-64 / T-128 artifact family (DESIGN.md §3).
+//!
+//! Shared vocabulary layout (all six tasks use the same artifacts):
+//!   0  PAD    1  SEP ([c] / query marker)   2  BLANK   3  INSERT
+//!   KEYS   = 8..24    (16 keys)
+//!   VALUES = 24..40   (16 values)
+//!   CONTENT= 8..40    (copy/compression content)
+//!   NOISE  = 40..56   (separate noise vocabulary)
+//!
+//! Each task probes a distinct capability (paper Table 7): associative
+//! recall, span compositionality, noise robustness, ordered copying,
+//! aggregation/bottlenecking, parametric memory.
+
+use super::{Sample, TaskGen};
+use crate::util::Pcg64;
+
+pub const PAD: i32 = 0;
+pub const SEP: i32 = 1;
+pub const BLANK: i32 = 2;
+pub const INSERT: i32 = 3;
+pub const KEY_BASE: i32 = 8;
+pub const N_KEYS: i32 = 16;
+pub const VAL_BASE: i32 = 24;
+pub const N_VALS: i32 = 16;
+pub const CONTENT_BASE: i32 = 8;
+pub const N_CONTENT: i32 = 32;
+pub const NOISE_BASE: i32 = 40;
+pub const N_NOISE: i32 = 16;
+
+fn rand_key(rng: &mut Pcg64) -> i32 {
+    KEY_BASE + rng.below(N_KEYS as u64) as i32
+}
+
+fn rand_val(rng: &mut Pcg64) -> i32 {
+    VAL_BASE + rng.below(N_VALS as u64) as i32
+}
+
+fn rand_content(rng: &mut Pcg64) -> i32 {
+    CONTENT_BASE + rng.below(N_CONTENT as u64) as i32
+}
+
+fn rand_noise(rng: &mut Pcg64) -> i32 {
+    NOISE_BASE + rng.below(N_NOISE as u64) as i32
+}
+
+// ------------------------------------------------------- Context recall ---
+
+/// In-context recall (+ optional noise): key-value pairs with fresh random
+/// bindings per sequence; every re-occurrence of a bound key is supervised
+/// with its value.  `noise_frac > 0` interleaves tokens from the separate
+/// noise vocabulary (Noisy Recall, paper: 20%).
+pub struct ContextRecall {
+    pub noise_frac: f64,
+    name: &'static str,
+}
+
+impl ContextRecall {
+    pub fn standard() -> Self {
+        ContextRecall { noise_frac: 0.0, name: "context_recall" }
+    }
+
+    pub fn noisy() -> Self {
+        ContextRecall { noise_frac: 0.2, name: "noisy_recall" }
+    }
+}
+
+impl TaskGen for ContextRecall {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn sample(&self, rng: &mut Pcg64, t: usize) -> Sample {
+        let mut s = Sample::with_capacity(t);
+        // fresh random binding for each key this sequence
+        let mut binding = [0i32; 16];
+        for slot in binding.iter_mut() {
+            *slot = rand_val(rng);
+        }
+        let mut seen = [false; 16];
+        while s.tokens.len() + 2 <= t {
+            if self.noise_frac > 0.0 && rng.bool(self.noise_frac) {
+                s.push(rand_noise(rng), PAD, false);
+                continue;
+            }
+            let k = rand_key(rng);
+            let ki = (k - KEY_BASE) as usize;
+            let v = binding[ki];
+            // key token (never supervised), then value token (supervised
+            // iff this key was already bound earlier in the sequence).
+            s.push(k, PAD, false);
+            s.push(v, PAD, false);
+            // supervise the *prediction* of v at the key position:
+            // targets are next-token style, so position of k predicts v.
+            let idx = s.tokens.len() - 2;
+            s.targets[idx] = v;
+            s.mask[idx] = if seen[ki] { 1.0 } else { 0.0 };
+            seen[ki] = true;
+        }
+        s.fit(t);
+        s
+    }
+}
+
+// --------------------------------------------------------- Fuzzy recall ---
+
+/// Fuzzy in-context recall: keys and values are multi-token spans
+/// (1-2 tokens here; paper uses up to 3), testing compositional keys.
+#[derive(Default)]
+pub struct FuzzyRecall;
+
+impl TaskGen for FuzzyRecall {
+    fn name(&self) -> &str {
+        "fuzzy_recall"
+    }
+
+    fn sample(&self, rng: &mut Pcg64, t: usize) -> Sample {
+        let mut s = Sample::with_capacity(t);
+        // bindings: key span (2 tokens) -> value span (2 tokens)
+        const N_PAIRS: usize = 8;
+        let mut keys = Vec::with_capacity(N_PAIRS);
+        let mut vals = Vec::with_capacity(N_PAIRS);
+        for _ in 0..N_PAIRS {
+            keys.push([rand_key(rng), rand_key(rng)]);
+            vals.push([rand_val(rng), rand_val(rng)]);
+        }
+        let mut seen = [false; N_PAIRS];
+        while s.tokens.len() + 4 <= t {
+            let pi = rng.usize_below(N_PAIRS);
+            let (k, v) = (keys[pi], vals[pi]);
+            s.push(k[0], PAD, false);
+            s.push(k[1], v[0], seen[pi]); // end of key span predicts v[0]
+            s.push(v[0], v[1], seen[pi]); // then v[1]
+            s.push(v[1], PAD, false);
+            seen[pi] = true;
+        }
+        s.fit(t);
+        s
+    }
+}
+
+// ------------------------------------------------------- Selective copy ---
+
+/// Selective copying: content tokens interspersed with BLANKs; after a SEP,
+/// INSERT markers must be filled with the content tokens in order.
+pub struct SelectiveCopy {
+    pub n_copy: usize,
+}
+
+impl Default for SelectiveCopy {
+    fn default() -> Self {
+        SelectiveCopy { n_copy: 16 }
+    }
+}
+
+impl TaskGen for SelectiveCopy {
+    fn name(&self) -> &str {
+        "selective_copy"
+    }
+
+    fn sample(&self, rng: &mut Pcg64, t: usize) -> Sample {
+        let n_copy = self.n_copy.min((t - 2) / 2);
+        let body = t - 2 * n_copy - 1; // content+blank region
+        let mut s = Sample::with_capacity(t);
+        // place n_copy content tokens at random distinct positions
+        let mut pos = rng.choose_distinct(body, n_copy);
+        pos.sort_unstable();
+        let content: Vec<i32> =
+            (0..n_copy).map(|_| rand_content(rng)).collect();
+        let mut ci = 0;
+        for p in 0..body {
+            if ci < n_copy && pos[ci] == p {
+                s.push(content[ci], PAD, false);
+                ci += 1;
+            } else {
+                s.push(BLANK, PAD, false);
+            }
+        }
+        s.push(SEP, content[0], true); // SEP predicts first copied token
+        for i in 0..n_copy {
+            // INSERT positions: each predicts the NEXT content token
+            let target = if i + 1 < n_copy { content[i + 1] } else { PAD };
+            let supervised = i + 1 < n_copy;
+            s.push(content[i], PAD, false);
+            s.push(INSERT, target, supervised);
+        }
+        s.fit(t);
+        s
+    }
+}
+
+// ---------------------------------------------------------- Compression ---
+
+/// Compression: random content, a SEP ([c]) boundary, then the model must
+/// reproduce the full prefix from its recurrent state alone (autoregressive
+/// analogue of MAD's MLP-decoded compression probe; the fixed-size state is
+/// the bottleneck either way).
+pub struct Compression {
+    pub content_len: usize,
+}
+
+impl Default for Compression {
+    fn default() -> Self {
+        Compression { content_len: 24 }
+    }
+}
+
+impl TaskGen for Compression {
+    fn name(&self) -> &str {
+        "compression"
+    }
+
+    fn sample(&self, rng: &mut Pcg64, t: usize) -> Sample {
+        let m = self.content_len.min((t - 1) / 2);
+        let content: Vec<i32> = (0..m).map(|_| rand_content(rng)).collect();
+        let mut s = Sample::with_capacity(t);
+        for &c in &content {
+            s.push(c, PAD, false);
+        }
+        s.push(SEP, content[0], true);
+        for i in 0..m - 1 {
+            s.push(content[i], content[i + 1], true);
+        }
+        s.fit(t);
+        s
+    }
+}
+
+// --------------------------------------------------------- Memorization ---
+
+/// Memorization: a FIXED key->value dictionary shared across all sequences
+/// (parametric memory: values never appear in the input; they must be
+/// learned into the weights).
+pub struct Memorization {
+    dict: Vec<i32>,
+}
+
+impl Default for Memorization {
+    fn default() -> Self {
+        // fixed dictionary drawn from a fixed seed — same for train & eval
+        let mut rng = Pcg64::seeded(0xD1C7);
+        let dict = (0..N_KEYS).map(|_| rand_val(&mut rng)).collect();
+        Memorization { dict }
+    }
+}
+
+impl TaskGen for Memorization {
+    fn name(&self) -> &str {
+        "memorization"
+    }
+
+    fn sample(&self, rng: &mut Pcg64, t: usize) -> Sample {
+        let mut s = Sample::with_capacity(t);
+        while s.tokens.len() + 2 <= t {
+            let k = rand_key(rng);
+            let v = self.dict[(k - KEY_BASE) as usize];
+            // key predicts its dictionary value at the INSERT position
+            s.push(k, v, true);
+            s.push(INSERT, PAD, false);
+        }
+        s.fit(t);
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TaskGen;
+
+    fn gen_one(task: &dyn TaskGen, seed: u64, t: usize) -> Sample {
+        let mut rng = Pcg64::seeded(seed);
+        task.sample(&mut rng, t)
+    }
+
+    #[test]
+    fn context_recall_supervises_repeats_consistently() {
+        let task = ContextRecall::standard();
+        let s = gen_one(&task, 1, 128);
+        // every supervised position: target equals the value bound to that
+        // key at its first occurrence
+        let mut first: std::collections::HashMap<i32, i32> = Default::default();
+        for i in 0..s.tokens.len() - 1 {
+            let tok = s.tokens[i];
+            if (KEY_BASE..KEY_BASE + N_KEYS).contains(&tok) {
+                let val = s.tokens[i + 1];
+                if let Some(&v0) = first.get(&tok) {
+                    if s.mask[i] > 0.0 {
+                        assert_eq!(s.targets[i], v0, "binding changed");
+                    }
+                } else {
+                    first.insert(tok, val);
+                    assert_eq!(s.mask[i], 0.0, "first occurrence supervised");
+                }
+            }
+        }
+        assert!(s.mask.iter().sum::<f32>() > 0.0);
+    }
+
+    #[test]
+    fn noisy_recall_contains_noise() {
+        let task = ContextRecall::noisy();
+        let s = gen_one(&task, 2, 128);
+        let noise = s
+            .tokens
+            .iter()
+            .filter(|&&x| (NOISE_BASE..NOISE_BASE + N_NOISE).contains(&x))
+            .count();
+        assert!(noise > 5, "only {noise} noise tokens");
+        // noise positions are never supervised
+        for (i, &tok) in s.tokens.iter().enumerate() {
+            if (NOISE_BASE..NOISE_BASE + N_NOISE).contains(&tok) {
+                assert_eq!(s.mask[i], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn selective_copy_targets_in_order() {
+        let task = SelectiveCopy::default();
+        let s = gen_one(&task, 3, 128);
+        // content = non-blank non-special tokens before SEP
+        let sep = s.tokens.iter().position(|&x| x == SEP).unwrap();
+        let content: Vec<i32> = s.tokens[..sep]
+            .iter()
+            .copied()
+            .filter(|&x| x >= CONTENT_BASE && x < CONTENT_BASE + N_CONTENT)
+            .collect();
+        assert_eq!(content.len(), 16);
+        // supervised targets spell the content in order
+        let sup: Vec<i32> = (0..s.tokens.len())
+            .filter(|&i| s.mask[i] > 0.0)
+            .map(|i| s.targets[i])
+            .collect();
+        assert_eq!(sup, content);
+    }
+
+    #[test]
+    fn compression_reproduces_prefix() {
+        let task = Compression::default();
+        let s = gen_one(&task, 4, 128);
+        let m = task.content_len;
+        let content: Vec<i32> = s.tokens[..m].to_vec();
+        let sup: Vec<i32> = (0..s.tokens.len())
+            .filter(|&i| s.mask[i] > 0.0)
+            .map(|i| s.targets[i])
+            .collect();
+        assert_eq!(sup, content);
+    }
+
+    #[test]
+    fn memorization_dict_is_fixed() {
+        let t1 = Memorization::default();
+        let t2 = Memorization::default();
+        let s1 = gen_one(&t1, 5, 64);
+        let s2 = gen_one(&t2, 6, 64);
+        // same key always maps to same value across instances & sequences
+        let mut map: std::collections::HashMap<i32, i32> = Default::default();
+        for s in [&s1, &s2] {
+            for i in 0..s.tokens.len() {
+                if s.mask[i] > 0.0 {
+                    let (k, v) = (s.tokens[i], s.targets[i]);
+                    assert_eq!(*map.entry(k).or_insert(v), v);
+                }
+            }
+        }
+        // values never appear as input tokens
+        for s in [&s1, &s2] {
+            for &tok in &s.tokens {
+                assert!(!(VAL_BASE..VAL_BASE + N_VALS).contains(&tok));
+            }
+        }
+    }
+
+    #[test]
+    fn fuzzy_recall_spans_consistent() {
+        let task = FuzzyRecall;
+        let s = gen_one(&task, 7, 128);
+        assert!(s.mask.iter().sum::<f32>() > 0.0);
+        // every supervised target is a value token
+        for i in 0..s.tokens.len() {
+            if s.mask[i] > 0.0 {
+                assert!(
+                    (VAL_BASE..VAL_BASE + N_VALS).contains(&s.targets[i]),
+                    "target {} not a value", s.targets[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_tokens_in_vocab() {
+        for (task, seed) in [
+            (&ContextRecall::standard() as &dyn TaskGen, 10u64),
+            (&ContextRecall::noisy(), 11),
+            (&FuzzyRecall, 12),
+            (&SelectiveCopy::default(), 13),
+            (&Compression::default(), 14),
+            (&Memorization::default(), 15),
+        ] {
+            let s = gen_one(task, seed, 128);
+            for &x in s.tokens.iter().chain(s.targets.iter()) {
+                assert!((0..64).contains(&x), "{}: token {x}", task.name());
+            }
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Multi-Query Associative Recall (Arora et al. 2023; paper §5.3, Fig. 6a).
+//!
+//! A block of key-value bindings followed by multiple queries; the model
+//! must recall each queried value.  The paper's "hard" configuration
+//! (T=2048, V=256) stresses storage capacity; ours scales both sides down
+//! (T=256, V=64 keys+values) per DESIGN.md §3 — the capacity ratio
+//! (#bindings x log V vs state size) is the preserved quantity.
+
+use super::{Sample, TaskGen};
+use crate::util::Pcg64;
+
+pub const PAD: i32 = 0;
+pub const KEY_BASE: i32 = 4;
+pub const VAL_BASE: i32 = 34;
+
+pub struct Mqar {
+    pub n_keys: i32,
+    pub n_vals: i32,
+    pub n_pairs: usize,
+    pub n_queries: usize,
+}
+
+impl Default for Mqar {
+    fn default() -> Self {
+        Mqar { n_keys: 30, n_vals: 30, n_pairs: 24, n_queries: 24 }
+    }
+}
+
+impl TaskGen for Mqar {
+    fn name(&self) -> &str {
+        "mqar"
+    }
+
+    fn sample(&self, rng: &mut Pcg64, t: usize) -> Sample {
+        let n_pairs = self.n_pairs.min((t / 2).saturating_sub(1)).max(1);
+        let n_queries = self.n_queries.min(t / 2 - n_pairs).max(1);
+        // distinct keys, random values
+        let keys = rng.choose_distinct(self.n_keys as usize, n_pairs);
+        let vals: Vec<i32> = (0..n_pairs)
+            .map(|_| VAL_BASE + rng.below(self.n_vals as u64) as i32)
+            .collect();
+        let mut s = Sample::with_capacity(t);
+        for i in 0..n_pairs {
+            s.push(KEY_BASE + keys[i] as i32, PAD, false);
+            s.push(vals[i], PAD, false);
+        }
+        // queries: re-present keys (uniform over bound keys), supervise
+        // value prediction at the key position
+        for _ in 0..n_queries {
+            let qi = rng.usize_below(n_pairs);
+            s.push(KEY_BASE + keys[qi] as i32, vals[qi], true);
+            s.push(vals[qi], PAD, false);
+        }
+        s.fit(t);
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queries_match_bindings() {
+        let task = Mqar::default();
+        let mut rng = Pcg64::seeded(0);
+        let s = task.sample(&mut rng, 256);
+        // build binding map from the first n_pairs pairs
+        let mut map = std::collections::HashMap::new();
+        for i in (0..2 * task.n_pairs).step_by(2) {
+            map.insert(s.tokens[i], s.tokens[i + 1]);
+        }
+        let mut n_sup = 0;
+        for i in 0..s.tokens.len() {
+            if s.mask[i] > 0.0 {
+                n_sup += 1;
+                assert_eq!(s.targets[i], map[&s.tokens[i]]);
+            }
+        }
+        assert_eq!(n_sup, task.n_queries);
+    }
+
+    #[test]
+    fn keys_distinct_within_sequence() {
+        let task = Mqar::default();
+        let mut rng = Pcg64::seeded(1);
+        let s = task.sample(&mut rng, 256);
+        let mut seen = std::collections::HashSet::new();
+        for i in (0..2 * task.n_pairs).step_by(2) {
+            assert!(seen.insert(s.tokens[i]), "duplicate key in bindings");
+        }
+    }
+
+    #[test]
+    fn short_sequences_degrade_gracefully() {
+        let task = Mqar::default();
+        let mut rng = Pcg64::seeded(2);
+        let s = task.sample(&mut rng, 16);
+        assert_eq!(s.tokens.len(), 16);
+        assert!(s.mask.iter().sum::<f32>() >= 1.0);
+    }
+}

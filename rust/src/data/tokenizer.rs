@@ -1,0 +1,194 @@
+//! Greedy byte-pair-encoding tokenizer (the nanochat-BPE stand-in,
+//! DESIGN.md §3/S12).  Trained on the synthetic corpus at build^W run time
+//! (training is fast: one pass per merge over pair counts).
+//!
+//! Vocabulary layout: 0..255 = raw bytes, 256.. = merges, in merge order.
+//! `Tokenizer::train(text, vocab)` learns `vocab - 256` merges;
+//! encode/decode roundtrip exactly.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    /// merges[i] = (left, right) token ids merged into id 256 + i.
+    merges: Vec<(u32, u32)>,
+    /// rank lookup for encoding.
+    ranks: HashMap<(u32, u32), u32>,
+}
+
+impl Tokenizer {
+    pub fn vocab_size(&self) -> usize {
+        256 + self.merges.len()
+    }
+
+    /// Train BPE on `text` until `vocab` tokens exist.
+    pub fn train(text: &str, vocab: usize) -> Result<Self> {
+        if vocab < 256 {
+            bail!("vocab must be >= 256, got {vocab}");
+        }
+        let mut ids: Vec<u32> = text.bytes().map(|b| b as u32).collect();
+        let mut merges = Vec::with_capacity(vocab - 256);
+        let mut ranks = HashMap::new();
+        for next_id in 256..vocab as u32 {
+            // count adjacent pairs
+            let mut counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for w in ids.windows(2) {
+                *counts.entry((w[0], w[1])).or_insert(0) += 1;
+            }
+            // most frequent pair (ties broken by smallest pair for
+            // determinism)
+            let Some((&pair, &n)) = counts
+                .iter()
+                .max_by_key(|(&pair, &n)| (n, std::cmp::Reverse(pair)))
+            else {
+                break;
+            };
+            if n < 2 {
+                break; // nothing worth merging
+            }
+            merges.push(pair);
+            ranks.insert(pair, next_id);
+            ids = merge_pair(&ids, pair, next_id);
+        }
+        Ok(Tokenizer { merges, ranks })
+    }
+
+    /// Encode text to token ids (greedy lowest-rank merging, GPT-2 style).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut ids: Vec<u32> = text.bytes().map(|b| b as u32).collect();
+        loop {
+            // find the lowest-rank applicable merge
+            let mut best: Option<(u32, usize)> = None; // (merged_id, pos)
+            for (i, w) in ids.windows(2).enumerate() {
+                if let Some(&id) = self.ranks.get(&(w[0], w[1])) {
+                    if best.map_or(true, |(b, _)| id < b) {
+                        best = Some((id, i));
+                    }
+                }
+            }
+            match best {
+                None => break,
+                Some((id, _)) => {
+                    let pair = self.merges[(id - 256) as usize];
+                    ids = merge_pair(&ids, pair, id);
+                }
+            }
+        }
+        ids
+    }
+
+    /// Decode token ids back to text (lossless for valid UTF-8 inputs).
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::with_capacity(ids.len() * 2);
+        for &id in ids {
+            self.push_bytes(id, &mut bytes);
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    fn push_bytes(&self, id: u32, out: &mut Vec<u8>) {
+        if id < 256 {
+            out.push(id as u8);
+        } else {
+            let (l, r) = self.merges[(id - 256) as usize];
+            self.push_bytes(l, out);
+            self.push_bytes(r, out);
+        }
+    }
+
+    /// Serialise to a compact text format (one merge per line).
+    pub fn save(&self) -> String {
+        let mut s = String::from("kla-bpe-v1\n");
+        for (l, r) in &self.merges {
+            s.push_str(&format!("{l} {r}\n"));
+        }
+        s
+    }
+
+    pub fn load(src: &str) -> Result<Self> {
+        let mut lines = src.lines();
+        if lines.next() != Some("kla-bpe-v1") {
+            bail!("bad tokenizer header");
+        }
+        let mut merges = Vec::new();
+        let mut ranks = HashMap::new();
+        for (i, line) in lines.enumerate() {
+            let (l, r) = line
+                .split_once(' ')
+                .ok_or_else(|| anyhow::anyhow!("bad merge line {i}"))?;
+            let pair = (l.parse()?, r.parse()?);
+            ranks.insert(pair, 256 + i as u32);
+            merges.push(pair);
+        }
+        Ok(Tokenizer { merges, ranks })
+    }
+}
+
+fn merge_pair(ids: &[u32], pair: (u32, u32), new_id: u32) -> Vec<u32> {
+    let mut out = Vec::with_capacity(ids.len());
+    let mut i = 0;
+    while i < ids.len() {
+        if i + 1 < ids.len() && ids[i] == pair.0 && ids[i + 1] == pair.1 {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(ids[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TEXT: &str = "the cat sat on the mat. the cat ate the rat. \
+                        the mat was flat. a cat and a rat and a mat.";
+
+    #[test]
+    fn roundtrip() {
+        let tok = Tokenizer::train(TEXT, 300).unwrap();
+        for probe in [TEXT, "the cat", "unseen words zxq!", ""] {
+            let ids = tok.encode(probe);
+            assert_eq!(tok.decode(&ids), probe);
+        }
+    }
+
+    #[test]
+    fn compresses_common_patterns() {
+        let tok = Tokenizer::train(TEXT, 320).unwrap();
+        let ids = tok.encode("the cat sat on the mat.");
+        assert!(ids.len() < "the cat sat on the mat.".len(),
+                "no compression: {} ids", ids.len());
+    }
+
+    #[test]
+    fn ids_below_vocab() {
+        let tok = Tokenizer::train(TEXT, 280).unwrap();
+        for &id in &tok.encode(TEXT) {
+            assert!((id as usize) < tok.vocab_size());
+        }
+    }
+
+    #[test]
+    fn save_load_identical() {
+        let tok = Tokenizer::train(TEXT, 300).unwrap();
+        let tok2 = Tokenizer::load(&tok.save()).unwrap();
+        assert_eq!(tok.encode(TEXT), tok2.encode(TEXT));
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let a = Tokenizer::train(TEXT, 300).unwrap();
+        let b = Tokenizer::train(TEXT, 300).unwrap();
+        assert_eq!(a.merges, b.merges);
+    }
+
+    #[test]
+    fn rejects_tiny_vocab() {
+        assert!(Tokenizer::train(TEXT, 100).is_err());
+    }
+}

@@ -1,0 +1,112 @@
+//! Equivalent Kalman attention matrix (paper Appendix E.4/E.5, Fig. 10-13).
+//!
+//! Unrolling the information-mean recurrence eta_t = f_t eta_{t-1} +
+//! k_t lam_v_t v_t gives a lower-triangular matrix
+//!     W[t, s] = (prod_{u=s+1..t} f_u) * k_s * lam_v_s      (s <= t)
+//! and the full per-channel sequence map is
+//!     M_seq = diag(q ⊙ lam^{-1}) W.
+//! Entries are computed from the native filter's gate path, so this is a
+//! pure L3 diagnostic needing no extra artifact.
+
+use crate::kla::{FilterInputs, FilterParams};
+
+/// Per-channel attention matrix for channel (n, d): T x T lower-triangular.
+pub fn kalman_attention(p: &FilterParams, inp: &FilterInputs, n_idx: usize,
+                        d_idx: usize) -> Vec<f32> {
+    let (n, d, t_len) = (p.n, p.d, inp.t);
+    assert!(n_idx < n && d_idx < d);
+    let idx = n_idx * d + d_idx;
+    // forward pass for lam (needed for gates and the final scaling)
+    let out = crate::kla::filter_sequential(p, inp);
+    let s = n * d;
+    // gates f_t = rho_t * abar
+    let mut gates = vec![0.0f32; t_len];
+    for t in 0..t_len {
+        let lam_prev = if t == 0 {
+            p.lam0[idx]
+        } else {
+            out.lam[(t - 1) * s + idx]
+        };
+        let abar = p.abar[idx];
+        gates[t] = abar / (abar * abar + p.pbar[idx] * lam_prev);
+    }
+    let mut w = vec![0.0f32; t_len * t_len];
+    for t in 0..t_len {
+        // W[t, s] = (prod_{u=s+1..t} f_u) * k_s * lam_v_s; scaled by
+        // q_t / lam_t to give M_seq.
+        let scale = inp.q[t * n + n_idx] / out.lam[t * s + idx];
+        let mut gate_prod = 1.0f32;
+        for src in (0..=t).rev() {
+            if src < t {
+                gate_prod *= gates[src + 1];
+            }
+            let contrib =
+                inp.k[src * n + n_idx] * inp.lam_v[src * d + d_idx];
+            w[t * t_len + src] = scale * gate_prod * contrib;
+        }
+    }
+    w
+}
+
+/// ASCII render (rows = targets, cols = sources) for quick inspection.
+pub fn render_ascii(w: &[f32], t: usize, width: usize) -> String {
+    let step = (t / width.max(1)).max(1);
+    let maxabs = w.iter().fold(0f32, |m, &x| m.max(x.abs())).max(1e-12);
+    let chars = [' ', '.', ':', '+', '*', '#'];
+    let mut out = String::new();
+    for r in (0..t).step_by(step) {
+        for c in (0..t).step_by(step) {
+            let x = (w[r * t + c].abs() / maxabs * 5.0).round() as usize;
+            out.push(chars[x.min(5)]);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kla::{random_inputs, random_params};
+    use crate::util::Pcg64;
+
+    #[test]
+    fn attention_matrix_reproduces_filter_output() {
+        // y[t, d] over channel (n0, d0) contributions: sum_s W[t,s] v[s,d0]
+        // must equal q_t * mu_t for a single-slot model (N=1).
+        let mut rng = Pcg64::seeded(0);
+        let (t, n, d) = (12, 1, 1);
+        let p = random_params(&mut rng, n, d);
+        let mut inp = random_inputs(&mut rng, t, n, d);
+        // make eta0 zero so the matrix form has no init term
+        let mut p = p;
+        p.eta0.iter_mut().for_each(|x| *x = 0.0);
+        let out = crate::kla::filter_sequential(&p, &inp);
+        let w = kalman_attention(&p, &inp, 0, 0);
+        for ti in 0..t {
+            let mut acc = 0.0f32;
+            for s in 0..=ti {
+                acc += w[ti * t + s] * inp.v[s];
+            }
+            let expect = out.y[ti];
+            assert!(
+                (acc - expect).abs() < 1e-4 * (1.0 + expect.abs()),
+                "t={ti}: {acc} vs {expect}"
+            );
+        }
+        // strictly causal: upper triangle zero
+        for r in 0..t {
+            for c in r + 1..t {
+                assert_eq!(w[r * t + c], 0.0);
+            }
+        }
+        inp.t = t; // silence unused-mut lint paths
+    }
+
+    #[test]
+    fn ascii_render_shapes() {
+        let w = vec![0.5f32; 16 * 16];
+        let s = render_ascii(&w, 16, 8);
+        assert_eq!(s.lines().count(), 8);
+    }
+}

@@ -1,0 +1,9 @@
+//! Evaluation harness: zero-shot commonsense-lite suite (Table 4 / Fig. 1b
+//! substitution), posterior-variance diagnostics (Fig. 5b), and the
+//! unrolled Kalman attention maps (Figs. 10-13).
+
+pub mod attnmap;
+pub mod variance;
+pub mod zeroshot;
+
+pub use zeroshot::{ZeroShotItem, ZeroShotSuite, ZeroShotReport};

@@ -1,0 +1,117 @@
+//! Posterior-variance diagnostics (paper Fig. 5b): dump the per-step
+//! readout variance of the last KLA block on task sequences and summarise
+//! its trend (variance should decay as evidence accumulates, with spikes
+//! at copy-relevant tokens).
+
+use anyhow::Result;
+
+use crate::data::{Batch, TaskGen};
+use crate::runtime::{Runtime, TrainSession, Value};
+use crate::util::Pcg64;
+
+/// Variance trace for one batch: (B, T) row-major.
+#[derive(Clone, Debug)]
+pub struct VarianceTrace {
+    pub b: usize,
+    pub t: usize,
+    pub values: Vec<f32>,
+    pub mask: Vec<f32>,
+}
+
+impl VarianceTrace {
+    /// Mean variance over early vs late thirds of each sequence.
+    pub fn early_late(&self) -> (f64, f64) {
+        let third = self.t / 3;
+        let (mut e, mut l, mut ne, mut nl) = (0.0, 0.0, 0, 0);
+        for bi in 0..self.b {
+            for ti in 0..self.t {
+                let v = self.values[bi * self.t + ti] as f64;
+                if ti < third {
+                    e += v;
+                    ne += 1;
+                } else if ti >= 2 * third {
+                    l += v;
+                    nl += 1;
+                }
+            }
+        }
+        (e / ne.max(1) as f64, l / nl.max(1) as f64)
+    }
+
+    /// Mean variance at supervised (copy-relevant) vs background positions.
+    pub fn supervised_vs_background(&self) -> (f64, f64) {
+        let (mut s, mut g, mut ns, mut ng) = (0.0, 0.0, 0, 0);
+        for i in 0..self.values.len() {
+            let v = self.values[i] as f64;
+            if self.mask[i] > 0.0 {
+                s += v;
+                ns += 1;
+            } else {
+                g += v;
+                ng += 1;
+            }
+        }
+        (s / ns.max(1) as f64, g / ng.max(1) as f64)
+    }
+
+    /// CSV dump (one row per sequence) for plotting.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        for bi in 0..self.b {
+            let row: Vec<String> = (0..self.t)
+                .map(|ti| format!("{:.6}", self.values[bi * self.t + ti]))
+                .collect();
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Run the `{base}_variance` artifact on a fresh task batch.
+pub fn trace(rt: &Runtime, session: &TrainSession, task: &dyn TaskGen,
+             seed: u64) -> Result<VarianceTrace> {
+    let (b, t) = session.batch_shape();
+    let mut rng = Pcg64::seeded(seed);
+    let batch: Batch = task.batch(&mut rng, b, t);
+    let out = session.run_role(rt, "variance",
+                               &[Value::I32(batch.tokens.clone())])?;
+    let var = out[0].as_f32()?;
+    Ok(VarianceTrace {
+        b,
+        t,
+        values: var.data().to_vec(),
+        mask: batch.mask.data().to_vec(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn early_late_split() {
+        let tr = VarianceTrace {
+            b: 1,
+            t: 9,
+            values: vec![9.0, 9.0, 9.0, 5.0, 5.0, 5.0, 1.0, 1.0, 1.0],
+            mask: vec![0.0; 9],
+        };
+        let (e, l) = tr.early_late();
+        assert!((e - 9.0).abs() < 1e-9);
+        assert!((l - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn supervised_split() {
+        let tr = VarianceTrace {
+            b: 1,
+            t: 4,
+            values: vec![1.0, 2.0, 3.0, 4.0],
+            mask: vec![0.0, 1.0, 0.0, 1.0],
+        };
+        let (s, g) = tr.supervised_vs_background();
+        assert!((s - 3.0).abs() < 1e-9);
+        assert!((g - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,355 @@
+//! Zero-shot multiple-choice suite over the synthetic corpus — the
+//! lm-eval-harness substitution (DESIGN.md §3, S13).
+//!
+//! Eight task families mirroring the paper's eight benchmarks in *protocol*
+//! (choice scoring by summed / length-normalised logprob of the
+//! continuation given a context), built from the corpus generator:
+//!
+//!   cap_ctx / riv_ctx / exp_ctx — in-context fact retrieval (held-out
+//!       facts presented in the prompt, then queried; LAMBADA-ish);
+//!   cap_mem / exp_mem — parametric recall of TRAIN facts with no context
+//!       (OpenBookQA-ish closed-book);
+//!   recency — copy/recency: which entity was mentioned last;
+//!   agreement — grammatical template vs corrupted word order (HellaSwag-
+//!       style acc_norm);
+//!   distractor — retrieval with interleaved distractor facts.
+
+use anyhow::Result;
+
+use crate::data::corpus::{Corpus, Fact};
+use crate::data::tokenizer::Tokenizer;
+use crate::runtime::ScoreSession;
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::Pcg64;
+
+/// One multiple-choice item.
+#[derive(Clone, Debug)]
+pub struct ZeroShotItem {
+    pub task: &'static str,
+    pub context: String,
+    pub choices: Vec<String>,
+    pub answer: usize,
+    /// length-normalise the choice logprob (acc_norm)
+    pub norm: bool,
+}
+
+/// Per-task accuracy report.
+#[derive(Clone, Debug, Default)]
+pub struct ZeroShotReport {
+    pub per_task: Vec<(String, f64, usize)>, // (task, accuracy, n items)
+}
+
+impl ZeroShotReport {
+    pub fn average(&self) -> f64 {
+        if self.per_task.is_empty() {
+            return f64::NAN;
+        }
+        self.per_task.iter().map(|&(_, a, _)| a).sum::<f64>()
+            / self.per_task.len() as f64
+    }
+}
+
+pub struct ZeroShotSuite {
+    pub items: Vec<ZeroShotItem>,
+}
+
+impl ZeroShotSuite {
+    /// Build the suite from a corpus (same seed as pretraining!).
+    pub fn build(corpus: &Corpus, seed: u64, per_task: usize) -> Self {
+        let mut rng = Pcg64::seeded(seed ^ 0x5EED);
+        let mut items = Vec::new();
+        let held = &corpus.heldout_facts;
+        let train = &corpus.train_facts;
+
+        let pick = |rng: &mut Pcg64, facts: &[Fact], rel| -> Vec<Fact> {
+            let mut pool: Vec<Fact> = facts
+                .iter()
+                .filter(|f| f.relation == rel)
+                .cloned()
+                .collect();
+            rng.shuffle(&mut pool);
+            pool
+        };
+
+        use crate::data::corpus::Relation::*;
+        // in-context retrieval families (held-out facts => answer must come
+        // from the prompt, not the weights)
+        for (task, rel) in [("cap_ctx", CapitalOf), ("riv_ctx", RiverOf),
+                            ("exp_ctx", ExportOf)] {
+            let pool = pick(&mut rng, held, rel);
+            for i in 0..per_task.min(pool.len()) {
+                let f = &pool[i];
+                let mut wrong = Vec::new();
+                let all = pick(&mut rng, train, rel);
+                for w in all.iter().take(3) {
+                    if w.answer() != f.answer() {
+                        wrong.push(w.answer().to_string());
+                    }
+                }
+                wrong.truncate(2);
+                if wrong.len() < 2 {
+                    continue;
+                }
+                let mut choices = vec![f.answer().to_string()];
+                choices.extend(wrong);
+                let answer = shuffle_answer(&mut rng, &mut choices, 0);
+                items.push(ZeroShotItem {
+                    task,
+                    context: format!("{} {}", f.sentence(), f.prompt()),
+                    choices,
+                    answer,
+                    norm: false,
+                });
+            }
+        }
+
+        // parametric memory families (train facts, closed book)
+        for (task, rel) in [("cap_mem", CapitalOf), ("exp_mem", ExportOf)] {
+            let pool = pick(&mut rng, train, rel);
+            for i in 0..per_task.min(pool.len()) {
+                let f = &pool[i];
+                let mut choices = vec![f.answer().to_string()];
+                for w in pool.iter().rev().take(2) {
+                    if w.answer() != f.answer() {
+                        choices.push(w.answer().to_string());
+                    }
+                }
+                if choices.len() < 3 {
+                    continue;
+                }
+                let answer = shuffle_answer(&mut rng, &mut choices, 0);
+                items.push(ZeroShotItem {
+                    task,
+                    context: f.prompt(),
+                    choices,
+                    answer,
+                    norm: false,
+                });
+            }
+        }
+
+        // recency: which place was mentioned most recently?
+        for _ in 0..per_task {
+            let pool = pick(&mut rng, train, CapitalOf);
+            if pool.len() < 3 {
+                break;
+            }
+            let ctx = format!(
+                "{} {} the last place named above is",
+                pool[0].sentence(),
+                pool[1].sentence()
+            );
+            let mut choices = vec![pool[1].subject.to_string(),
+                                   pool[0].subject.to_string(),
+                                   pool[2].subject.to_string()];
+            let answer = shuffle_answer(&mut rng, &mut choices, 0);
+            items.push(ZeroShotItem {
+                task: "recency",
+                context: ctx,
+                choices,
+                answer,
+                norm: false,
+            });
+        }
+
+        // agreement: grammatical vs word-salad continuation (acc_norm)
+        for _ in 0..per_task {
+            let good = "the river carries fresh water .";
+            let bad1 = "the carries river water fresh .";
+            let bad2 = "water fresh the river carries .";
+            let mut choices = vec![good.to_string(), bad1.to_string(),
+                                   bad2.to_string()];
+            let answer = shuffle_answer(&mut rng, &mut choices, 0);
+            items.push(ZeroShotItem {
+                task: "agreement",
+                context: "according to the records ,".to_string(),
+                choices,
+                answer,
+                norm: true,
+            });
+        }
+
+        // distractor-heavy retrieval
+        for _ in 0..per_task {
+            let pool = pick(&mut rng, held, CapitalOf);
+            let dis = pick(&mut rng, train, ExportOf);
+            if pool.is_empty() || dis.len() < 2 {
+                break;
+            }
+            let f = &pool[0];
+            let ctx = format!(
+                "{} {} {} {}",
+                dis[0].sentence(),
+                f.sentence(),
+                dis[1].sentence(),
+                f.prompt()
+            );
+            let mut choices = vec![f.answer().to_string(),
+                                   dis[0].answer().to_string(),
+                                   dis[1].answer().to_string()];
+            let answer = shuffle_answer(&mut rng, &mut choices, 0);
+            items.push(ZeroShotItem {
+                task: "distractor",
+                context: ctx,
+                choices,
+                answer,
+                norm: false,
+            });
+        }
+
+        ZeroShotSuite { items }
+    }
+
+    /// Score every item with a `ScoreSession`; returns per-task accuracy.
+    pub fn evaluate(&self, session: &ScoreSession, tok: &Tokenizer)
+                    -> Result<ZeroShotReport> {
+        let (b, t) = session.batch_shape();
+        // flatten all (item, choice) rows
+        struct Row {
+            item: usize,
+            choice: usize,
+            tokens: Vec<i32>,
+            targets: Vec<i32>,
+            mask: Vec<f32>,
+            choice_len: usize,
+        }
+        let mut rows = Vec::new();
+        for (ii, item) in self.items.iter().enumerate() {
+            for (ci, choice) in item.choices.iter().enumerate() {
+                let ctx_ids = tok.encode(&item.context);
+                let full_ids =
+                    tok.encode(&format!("{} {}", item.context, choice));
+                // choice token span = suffix of full beyond context length
+                // (re-tokenisation may shift the boundary by a token; use
+                // longest common prefix to be safe)
+                let mut boundary = 0;
+                while boundary < ctx_ids.len()
+                    && boundary < full_ids.len()
+                    && ctx_ids[boundary] == full_ids[boundary]
+                {
+                    boundary += 1;
+                }
+                let mut tokens: Vec<i32> =
+                    full_ids.iter().map(|&x| x as i32).collect();
+                tokens.truncate(t);
+                let mut targets = vec![0i32; tokens.len()];
+                let mut mask = vec![0f32; tokens.len()];
+                for p in 0..tokens.len().saturating_sub(1) {
+                    targets[p] = tokens[p + 1];
+                    // supervise positions predicting choice tokens
+                    if p + 1 >= boundary {
+                        mask[p] = 1.0;
+                    }
+                }
+                let choice_len = tokens.len().saturating_sub(boundary).max(1);
+                rows.push(Row {
+                    item: ii,
+                    choice: ci,
+                    tokens,
+                    targets,
+                    mask,
+                    choice_len,
+                });
+            }
+        }
+
+        // score rows in artifact-shaped batches
+        let mut scores: Vec<Vec<f64>> = self
+            .items
+            .iter()
+            .map(|it| vec![f64::NEG_INFINITY; it.choices.len()])
+            .collect();
+        for chunk in rows.chunks(b) {
+            let mut tokens = vec![0i32; b * t];
+            let mut targets = vec![0i32; b * t];
+            let mut mask = vec![0f32; b * t];
+            for (ri, row) in chunk.iter().enumerate() {
+                tokens[ri * t..ri * t + row.tokens.len()]
+                    .copy_from_slice(&row.tokens);
+                targets[ri * t..ri * t + row.targets.len()]
+                    .copy_from_slice(&row.targets);
+                mask[ri * t..ri * t + row.mask.len()]
+                    .copy_from_slice(&row.mask);
+            }
+            let lp = session.score(
+                &IntTensor::new(&[b, t], tokens)?,
+                &IntTensor::new(&[b, t], targets)?,
+                &Tensor::new(&[b, t], mask)?,
+            )?;
+            for (ri, row) in chunk.iter().enumerate() {
+                let norm = if self.items[row.item].norm {
+                    row.choice_len as f64
+                } else {
+                    1.0
+                };
+                scores[row.item][row.choice] = lp[ri] as f64 / norm;
+            }
+        }
+
+        // accuracy per task
+        let mut agg: std::collections::BTreeMap<&'static str, (usize, usize)> =
+            Default::default();
+        for (ii, item) in self.items.iter().enumerate() {
+            let pred = scores[ii]
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            let e = agg.entry(item.task).or_insert((0, 0));
+            e.1 += 1;
+            if pred == item.answer {
+                e.0 += 1;
+            }
+        }
+        Ok(ZeroShotReport {
+            per_task: agg
+                .into_iter()
+                .map(|(k, (c, n))| (k.to_string(), c as f64 / n as f64, n))
+                .collect(),
+        })
+    }
+}
+
+fn shuffle_answer(rng: &mut Pcg64, choices: &mut Vec<String>,
+                  answer: usize) -> usize {
+    let correct = choices[answer].clone();
+    rng.shuffle(choices);
+    choices.iter().position(|c| c == &correct).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_builds_eight_families() {
+        let corpus = Corpus::new(0);
+        let suite = ZeroShotSuite::build(&corpus, 0, 4);
+        let tasks: std::collections::BTreeSet<_> =
+            suite.items.iter().map(|i| i.task).collect();
+        assert!(tasks.len() >= 7, "only {tasks:?}");
+        for item in &suite.items {
+            assert!(item.answer < item.choices.len());
+            assert!(item.choices.len() >= 3);
+            // the correct choice appears exactly once
+            let correct = &item.choices[item.answer];
+            assert_eq!(
+                item.choices.iter().filter(|c| c == &correct).count(),
+                1, "{item:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let corpus = Corpus::new(0);
+        let a = ZeroShotSuite::build(&corpus, 1, 4);
+        let b = ZeroShotSuite::build(&corpus, 1, 4);
+        assert_eq!(a.items.len(), b.items.len());
+        for (x, y) in a.items.iter().zip(&b.items) {
+            assert_eq!(x.context, y.context);
+            assert_eq!(x.answer, y.answer);
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Moebius (fractional-linear) maps on the posterior precision (Theorem 1).
+//!
+//! A per-token precision update is the map
+//!     lam' = (a*lam + b) / (c*lam + d)
+//! represented by a 2x2 matrix up to scale.  Composition = matrix product,
+//! which is associative — the key fact that makes exact Kalman filtering a
+//! parallel prefix scan (Corollary 1.1).
+
+/// One Moebius map, `[[a, b], [c, d]]`, scale-free.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Mobius {
+    pub a: f32,
+    pub b: f32,
+    pub c: f32,
+    pub d: f32,
+}
+
+impl Mobius {
+    pub const IDENTITY: Mobius = Mobius { a: 1.0, b: 0.0, c: 0.0, d: 1.0 };
+
+    /// The KLA token map from Theorem 1:
+    /// `M_t = [[1 + pbar*phi, abar^2*phi], [pbar, abar^2]]` with
+    /// `phi = k^2 * lam_v`.
+    #[inline]
+    pub fn kla_step(abar: f32, pbar: f32, phi: f32) -> Mobius {
+        let a2 = abar * abar;
+        Mobius { a: 1.0 + pbar * phi, b: a2 * phi, c: pbar, d: a2 }
+    }
+
+    /// Apply to a precision value.
+    #[inline]
+    pub fn apply(&self, lam: f32) -> f32 {
+        (self.a * lam + self.b) / (self.c * lam + self.d)
+    }
+
+    /// `self ∘ other`: apply `other` first, then `self`
+    /// (matrix product self * other), renormalised by the max-abs entry so
+    /// long products stay inside f32 range (Moebius maps are scale-free).
+    #[inline]
+    pub fn compose(&self, other: &Mobius) -> Mobius {
+        let a = self.a * other.a + self.b * other.c;
+        let b = self.a * other.b + self.b * other.d;
+        let c = self.c * other.a + self.d * other.c;
+        let d = self.c * other.b + self.d * other.d;
+        // Lazy renormalisation: Moebius maps are scale-free, so we only
+        // rescale when entries threaten f32 range.  The branch is almost
+        // never taken, and the single reciprocal replaces four divides —
+        // this is the hot op of the chunked scan's composition pass.
+        let m = a.abs().max(b.abs()).max(c.abs()).max(d.abs());
+        if m > 1e18 || (m < 1e-18 && m > 0.0) {
+            let inv = 1.0 / m.max(1e-30);
+            Mobius { a: a * inv, b: b * inv, c: c * inv, d: d * inv }
+        } else {
+            Mobius { a, b, c, d }
+        }
+    }
+
+    pub fn det(&self) -> f32 {
+        self.a * self.d - self.b * self.c
+    }
+
+    /// Approximate equality as *maps* (up to scale): compare normalised
+    /// entries with the sign fixed by the largest entry.
+    pub fn approx_eq(&self, other: &Mobius, tol: f32) -> bool {
+        let n1 = self.normalised();
+        let n2 = other.normalised();
+        (n1.a - n2.a).abs() < tol
+            && (n1.b - n2.b).abs() < tol
+            && (n1.c - n2.c).abs() < tol
+            && (n1.d - n2.d).abs() < tol
+    }
+
+    fn normalised(&self) -> Mobius {
+        let entries = [self.a, self.b, self.c, self.d];
+        let (mut s, mut mag) = (1.0f32, 0.0f32);
+        for &e in &entries {
+            if e.abs() > mag {
+                mag = e.abs();
+                s = if e < 0.0 { -1.0 } else { 1.0 };
+            }
+        }
+        let scale = s * mag.max(1e-30);
+        Mobius {
+            a: self.a / scale,
+            b: self.b / scale,
+            c: self.c / scale,
+            d: self.d / scale,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{property, Gen};
+    use crate::util::Pcg64;
+
+    fn rand_kla_map(rng: &mut Pcg64) -> Mobius {
+        Mobius::kla_step(
+            rng.range_f32(0.5, 0.999),
+            rng.range_f32(1e-4, 0.3),
+            rng.range_f32(1e-3, 3.0),
+        )
+    }
+
+    #[test]
+    fn identity_applies() {
+        assert_eq!(Mobius::IDENTITY.apply(3.25), 3.25);
+        let m = Mobius::kla_step(0.9, 0.01, 1.0);
+        assert!(m.compose(&Mobius::IDENTITY).approx_eq(&m, 1e-6));
+        assert!(Mobius::IDENTITY.compose(&m).approx_eq(&m, 1e-6));
+    }
+
+    #[test]
+    fn kla_step_matches_recursion() {
+        // M(lam) must equal the textbook predict+update recursion.
+        let (abar, pbar, phi, lam) = (0.93f32, 0.02f32, 0.7f32, 1.3f32);
+        let m = Mobius::kla_step(abar, pbar, phi);
+        let prior = lam / (abar * abar + pbar * lam);
+        assert!((m.apply(lam) - (prior + phi)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn composition_is_application_order() {
+        // (m2 ∘ m1)(x) == m2(m1(x))
+        let m1 = Mobius::kla_step(0.9, 0.05, 0.4);
+        let m2 = Mobius::kla_step(0.8, 0.02, 1.1);
+        let x = 0.9f32;
+        let composed = m2.compose(&m1).apply(x);
+        let stepped = m2.apply(m1.apply(x));
+        assert!((composed - stepped).abs() < 1e-5, "{composed} {stepped}");
+    }
+
+    #[test]
+    fn prop_composition_associative() {
+        property("mobius_associativity", 200, |g: &mut Gen| {
+            let (m1, m2, m3) = (
+                rand_kla_map(g.rng),
+                rand_kla_map(g.rng),
+                rand_kla_map(g.rng),
+            );
+            let left = m3.compose(&m2).compose(&m1);
+            let right = m3.compose(&m2.compose(&m1));
+            if !left.approx_eq(&right, 1e-4) {
+                return Err(format!("{left:?} != {right:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_kla_maps_preserve_positivity() {
+        // Positive precision stays positive under any chain of KLA maps.
+        property("positivity", 100, |g: &mut Gen| {
+            let mut lam = g.f32_in(1e-3, 5.0);
+            for _ in 0..g.usize_in(1, 64) {
+                lam = rand_kla_map(g.rng).apply(lam);
+                if !(lam > 0.0) || !lam.is_finite() {
+                    return Err(format!("lam went to {lam}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_long_products_stay_finite() {
+        property("renorm_stability", 30, |g: &mut Gen| {
+            let mut acc = Mobius::IDENTITY;
+            for _ in 0..4096 {
+                acc = rand_kla_map(g.rng).compose(&acc);
+            }
+            let lam = acc.apply(1.0);
+            if !lam.is_finite() || lam <= 0.0 {
+                return Err(format!("after 4096 steps lam={lam}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn det_positive_for_kla_maps() {
+        // det = a2*(1+pbar*phi) - a2*phi*pbar = a2 > 0
+        let m = Mobius::kla_step(0.9, 0.1, 2.0);
+        assert!(m.det() > 0.0);
+    }
+}

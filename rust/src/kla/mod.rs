@@ -1,0 +1,16 @@
+//! Native Rust implementation of the KLA information filter.
+//!
+//! Mirrors `python/compile/kernels/` (the L1 side): the Moebius precision
+//! algebra, the OU prior discretisation, and three filter execution
+//! strategies (sequential, scan, chunked multi-threaded).  Used for the
+//! Fig. 4 compute-scaling study, property tests, and cross-validation
+//! against the Python oracle.
+
+pub mod mobius;
+pub mod ou;
+pub mod scan;
+
+pub use mobius::Mobius;
+pub use scan::{filter_chunked, filter_scan, filter_sequential,
+               random_inputs, random_params, FilterInputs, FilterOutputs,
+               FilterParams};

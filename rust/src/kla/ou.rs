@@ -1,0 +1,99 @@
+//! OU prior discretisation, native mirror of `python/compile/kernels/ou.py`.
+//!
+//! Used by the native filter (bench/property substrate) and by the serving
+//! state manager to build initial precisions without touching Python.
+
+pub const A_MIN: f32 = 1e-4;
+pub const DT_LO: f32 = 1e-3;
+pub const DT_HI: f32 = 1e-1;
+
+#[inline]
+pub fn softplus(x: f32) -> f32 {
+    if x > 20.0 {
+        x
+    } else {
+        (1.0 + x.exp()).ln()
+    }
+}
+
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Map raw (unconstrained) parameters to (a, p, dt).
+pub fn constrain(a_raw: f32, p_raw: f32, dt_raw: f32) -> (f32, f32, f32) {
+    (
+        softplus(a_raw) + A_MIN,
+        softplus(p_raw),
+        DT_LO + sigmoid(dt_raw) * (DT_HI - DT_LO),
+    )
+}
+
+/// Exact OU discretisation (paper Eq. 8).
+pub fn discretise(a: f32, p: f32, dt: f32) -> (f32, f32) {
+    let abar = (-a * dt).exp();
+    let pbar = p * p / (2.0 * a) * (1.0 - (-2.0 * a * dt).exp());
+    (abar, pbar)
+}
+
+/// Raw -> (abar, pbar), with the paper's two ablation switches.
+pub fn discretise_raw(a_raw: f32, p_raw: f32, dt_raw: f32,
+                      process_noise: bool, ou_exact: bool) -> (f32, f32) {
+    let (a, p, dt) = constrain(a_raw, p_raw, dt_raw);
+    let (abar, pbar) = if ou_exact {
+        discretise(a, p, dt)
+    } else {
+        ((1.0 - a * dt).clamp(1e-4, 1.0), p * p * dt)
+    };
+    (abar, if process_noise { pbar } else { 0.0 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn abar_in_unit_interval() {
+        for a_raw in [-5.0, 0.0, 5.0] {
+            for dt_raw in [-5.0, 0.0, 5.0] {
+                let (abar, pbar) =
+                    discretise_raw(a_raw, 0.0, dt_raw, true, true);
+                assert!(abar > 0.0 && abar < 1.0, "{abar}");
+                assert!(pbar >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn stationary_variance_limit() {
+        // dt -> inf: pbar -> p^2 / (2a)
+        let (a, p) = (1.0f32, 0.5f32);
+        let (abar, pbar) = discretise(a, p, 1e4);
+        assert!(abar < 1e-6);
+        assert!((pbar - p * p / (2.0 * a)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn noise_switch_zeroes_pbar() {
+        let (_, pbar) = discretise_raw(0.0, 0.0, 0.0, false, true);
+        assert_eq!(pbar, 0.0);
+    }
+
+    #[test]
+    fn matches_python_values() {
+        // Cross-language pin: values computed by kernels/ou.py at raw=0.
+        // a = softplus(0)+1e-4 = 0.6932471, p = 0.6931472,
+        // dt = 0.001 + 0.5*0.099 = 0.0505
+        let (abar, pbar) = discretise_raw(0.0, 0.0, 0.0, true, true);
+        assert!((abar - 0.96562).abs() < 1e-4, "{abar}");
+        assert!((pbar - 0.023433).abs() < 1e-4, "{pbar}");
+    }
+
+    #[test]
+    fn euler_vs_exact_differ() {
+        let exact = discretise_raw(0.5, 0.5, 0.5, true, true);
+        let euler = discretise_raw(0.5, 0.5, 0.5, true, false);
+        assert!((exact.0 - euler.0).abs() > 1e-6);
+    }
+}

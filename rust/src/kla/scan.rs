@@ -1,0 +1,440 @@
+//! Native KLA information filter: sequential, Blelloch-parallel, and
+//! chunked multi-threaded scans over a (T, N, D) state grid.
+//!
+//! This is the L3-side mirror of the L1 kernels — used by the Fig. 4
+//! compute-scaling study (recurrent vs scan on CPU cores), by the property
+//! tests, and cross-validated against the Python oracle via pinned
+//! test vectors (`integration_cross_validation.rs`).
+//!
+//! Data layout: time-major contiguous rows of S = N*D channels, i.e.
+//! `k[t*N + n]`, `v[t*D + d]`, `lam[t*S + n*D + d]` — matching the (B=1)
+//! slices of the Python implementation.
+
+use crate::kla::mobius::Mobius;
+
+pub const LAM_MIN: f32 = 1e-6;
+pub const LAM_MAX: f32 = 1e8;
+
+/// Per-(N,D)-grid filter parameters.
+#[derive(Clone, Debug)]
+pub struct FilterParams {
+    pub n: usize,
+    pub d: usize,
+    pub abar: Vec<f32>, // (N*D)
+    pub pbar: Vec<f32>, // (N*D)
+    pub lam0: Vec<f32>, // (N*D)
+    pub eta0: Vec<f32>, // (N*D)
+}
+
+impl FilterParams {
+    pub fn uniform(n: usize, d: usize, abar: f32, pbar: f32) -> Self {
+        FilterParams {
+            n,
+            d,
+            abar: vec![abar; n * d],
+            pbar: vec![pbar; n * d],
+            lam0: vec![1.0; n * d],
+            eta0: vec![0.0; n * d],
+        }
+    }
+
+    pub fn state(&self) -> usize {
+        self.n * self.d
+    }
+}
+
+/// Filter inputs for one sequence: k (T,N), q (T,N), v (T,D), lam_v (T,D).
+#[derive(Clone, Debug)]
+pub struct FilterInputs {
+    pub t: usize,
+    pub k: Vec<f32>,
+    pub q: Vec<f32>,
+    pub v: Vec<f32>,
+    pub lam_v: Vec<f32>,
+}
+
+/// Filter outputs: lam, eta (T, N, D) and readout y (T, D).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FilterOutputs {
+    pub lam: Vec<f32>,
+    pub eta: Vec<f32>,
+    pub y: Vec<f32>,
+}
+
+#[inline]
+fn readout(p: &FilterParams, inp: &FilterInputs, lam: &[f32], eta: &[f32],
+           y: &mut [f32]) {
+    let (n, d, s) = (p.n, p.d, p.state());
+    for t in 0..inp.t {
+        let (lam_t, eta_t) = (&lam[t * s..(t + 1) * s], &eta[t * s..(t + 1) * s]);
+        let y_t = &mut y[t * d..(t + 1) * d];
+        for ni in 0..n {
+            let qn = inp.q[t * n + ni];
+            if qn == 0.0 {
+                continue;
+            }
+            let row = ni * d;
+            for di in 0..d {
+                y_t[di] += qn * eta_t[row + di] / lam_t[row + di];
+            }
+        }
+    }
+}
+
+/// The naive recurrent (time-stepped) Kalman update — the Fig. 4 baseline.
+/// O(T) sequential steps, each O(N*D).
+pub fn filter_sequential(p: &FilterParams, inp: &FilterInputs)
+                         -> FilterOutputs {
+    let (n, d, s, t_len) = (p.n, p.d, p.state(), inp.t);
+    let mut lam = vec![0.0f32; t_len * s];
+    let mut eta = vec![0.0f32; t_len * s];
+    let mut lam_prev = p.lam0.clone();
+    let mut eta_prev = p.eta0.clone();
+    for t in 0..t_len {
+        let k_t = &inp.k[t * n..(t + 1) * n];
+        let v_t = &inp.v[t * d..(t + 1) * d];
+        let lv_t = &inp.lam_v[t * d..(t + 1) * d];
+        for ni in 0..n {
+            let k2 = k_t[ni] * k_t[ni];
+            let row = ni * d;
+            for di in 0..d {
+                let idx = row + di;
+                let abar = p.abar[idx];
+                let rho = 1.0 / (abar * abar + p.pbar[idx] * lam_prev[idx]);
+                let lam_t = (rho * lam_prev[idx] + k2 * lv_t[di])
+                    .clamp(LAM_MIN, LAM_MAX);
+                let eta_t = rho * abar * eta_prev[idx]
+                    + k_t[ni] * lv_t[di] * v_t[di];
+                lam[t * s + idx] = lam_t;
+                eta[t * s + idx] = eta_t;
+                lam_prev[idx] = lam_t;
+                eta_prev[idx] = eta_t;
+            }
+        }
+    }
+    let mut y = vec![0.0f32; t_len * d];
+    readout(p, inp, &lam, &eta, &mut y);
+    FilterOutputs { lam, eta, y }
+}
+
+/// Work-efficient parallel form: two associative prefix scans
+/// (Moebius for lam, affine for eta), single-threaded.  Exposes the same
+/// O(T) work / O(log T) depth structure as the L1 kernel; `filter_chunked`
+/// adds the multi-core execution.
+pub fn filter_scan(p: &FilterParams, inp: &FilterInputs) -> FilterOutputs {
+    filter_chunked(p, inp, 1)
+}
+
+/// Chunked two-level scan over `threads` cores (the CUDA-kernel analogue
+/// from DESIGN.md §4).  Three passes, all O(T·S):
+///   1. (parallel) per-chunk Moebius composition  -> chunk precision maps;
+///   2. (serial, cheap) chunk carries for lam and, later, eta;
+///   3. (parallel, fused) per-chunk replay producing lam, a zero-carry
+///      eta_partial AND the running gate-prefix G; a final light fixup adds
+///      G[t] * eta_carry so eta needs no second heavy scan.
+/// Exact (Moebius maps compose associatively); matches `filter_sequential`
+/// to f32 roundoff.
+pub fn filter_chunked(p: &FilterParams, inp: &FilterInputs, threads: usize)
+                      -> FilterOutputs {
+    let (n, d, s, t_len) = (p.n, p.d, p.state(), inp.t);
+    if t_len == 0 {
+        return FilterOutputs { lam: vec![], eta: vec![], y: vec![] };
+    }
+    let threads = threads.clamp(1, t_len);
+    let chunk_len = t_len.div_ceil(threads);
+    let n_chunks = t_len.div_ceil(chunk_len); // may be < threads
+
+    if n_chunks == 1 {
+        return filter_sequential(p, inp);
+    }
+    let dbg = std::env::var("KLA_SCAN_DEBUG").is_ok();
+    let t0 = std::time::Instant::now();
+
+    // ---- Pass 1 (parallel): per-chunk Moebius composition ----
+    let mut summaries: Vec<Vec<Mobius>> = vec![Vec::new(); n_chunks];
+    parallel_chunk_exec(&mut summaries[..], |c, out| {
+        let start = c * chunk_len;
+        let end = ((c + 1) * chunk_len).min(t_len);
+        let mut mob = vec![Mobius::IDENTITY; s];
+        for t in start..end {
+            let k_t = &inp.k[t * n..(t + 1) * n];
+            let lv_t = &inp.lam_v[t * d..(t + 1) * d];
+            for ni in 0..n {
+                let k2 = k_t[ni] * k_t[ni];
+                let row = ni * d;
+                for di in 0..d {
+                    let idx = row + di;
+                    let m = Mobius::kla_step(p.abar[idx], p.pbar[idx],
+                                             k2 * lv_t[di]);
+                    mob[idx] = m.compose(&mob[idx]);
+                }
+            }
+        }
+        *out = mob;
+    });
+
+    if dbg { eprintln!("pass1 compose: {:.1} ms", t0.elapsed().as_secs_f64()*1e3); }
+    let t0 = std::time::Instant::now();
+    // ---- Pass 2a (serial, cheap): lam carries ----
+    let mut carry_lam = vec![p.lam0.clone()];
+    for c in 0..n_chunks - 1 {
+        let prev = carry_lam.last().unwrap();
+        let mut next = vec![0.0f32; s];
+        for idx in 0..s {
+            next[idx] = summaries[c][idx].apply(prev[idx])
+                .clamp(LAM_MIN, LAM_MAX);
+        }
+        carry_lam.push(next);
+    }
+
+    if dbg { eprintln!("pass2a carries: {:.1} ms", t0.elapsed().as_secs_f64()*1e3); }
+    let t0 = std::time::Instant::now();
+    // ---- Pass 3 (parallel, fused): replay lam + eta_partial + gates ----
+    let mut lam = vec![0.0f32; t_len * s];
+    let mut eta = vec![0.0f32; t_len * s];     // zero-carry partial for now
+    let mut gates = vec![0.0f32; t_len * s];   // prefix gate products G[t]
+    let mut chunk_fb: Vec<(Vec<f32>, Vec<f32>)> =
+        vec![(Vec::new(), Vec::new()); n_chunks];
+    {
+        let mut parts: Vec<(usize, &mut [f32], &mut [f32], &mut [f32],
+                            &mut (Vec<f32>, Vec<f32>))> = Vec::new();
+        let (mut lr, mut er, mut gr) =
+            (&mut lam[..], &mut eta[..], &mut gates[..]);
+        let mut fb_rest = &mut chunk_fb[..];
+        for c in 0..n_chunks {
+            let start = c * chunk_len;
+            let end = ((c + 1) * chunk_len).min(t_len);
+            let take = (end - start) * s;
+            let (lh, lt) = lr.split_at_mut(take);
+            let (eh, et) = er.split_at_mut(take);
+            let (gh, gt) = gr.split_at_mut(take);
+            let (fbh, fbt) = fb_rest.split_at_mut(1);
+            parts.push((c, lh, eh, gh, &mut fbh[0]));
+            lr = lt;
+            er = et;
+            gr = gt;
+            fb_rest = fbt;
+        }
+        std::thread::scope(|scope| {
+            for (c, lam_out, eta_out, g_out, fb) in parts {
+                let lam_carry = carry_lam[c].clone();
+                scope.spawn(move || {
+                    let start = c * chunk_len;
+                    let end = ((c + 1) * chunk_len).min(t_len);
+                    let mut cur_l = lam_carry;
+                    let mut cur_e = vec![0.0f32; s]; // zero-carry partial
+                    let mut cur_g = vec![1.0f32; s];
+                    for (ti, t) in (start..end).enumerate() {
+                        let k_t = &inp.k[t * n..(t + 1) * n];
+                        let v_t = &inp.v[t * d..(t + 1) * d];
+                        let lv_t = &inp.lam_v[t * d..(t + 1) * d];
+                        let row_out = ti * s;
+                        for ni in 0..n {
+                            let kk = k_t[ni];
+                            let k2 = kk * kk;
+                            let row = ni * d;
+                            for di in 0..d {
+                                let idx = row + di;
+                                let abar = p.abar[idx];
+                                let rho = 1.0
+                                    / (abar * abar
+                                        + p.pbar[idx] * cur_l[idx]);
+                                let l = (rho * cur_l[idx] + k2 * lv_t[di])
+                                    .clamp(LAM_MIN, LAM_MAX);
+                                let gate = rho * abar;
+                                let e = gate * cur_e[idx]
+                                    + kk * lv_t[di] * v_t[di];
+                                // prefix gate products decay geometrically;
+                                // flush to zero before they go DENORMAL
+                                // (denormal multiplies are ~100x slower,
+                                // and the fixup contribution is ~0 anyway)
+                                let mut g = gate * cur_g[idx];
+                                if g < 1e-30 {
+                                    g = 0.0;
+                                }
+                                lam_out[row_out + idx] = l;
+                                eta_out[row_out + idx] = e;
+                                g_out[row_out + idx] = g;
+                                cur_l[idx] = l;
+                                cur_e[idx] = e;
+                                cur_g[idx] = g;
+                            }
+                        }
+                    }
+                    *fb = (cur_g, cur_e);
+                });
+            }
+        });
+    }
+
+    if dbg { eprintln!("pass3 replay: {:.1} ms", t0.elapsed().as_secs_f64()*1e3); }
+    let t0 = std::time::Instant::now();
+    // ---- Pass 2b (serial, cheap): eta carries from (F, B) ----
+    let mut carry_eta = vec![p.eta0.clone()];
+    for c in 0..n_chunks - 1 {
+        let prev = carry_eta.last().unwrap();
+        let (f_c, b_c) = &chunk_fb[c];
+        let mut next = vec![0.0f32; s];
+        for idx in 0..s {
+            next[idx] = f_c[idx] * prev[idx] + b_c[idx];
+        }
+        carry_eta.push(next);
+    }
+
+    // ---- Pass 4 (parallel, light): eta fixup with gate prefixes ----
+    {
+        let mut parts: Vec<(usize, &mut [f32], &[f32])> = Vec::new();
+        let mut er = &mut eta[..];
+        let mut gr = &gates[..];
+        for c in 0..n_chunks {
+            let start = c * chunk_len;
+            let end = ((c + 1) * chunk_len).min(t_len);
+            let take = (end - start) * s;
+            let (eh, et) = er.split_at_mut(take);
+            let (gh, gt) = gr.split_at(take);
+            parts.push((c, eh, gh));
+            er = et;
+            gr = gt;
+        }
+        std::thread::scope(|scope| {
+            for (c, eta_out, g_in) in parts {
+                let carry = carry_eta[c].clone();
+                scope.spawn(move || {
+                    if carry.iter().all(|&x| x == 0.0) {
+                        return; // first chunk (or zero prior): no fixup
+                    }
+                    let rows = eta_out.len() / s;
+                    for ti in 0..rows {
+                        let off = ti * s;
+                        for idx in 0..s {
+                            eta_out[off + idx] +=
+                                g_in[off + idx] * carry[idx];
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    if dbg { eprintln!("pass2b+4 eta: {:.1} ms", t0.elapsed().as_secs_f64()*1e3); }
+    let t0 = std::time::Instant::now();
+    let mut y = vec![0.0f32; t_len * d];
+    readout(p, inp, &lam, &eta, &mut y);
+    if dbg { eprintln!("readout: {:.1} ms", t0.elapsed().as_secs_f64()*1e3); }
+    FilterOutputs { lam, eta, y }
+}
+
+/// Run `f(c, &mut out[c])` for each element on its own scoped thread.
+fn parallel_chunk_exec<T: Send, F>(out: &mut [T], f: F)
+where
+    F: Fn(usize, &mut T) + Sync,
+{
+    std::thread::scope(|scope| {
+        for (c, slot) in out.iter_mut().enumerate() {
+            let f = &f;
+            scope.spawn(move || f(c, slot));
+        }
+    });
+}
+
+/// Convenience: random filter inputs for tests/benches.
+pub fn random_inputs(rng: &mut crate::util::Pcg64, t: usize, n: usize,
+                     d: usize) -> FilterInputs {
+    FilterInputs {
+        t,
+        k: (0..t * n).map(|_| rng.normal_f32()).collect(),
+        q: (0..t * n).map(|_| rng.normal_f32()).collect(),
+        v: (0..t * d).map(|_| rng.normal_f32()).collect(),
+        lam_v: (0..t * d).map(|_| rng.range_f32(0.1, 2.0)).collect(),
+    }
+}
+
+pub fn random_params(rng: &mut crate::util::Pcg64, n: usize, d: usize)
+                     -> FilterParams {
+    FilterParams {
+        n,
+        d,
+        abar: (0..n * d).map(|_| rng.range_f32(0.7, 0.999)).collect(),
+        pbar: (0..n * d).map(|_| rng.range_f32(1e-3, 0.2)).collect(),
+        lam0: (0..n * d).map(|_| rng.range_f32(0.5, 2.0)).collect(),
+        eta0: (0..n * d).map(|_| rng.normal_f32() * 0.1).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+        if a.len() != b.len() {
+            return Err(format!("len {} vs {}", a.len(), b.len()));
+        }
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            if (x - y).abs() > tol * (1.0 + x.abs().max(y.abs())) {
+                return Err(format!("idx {i}: {x} vs {y}"));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn chunked_matches_sequential_various_threads() {
+        let mut rng = Pcg64::seeded(1);
+        for &(t, n, d) in &[(1, 1, 1), (7, 2, 3), (64, 4, 8), (129, 3, 5)] {
+            let p = random_params(&mut rng, n, d);
+            let inp = random_inputs(&mut rng, t, n, d);
+            let seq = filter_sequential(&p, &inp);
+            for threads in [1, 2, 4, 7] {
+                let par = filter_chunked(&p, &inp, threads);
+                close(&par.lam, &seq.lam, 1e-4)
+                    .unwrap_or_else(|e| panic!("lam t={t} th={threads}: {e}"));
+                close(&par.eta, &seq.eta, 1e-4)
+                    .unwrap_or_else(|e| panic!("eta t={t} th={threads}: {e}"));
+                close(&par.y, &seq.y, 1e-3)
+                    .unwrap_or_else(|e| panic!("y t={t} th={threads}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn zero_noise_linear_case() {
+        let mut rng = Pcg64::seeded(2);
+        let mut p = random_params(&mut rng, 2, 4);
+        p.pbar.iter_mut().for_each(|x| *x = 0.0);
+        let inp = random_inputs(&mut rng, 48, 2, 4);
+        let seq = filter_sequential(&p, &inp);
+        let par = filter_chunked(&p, &inp, 4);
+        close(&par.lam, &seq.lam, 1e-4).unwrap();
+        close(&par.eta, &seq.eta, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn precision_monotone_without_forgetting() {
+        // abar = 1, pbar = 0: precision accumulates monotonically
+        let n = 1;
+        let d = 1;
+        let p = FilterParams {
+            n, d,
+            abar: vec![1.0],
+            pbar: vec![0.0],
+            lam0: vec![1.0],
+            eta0: vec![0.0],
+        };
+        let mut rng = Pcg64::seeded(3);
+        let inp = random_inputs(&mut rng, 32, n, d);
+        let out = filter_sequential(&p, &inp);
+        for t in 1..32 {
+            assert!(out.lam[t] >= out.lam[t - 1] - 1e-6);
+        }
+    }
+
+    #[test]
+    fn empty_sequence() {
+        let p = FilterParams::uniform(2, 2, 0.9, 0.01);
+        let inp = FilterInputs { t: 0, k: vec![], q: vec![], v: vec![],
+                                 lam_v: vec![] };
+        let out = filter_chunked(&p, &inp, 4);
+        assert!(out.lam.is_empty() && out.y.is_empty());
+    }
+}

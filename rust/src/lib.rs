@@ -1,0 +1,26 @@
+//! # kla — Kalman Linear Attention, reproduced as a Rust+JAX+Pallas stack
+//!
+//! Three layers (DESIGN.md):
+//! - **L1/L2** live in `python/compile/` and are AOT-lowered to HLO text
+//!   under `artifacts/` at build time (`make artifacts`);
+//! - **L3** is this crate: runtime (PJRT), data pipeline, trainer,
+//!   evaluation, serving, native KLA kernels, and the benchmark harness.
+//!
+//! Python never runs on the request path; after artifacts are built the
+//! `repro` binary is self-contained.
+
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod eval;
+pub mod kla;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod testing;
+pub mod train;
+pub mod util;
+
+pub use tensor::{IntTensor, Tensor};

@@ -1,0 +1,261 @@
+//! `repro` — launcher CLI for the KLA reproduction.
+//!
+//! Commands mirror the experiment index in DESIGN.md §2; the heavier
+//! sweeps live in `rust/benches/` (run via `cargo bench`).
+
+use anyhow::{anyhow, bail, Result};
+
+use kla::cli::{App, Command, Matches};
+use kla::config::{ConfigMap, ServeConfig, TrainConfig};
+use kla::data::{task_by_name, MAD_TASKS};
+use kla::runtime::Runtime;
+use kla::util::logging;
+
+fn app() -> App {
+    App::new("repro", "Kalman Linear Attention reproduction (rust+jax+pallas)")
+        .command(
+            Command::new("train", "train one artifact on one task")
+                .req("artifact", "artifact base, e.g. mad_kla")
+                .req("task", "task name, e.g. selective_copy")
+                .opt("steps", "200", "optimisation steps")
+                .opt("seed", "0", "data seed")
+                .opt("eval-every", "50", "eval period (0 = off)")
+                .opt("eval-batches", "4", "batches per eval")
+                .opt("checkpoint-dir", "", "save params here if non-empty")
+                .opt("config", "", "optional TOML-lite config file"),
+        )
+        .command(
+            Command::new("mad", "run the MAD suite for one mixer")
+                .opt("model", "kla", "kla|kla_plus|mamba|gla|gdn|kla_nonoise|kla_noou")
+                .opt("steps", "200", "steps per task")
+                .opt("seed", "0", "seed"),
+        )
+        .command(
+            Command::new("serve", "serve a KLA model (O(1) belief-state decode)")
+                .opt("artifact", "serve_kla_b8", "decode artifact base")
+                .opt("addr", "127.0.0.1:7878", "listen address")
+                .opt("checkpoint", "", "load params from checkpoint")
+                .opt("max-new", "32", "default max new tokens")
+                .opt("window-us", "500", "batching window (microseconds)"),
+        )
+        .command(
+            Command::new("scaling", "native recurrent-vs-scan scaling (Fig. 4 core)")
+                .opt("lengths", "256,1024,4096,16384", "sequence lengths")
+                .opt("n", "8", "state expansion N")
+                .opt("d", "64", "channels D")
+                .opt("threads", "0", "0 = all cores"),
+        )
+        .command(
+            Command::new("inspect", "list artifacts and their shapes")
+                .opt("filter", "", "name prefix filter"),
+        )
+        .command(
+            Command::new("gen", "print samples from a task generator")
+                .req("task", "task name")
+                .opt("t", "64", "sequence length")
+                .opt("count", "2", "how many samples")
+                .opt("seed", "0", "seed"),
+        )
+        .command(
+            Command::new("attnmap", "ASCII Kalman attention map (Figs. 10-13)")
+                .opt("t", "48", "sequence length")
+                .opt("seed", "0", "seed"),
+        )
+}
+
+fn main() {
+    logging::level_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let app = app();
+    let code = match app.parse(&argv) {
+        Ok(m) => match dispatch(&m) {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                1
+            }
+        },
+        Err(e) => {
+            eprintln!("{e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(m: &Matches) -> Result<()> {
+    match m.command.as_str() {
+        "train" => cmd_train(m),
+        "mad" => cmd_mad(m),
+        "serve" => cmd_serve(m),
+        "scaling" => cmd_scaling(m),
+        "inspect" => cmd_inspect(m),
+        "gen" => cmd_gen(m),
+        "attnmap" => cmd_attnmap(m),
+        other => bail!("unhandled command {other}"),
+    }
+}
+
+fn cmd_train(m: &Matches) -> Result<()> {
+    let rt = Runtime::discover()?;
+    let mut cfg = if m.get("config")?.is_empty() {
+        TrainConfig::default()
+    } else {
+        TrainConfig::from_map(&ConfigMap::load(m.get("config")?)?)?
+    };
+    cfg.artifact = m.get_string("artifact")?;
+    cfg.steps = m.get_usize("steps")?;
+    cfg.seed = m.get_u64("seed")?;
+    cfg.eval_every = m.get_usize("eval-every")?;
+    cfg.eval_batches = m.get_usize("eval-batches")?;
+    let ckpt = m.get_string("checkpoint-dir")?;
+    if !ckpt.is_empty() {
+        cfg.checkpoint_dir = Some(ckpt);
+    }
+    let task_name = m.get_string("task")?;
+    let task = task_by_name(&task_name)
+        .ok_or_else(|| anyhow!("unknown task {task_name}"))?;
+    let outcome = kla::train::run(&rt, &cfg, task.as_ref())?;
+    println!(
+        "{} on {}: final loss {:.4}, accuracy {:.4} ({} steps, {:.1} ms/step)",
+        outcome.base, outcome.task, outcome.final_loss,
+        outcome.accuracy(), outcome.steps, outcome.mean_step_ms()
+    );
+    Ok(())
+}
+
+fn cmd_mad(m: &Matches) -> Result<()> {
+    let rt = Runtime::discover()?;
+    let model = m.get_string("model")?;
+    let steps = m.get_usize("steps")?;
+    let seed = m.get_u64("seed")?;
+    println!("MAD suite — model {model}, {steps} steps/task");
+    for task_name in MAD_TASKS {
+        let task = task_by_name(task_name).unwrap();
+        let cfg = TrainConfig {
+            artifact: format!("mad_{model}"),
+            steps,
+            seed,
+            eval_every: 0,
+            eval_batches: 8,
+            log_every: steps.max(1),
+            checkpoint_dir: None,
+            target_accuracy: None,
+        };
+        let outcome = kla::train::run(&rt, &cfg, task.as_ref())?;
+        println!("  {task_name:16} acc {:.4}  loss {:.4}",
+                 outcome.accuracy(), outcome.final_loss);
+    }
+    Ok(())
+}
+
+fn cmd_serve(m: &Matches) -> Result<()> {
+    let rt = Runtime::discover()?;
+    let cfg = ServeConfig {
+        addr: m.get_string("addr")?,
+        artifact: m.get_string("artifact")?,
+        max_new_tokens: m.get_usize("max-new")?,
+        batch_window_us: m.get_u64("window-us")?,
+        ..Default::default()
+    };
+    // params: checkpoint if given, else fresh init from the lm artifact
+    let params = {
+        let ckpt = m.get_string("checkpoint")?;
+        if ckpt.is_empty() {
+            let init = rt.load("lm_kla_init")?;
+            init.run(&[])?
+        } else {
+            kla::train::checkpoint::load(std::path::Path::new(&ckpt))?
+        }
+    };
+    let handle = kla::serve::serve(rt.dir().to_path_buf(),
+                                   cfg.artifact.clone(), params, &cfg)?;
+    println!("serving on {} — Ctrl-C to stop", handle.addr);
+    // block forever (the handle's engine thread does the work)
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_scaling(m: &Matches) -> Result<()> {
+    use kla::kla::{filter_chunked, filter_sequential, random_inputs,
+                   random_params};
+    use kla::util::{Pcg64, Timer};
+    let lengths: Vec<usize> = m
+        .get_list("lengths")?
+        .iter()
+        .map(|s| s.parse().unwrap())
+        .collect();
+    let n = m.get_usize("n")?;
+    let d = m.get_usize("d")?;
+    let mut threads = m.get_usize("threads")?;
+    if threads == 0 {
+        threads = kla::util::pool::default_threads();
+    }
+    println!("{:>8} {:>14} {:>14} {:>10}", "T", "recurrent ms",
+             "chunked ms", "speedup");
+    for &t in &lengths {
+        let mut rng = Pcg64::seeded(t as u64);
+        let p = random_params(&mut rng, n, d);
+        let inp = random_inputs(&mut rng, t, n, d);
+        let timer = Timer::start();
+        let seq = filter_sequential(&p, &inp);
+        let seq_ms = timer.elapsed_ms();
+        let timer = Timer::start();
+        let par = filter_chunked(&p, &inp, threads);
+        let par_ms = timer.elapsed_ms();
+        assert!(seq.y.iter().zip(&par.y).all(|(a, b)| (a - b).abs() < 1e-2));
+        println!("{t:>8} {seq_ms:>14.2} {par_ms:>14.2} {:>9.2}x",
+                 seq_ms / par_ms);
+    }
+    Ok(())
+}
+
+fn cmd_inspect(m: &Matches) -> Result<()> {
+    let rt = Runtime::discover()?;
+    let filter = m.get_string("filter")?;
+    for name in rt.names()? {
+        if !filter.is_empty() && !name.starts_with(&filter) {
+            continue;
+        }
+        let meta = rt.meta(&name)?;
+        println!(
+            "{name:40} {:8} {:12} B={:<3} T={:<5} params={} ({} elems)",
+            meta.role, meta.model.kind, meta.batch, meta.seq,
+            meta.n_params(), meta.total_param_elems()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_gen(m: &Matches) -> Result<()> {
+    let task_name = m.get_string("task")?;
+    let task = task_by_name(&task_name)
+        .ok_or_else(|| anyhow!("unknown task {task_name}"))?;
+    let t = m.get_usize("t")?;
+    let mut rng = kla::util::Pcg64::seeded(m.get_u64("seed")?);
+    for i in 0..m.get_usize("count")? {
+        let s = task.sample(&mut rng, t);
+        println!("-- sample {i}");
+        println!("tokens : {:?}", s.tokens);
+        println!("targets: {:?}", s.targets);
+        println!("mask   : {:?}",
+                 s.mask.iter().map(|&x| x as u8).collect::<Vec<_>>());
+    }
+    Ok(())
+}
+
+fn cmd_attnmap(m: &Matches) -> Result<()> {
+    use kla::eval::attnmap::{kalman_attention, render_ascii};
+    use kla::kla::{random_inputs, random_params};
+    let t = m.get_usize("t")?;
+    let mut rng = kla::util::Pcg64::seeded(m.get_u64("seed")?);
+    let p = random_params(&mut rng, 2, 2);
+    let inp = random_inputs(&mut rng, t, 2, 2);
+    for (ni, di) in [(0, 0), (1, 1)] {
+        println!("channel (n={ni}, d={di}):");
+        let w = kalman_attention(&p, &inp, ni, di);
+        println!("{}", render_ascii(&w, t, 48.min(t)));
+    }
+    Ok(())
+}

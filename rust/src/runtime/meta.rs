@@ -1,0 +1,193 @@
+//! Artifact metadata (the L2 -> L3 ABI), parsed from `*.meta.json`.
+
+use anyhow::{bail, Result};
+
+use crate::util::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            _ => bail!("unsupported dtype {s:?}"),
+        }
+    }
+}
+
+/// One input or output array.
+#[derive(Clone, Debug)]
+pub struct ArgMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    /// "params" | "opt_m" | "opt_v" | "" (data inputs)
+    pub group: String,
+}
+
+impl ArgMeta {
+    fn from_json(j: &Json) -> Result<ArgMeta> {
+        Ok(ArgMeta {
+            name: j.req("name")?.as_str()?.to_string(),
+            shape: j.req("shape")?.usize_vec()?,
+            dtype: DType::parse(j.req("dtype")?.as_str()?)?,
+            group: j
+                .get("group")
+                .and_then(|g| g.as_str().ok())
+                .unwrap_or("")
+                .to_string(),
+        })
+    }
+
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Model hyperparameters as recorded by the AOT bridge.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub kind: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_state: usize,
+    pub conv_kernel: usize,
+    pub process_noise: bool,
+    pub ou_exact: bool,
+    pub impl_name: String,
+    pub mc_samples: usize,
+}
+
+impl ModelMeta {
+    fn from_json(j: &Json) -> Result<ModelMeta> {
+        Ok(ModelMeta {
+            kind: j.req("kind")?.as_str()?.to_string(),
+            vocab: j.req("vocab")?.as_usize()?,
+            d_model: j.req("d_model")?.as_usize()?,
+            n_layers: j.req("n_layers")?.as_usize()?,
+            n_state: j.req("n_state")?.as_usize()?,
+            conv_kernel: j.req("conv_kernel")?.as_usize()?,
+            process_noise: j.req("process_noise")?.as_bool()?,
+            ou_exact: j.req("ou_exact")?.as_bool()?,
+            impl_name: j.req("impl")?.as_str()?.to_string(),
+            mc_samples: j.req("mc_samples")?.as_usize()?,
+        })
+    }
+}
+
+/// Full artifact metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub family: String,
+    pub tag: String,
+    pub role: String,
+    pub model: ModelMeta,
+    pub batch: usize,
+    pub seq: usize,
+    pub inputs: Vec<ArgMeta>,
+    pub outputs: Vec<ArgMeta>,
+    /// total_steps from the OptConfig (drives the LR schedule).
+    pub total_steps: usize,
+}
+
+impl ArtifactMeta {
+    pub fn from_json(j: &Json) -> Result<ArtifactMeta> {
+        let inputs = j
+            .req("inputs")?
+            .as_arr()?
+            .iter()
+            .map(ArgMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = j
+            .req("outputs")?
+            .as_arr()?
+            .iter()
+            .map(ArgMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArtifactMeta {
+            name: j.req("name")?.as_str()?.to_string(),
+            family: j.req("family")?.as_str()?.to_string(),
+            tag: j.req("tag")?.as_str()?.to_string(),
+            role: j.req("role")?.as_str()?.to_string(),
+            model: ModelMeta::from_json(j.req("model")?)?,
+            batch: j.req("batch")?.as_usize()?,
+            seq: j.req("seq")?.as_usize()?,
+            inputs,
+            outputs,
+            total_steps: j
+                .req("opt")?
+                .req("total_steps")?
+                .as_usize()?,
+        })
+    }
+
+    /// Input arrays in group "params" (same order as init outputs).
+    pub fn param_inputs(&self) -> Vec<&ArgMeta> {
+        self.inputs.iter().filter(|a| a.group == "params").collect()
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.inputs.iter().filter(|a| a.group == "params").count()
+    }
+
+    pub fn total_param_elems(&self) -> usize {
+        self.inputs
+            .iter()
+            .filter(|a| a.group == "params")
+            .map(|a| a.elem_count())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    const META: &str = r#"{
+      "name": "mad_kla_train", "family": "mad", "tag": "kla",
+      "role": "train",
+      "model": {"kind": "kla", "vocab": 64, "d_model": 64, "n_layers": 1,
+                "n_state": 8, "n_heads": 4, "conv_kernel": 4,
+                "process_noise": true, "ou_exact": true, "impl": "scan",
+                "mc_samples": 0},
+      "opt": {"lr": 0.002, "total_steps": 400},
+      "batch": 32, "seq": 128,
+      "inputs": [
+        {"name": "embed", "shape": [64, 64], "dtype": "float32",
+         "group": "params"},
+        {"name": "embed", "shape": [64, 64], "dtype": "float32",
+         "group": "opt_m"},
+        {"name": "embed", "shape": [64, 64], "dtype": "float32",
+         "group": "opt_v"},
+        {"name": "step", "shape": [], "dtype": "float32"},
+        {"name": "tokens", "shape": [32, 128], "dtype": "int32"}
+      ],
+      "outputs": [{"name": "loss", "shape": [], "dtype": "float32"}]
+    }"#;
+
+    #[test]
+    fn parses_meta() {
+        let m = ArtifactMeta::from_json(&parse(META).unwrap()).unwrap();
+        assert_eq!(m.role, "train");
+        assert_eq!(m.model.d_model, 64);
+        assert_eq!(m.batch, 32);
+        assert_eq!(m.n_params(), 1);
+        assert_eq!(m.total_param_elems(), 64 * 64);
+        assert_eq!(m.inputs[4].dtype, DType::I32);
+        assert_eq!(m.total_steps, 400);
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        assert!(DType::parse("float64").is_err());
+        assert!(DType::parse("float32").is_ok());
+    }
+}

@@ -1,0 +1,231 @@
+//! L3 runtime: load AOT artifacts (HLO text) and execute them on the PJRT
+//! CPU client (xla crate: `PjRtClient::cpu()` -> `HloModuleProto::
+//! from_text_file` -> `compile` -> `execute`).
+//!
+//! One process-wide client; compiled executables are cached per artifact
+//! name.  All host values cross the boundary as `Value` (f32/i32 tensors),
+//! converted to/from `xla::Literal`.
+
+pub mod meta;
+pub mod session;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::json;
+pub use meta::{ArgMeta, ArtifactMeta, DType, ModelMeta};
+pub use session::{DecodeSession, EvalResult, ScoreSession, TrainSession};
+
+/// A host-side value crossing the XLA boundary.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Tensor),
+    I32(IntTensor),
+}
+
+impl Value {
+    pub fn scalar_f32(x: f32) -> Value {
+        Value::F32(Tensor::scalar(x))
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            _ => bail!("expected f32 value"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&IntTensor> {
+        match self {
+            Value::I32(t) => Ok(t),
+            _ => bail!("expected i32 value"),
+        }
+    }
+
+    pub fn item(&self) -> Result<f32> {
+        self.as_f32()?.item()
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => t.shape(),
+            Value::I32(t) => t.shape(),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Value::F32(t) => {
+                let dims: Vec<i64> =
+                    t.shape().iter().map(|&x| x as i64).collect();
+                xla::Literal::vec1(t.data()).reshape(&dims)?
+            }
+            Value::I32(t) => {
+                let dims: Vec<i64> =
+                    t.shape().iter().map(|&x| x as i64).collect();
+                xla::Literal::vec1(t.data()).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Value> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> =
+            shape.dims().iter().map(|&x| x as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                let data = lit.to_vec::<f32>()?;
+                Ok(Value::F32(Tensor::new(&dims, data)?))
+            }
+            xla::ElementType::S32 => {
+                let data = lit.to_vec::<i32>()?;
+                Ok(Value::I32(IntTensor::new(&dims, data)?))
+            }
+            other => bail!("unsupported element type {other:?}"),
+        }
+    }
+}
+
+/// A compiled artifact: metadata + PJRT executable.
+pub struct Artifact {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with host values; returns the flattened output tuple.
+    pub fn run(&self, args: &[Value]) -> Result<Vec<Value>> {
+        if args.len() != self.meta.inputs.len() {
+            bail!("{}: expected {} inputs, got {}", self.meta.name,
+                  self.meta.inputs.len(), args.len());
+        }
+        for (a, m) in args.iter().zip(&self.meta.inputs) {
+            if a.shape() != m.shape.as_slice() {
+                bail!("{}: input {:?} shape {:?} != expected {:?}",
+                      self.meta.name, m.name, a.shape(), m.shape);
+            }
+        }
+        let literals = args
+            .iter()
+            .map(|a| a.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let out = result[0][0].to_literal_sync()?;
+        let parts = out.to_tuple()?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!("{}: got {} outputs, meta says {}", self.meta.name,
+                  parts.len(), self.meta.outputs.len());
+        }
+        parts.iter().map(Value::from_literal).collect()
+    }
+}
+
+/// Per-thread PJRT CPU client.  The `xla` crate's handles are Rc-based
+/// (not Send/Sync), so every thread that touches PJRT gets its own client
+/// and compiles its own executables; cross-thread traffic carries plain
+/// `Value`s instead (see `crate::serve`).
+fn client() -> Result<xla::PjRtClient> {
+    thread_local! {
+        static CLIENT: RefCell<Option<xla::PjRtClient>> =
+            const { RefCell::new(None) };
+    }
+    CLIENT.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(xla::PjRtClient::cpu()
+                .map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?);
+        }
+        Ok(slot.as_ref().unwrap().clone())
+    })
+}
+
+/// Artifact registry over an `artifacts/` directory.
+pub struct Runtime {
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Artifact>>>,
+}
+
+impl Runtime {
+    pub fn new<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        if !dir.join("manifest.json").exists() {
+            bail!(
+                "no artifact manifest at {}/manifest.json — run `make \
+                 artifacts` first",
+                dir.display()
+            );
+        }
+        Ok(Runtime { dir, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Locate the artifacts dir relative to the repo root (cwd or
+    /// KLA_ARTIFACTS env override).
+    pub fn discover() -> Result<Self> {
+        if let Ok(dir) = std::env::var("KLA_ARTIFACTS") {
+            return Runtime::new(dir);
+        }
+        for candidate in ["artifacts", "../artifacts", "../../artifacts"] {
+            if Path::new(candidate).join("manifest.json").exists() {
+                return Runtime::new(candidate);
+            }
+        }
+        bail!("artifacts/ not found — run `make artifacts` (or set \
+               KLA_ARTIFACTS)")
+    }
+
+    pub fn names(&self) -> Result<Vec<String>> {
+        let text = std::fs::read_to_string(self.dir.join("manifest.json"))?;
+        let j = json::parse(&text)?;
+        j.req("artifacts")?
+            .as_arr()?
+            .iter()
+            .map(|x| Ok(x.as_str()?.to_string()))
+            .collect()
+    }
+
+    pub fn meta(&self, name: &str) -> Result<ArtifactMeta> {
+        let path = self.dir.join(format!("{name}.meta.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        ArtifactMeta::from_json(&json::parse(&text)?)
+    }
+
+    /// Load (compile) an artifact; cached per name.
+    pub fn load(&self, name: &str) -> Result<Rc<Artifact>> {
+        if let Some(a) = self.cache.borrow().get(name) {
+            return Ok(a.clone());
+        }
+        let meta = self.meta(name)?;
+        let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
+        if !hlo_path.exists() {
+            bail!(
+                "artifact {name} missing at {} — run `make artifacts` \
+                 (or `make artifacts-full` for sweep configs)",
+                hlo_path.display()
+            );
+        }
+        let t = crate::util::Timer::start();
+        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
+            .map_err(|e| anyhow!("parse {}: {e}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client()?
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e}"))?;
+        crate::log_debug!("compiled {name} in {:.1} ms", t.elapsed_ms());
+        let artifact = Rc::new(Artifact { meta, exe });
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), artifact.clone());
+        Ok(artifact)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}

@@ -1,0 +1,300 @@
+//! Stateful sessions over artifacts: training, scoring, O(1) decoding.
+//!
+//! A `TrainSession` owns the model + optimiser state for one artifact base
+//! (e.g. "mad_kla"): parameters initialised from the `_init` artifact, the
+//! `_train` step advancing (params, m, v, step) and returning the loss, and
+//! `_eval` computing masked loss/accuracy.  State stays in host `Value`s
+//! between steps (the CPU PJRT "device" shares host memory, so uploads are
+//! memcpys; see EXPERIMENTS.md §Perf for the measured step breakdown).
+
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Artifact, Runtime, Value};
+use crate::data::Batch;
+use crate::tensor::{IntTensor, Tensor};
+
+/// Aggregated evaluation counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalResult {
+    pub loss_sum: f64,
+    pub correct: f64,
+    pub count: f64,
+}
+
+impl EvalResult {
+    pub fn accuracy(&self) -> f64 {
+        if self.count > 0.0 {
+            self.correct / self.count
+        } else {
+            f64::NAN
+        }
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        if self.count > 0.0 {
+            self.loss_sum / self.count
+        } else {
+            f64::NAN
+        }
+    }
+
+    pub fn merge(&mut self, other: EvalResult) {
+        self.loss_sum += other.loss_sum;
+        self.correct += other.correct;
+        self.count += other.count;
+    }
+}
+
+/// Training session over `{base}_init` / `{base}_train` / `{base}_eval`.
+pub struct TrainSession {
+    pub base: String,
+    train: Rc<Artifact>,
+    eval: Rc<Artifact>,
+    params: Vec<Value>,
+    opt_m: Vec<Value>,
+    opt_v: Vec<Value>,
+    step: usize,
+}
+
+impl TrainSession {
+    pub fn new(rt: &Runtime, base: &str) -> Result<Self> {
+        let init = rt
+            .load(&format!("{base}_init"))
+            .with_context(|| format!("loading {base}_init"))?;
+        let train = rt.load(&format!("{base}_train"))?;
+        let eval = rt.load(&format!("{base}_eval"))?;
+        let params = init.run(&[])?;
+        let n = train.meta.n_params();
+        if params.len() != n {
+            bail!("{base}: init gave {} params, train wants {n}",
+                  params.len());
+        }
+        let zeros: Vec<Value> = params
+            .iter()
+            .map(|p| match p {
+                Value::F32(t) => Value::F32(Tensor::zeros(t.shape())),
+                Value::I32(_) => unreachable!("params are f32"),
+            })
+            .collect();
+        Ok(TrainSession {
+            base: base.to_string(),
+            train,
+            eval,
+            params,
+            opt_m: zeros.clone(),
+            opt_v: zeros,
+            step: 0,
+        })
+    }
+
+    pub fn meta(&self) -> &super::ArtifactMeta {
+        &self.train.meta
+    }
+
+    pub fn batch_shape(&self) -> (usize, usize) {
+        (self.train.meta.batch, self.train.meta.seq)
+    }
+
+    pub fn step_count(&self) -> usize {
+        self.step
+    }
+
+    /// One fused optimisation step; returns the training loss.
+    pub fn train_step(&mut self, batch: &Batch) -> Result<f32> {
+        let (b, t) = self.batch_shape();
+        if batch.tokens.shape() != [b, t] {
+            bail!("batch shape {:?} != artifact ({b}, {t})",
+                  batch.tokens.shape());
+        }
+        let mut args = Vec::with_capacity(self.params.len() * 3 + 4);
+        args.extend(self.params.iter().cloned());
+        args.extend(self.opt_m.iter().cloned());
+        args.extend(self.opt_v.iter().cloned());
+        args.push(Value::scalar_f32(self.step as f32));
+        args.push(Value::I32(batch.tokens.clone()));
+        args.push(Value::I32(batch.targets.clone()));
+        args.push(Value::F32(batch.mask.clone()));
+        let mut out = self.train.run(&args)?;
+        let n = self.params.len();
+        let loss = out[0].item()?;
+        // outputs: loss, params..., m..., v...
+        let rest = out.split_off(1);
+        let mut it = rest.into_iter();
+        self.params = (&mut it).take(n).collect();
+        self.opt_m = (&mut it).take(n).collect();
+        self.opt_v = (&mut it).take(n).collect();
+        self.step += 1;
+        if !loss.is_finite() {
+            bail!("{}: non-finite loss {loss} at step {}", self.base,
+                  self.step);
+        }
+        Ok(loss)
+    }
+
+    /// Masked loss/accuracy on one batch.
+    pub fn eval_batch(&self, batch: &Batch) -> Result<EvalResult> {
+        let mut args = Vec::with_capacity(self.params.len() + 3);
+        args.extend(self.params.iter().cloned());
+        args.push(Value::I32(batch.tokens.clone()));
+        args.push(Value::I32(batch.targets.clone()));
+        args.push(Value::F32(batch.mask.clone()));
+        let out = self.eval.run(&args)?;
+        Ok(EvalResult {
+            loss_sum: out[0].item()? as f64,
+            correct: out[1].item()? as f64,
+            count: out[2].item()? as f64,
+        })
+    }
+
+    pub fn params(&self) -> &[Value] {
+        &self.params
+    }
+
+    pub fn set_params(&mut self, params: Vec<Value>) -> Result<()> {
+        if params.len() != self.params.len() {
+            bail!("param count mismatch: {} vs {}", params.len(),
+                  self.params.len());
+        }
+        self.params = params;
+        Ok(())
+    }
+
+    /// Run an auxiliary artifact (`{base}_{role}`) with the session's
+    /// current parameters followed by `extra` inputs.
+    pub fn run_role(&self, rt: &Runtime, role: &str, extra: &[Value])
+                    -> Result<Vec<Value>> {
+        let art = rt.load(&format!("{}_{role}", self.base))?;
+        let mut args = Vec::with_capacity(self.params.len() + extra.len());
+        args.extend(self.params.iter().cloned());
+        args.extend(extra.iter().cloned());
+        art.run(&args)
+    }
+}
+
+/// Zero-shot scoring session over a `{base}_score` artifact.
+pub struct ScoreSession {
+    score: Rc<Artifact>,
+    params: Vec<Value>,
+}
+
+impl ScoreSession {
+    pub fn new(rt: &Runtime, base: &str, params: Vec<Value>) -> Result<Self> {
+        Ok(ScoreSession { score: rt.load(&format!("{base}_score"))?, params })
+    }
+
+    pub fn batch_shape(&self) -> (usize, usize) {
+        (self.score.meta.batch, self.score.meta.seq)
+    }
+
+    /// Per-sequence summed logprob of `targets` under the model.
+    pub fn score(&self, tokens: &IntTensor, targets: &IntTensor,
+                 mask: &Tensor) -> Result<Vec<f32>> {
+        let mut args = Vec::with_capacity(self.params.len() + 3);
+        args.extend(self.params.iter().cloned());
+        args.push(Value::I32(tokens.clone()));
+        args.push(Value::I32(targets.clone()));
+        args.push(Value::F32(mask.clone()));
+        let out = self.score.run(&args)?;
+        Ok(out[0].as_f32()?.data().to_vec())
+    }
+}
+
+/// O(1) recurrent decoding session over a `{base}_decode` artifact.
+/// The belief state (conv window, precision, information mean) is owned by
+/// the caller (see `crate::serve::state_cache`), making this session
+/// stateless and shareable across requests.
+pub struct DecodeSession {
+    decode: Rc<Artifact>,
+    params: Vec<Value>,
+}
+
+/// One model's recurrent state: (conv, lam, eta), shapes (L,B,K-1,D) /
+/// (L,B,N,D) / (L,B,N,D).
+#[derive(Clone, Debug)]
+pub struct DecodeState {
+    pub conv: Tensor,
+    pub lam: Tensor,
+    pub eta: Tensor,
+}
+
+impl DecodeSession {
+    pub fn new(rt: &Runtime, base: &str, params: Vec<Value>) -> Result<Self> {
+        let decode = rt.load(&format!("{base}_decode"))?;
+        let n = decode.meta.n_params();
+        if params.len() != n {
+            bail!("decode {base}: {} params given, wants {n}", params.len());
+        }
+        Ok(DecodeSession { decode, params })
+    }
+
+    pub fn meta(&self) -> &super::ArtifactMeta {
+        &self.decode.meta
+    }
+
+    pub fn batch(&self) -> usize {
+        self.decode.meta.batch
+    }
+
+    /// Fresh state for the artifact's batch size: lam starts at the learned
+    /// prior precision, which the decode artifact encodes in its inputs —
+    /// we reconstruct it from the `lam0_raw` parameter (softplus + floor),
+    /// matching `python/compile/models/decode.py::decode_init_state`.
+    pub fn init_state(&self) -> Result<DecodeState> {
+        let meta = &self.decode.meta;
+        let (l, b) = (meta.model.n_layers, meta.batch);
+        let (k, d, n) = (meta.model.conv_kernel, meta.model.d_model,
+                         meta.model.n_state);
+        let conv = Tensor::zeros(&[l, b, k - 1, d]);
+        let mut lam = Tensor::zeros(&[l, b, n, d]);
+        // collect per-layer lam0_raw params in layer order
+        let mut layer = 0usize;
+        for (val, am) in self.params.iter().zip(meta.param_inputs()) {
+            if am.name.ends_with(".lam0_raw") {
+                let raw = val.as_f32()?;
+                for bi in 0..b {
+                    for i in 0..n * d {
+                        let x = raw.data()[i];
+                        let lam0 = crate::kla::ou::softplus(x) + 1e-3;
+                        lam.data_mut()[((layer * b) + bi) * n * d + i] = lam0;
+                    }
+                }
+                layer += 1;
+            }
+        }
+        if layer != l {
+            bail!("found {layer} lam0_raw params, expected {l} layers");
+        }
+        let eta = Tensor::zeros(&[l, b, n, d]);
+        Ok(DecodeState { conv, lam, eta })
+    }
+
+    /// One autoregressive step for the whole batch.
+    /// tokens: (B,) -> (logits (B, V), new state).
+    pub fn step(&self, tokens: &IntTensor, state: &DecodeState)
+                -> Result<(Tensor, DecodeState)> {
+        let mut args = Vec::with_capacity(self.params.len() + 4);
+        args.extend(self.params.iter().cloned());
+        args.push(Value::I32(tokens.clone()));
+        args.push(Value::F32(state.conv.clone()));
+        args.push(Value::F32(state.lam.clone()));
+        args.push(Value::F32(state.eta.clone()));
+        let mut out = self.decode.run(&args)?;
+        if out.len() != 4 {
+            bail!("decode returned {} outputs", out.len());
+        }
+        let eta = out.pop().unwrap();
+        let lam = out.pop().unwrap();
+        let conv = out.pop().unwrap();
+        let logits = out.pop().unwrap();
+        Ok((
+            logits.as_f32()?.clone(),
+            DecodeState {
+                conv: conv.as_f32()?.clone(),
+                lam: lam.as_f32()?.clone(),
+                eta: eta.as_f32()?.clone(),
+            },
+        ))
+    }
+}

@@ -1,0 +1,197 @@
+//! Generation engine: marries the scheduler (batcher.rs) to the XLA decode
+//! step and the belief-state cache.  One engine thread owns the model; the
+//! router (server.rs) talks to it over an mpsc channel.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::{Feed, SchedRequest, Scheduler};
+use super::state_cache::BeliefStateCache;
+use crate::runtime::session::DecodeSession;
+use crate::tensor::IntTensor;
+use crate::util::Stats;
+
+/// A request entering the engine.
+pub struct EngineRequest {
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    pub resp: Sender<EngineResponse>,
+}
+
+/// The reply (tokens + timing; uncertainty from the belief state).
+#[derive(Clone, Debug)]
+pub struct EngineResponse {
+    pub tokens: Vec<i32>,
+    pub queue_ms: f64,
+    pub total_ms: f64,
+    pub uncertainty: f32,
+}
+
+/// Engine statistics (read after shutdown).
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub requests: usize,
+    pub steps: usize,
+    pub tokens_out: usize,
+    pub step_ms: Vec<f64>,
+    pub batch_occupancy: Vec<f64>,
+}
+
+impl EngineStats {
+    pub fn tokens_per_sec(&self) -> f64 {
+        let total_s: f64 = self.step_ms.iter().sum::<f64>() / 1e3;
+        if total_s > 0.0 {
+            self.tokens_out as f64 / total_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn mean_step_ms(&self) -> f64 {
+        let mut s = Stats::new();
+        for &x in &self.step_ms {
+            s.push(x);
+        }
+        s.mean()
+    }
+}
+
+/// Run the engine loop until `rx` disconnects (or `shutdown` is set) and
+/// all admitted work drains.  `batch_window` bounds how long we wait to
+/// fill empty slots before stepping a partially-full batch.
+///
+/// The intake NEVER blocks indefinitely: connection-handler threads hold
+/// `tx` clones for as long as their sockets live, so a blocking `recv()`
+/// would deadlock `ServerHandle::stop()` against any client that keeps its
+/// connection open (seen in integration_serve).
+pub fn run_engine(session: &DecodeSession, rx: Receiver<EngineRequest>,
+                  batch_window: Duration, shutdown: Arc<AtomicBool>)
+                  -> Result<EngineStats> {
+    let b = session.batch();
+    let mut cache = BeliefStateCache::new(session.init_state()?);
+    let mut sched = Scheduler::new(b, 0);
+    let mut pending: Vec<(u64, Sender<EngineResponse>, Instant, Instant)> =
+        Vec::new(); // (id, resp, submit_time, start_time)
+    let mut next_id = 0u64;
+    let mut stats = EngineStats::default();
+    let mut disconnected = false;
+
+    while (!disconnected && !shutdown.load(Ordering::SeqCst))
+        || sched.has_work()
+    {
+        // intake: block briefly when idle, else drain without blocking
+        let deadline = Instant::now() + batch_window;
+        loop {
+            let timeout = deadline.saturating_duration_since(Instant::now());
+            let msg = if sched.active_count() == 0 && sched.queue.is_empty()
+            {
+                // fully idle: wait in short slices so shutdown is observed
+                match rx.recv_timeout(Duration::from_millis(20)) {
+                    Ok(m) => Some(m),
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                        if shutdown.load(Ordering::SeqCst) {
+                            disconnected = true;
+                        }
+                        None
+                    }
+                    Err(_) => {
+                        disconnected = true;
+                        None
+                    }
+                }
+            } else if sched.queue.is_empty()
+                && sched.active_count() < b
+                && !timeout.is_zero()
+            {
+                match rx.recv_timeout(timeout) {
+                    Ok(m) => Some(m),
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
+                    Err(_) => {
+                        disconnected = true;
+                        None
+                    }
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => Some(m),
+                    Err(std::sync::mpsc::TryRecvError::Empty) => None,
+                    Err(_) => {
+                        disconnected = true;
+                        None
+                    }
+                }
+            };
+            match msg {
+                Some(req) => {
+                    let id = next_id;
+                    next_id += 1;
+                    let now = Instant::now();
+                    pending.push((id, req.resp, now, now));
+                    sched.submit(SchedRequest {
+                        id,
+                        prompt: req.prompt,
+                        max_new: req.max_new,
+                    });
+                    stats.requests += 1;
+                }
+                None => break,
+            }
+            if sched.queue.len() >= b {
+                break;
+            }
+        }
+        if !sched.has_work() {
+            continue;
+        }
+
+        // admit into slots; reset belief state for new slots
+        for slot in sched.admit() {
+            cache.reset_slot(slot);
+        }
+
+        // build the token vector for this iteration
+        let feeds = sched.feeds();
+        let tokens: Vec<i32> = feeds
+            .iter()
+            .map(|f| match f {
+                Feed::Prefill(t) | Feed::Decode(t) => *t,
+                Feed::Idle => sched.pad(),
+            })
+            .collect();
+
+        let t0 = Instant::now();
+        let (logits, new_state) =
+            session.step(&IntTensor::new(&[b], tokens)?, cache.state())?;
+        cache.set_state(new_state);
+        stats.step_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        stats.steps += 1;
+        stats.batch_occupancy
+            .push(sched.active_count() as f64 / b as f64);
+
+        // greedy sampling per slot
+        let am = logits.argmax_last();
+        let sampled: Vec<i32> = am.data().to_vec();
+        let finished = sched.advance(&sampled);
+        for f in &finished {
+            stats.tokens_out += f.tokens.len();
+            let uncertainty = cache.slot_uncertainty(f.slot);
+            cache.reset_slot(f.slot);
+            sched.release(f.slot);
+            if let Some(pos) = pending.iter().position(|(id, ..)| *id == f.id)
+            {
+                let (_, resp, submit, start) = pending.swap_remove(pos);
+                let _ = resp.send(EngineResponse {
+                    tokens: f.tokens.clone(),
+                    queue_ms: (start - submit).as_secs_f64() * 1e3,
+                    total_ms: submit.elapsed().as_secs_f64() * 1e3,
+                    uncertainty,
+                });
+            }
+        }
+    }
+    Ok(stats)
+}

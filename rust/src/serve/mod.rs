@@ -1,0 +1,23 @@
+//! Serving runtime (DESIGN.md §S15): a request router + continuous batcher
+//! + belief-state cache manager over the O(1) recurrent decode artifact.
+//!
+//! Architecture (vLLM-router-shaped, adapted to constant-size state):
+//!
+//!   TCP conns ──> router threads ──mpsc──> engine thread ──> PJRT decode
+//!                                             │
+//!                                   BeliefStateCache (slot pool,
+//!                                   reset / snapshot / restore)
+//!
+//! Because a KLA sequence's state never grows, scheduling has no memory
+//! watermark: admission is purely slot-bound and prefill/decode unify into
+//! one recurrent step per token (batcher.rs).
+
+pub mod batcher;
+pub mod engine;
+pub mod server;
+pub mod state_cache;
+
+pub use batcher::{Feed, SchedRequest, Scheduler};
+pub use engine::{EngineRequest, EngineResponse, EngineStats};
+pub use server::{serve, Client, ServerHandle};
+pub use state_cache::BeliefStateCache;

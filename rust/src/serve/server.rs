@@ -1,0 +1,205 @@
+//! TCP front-end: newline-delimited JSON over a plain socket (std::net —
+//! no tokio offline).  One reader thread per connection; all generation
+//! funnels into the single engine thread (continuous batching).
+//!
+//! Protocol (one JSON object per line):
+//!   -> {"prompt": [1,2,3], "max_new_tokens": 8}
+//!   <- {"tokens": [...], "total_ms": 12.3, "queue_ms": 0.1,
+//!       "uncertainty": 0.42}
+//!   -> {"cmd": "stats"}    <- {"requests": N, ...}
+//!   -> {"cmd": "shutdown"} <- {"ok": true}    (stops the listener)
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use super::engine::{run_engine, EngineRequest, EngineStats};
+use crate::config::ServeConfig;
+use crate::runtime::{Runtime, Value};
+use crate::util::Json;
+
+pub struct ServerHandle {
+    pub addr: String,
+    shutdown: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<Result<EngineStats>>>,
+    listener_join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Signal shutdown and collect engine stats.
+    pub fn stop(mut self) -> Result<EngineStats> {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // poke the listener so accept() returns
+        let _ = TcpStream::connect(&self.addr);
+        if let Some(j) = self.listener_join.take() {
+            let _ = j.join();
+        }
+        match self.join.take() {
+            Some(j) => j.join().expect("engine thread panicked"),
+            None => Ok(EngineStats::default()),
+        }
+    }
+}
+
+/// Start the server; returns once the socket is listening.
+///
+/// PJRT handles are not Send, so the engine thread builds its own Runtime
+/// and DecodeSession from plain data (artifact dir + base + params).
+pub fn serve(artifacts_dir: PathBuf, artifact_base: String,
+             params: Vec<Value>, cfg: &ServeConfig) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("binding {}", cfg.addr))?;
+    let addr = listener.local_addr()?.to_string();
+    let (tx, rx) = channel::<EngineRequest>();
+    let window = Duration::from_micros(cfg.batch_window_us);
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let shutdown_engine = shutdown.clone();
+    let engine_join = std::thread::spawn(move || {
+        let rt = Runtime::new(&artifacts_dir)?;
+        let session = crate::runtime::DecodeSession::new(
+            &rt, &artifact_base, params)?;
+        run_engine(&session, rx, window, shutdown_engine)
+    });
+
+    let shutdown2 = shutdown.clone();
+    let max_new = cfg.max_new_tokens;
+    let listener_join = std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            if shutdown2.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            let tx = tx.clone();
+            let shutdown3 = shutdown2.clone();
+            std::thread::spawn(move || {
+                let _ = handle_conn(stream, tx, max_new, shutdown3);
+            });
+        }
+        // tx (and all clones in finished handlers) dropping closes the
+        // engine's queue, letting run_engine drain and exit.
+    });
+
+    crate::log_info!("serving on {addr}");
+    Ok(ServerHandle {
+        addr,
+        shutdown,
+        join: Some(engine_join),
+        listener_join: Some(listener_join),
+    })
+}
+
+fn handle_conn(stream: TcpStream, tx: Sender<EngineRequest>,
+               default_max_new: usize, shutdown: Arc<AtomicBool>)
+               -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match handle_line(&line, &tx, default_max_new,
+                                      &shutdown) {
+            Ok(json) => json,
+            Err(e) => Json::obj(vec![("error", Json::str(&e.to_string()))]),
+        };
+        writer.write_all(reply.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    crate::log_debug!("connection {peer:?} closed");
+    Ok(())
+}
+
+fn handle_line(line: &str, tx: &Sender<EngineRequest>,
+               default_max_new: usize, shutdown: &AtomicBool)
+               -> Result<Json> {
+    let req = crate::util::json::parse(line)?;
+    if let Some(cmd) = req.get("cmd") {
+        match cmd.as_str()? {
+            "shutdown" => {
+                shutdown.store(true, Ordering::SeqCst);
+                return Ok(Json::obj(vec![("ok", Json::Bool(true))]));
+            }
+            "ping" => return Ok(Json::obj(vec![("ok", Json::Bool(true))])),
+            other => anyhow::bail!("unknown cmd {other:?}"),
+        }
+    }
+    let prompt: Vec<i32> = req
+        .req("prompt")?
+        .as_arr()?
+        .iter()
+        .map(|x| Ok(x.as_i64()? as i32))
+        .collect::<Result<_>>()?;
+    let max_new = req
+        .get("max_new_tokens")
+        .and_then(|x| x.as_usize().ok())
+        .unwrap_or(default_max_new);
+    let (rtx, rrx) = channel();
+    tx.send(EngineRequest { prompt, max_new, resp: rtx })
+        .map_err(|_| anyhow::anyhow!("engine is shut down"))?;
+    let resp = rrx
+        .recv()
+        .map_err(|_| anyhow::anyhow!("engine dropped the request"))?;
+    Ok(Json::obj(vec![
+        ("tokens",
+         Json::Arr(resp.tokens.iter().map(|&t| Json::num(t as f64))
+             .collect())),
+        ("queue_ms", Json::num(resp.queue_ms)),
+        ("total_ms", Json::num(resp.total_ms)),
+        ("uncertainty", Json::num(resp.uncertainty as f64)),
+    ]))
+}
+
+/// Minimal blocking client (used by tests, the serve_demo example and the
+/// throughput bench).
+pub struct Client {
+    stream: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Client { stream: BufReader::new(stream) })
+    }
+
+    pub fn request(&mut self, prompt: &[i32], max_new: usize)
+                   -> Result<Json> {
+        let req = Json::obj(vec![
+            ("prompt",
+             Json::Arr(prompt.iter().map(|&t| Json::num(t as f64))
+                 .collect())),
+            ("max_new_tokens", Json::num(max_new as f64)),
+        ]);
+        self.send_line(&req.to_string())
+    }
+
+    pub fn ping(&mut self) -> Result<Json> {
+        self.send_line(r#"{"cmd":"ping"}"#)
+    }
+
+    pub fn shutdown(&mut self) -> Result<Json> {
+        self.send_line(r#"{"cmd":"shutdown"}"#)
+    }
+
+    fn send_line(&mut self, line: &str) -> Result<Json> {
+        let stream = self.stream.get_mut();
+        stream.write_all(line.as_bytes())?;
+        stream.write_all(b"\n")?;
+        stream.flush()?;
+        let mut reply = String::new();
+        self.stream.read_line(&mut reply)?;
+        crate::util::json::parse(reply.trim())
+    }
+}

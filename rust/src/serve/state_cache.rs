@@ -1,0 +1,230 @@
+//! Belief-state cache manager — the O(1)-state analogue of a KV-cache
+//! manager (DESIGN.md §S15).
+//!
+//! A KLA model's per-sequence decode state is CONSTANT-SIZE: a causal-conv
+//! window plus the posterior (precision, information mean).  Slots live in
+//! the batch dimension of one `DecodeState`; the manager hands out slots,
+//! resets them to the learned prior on release, and supports snapshotting
+//! a slot's belief state for conversation resume (the belief-state
+//! analogue of prefix caching).
+
+use anyhow::{bail, Result};
+
+use crate::runtime::session::DecodeState;
+
+/// Snapshot of one slot's state (conv window + posterior).
+#[derive(Clone, Debug)]
+pub struct SlotSnapshot {
+    pub conv: Vec<f32>,
+    pub lam: Vec<f32>,
+    pub eta: Vec<f32>,
+}
+
+pub struct BeliefStateCache {
+    /// live batched state, shapes (L,B,K-1,D) / (L,B,N,D) / (L,B,N,D)
+    state: DecodeState,
+    init: DecodeState,
+    free: Vec<usize>,
+    batch: usize,
+    layers: usize,
+    conv_row: usize, // (K-1)*D
+    post_row: usize, // N*D
+}
+
+impl BeliefStateCache {
+    pub fn new(init: DecodeState) -> Self {
+        let s = init.lam.shape();
+        let (layers, batch) = (s[0], s[1]);
+        let post_row = s[2] * s[3];
+        let cs = init.conv.shape();
+        let conv_row = cs[2] * cs[3];
+        BeliefStateCache {
+            state: init.clone(),
+            init,
+            free: (0..batch).rev().collect(),
+            batch,
+            layers,
+            conv_row,
+            post_row,
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Claim a fresh slot (state reset to the prior).
+    pub fn acquire(&mut self) -> Option<usize> {
+        let slot = self.free.pop()?;
+        self.reset_slot(slot);
+        Some(slot)
+    }
+
+    /// Release a slot back to the pool.
+    pub fn release(&mut self, slot: usize) {
+        debug_assert!(slot < self.batch);
+        debug_assert!(!self.free.contains(&slot));
+        self.free.push(slot);
+    }
+
+    /// Reset one slot's state to the learned prior (lam0, zeros).
+    pub fn reset_slot(&mut self, slot: usize) {
+        for l in 0..self.layers {
+            let c0 = (l * self.batch + slot) * self.conv_row;
+            self.state.conv.data_mut()[c0..c0 + self.conv_row]
+                .copy_from_slice(
+                    &self.init.conv.data()[c0..c0 + self.conv_row]);
+            let p0 = (l * self.batch + slot) * self.post_row;
+            self.state.lam.data_mut()[p0..p0 + self.post_row]
+                .copy_from_slice(
+                    &self.init.lam.data()[p0..p0 + self.post_row]);
+            self.state.eta.data_mut()[p0..p0 + self.post_row]
+                .copy_from_slice(
+                    &self.init.eta.data()[p0..p0 + self.post_row]);
+        }
+    }
+
+    /// Snapshot a slot (e.g. end of a conversation turn).
+    pub fn snapshot(&self, slot: usize) -> SlotSnapshot {
+        let mut snap = SlotSnapshot {
+            conv: Vec::with_capacity(self.layers * self.conv_row),
+            lam: Vec::with_capacity(self.layers * self.post_row),
+            eta: Vec::with_capacity(self.layers * self.post_row),
+        };
+        for l in 0..self.layers {
+            let c0 = (l * self.batch + slot) * self.conv_row;
+            snap.conv
+                .extend_from_slice(&self.state.conv.data()[c0..c0 + self.conv_row]);
+            let p0 = (l * self.batch + slot) * self.post_row;
+            snap.lam
+                .extend_from_slice(&self.state.lam.data()[p0..p0 + self.post_row]);
+            snap.eta
+                .extend_from_slice(&self.state.eta.data()[p0..p0 + self.post_row]);
+        }
+        snap
+    }
+
+    /// Restore a previously snapshotted belief state into a slot.
+    pub fn restore(&mut self, slot: usize, snap: &SlotSnapshot) -> Result<()> {
+        if snap.lam.len() != self.layers * self.post_row {
+            bail!("snapshot shape mismatch");
+        }
+        for l in 0..self.layers {
+            let c0 = (l * self.batch + slot) * self.conv_row;
+            self.state.conv.data_mut()[c0..c0 + self.conv_row]
+                .copy_from_slice(
+                    &snap.conv[l * self.conv_row..(l + 1) * self.conv_row]);
+            let p0 = (l * self.batch + slot) * self.post_row;
+            self.state.lam.data_mut()[p0..p0 + self.post_row]
+                .copy_from_slice(
+                    &snap.lam[l * self.post_row..(l + 1) * self.post_row]);
+            self.state.eta.data_mut()[p0..p0 + self.post_row]
+                .copy_from_slice(
+                    &snap.eta[l * self.post_row..(l + 1) * self.post_row]);
+        }
+        Ok(())
+    }
+
+    pub fn state(&self) -> &DecodeState {
+        &self.state
+    }
+
+    /// Overwrite the whole batched state (after a decode step).
+    pub fn set_state(&mut self, state: DecodeState) {
+        debug_assert_eq!(state.lam.shape(), self.state.lam.shape());
+        self.state = state;
+    }
+
+    /// Mean posterior variance (1/lam) of a slot — the serving-side
+    /// uncertainty signal (paper §7: epistemic uncertainty applications).
+    pub fn slot_uncertainty(&self, slot: usize) -> f32 {
+        let mut acc = 0.0f64;
+        let mut n = 0usize;
+        for l in 0..self.layers {
+            let p0 = (l * self.batch + slot) * self.post_row;
+            for &lam in &self.state.lam.data()[p0..p0 + self.post_row] {
+                acc += 1.0 / lam.max(1e-9) as f64;
+                n += 1;
+            }
+        }
+        (acc / n.max(1) as f64) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn tiny_state() -> DecodeState {
+        let (l, b, k1, d, n) = (2, 3, 3, 4, 2);
+        let mut lam = Tensor::zeros(&[l, b, n, d]);
+        lam.data_mut().iter_mut().for_each(|x| *x = 1.5);
+        DecodeState {
+            conv: Tensor::zeros(&[l, b, k1, d]),
+            lam,
+            eta: Tensor::zeros(&[l, b, n, d]),
+        }
+    }
+
+    #[test]
+    fn acquire_release_cycle() {
+        let mut cache = BeliefStateCache::new(tiny_state());
+        assert_eq!(cache.free_slots(), 3);
+        let a = cache.acquire().unwrap();
+        let b = cache.acquire().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(cache.free_slots(), 1);
+        cache.release(a);
+        assert_eq!(cache.free_slots(), 2);
+        let c = cache.acquire().unwrap();
+        let d = cache.acquire().unwrap();
+        assert_eq!(cache.free_slots(), 0);
+        assert!(cache.acquire().is_none());
+        let _ = (c, d);
+    }
+
+    #[test]
+    fn reset_restores_prior() {
+        let mut cache = BeliefStateCache::new(tiny_state());
+        let slot = cache.acquire().unwrap();
+        // dirty the slot
+        let mut s = cache.state().clone();
+        s.lam.data_mut().iter_mut().for_each(|x| *x = 99.0);
+        cache.set_state(s);
+        cache.reset_slot(slot);
+        // slot entries back to 1.5; others still 99
+        let lam = cache.state().lam.clone();
+        assert_eq!(lam.get(&[0, slot, 0, 0]), 1.5);
+        let other = (slot + 1) % 3;
+        assert_eq!(lam.get(&[0, other, 0, 0]), 99.0);
+    }
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let mut cache = BeliefStateCache::new(tiny_state());
+        let slot = cache.acquire().unwrap();
+        let mut s = cache.state().clone();
+        s.eta.data_mut().iter_mut().for_each(|x| *x = 7.0);
+        cache.set_state(s);
+        let snap = cache.snapshot(slot);
+        cache.reset_slot(slot);
+        assert_eq!(cache.state().eta.get(&[0, slot, 0, 0]), 0.0);
+        cache.restore(slot, &snap).unwrap();
+        assert_eq!(cache.state().eta.get(&[0, slot, 0, 0]), 7.0);
+    }
+
+    #[test]
+    fn uncertainty_decreases_with_precision() {
+        let mut cache = BeliefStateCache::new(tiny_state());
+        let u0 = cache.slot_uncertainty(0);
+        let mut s = cache.state().clone();
+        s.lam.data_mut().iter_mut().for_each(|x| *x = 100.0);
+        cache.set_state(s);
+        assert!(cache.slot_uncertainty(0) < u0);
+    }
+}

@@ -1,0 +1,258 @@
+//! Minimal dense f32/i32 tensors for host-side data plumbing.
+//!
+//! This is intentionally small: the heavy math runs inside XLA (L2/L1) or
+//! the native KLA kernels (`crate::kla`); tensors here are row-major
+//! containers with just enough shape algebra for batching, metrics, and
+//! literal conversion.
+
+use anyhow::{bail, Result};
+
+/// Row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn item(&self) -> Result<f32> {
+        if self.data.len() != 1 {
+            bail!("item() on tensor of {} elems", self.data.len());
+        }
+        Ok(self.data[0])
+    }
+
+    /// Row-major flat offset of a multi-index.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (i, (&x, &s)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(x < s, "index {x} out of bounds {s} at dim {i}");
+            off = off * s + x;
+        }
+        off
+    }
+
+    pub fn get(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let off = self.offset(idx);
+        self.data[off] = v;
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {:?} -> {:?}", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Mean absolute difference (test helper).
+    pub fn mad(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        let n = self.data.len().max(1);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f32>()
+            / n as f32
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs().max(a.abs()))
+    }
+
+    /// argmax over the last axis; returns an IntTensor of the leading shape.
+    pub fn argmax_last(&self) -> IntTensor {
+        let last = *self.shape.last().expect("argmax on scalar");
+        let lead: Vec<usize> = self.shape[..self.shape.len() - 1].to_vec();
+        let rows = self.data.len() / last;
+        let mut out = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let row = &self.data[r * last..(r + 1) * last];
+            let mut best = 0;
+            for (i, &x) in row.iter().enumerate() {
+                if x > row[best] {
+                    best = i;
+                }
+            }
+            out.push(best as i32);
+        }
+        IntTensor { shape: lead, data: out }
+    }
+}
+
+/// Row-major i32 tensor (token ids, masks as 0/1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IntTensor {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn new(shape: &[usize], data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(IntTensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        IntTensor {
+            shape: shape.to_vec(),
+            data: vec![0; shape.iter().product()],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [i32] {
+        &mut self.data
+    }
+
+    pub fn get(&self, idx: &[usize]) -> i32 {
+        let mut off = 0;
+        for (&x, &s) in idx.iter().zip(&self.shape) {
+            off = off * s + x;
+        }
+        self.data[off]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: i32) {
+        let mut off = 0;
+        for (&x, &s) in idx.iter().zip(&self.shape) {
+            off = off * s + x;
+        }
+        self.data[off] = v;
+    }
+
+    pub fn to_f32(&self) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| x as f32).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        assert!(Tensor::new(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(&[2, 3], vec![0.0; 5]).is_err());
+        let t = Tensor::zeros(&[2, 3]);
+        assert!(t.clone().reshape(&[3, 2]).is_ok());
+        assert!(t.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn indexing_row_major() {
+        let t = Tensor::new(&[2, 3], (0..6).map(|x| x as f32).collect())
+            .unwrap();
+        assert_eq!(t.get(&[0, 0]), 0.0);
+        assert_eq!(t.get(&[0, 2]), 2.0);
+        assert_eq!(t.get(&[1, 0]), 3.0);
+        assert_eq!(t.get(&[1, 2]), 5.0);
+    }
+
+    #[test]
+    fn argmax() {
+        let t = Tensor::new(&[2, 3], vec![1.0, 5.0, 2.0, 9.0, 0.0, 3.0])
+            .unwrap();
+        let am = t.argmax_last();
+        assert_eq!(am.shape(), &[2]);
+        assert_eq!(am.data(), &[1, 0]);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Tensor::new(&[2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::new(&[2], vec![1.0001, 2.0001]).unwrap();
+        assert!(a.allclose(&b, 1e-3, 1e-3));
+        assert!(!a.allclose(&b, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn int_tensor_roundtrip() {
+        let mut t = IntTensor::zeros(&[2, 2]);
+        t.set(&[1, 0], 7);
+        assert_eq!(t.get(&[1, 0]), 7);
+        assert_eq!(t.to_f32().get(&[1, 0]), 7.0);
+    }
+}

@@ -1,0 +1,111 @@
+//! Property-testing lite (offline stand-in for proptest).
+//!
+//! `property` runs a closure over many PCG-seeded random cases and, on
+//! failure, retries with simpler shrink candidates produced by the
+//! generator at smaller "size" budgets — a coarse but effective shrink.
+
+use crate::util::Pcg64;
+
+/// Generation budget passed to generators; `size` scales dimensions.
+pub struct Gen<'a> {
+    pub rng: &'a mut Pcg64,
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let hi = hi.min(lo + self.size.max(1));
+        lo + self.rng.usize_below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f32(lo, hi)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.rng.range_f32(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.rng.normal_f32()).collect()
+    }
+}
+
+/// Run `cases` random checks of `prop`.  `prop` returns Err(description)
+/// on failure.  Panics with the seed and description so failures are
+/// reproducible by re-running with `KLA_PROP_SEED`.
+pub fn property<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base_seed = std::env::var("KLA_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEEu64);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let size = 2 + case * 16 / cases.max(1); // grow sizes over cases
+        let mut rng = Pcg64::seeded(seed);
+        let mut g = Gen { rng: &mut rng, size: size.max(2) };
+        if let Err(msg) = prop(&mut g) {
+            // shrink: retry same seed at smaller sizes to find minimal repro
+            let mut minimal = (size, msg.clone());
+            for s in (1..size).rev() {
+                let mut rng = Pcg64::seeded(seed);
+                let mut g = Gen { rng: &mut rng, size: s };
+                if let Err(m) = prop(&mut g) {
+                    minimal = (s, m);
+                }
+            }
+            panic!(
+                "property {name:?} failed (seed {seed}, size {}): {}\n\
+                 reproduce with KLA_PROP_SEED={seed}",
+                minimal.0, minimal.1
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs() {
+        property("add_commutes", 50, |g| {
+            let a = g.f32_in(-10.0, 10.0);
+            let b = g.f32_in(-10.0, 10.0);
+            prop_assert!((a + b - (b + a)).abs() < 1e-9, "{a} {b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always_fails\" failed")]
+    fn failing_property_panics_with_seed() {
+        property("always_fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn sizes_grow() {
+        let mut max_seen = 0usize;
+        property("sizes", 20, |g| {
+            let n = g.usize_in(1, 1000);
+            if n > max_seen {
+                max_seen = n;
+            }
+            Ok(())
+        });
+        assert!(max_seen > 2, "sizes never grew: {max_seen}");
+    }
+}

@@ -1,0 +1,149 @@
+//! Binary checkpoint format for model parameters.
+//!
+//! Layout (little-endian):
+//!   magic "KLACKPT1" | u32 count |
+//!   per array: u32 dtype (0=f32, 1=i32) | u32 ndim | u64 dims... |
+//!              raw data bytes
+//! Array order is the artifact param order (the flatten ABI), so a
+//! checkpoint is valid exactly for artifacts sharing the base config.
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::Value;
+use crate::tensor::{IntTensor, Tensor};
+
+const MAGIC: &[u8; 8] = b"KLACKPT1";
+
+pub fn path_for(dir: &str, base: &str) -> PathBuf {
+    Path::new(dir).join(format!("{base}.ckpt"))
+}
+
+pub fn save(dir: &str, base: &str, params: &[Value]) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = path_for(dir, base);
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(params.len() as u32).to_le_bytes())?;
+    for v in params {
+        match v {
+            Value::F32(t) => {
+                f.write_all(&0u32.to_le_bytes())?;
+                write_shape(&mut f, t.shape())?;
+                for x in t.data() {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            Value::I32(t) => {
+                f.write_all(&1u32.to_le_bytes())?;
+                write_shape(&mut f, t.shape())?;
+                for x in t.data() {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    f.flush()?;
+    crate::log_info!("checkpoint saved to {}", path.display());
+    Ok(path)
+}
+
+pub fn load(path: &Path) -> Result<Vec<Value>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: not a KLA checkpoint", path.display());
+    }
+    let count = read_u32(&mut f)? as usize;
+    if count > 100_000 {
+        bail!("implausible array count {count}");
+    }
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let dtype = read_u32(&mut f)?;
+        let ndim = read_u32(&mut f)? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            let mut b = [0u8; 8];
+            f.read_exact(&mut b)?;
+            dims.push(u64::from_le_bytes(b) as usize);
+        }
+        let n: usize = dims.iter().product();
+        match dtype {
+            0 => {
+                let mut data = vec![0f32; n];
+                let mut buf = vec![0u8; n * 4];
+                f.read_exact(&mut buf)?;
+                for (i, c) in buf.chunks_exact(4).enumerate() {
+                    data[i] = f32::from_le_bytes(c.try_into().unwrap());
+                }
+                out.push(Value::F32(Tensor::new(&dims, data)?));
+            }
+            1 => {
+                let mut data = vec![0i32; n];
+                let mut buf = vec![0u8; n * 4];
+                f.read_exact(&mut buf)?;
+                for (i, c) in buf.chunks_exact(4).enumerate() {
+                    data[i] = i32::from_le_bytes(c.try_into().unwrap());
+                }
+                out.push(Value::I32(IntTensor::new(&dims, data)?));
+            }
+            d => bail!("unknown dtype tag {d}"),
+        }
+    }
+    Ok(out)
+}
+
+fn write_shape<W: Write>(f: &mut W, shape: &[usize]) -> Result<()> {
+    f.write_all(&(shape.len() as u32).to_le_bytes())?;
+    for &d in shape {
+        f.write_all(&(d as u64).to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_u32<R: Read>(f: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("kla_ckpt_test");
+        let dir = dir.to_str().unwrap();
+        let params = vec![
+            Value::F32(Tensor::new(&[2, 3],
+                                   vec![1.0, -2.5, 3.0, 0.0, 9.9, -0.1])
+                .unwrap()),
+            Value::I32(IntTensor::new(&[4], vec![1, -2, 3, 4]).unwrap()),
+            Value::F32(Tensor::scalar(42.0)),
+        ];
+        let path = save(dir, "unit_test", &params).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.len(), 3);
+        assert_eq!(loaded[0].as_f32().unwrap(), params[0].as_f32().unwrap());
+        assert_eq!(loaded[1].as_i32().unwrap().data(), &[1, -2, 3, 4]);
+        assert_eq!(loaded[2].as_f32().unwrap().item().unwrap(), 42.0);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("kla_ckpt_garbage");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,72 @@
+//! Scalar metric logging to JSONL under runs/metrics/.
+
+use anyhow::Result;
+
+use crate::util::Json;
+
+/// Accumulates (metric, step, value) rows; `flush` writes one JSONL file.
+pub struct MetricLog {
+    run: String,
+    rows: Vec<(String, f64, f64)>,
+}
+
+impl MetricLog {
+    pub fn new(run: &str) -> Self {
+        MetricLog { run: run.to_string(), rows: Vec::new() }
+    }
+
+    pub fn scalar(&mut self, name: &str, step: f64, value: f64) {
+        self.rows.push((name.to_string(), step, value));
+    }
+
+    pub fn rows(&self) -> &[(String, f64, f64)] {
+        &self.rows
+    }
+
+    pub fn last(&self, name: &str) -> Option<f64> {
+        self.rows
+            .iter()
+            .rev()
+            .find(|(n, _, _)| n == name)
+            .map(|&(_, _, v)| v)
+    }
+
+    pub fn flush(&self) -> Result<()> {
+        if self.rows.is_empty() {
+            return Ok(());
+        }
+        let dir = std::path::Path::new("runs/metrics");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.jsonl", self.run));
+        let mut out = String::new();
+        for (name, step, value) in &self.rows {
+            out.push_str(
+                &Json::obj(vec![
+                    ("metric", Json::str(name)),
+                    ("step", Json::num(*step)),
+                    ("value", Json::num(*value)),
+                ])
+                .to_string(),
+            );
+            out.push('\n');
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn last_returns_latest() {
+        let mut log = MetricLog::new("t");
+        log.scalar("loss", 0.0, 5.0);
+        log.scalar("loss", 1.0, 3.0);
+        log.scalar("acc", 1.0, 0.5);
+        assert_eq!(log.last("loss"), Some(3.0));
+        assert_eq!(log.last("acc"), Some(0.5));
+        assert_eq!(log.last("nope"), None);
+    }
+}

@@ -1,0 +1,125 @@
+//! Training orchestrator: drives `{base}_train` artifacts over task
+//! generators, with periodic evaluation, metric logging, and checkpoints.
+
+pub mod checkpoint;
+pub mod metrics;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::TrainConfig;
+use crate::data::TaskGen;
+use crate::runtime::{EvalResult, Runtime, TrainSession};
+use crate::util::{Pcg64, Stats, Timer};
+pub use metrics::MetricLog;
+
+/// Outcome of a full training run.
+#[derive(Clone, Debug)]
+pub struct TrainOutcome {
+    pub base: String,
+    pub task: String,
+    pub steps: usize,
+    pub final_loss: f32,
+    pub eval: EvalResult,
+    pub step_ms: Vec<f64>,
+    pub losses: Vec<(usize, f32)>,
+    pub evals: Vec<(usize, f64)>, // (step, accuracy)
+}
+
+impl TrainOutcome {
+    pub fn accuracy(&self) -> f64 {
+        self.eval.accuracy()
+    }
+
+    pub fn mean_step_ms(&self) -> f64 {
+        let mut s = Stats::new();
+        for &x in &self.step_ms {
+            s.push(x);
+        }
+        s.mean()
+    }
+}
+
+/// Train `base` on `task` for `cfg.steps` steps; eval on held-out batches
+/// from an independent RNG stream.
+pub fn run(rt: &Runtime, cfg: &TrainConfig, task: &dyn TaskGen)
+           -> Result<TrainOutcome> {
+    let mut session = TrainSession::new(rt, &cfg.artifact)?;
+    let (b, t) = session.batch_shape();
+    let mut train_rng = Pcg64::seeded(cfg.seed.wrapping_mul(2) + 1);
+    let mut eval_rng_proto = Pcg64::seeded(0xE7A1_0000 ^ cfg.seed);
+
+    let mut log = MetricLog::new(&format!("{}_{}", cfg.artifact, task.name()));
+    let mut step_ms = Vec::with_capacity(cfg.steps);
+    let mut losses = Vec::new();
+    let mut evals = Vec::new();
+    let mut final_loss = f32::NAN;
+
+    for step in 0..cfg.steps {
+        let batch = task.batch(&mut train_rng, b, t);
+        let timer = Timer::start();
+        let loss = session.train_step(&batch)?;
+        step_ms.push(timer.elapsed_ms());
+        final_loss = loss;
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            crate::log_info!("{} step {step}/{} loss {loss:.4}",
+                             cfg.artifact, cfg.steps);
+            log.scalar("loss", step as f64, loss as f64);
+            losses.push((step, loss));
+        }
+        let is_eval_step = cfg.eval_every > 0
+            && (step + 1) % cfg.eval_every == 0;
+        if is_eval_step {
+            let acc = evaluate(&session, task, &mut eval_rng_proto.split(
+                step as u64), cfg.eval_batches)?;
+            log.scalar("accuracy", step as f64, acc.accuracy());
+            evals.push((step, acc.accuracy()));
+            crate::log_info!("{} step {step} eval acc {:.4} loss {:.4}",
+                             cfg.artifact, acc.accuracy(), acc.mean_loss());
+            if let Some(target) = cfg.target_accuracy {
+                if acc.accuracy() >= target {
+                    crate::log_info!("{} hit target accuracy {target} at \
+                                      step {step}", cfg.artifact);
+                    break;
+                }
+            }
+        }
+    }
+
+    // final eval on a fixed stream
+    let eval = evaluate(&session, task, &mut Pcg64::seeded(0xE7A1),
+                        cfg.eval_batches.max(4))?;
+    if let Some(dir) = &cfg.checkpoint_dir {
+        checkpoint::save(dir, &cfg.artifact, session.params())?;
+    }
+    log.flush()?;
+    Ok(TrainOutcome {
+        base: cfg.artifact.clone(),
+        task: task.name().to_string(),
+        steps: session.step_count(),
+        final_loss,
+        eval,
+        step_ms,
+        losses,
+        evals,
+    })
+}
+
+fn evaluate(session: &TrainSession, task: &dyn TaskGen, rng: &mut Pcg64,
+            batches: usize) -> Result<EvalResult> {
+    let (b, t) = session.batch_shape();
+    let mut total = EvalResult::default();
+    for _ in 0..batches.max(1) {
+        let batch = task.batch(rng, b, t);
+        total.merge(session.eval_batch(&batch)?);
+    }
+    if total.count == 0.0 {
+        return Err(anyhow!("evaluation saw no supervised positions"));
+    }
+    Ok(total)
+}
+
+/// Public eval entry used by benches after external training.
+pub fn evaluate_session(session: &TrainSession, task: &dyn TaskGen,
+                        seed: u64, batches: usize) -> Result<EvalResult> {
+    evaluate(session, task, &mut Pcg64::seeded(seed), batches)
+}

@@ -1,0 +1,15 @@
+//! Offline substrate utilities: RNG, JSON, logging, timers, thread pool.
+//!
+//! The build environment has no network access to crates.io, so the usual
+//! ecosystem crates (rand / serde_json / env_logger / rayon) are replaced
+//! by these minimal, tested in-repo equivalents (DESIGN.md §S16).
+
+pub mod json;
+pub mod logging;
+pub mod pool;
+pub mod rng;
+pub mod timer;
+
+pub use json::Json;
+pub use rng::Pcg64;
+pub use timer::{Stats, Timer};

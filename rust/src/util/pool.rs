@@ -1,0 +1,100 @@
+//! Scoped data-parallel helpers over std threads (rayon stand-in).
+//!
+//! `parallel_chunks` is the workhorse of the native chunked KLA scan
+//! (DESIGN.md §S8): split an index range into contiguous chunks and run a
+//! closure per chunk on its own thread.
+
+/// Number of worker threads to use by default.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Run `f(chunk_index, start, end)` for `n_chunks` contiguous chunks of
+/// `0..len`, each on its own scoped thread.  `f` only gets disjoint ranges,
+/// so callers can hand out `&mut` slices via `split_at_mut` beforehand.
+pub fn parallel_ranges<F>(len: usize, n_chunks: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    let n_chunks = n_chunks.clamp(1, len.max(1));
+    let chunk = len.div_ceil(n_chunks);
+    std::thread::scope(|scope| {
+        for c in 0..n_chunks {
+            let start = c * chunk;
+            let end = ((c + 1) * chunk).min(len);
+            if start >= end {
+                break;
+            }
+            let f = &f;
+            scope.spawn(move || f(c, start, end));
+        }
+    });
+}
+
+/// Map a closure over mutable, disjoint chunks of a slice in parallel.
+/// The slice is split into `n_chunks` contiguous pieces.
+pub fn parallel_map_chunks<T, F>(data: &mut [T], n_chunks: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let len = data.len();
+    if len == 0 {
+        return;
+    }
+    let n_chunks = n_chunks.clamp(1, len);
+    let chunk = len.div_ceil(n_chunks);
+    std::thread::scope(|scope| {
+        let mut rest = data;
+        let mut idx = 0;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let f = &f;
+            let i = idx;
+            scope.spawn(move || f(i, head));
+            idx += 1;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn ranges_cover_everything_once() {
+        let len = 103;
+        let hits: Vec<AtomicUsize> =
+            (0..len).map(|_| AtomicUsize::new(0)).collect();
+        parallel_ranges(len, 7, |_, s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn map_chunks_mutates_disjoint() {
+        let mut xs = vec![0usize; 50];
+        parallel_map_chunks(&mut xs, 4, |idx, chunk| {
+            for x in chunk.iter_mut() {
+                *x = idx + 1;
+            }
+        });
+        assert!(xs.iter().all(|&x| x > 0));
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        let mut empty: Vec<u8> = vec![];
+        parallel_map_chunks(&mut empty, 4, |_, _| {});
+        parallel_ranges(0, 4, |_, _, _| panic!("should not run"));
+        parallel_ranges(3, 100, |_, s, e| assert!(e - s >= 1));
+    }
+}

@@ -1,0 +1,133 @@
+//! Cross-validation between the three stacks:
+//!   1. Python oracle (ref.py) vs native Rust filter — via PINNED vectors
+//!      generated from `kla_filter_ref_python` (seed 1234, T=6, N=2, D=3).
+//!   2. XLA decode artifact vs XLA logits artifact — the O(1) recurrent
+//!      serving path must reproduce the scan-parallel forward token by
+//!      token (requires `make artifacts`).
+
+use kla::kla::{filter_chunked, filter_sequential, FilterInputs, FilterParams};
+
+// ---- pinned vectors from python/compile/kernels/ref.py (seed 1234) ----
+const T: usize = 6;
+const N: usize = 2;
+const D: usize = 3;
+const K: &[f32] = &[-1.6038368, 0.0640999, 0.7408913, 0.1526192, 0.8637439,
+    2.9130993, -1.4788233, 0.945473, -1.6661354, 0.3437446, -0.5124437,
+    1.323759];
+const Q: &[f32] = &[-0.8602802, 0.5194932, -1.2651438, -2.159139, 0.434734,
+    1.7332894, 0.5201342, -1.0021658, 0.2683455, 0.7671747, 1.191272,
+    -1.1574109];
+const V: &[f32] = &[0.6962794, 0.3513837, -0.0324151, 0.0131816, -0.6792499,
+    -0.620532, 1.3312142, 0.2588385, -0.4814839, -2.4917896, -0.8765638,
+    -0.5055091, -1.2831292, -1.3303285, 0.8259926, -0.247215, -1.6997061,
+    -1.3351529];
+const LV: &[f32] = &[1.2942277, 0.7835357, 0.681661, 0.8274702, 0.319836,
+    0.494688, 0.8975361, 1.1532011, 0.783584, 0.597151, 1.4315674, 1.176344,
+    0.813663, 0.7944586, 1.1702391, 1.3120198, 0.581552, 1.1533089];
+const ABAR: &[f32] = &[0.9213246, 0.933063, 0.803725, 0.8768824, 0.8919178,
+    0.8420523];
+const PBAR: &[f32] = &[0.0506919, 0.0578099, 0.0989771, 0.010538, 0.0281159,
+    0.0331188];
+const LAM_LAST: &[f32] = &[6.34579, 5.9023447, 5.9541326, 16.84819,
+    10.597687, 11.463077];
+const ETA_LAST: &[f32] = &[2.8117998, 2.6479254, 0.0803553, 1.283024,
+    -1.9359281, -2.7757084];
+const Y: &[f32] = &[0.3032758, 0.1303652, -0.0103928, 0.2535107, 0.2450583,
+    0.1289559, 0.6313913, 0.1017377, -0.2731695, 0.0108777, 0.1735255,
+    0.1939832, 0.231371, 0.0507699, -0.1130171, 0.4397097, 0.7458611,
+    0.2963365];
+
+fn pinned_case() -> (FilterParams, FilterInputs) {
+    (
+        FilterParams {
+            n: N,
+            d: D,
+            abar: ABAR.to_vec(),
+            pbar: PBAR.to_vec(),
+            lam0: vec![1.0; N * D],
+            eta0: vec![0.0; N * D],
+        },
+        FilterInputs {
+            t: T,
+            k: K.to_vec(),
+            q: Q.to_vec(),
+            v: V.to_vec(),
+            lam_v: LV.to_vec(),
+        },
+    )
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what} length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + y.abs()),
+            "{what}[{i}]: rust {x} vs python {y}"
+        );
+    }
+}
+
+#[test]
+fn native_sequential_matches_python_oracle() {
+    let (p, inp) = pinned_case();
+    let out = filter_sequential(&p, &inp);
+    assert_close(&out.lam[(T - 1) * N * D..], LAM_LAST, 1e-5, "lam[T-1]");
+    assert_close(&out.eta[(T - 1) * N * D..], ETA_LAST, 1e-5, "eta[T-1]");
+    assert_close(&out.y, Y, 1e-5, "y");
+}
+
+#[test]
+fn native_chunked_matches_python_oracle() {
+    let (p, inp) = pinned_case();
+    for threads in [1, 2, 3, 6] {
+        let out = filter_chunked(&p, &inp, threads);
+        assert_close(&out.y, Y, 1e-4, "y (chunked)");
+        assert_close(&out.lam[(T - 1) * N * D..], LAM_LAST, 1e-4, "lam");
+    }
+}
+
+// --------------------------------------------------------- XLA vs XLA ----
+
+#[test]
+fn decode_step_reproduces_parallel_forward() {
+    let Ok(rt) = kla::runtime::Runtime::discover() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    // fig4_kla_decode_b1 shares the mad model config; compare against
+    // mad_kla_logits with the same (init) parameters.
+    let init = rt.load("fig4_kla_decode_b1_init").unwrap();
+    let params = init.run(&[]).unwrap();
+    let decode = kla::runtime::DecodeSession::new(
+        &rt, "fig4_kla_decode_b1", params.clone()).unwrap();
+
+    // parallel forward at B=32 (mad artifact): put our sequence in row 0
+    let mad = rt.load("mad_kla_logits").unwrap();
+    let (b, t) = (mad.meta.batch, mad.meta.seq);
+    let mut toks = kla::tensor::IntTensor::zeros(&[b, t]);
+    let mut rng = kla::util::Pcg64::seeded(5);
+    let seq: Vec<i32> = (0..t).map(|_| rng.below(60) as i32).collect();
+    for (i, &x) in seq.iter().enumerate() {
+        toks.set(&[0, i], x);
+    }
+    let mut args: Vec<kla::runtime::Value> = params.clone();
+    args.push(kla::runtime::Value::I32(toks));
+    let full = mad.run(&args).unwrap();
+    let logits = full[0].as_f32().unwrap();
+
+    // recurrent decode, token by token (first 16 steps suffice)
+    let mut state = decode.init_state().unwrap();
+    for (ti, &tok) in seq.iter().take(16).enumerate() {
+        let t_in = kla::tensor::IntTensor::new(&[1], vec![tok]).unwrap();
+        let (step_logits, next) = decode.step(&t_in, &state).unwrap();
+        state = next;
+        for vi in 0..mad.meta.model.vocab {
+            let a = step_logits.get(&[0, vi]);
+            let b_ = logits.get(&[0, ti, vi]);
+            assert!(
+                (a - b_).abs() < 2e-3 * (1.0 + b_.abs()),
+                "t={ti} v={vi}: decode {a} vs parallel {b_}"
+            );
+        }
+    }
+}

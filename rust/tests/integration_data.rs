@@ -1,0 +1,128 @@
+//! Cross-cutting data-pipeline tests: batch invariants across all
+//! generators, corpus -> tokenizer -> LM window pipeline, zero-shot suite
+//! construction, and vocabulary bounds against artifact metas.
+
+use kla::data::corpus::{Corpus, CorpusLm};
+use kla::data::tokenizer::Tokenizer;
+use kla::data::{task_by_name, TaskGen, MAD_TASKS};
+use kla::eval::ZeroShotSuite;
+use kla::util::Pcg64;
+
+#[test]
+fn batches_are_deterministic_per_seed() {
+    for name in MAD_TASKS.iter().chain(["mqar", "a5"].iter()) {
+        let task = task_by_name(name).unwrap();
+        let a = task.batch(&mut Pcg64::seeded(42), 4, 64);
+        let b = task.batch(&mut Pcg64::seeded(42), 4, 64);
+        assert_eq!(a.tokens.data(), b.tokens.data(), "{name}");
+        assert_eq!(a.targets.data(), b.targets.data(), "{name}");
+        let c = task.batch(&mut Pcg64::seeded(43), 4, 64);
+        assert_ne!(a.tokens.data(), c.tokens.data(), "{name} ignores seed");
+    }
+}
+
+#[test]
+fn supervised_targets_within_vocab_64() {
+    // all MAD/MQAR/A5 artifacts share vocab 64
+    for name in MAD_TASKS.iter().chain(["mqar", "a5"].iter()) {
+        let task = task_by_name(name).unwrap();
+        let mut rng = Pcg64::seeded(0);
+        for _ in 0..5 {
+            let b = task.batch(&mut rng, 8, 128);
+            for (i, &m) in b.mask.data().iter().enumerate() {
+                let tok = b.tokens.data()[i];
+                assert!((0..64).contains(&tok), "{name}: token {tok}");
+                if m > 0.0 {
+                    let tgt = b.targets.data()[i];
+                    assert!((0..64).contains(&tgt), "{name}: target {tgt}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn mask_density_reasonable() {
+    // every task must supervise something but not everything (except
+    // a5/corpus which supervise all positions)
+    for name in MAD_TASKS {
+        let task = task_by_name(name).unwrap();
+        let mut rng = Pcg64::seeded(1);
+        let b = task.batch(&mut rng, 8, 128);
+        let density = b.mask_density();
+        assert!(density > 0.02, "{name}: mask too sparse ({density})");
+        assert!(density < 0.95, "{name}: mask suspiciously dense");
+    }
+    let a5 = task_by_name("a5").unwrap();
+    let b = a5.batch(&mut Pcg64::seeded(1), 4, 24);
+    assert_eq!(b.mask_density(), 1.0);
+}
+
+#[test]
+fn corpus_to_lm_pipeline() {
+    let (lm, tok, corpus) = CorpusLm::build(3, 60_000, 512).unwrap();
+    assert!(tok.vocab_size() <= 512);
+    assert!(lm.tokens() > 5_000);
+    // windows decode back to corpus-like text
+    let mut rng = Pcg64::seeded(0);
+    let s = lm.sample(&mut rng, 64);
+    let ids: Vec<u32> = s.tokens.iter().map(|&x| x as u32).collect();
+    let text = tok.decode(&ids);
+    assert!(text.len() > 32);
+    // train facts should be taught somewhere in the stream
+    let full = corpus.generate(60_000);
+    let taught = corpus
+        .train_facts
+        .iter()
+        .filter(|f| full.contains(&f.sentence()))
+        .count();
+    assert!(taught > corpus.train_facts.len() / 2);
+}
+
+#[test]
+fn tokenizer_handles_corpus_vocabulary() {
+    let corpus = Corpus::new(5);
+    let text = corpus.generate(50_000);
+    let tok = Tokenizer::train(&text, 512).unwrap();
+    // every fact sentence (train AND held-out) round-trips
+    for f in corpus.train_facts.iter().chain(&corpus.heldout_facts) {
+        let s = f.sentence();
+        assert_eq!(tok.decode(&tok.encode(&s)), s);
+    }
+}
+
+#[test]
+fn zeroshot_suite_answers_well_formed() {
+    let corpus = Corpus::new(7);
+    let suite = ZeroShotSuite::build(&corpus, 7, 6);
+    assert!(suite.items.len() >= 30, "only {} items", suite.items.len());
+    // answer positions roughly uniform (shuffling works)
+    let mut pos_counts = [0usize; 4];
+    for item in &suite.items {
+        pos_counts[item.answer] += 1;
+    }
+    assert!(pos_counts[0] < suite.items.len(),
+            "answers never shuffled: {pos_counts:?}");
+    // contexts reference corpus entities
+    let hit = suite
+        .items
+        .iter()
+        .filter(|i| i.context.contains("the capital of")
+            || i.context.contains("exports")
+            || i.context.contains("river"))
+        .count();
+    assert!(hit > suite.items.len() / 3);
+}
+
+#[test]
+fn batch_shapes_match_artifact_metas() {
+    // if artifacts exist, the generator vocab assumptions must match them
+    let Ok(rt) = kla::runtime::Runtime::discover() else { return };
+    for (name, expect_vocab) in [("mad_kla_train", 64),
+                                 ("mqar_kla_d64_train", 64),
+                                 ("a5_kla_l1_train", 64),
+                                 ("lm_kla_train", 512)] {
+        let meta = rt.meta(name).unwrap();
+        assert_eq!(meta.model.vocab, expect_vocab, "{name}");
+    }
+}

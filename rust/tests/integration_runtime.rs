@@ -1,0 +1,136 @@
+//! Runtime integration: artifact loading, init determinism, train-step
+//! parameter updates, eval counters, logits/variance roles.
+//!
+//! Heavy checks share ONE TrainSession (XLA compilation dominates test
+//! time), so they live in a single #[test].  Requires `make artifacts`
+//! (skips gracefully if absent).
+
+use kla::data::{task_by_name, Batch};
+use kla::runtime::{Runtime, TrainSession, Value};
+use kla::tensor::{IntTensor, Tensor};
+use kla::util::Pcg64;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::discover() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+fn fixed_batch(b: usize, t: usize, seed: u64) -> Batch {
+    let task = task_by_name("memorization").unwrap();
+    let mut rng = Pcg64::seeded(seed);
+    task.batch(&mut rng, b, t)
+}
+
+#[test]
+fn runtime_end_to_end() {
+    let Some(rt) = runtime() else { return };
+
+    // ---- init determinism + params non-trivial ----
+    let init = rt.load("mad_kla_init").unwrap();
+    let a = init.run(&[]).unwrap();
+    let b2 = init.run(&[]).unwrap();
+    for (x, y) in a.iter().zip(&b2) {
+        assert_eq!(x.as_f32().unwrap().data(), y.as_f32().unwrap().data());
+    }
+    let total: f32 = a
+        .iter()
+        .map(|v| {
+            v.as_f32().unwrap().data().iter().map(|x| x.abs()).sum::<f32>()
+        })
+        .sum();
+    assert!(total > 1.0, "init params look empty: {total}");
+    // regression guard for the constant-elision bug: a_raw (param 0) must
+    // not be a bit-pattern iota
+    let p0 = a[0].as_f32().unwrap().data();
+    assert!(p0.iter().any(|x| x.abs() > 1e-3),
+            "param 0 is denormal garbage (HLO constant elision?)");
+
+    // ---- one session reused for everything below ----
+    let mut session = TrainSession::new(&rt, "mad_kla").unwrap();
+    let (b, t) = session.batch_shape();
+    let meta = session.meta().clone();
+
+    // eval mask-count echo (proves i32/f32 tensors cross unscrambled)
+    let mut mask = Tensor::zeros(&[b, t]);
+    for i in 0..13 {
+        mask.set(&[i % b, (i * 7) % t], 1.0);
+    }
+    let echo = Batch {
+        tokens: IntTensor::zeros(&[b, t]),
+        targets: IntTensor::zeros(&[b, t]),
+        mask,
+    };
+    let r = session.eval_batch(&echo).unwrap();
+    assert_eq!(r.count, 13.0);
+
+    // eval on a real batch
+    let batch = fixed_batch(b, t, 9);
+    let r = session.eval_batch(&batch).unwrap();
+    assert_eq!(r.count as f32, batch.mask.data().iter().sum::<f32>());
+    assert!(r.correct >= 0.0 && r.correct <= r.count);
+    assert!(r.mean_loss() > 0.0);
+
+    // ---- train: params change and fixed-batch loss collapses ----
+    let batch = fixed_batch(b, t, 7);
+    let before: Vec<f32> =
+        session.params()[0].as_f32().unwrap().data().to_vec();
+    let loss0 = session.train_step(&batch).unwrap();
+    let after: Vec<f32> =
+        session.params()[0].as_f32().unwrap().data().to_vec();
+    assert_ne!(before, after, "params unchanged after a train step");
+    let mut loss = loss0;
+    for _ in 0..12 {
+        loss = session.train_step(&batch).unwrap();
+    }
+    assert!(loss < loss0 * 0.5,
+            "no learning on a fixed batch: {loss0} -> {loss}");
+
+    // ---- logits role ----
+    let tokens = IntTensor::zeros(&[b, t]);
+    let out = session.run_role(&rt, "logits", &[Value::I32(tokens)]).unwrap();
+    let logits = out[0].as_f32().unwrap();
+    assert_eq!(logits.shape(), &[b, t, meta.model.vocab]);
+    assert!(logits.data().iter().all(|x| x.is_finite()));
+    // logits must differ across vocab (uniform output = dead model)
+    let spread = (0..meta.model.vocab)
+        .map(|v| logits.get(&[0, 5, v]))
+        .fold((f32::MAX, f32::MIN), |(lo, hi), x| (lo.min(x), hi.max(x)));
+    assert!(spread.1 - spread.0 > 1e-4, "uniform logits: {spread:?}");
+
+    // ---- variance role ----
+    let out = session
+        .run_role(&rt, "variance",
+                  &[Value::I32(IntTensor::zeros(&[b, t]))])
+        .unwrap();
+    let var = out[0].as_f32().unwrap();
+    assert_eq!(var.shape(), &[b, t]);
+    assert!(var.data().iter().all(|&x| x > 0.0));
+}
+
+#[test]
+fn missing_artifact_error_is_actionable() {
+    let Some(rt) = runtime() else { return };
+    let err = match rt.load("nonexistent_artifact") {
+        Ok(_) => panic!("load of missing artifact succeeded"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("make artifacts") || err.contains("reading"),
+            "unhelpful error: {err}");
+}
+
+#[test]
+fn manifest_names_resolve_to_meta() {
+    let Some(rt) = runtime() else { return };
+    let names = rt.names().unwrap();
+    assert!(names.len() >= 70, "only {} artifacts", names.len());
+    for name in names.iter().take(10) {
+        let meta = rt.meta(name).unwrap();
+        assert_eq!(&meta.name, name);
+        assert!(meta.batch > 0 && meta.seq > 0);
+    }
+}

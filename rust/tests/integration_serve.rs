@@ -1,0 +1,99 @@
+//! Serving integration: real TCP server over the decode artifact —
+//! request/response protocol, continuous batching under concurrent load,
+//! determinism of greedy decoding, and error handling.
+
+use kla::config::ServeConfig;
+use kla::runtime::Runtime;
+use kla::serve::{serve, Client};
+
+fn setup() -> Option<(std::path::PathBuf, Vec<kla::runtime::Value>)> {
+    let rt = match Runtime::discover() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e}");
+            return None;
+        }
+    };
+    let init = rt.load("lm_kla_init").unwrap();
+    let params = init.run(&[]).unwrap();
+    Some((rt.dir().to_path_buf(), params))
+}
+
+#[test]
+fn serve_end_to_end() {
+    let Some((dir, params)) = setup() else { return };
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(), // ephemeral port
+        artifact: "serve_kla_b8".into(),
+        max_batch: 8,
+        batch_window_us: 200,
+        max_new_tokens: 4,
+        state_pool: 8,
+    };
+    let handle = serve(dir, "serve_kla_b8".into(), params, &cfg).unwrap();
+    let addr = handle.addr.clone();
+
+    // ping
+    let mut c = Client::connect(&addr).unwrap();
+    assert!(c.ping().unwrap().req("ok").unwrap().as_bool().unwrap());
+
+    // single request
+    let r = c.request(&[5, 6, 7], 4).unwrap();
+    let toks = r.req("tokens").unwrap().as_arr().unwrap();
+    assert_eq!(toks.len(), 4);
+    assert!(r.req("total_ms").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(r.req("uncertainty").unwrap().as_f64().unwrap() > 0.0);
+
+    // greedy decoding is deterministic: same prompt -> same tokens
+    let r2 = c.request(&[5, 6, 7], 4).unwrap();
+    assert_eq!(r.req("tokens").unwrap(), r2.req("tokens").unwrap());
+
+    // concurrent load: more requests than slots, varied prompt lengths
+    let mut joins = Vec::new();
+    for i in 0..12u64 {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            let prompt: Vec<i32> =
+                (0..(1 + i % 5)).map(|j| (i + j) as i32 % 64).collect();
+            let r = c.request(&prompt, 3).unwrap();
+            assert_eq!(r.req("tokens").unwrap().as_arr().unwrap().len(), 3);
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    // malformed request gets an error, connection stays usable
+    let bad = {
+        let mut c2 = Client::connect(&addr).unwrap();
+        // raw invalid json via the ping path is awkward; send a request
+        // missing the prompt field instead
+        let reply = {
+            use std::io::{BufRead, Write};
+            let stream = std::net::TcpStream::connect(&addr).unwrap();
+            let mut w = stream.try_clone().unwrap();
+            w.write_all(b"{\"max_new_tokens\": 2}\n").unwrap();
+            w.flush().unwrap();
+            let mut r = std::io::BufReader::new(stream);
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            line
+        };
+        let _ = c2;
+        reply
+    };
+    assert!(bad.contains("error"), "no error for bad request: {bad}");
+
+    let stats = handle.stop().unwrap();
+    assert!(stats.requests >= 14, "requests seen: {}", stats.requests);
+    assert!(stats.tokens_out >= 14 * 3);
+    assert!(stats.tokens_per_sec() > 0.0);
+    // continuous batching actually batched something
+    let max_occ = stats
+        .batch_occupancy
+        .iter()
+        .fold(0.0f64, |a, &b| a.max(b));
+    assert!(max_occ > 1.0 / 8.0 + 1e-9,
+            "never batched more than one request (max occupancy {max_occ})");
+}

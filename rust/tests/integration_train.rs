@@ -1,0 +1,87 @@
+//! Trainer integration: full `train::run` loop with eval + checkpoints +
+//! metrics, checkpoint save/load roundtrip into a new session, and
+//! target-accuracy early stopping.
+
+use kla::config::TrainConfig;
+use kla::data::task_by_name;
+use kla::runtime::{Runtime, TrainSession};
+use kla::train::{checkpoint, run};
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::discover() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn trainer_loop_and_checkpoint_roundtrip() {
+    let Some(rt) = runtime() else { return };
+    let dir = std::env::temp_dir().join("kla_it_ckpt");
+    let dir_s = dir.to_str().unwrap().to_string();
+    let cfg = TrainConfig {
+        artifact: "mad_kla".into(),
+        steps: 40,
+        seed: 1,
+        eval_every: 20,
+        eval_batches: 2,
+        log_every: 20,
+        checkpoint_dir: Some(dir_s.clone()),
+        target_accuracy: None,
+    };
+    let task = task_by_name("memorization").unwrap();
+    let outcome = run(&rt, &cfg, task.as_ref()).unwrap();
+    assert_eq!(outcome.steps, 40);
+    assert!(outcome.final_loss.is_finite());
+    assert!(!outcome.evals.is_empty(), "no eval points recorded");
+    assert!(!outcome.losses.is_empty());
+    // loss must have moved substantially from ln(64)
+    assert!(outcome.final_loss < 3.5,
+            "memorization barely trained: {}", outcome.final_loss);
+
+    // checkpoint exists and round-trips into a fresh session
+    let path = checkpoint::path_for(&dir_s, "mad_kla");
+    assert!(path.exists());
+    let params = checkpoint::load(&path).unwrap();
+    let mut session = TrainSession::new(&rt, "mad_kla").unwrap();
+    let fresh_eval = {
+        let mut rng = kla::util::Pcg64::seeded(99);
+        let (b, t) = session.batch_shape();
+        session.eval_batch(&task.batch(&mut rng, b, t)).unwrap()
+    };
+    session.set_params(params).unwrap();
+    let loaded_eval = {
+        let mut rng = kla::util::Pcg64::seeded(99);
+        let (b, t) = session.batch_shape();
+        session.eval_batch(&task.batch(&mut rng, b, t)).unwrap()
+    };
+    assert!(
+        loaded_eval.mean_loss() < fresh_eval.mean_loss(),
+        "checkpoint params no better than fresh init: {} vs {}",
+        loaded_eval.mean_loss(), fresh_eval.mean_loss()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn target_accuracy_stops_early() {
+    let Some(rt) = runtime() else { return };
+    let cfg = TrainConfig {
+        artifact: "mad_kla".into(),
+        steps: 400,
+        seed: 2,
+        eval_every: 10,
+        eval_batches: 1,
+        log_every: 100,
+        checkpoint_dir: None,
+        // memorization reaches ~50%+ quickly; generous target to trigger
+        target_accuracy: Some(0.10),
+    };
+    let task = task_by_name("memorization").unwrap();
+    let outcome = run(&rt, &cfg, task.as_ref()).unwrap();
+    assert!(outcome.steps < 400,
+            "early stop never triggered ({} steps)", outcome.steps);
+}

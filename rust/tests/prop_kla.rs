@@ -1,0 +1,210 @@
+//! Property tests over the native KLA filter and the serving scheduler —
+//! the coordinator invariants (routing, batching, state) plus the filter
+//! algebra at scale.
+
+use kla::baselines::{linear_scan_chunked, linear_scan_sequential};
+use kla::kla::{filter_chunked, filter_sequential, random_inputs,
+               random_params, Mobius};
+use kla::serve::batcher::{Feed, SchedRequest, Scheduler};
+use kla::testing::property;
+
+#[test]
+fn prop_chunked_equals_sequential() {
+    property("chunked==sequential", 40, |g| {
+        let t = g.usize_in(1, 200);
+        let n = g.usize_in(1, 6);
+        let d = g.usize_in(1, 10);
+        let threads = g.usize_in(1, 9);
+        let p = random_params(g.rng, n, d);
+        let inp = random_inputs(g.rng, t, n, d);
+        let seq = filter_sequential(&p, &inp);
+        let par = filter_chunked(&p, &inp, threads);
+        for (i, (a, b)) in seq.y.iter().zip(&par.y).enumerate() {
+            if (a - b).abs() > 1e-3 * (1.0 + a.abs()) {
+                return Err(format!(
+                    "t={t} n={n} d={d} threads={threads} y[{i}]: {a} vs {b}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_precision_bounded_by_noise_floor() {
+    // with pbar > 0, steady-state precision is bounded: the Moebius map has
+    // an attracting fixed point, so lam stays within a computable range.
+    property("lam bounded", 40, |g| {
+        let n = 1;
+        let d = 1;
+        let abar = g.f32_in(0.5, 0.99);
+        let pbar = g.f32_in(0.01, 0.5);
+        let phi_max = 4.0f32;
+        let mut p = random_params(g.rng, n, d);
+        p.abar[0] = abar;
+        p.pbar[0] = pbar;
+        p.lam0[0] = g.f32_in(0.1, 2.0);
+        let t = g.usize_in(10, 400);
+        let mut inp = random_inputs(g.rng, t, n, d);
+        for x in inp.lam_v.iter_mut() {
+            *x = x.clamp(0.05, 1.0);
+        }
+        for x in inp.k.iter_mut() {
+            *x = x.clamp(-2.0, 2.0);
+        }
+        let out = filter_sequential(&p, &inp);
+        // upper bound: lam <= 1/pbar' + phi_max where prior precision can
+        // never exceed 1/pbar (predict step adds pbar variance)
+        let bound = 1.0 / pbar + phi_max + 1.0;
+        for (i, &l) in out.lam.iter().enumerate() {
+            if l <= 0.0 || l > bound {
+                return Err(format!(
+                    "lam[{i}]={l} outside (0, {bound}] (abar={abar}, \
+                     pbar={pbar})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mobius_prefix_equals_stepwise() {
+    property("prefix==stepwise", 60, |g| {
+        let t = g.usize_in(1, 128);
+        let mut maps = Vec::with_capacity(t);
+        for _ in 0..t {
+            maps.push(Mobius::kla_step(
+                g.f32_in(0.6, 0.99),
+                g.f32_in(1e-3, 0.3),
+                g.f32_in(1e-3, 3.0),
+            ));
+        }
+        let lam0 = g.f32_in(0.2, 3.0);
+        // stepwise
+        let mut lam = lam0;
+        for m in &maps {
+            lam = m.apply(lam);
+        }
+        // composed
+        let mut acc = Mobius::IDENTITY;
+        for m in &maps {
+            acc = m.compose(&acc);
+        }
+        let lam2 = acc.apply(lam0);
+        if (lam - lam2).abs() > 2e-3 * (1.0 + lam.abs()) {
+            return Err(format!("t={t}: stepwise {lam} vs composed {lam2}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_linear_scan_threads_agree() {
+    property("linear scan threads", 40, |g| {
+        let t = g.usize_in(1, 300);
+        let s = g.usize_in(1, 32);
+        let threads = g.usize_in(1, 8);
+        let f = g.vec_f32(t * s, 0.2, 0.99);
+        let b = g.vec_normal(t * s);
+        let init = g.vec_normal(s);
+        let seq = linear_scan_sequential(t, s, &f, &b, &init);
+        let par = linear_scan_chunked(t, s, &f, &b, &init, threads);
+        for (i, (x, y)) in seq.iter().zip(&par).enumerate() {
+            if (x - y).abs() > 1e-3 * (1.0 + x.abs()) {
+                return Err(format!("[{i}] {x} vs {y}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------ scheduler invariants ---
+
+#[test]
+fn prop_scheduler_conserves_requests() {
+    // every submitted request finishes exactly once with exactly max_new
+    // tokens, regardless of slot count / prompt length / arrival pattern.
+    property("scheduler conservation", 60, |g| {
+        let n_slots = g.usize_in(1, 6);
+        let n_reqs = g.usize_in(1, 20);
+        let mut sched = Scheduler::new(n_slots, 0);
+        let mut expected = std::collections::HashMap::new();
+        let mut submitted = 0usize;
+        let mut finished = std::collections::HashMap::new();
+        let mut iter = 0usize;
+        loop {
+            // random arrivals
+            while submitted < n_reqs && g.rng.bool(0.5) {
+                let plen = g.usize_in(0, 8);
+                let max_new = g.usize_in(1, 6);
+                let prompt = (0..plen).map(|_| g.rng.below(64) as i32)
+                    .collect::<Vec<_>>();
+                sched.submit(SchedRequest {
+                    id: submitted as u64,
+                    prompt,
+                    max_new,
+                });
+                expected.insert(submitted as u64, max_new.max(1));
+                submitted += 1;
+            }
+            sched.admit();
+            let feeds = sched.feeds();
+            // invariant: active slots never exceed capacity
+            if sched.active_count() > n_slots {
+                return Err("slot overflow".into());
+            }
+            let sampled: Vec<i32> =
+                feeds.iter().map(|_| g.rng.below(64) as i32).collect();
+            for f in sched.advance(&sampled) {
+                if finished.insert(f.id, f.tokens.len()).is_some() {
+                    return Err(format!("request {} finished twice", f.id));
+                }
+                sched.release(f.slot);
+            }
+            iter += 1;
+            if submitted == n_reqs && !sched.has_work() {
+                break;
+            }
+            if iter > 10_000 {
+                return Err("scheduler livelock".into());
+            }
+        }
+        if finished.len() != n_reqs {
+            return Err(format!("{} of {n_reqs} finished", finished.len()));
+        }
+        for (id, want) in &expected {
+            if finished[id] != *want {
+                return Err(format!(
+                    "req {id}: {} tokens, wanted {want}", finished[id]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scheduler_feeds_prompt_in_order() {
+    property("prompt order", 30, |g| {
+        let plen = g.usize_in(1, 10);
+        let prompt: Vec<i32> =
+            (0..plen).map(|i| 100 + i as i32).collect();
+        let mut sched = Scheduler::new(1, 0);
+        sched.submit(SchedRequest { id: 0, prompt: prompt.clone(),
+                                    max_new: 2 });
+        sched.admit();
+        let mut fed = Vec::new();
+        for _ in 0..plen {
+            match sched.feeds()[0] {
+                Feed::Prefill(t) | Feed::Decode(t) => fed.push(t),
+                Feed::Idle => return Err("idle during prompt".into()),
+            }
+            sched.advance(&[999]);
+        }
+        if fed != prompt {
+            return Err(format!("fed {fed:?} != prompt {prompt:?}"));
+        }
+        Ok(())
+    });
+}
