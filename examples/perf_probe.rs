@@ -1,20 +1,29 @@
-use kla::kla::{filter_chunked, filter_sequential, random_inputs, random_params};
+use kla::api::{Filter, KlaFilter, ScanPlan};
+use kla::kla::{random_inputs, random_params};
 use kla::util::{Pcg64, Timer};
+
 fn main() {
     for &(t, n, d) in &[(2048usize, 8usize, 64usize), (8192, 8, 64), (32768, 8, 64)] {
         let mut rng = Pcg64::seeded(t as u64);
         let p = random_params(&mut rng, n, d);
         let inp = random_inputs(&mut rng, t, n, d);
+        let prior = KlaFilter::init(&p);
         // warmup
-        let _ = filter_sequential(&p, &inp);
+        let _ = KlaFilter::prefix(&p, &inp, &prior, &ScanPlan::sequential());
         let tm = Timer::start();
-        for _ in 0..3 { std::hint::black_box(filter_sequential(&p, &inp)); }
+        for _ in 0..3 {
+            std::hint::black_box(KlaFilter::prefix(&p, &inp, &prior,
+                                                   &ScanPlan::sequential()));
+        }
         let seq = tm.elapsed_ms() / 3.0;
         for th in [1, 2, 4, 8, 16] {
+            let plan = ScanPlan::chunked(th);
             let tm = Timer::start();
-            for _ in 0..3 { std::hint::black_box(filter_chunked(&p, &inp, th)); }
+            for _ in 0..3 {
+                std::hint::black_box(KlaFilter::prefix(&p, &inp, &prior, &plan));
+            }
             let par = tm.elapsed_ms() / 3.0;
-            println!("T={t} th={th}: seq {seq:.1} ms chunked {par:.1} ms ({:.2}x)", seq/par);
+            println!("T={t} th={th}: seq {seq:.1} ms chunked {par:.1} ms ({:.2}x)", seq / par);
         }
     }
 }

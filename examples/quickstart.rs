@@ -8,23 +8,26 @@
 //! 4. peek at the posterior variance (the paper's uncertainty signal).
 
 use anyhow::Result;
+use kla::api::{Filter, KlaFilter, ScanPlan};
 use kla::data::task_by_name;
-use kla::kla::{filter_chunked, filter_sequential, random_inputs,
-               random_params};
+use kla::kla::{random_inputs, random_params};
 use kla::runtime::{Runtime, TrainSession, Value};
 use kla::util::{Pcg64, Timer};
 
 fn main() -> Result<()> {
-    // ---- 1. native filter ----
+    // ---- 1. native filter through the unified kla::api surface ----
     let mut rng = Pcg64::seeded(0);
     let (t, n, d) = (2048, 8, 64);
     let p = random_params(&mut rng, n, d);
     let inp = random_inputs(&mut rng, t, n, d);
+    let prior = KlaFilter::init(&p);
     let timer = Timer::start();
-    let seq = filter_sequential(&p, &inp);
+    let (seq, _) =
+        KlaFilter::prefix(&p, &inp, &prior, &ScanPlan::sequential());
     let seq_ms = timer.elapsed_ms();
     let timer = Timer::start();
-    let par = filter_chunked(&p, &inp, kla::util::pool::default_threads());
+    let plan = ScanPlan::chunked(kla::util::pool::default_threads());
+    let (par, posterior) = KlaFilter::prefix(&p, &inp, &prior, &plan);
     let par_ms = timer.elapsed_ms();
     let max_diff = seq
         .y
@@ -35,6 +38,26 @@ fn main() -> Result<()> {
     println!("[1] native Moebius filter, T={t}: sequential {seq_ms:.1} ms, \
               chunked {par_ms:.1} ms ({:.1}x), max |diff| {max_diff:.2e}",
              seq_ms / par_ms);
+
+    // ---- 1b. decode-time stepping carries the same belief type ----
+    // run the first half as a scan, then step token-by-token: the carry
+    // (posterior precision + information mean) reproduces the full scan.
+    let half = t / 2;
+    let (_, mut carry) = KlaFilter::prefix(&p, &inp.slice(0, half), &prior,
+                                           &ScanPlan::sequential());
+    let tail = inp.slice(half, t);
+    let mut y_last = Vec::new();
+    for ti in 0..tail.t {
+        y_last = KlaFilter::step(&p, &tail, ti, &mut carry);
+    }
+    let max_step_diff = y_last
+        .iter()
+        .zip(&seq.y[(t - 1) * d..])
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("[1b] prefix({half}) + step()x{} reproduces the full scan: \
+              max |diff| {max_step_diff:.2e}; mean posterior variance \
+              {:.4}", tail.t, posterior.mean_variance());
 
     // ---- 2. artifact forward ----
     let rt = Runtime::discover()?;

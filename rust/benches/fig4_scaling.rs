@@ -1,20 +1,30 @@
 //! Fig. 4 / Fig. 9: compute scaling of parallel KLA vs the recurrent
 //! (time-stepped) Kalman baseline.
 //!
+//! All native points go through the unified `kla::api` surface: one
+//! `Filter` implementation per family (KLA information filter, GLA
+//! baseline) with the execution strategy selected per point via
+//! `ScanPlan` — which is exactly the paper's axis of variation.
+//!
 //! Implementations benchmarked (paper's four, mapped to this testbed):
-//!   recurrent/native      — naive time-stepped filter, single thread
+//!   recurrent/native      — ScanPlan::sequential() (naive time-stepped)
 //!   recurrent/xla-step    — XLA decode artifact driven once per token
 //!                           (the production recurrent path)
-//!   scan/native-1t        — associative reparameterisation, one thread
-//!                           ("Torch scan" analogue: math only)
-//!   scan/native-chunked   — multi-threaded chunked scan ("CUDA kernel"
+//!   scan/native-1t        — ScanPlan::chunked(1) ("Torch scan" analogue:
+//!                           associative math only, one thread)
+//!   scan/native-blelloch  — ScanPlan::blelloch() (tree-depth reference)
+//!   scan/native-chunked   — ScanPlan::chunked(threads) ("CUDA kernel"
 //!                           analogue: math + parallel hardware)
+//!   gla/native-*          — the GLA baseline through the same plans, at
+//!                           identical state size and layout
+//!   batch/native          — prefix_batch: B rows under one plan
 //!   scan/xla              — AOT scan artifact forward (T in {128..2048})
 //!   scan/xla-pallas       — AOT Pallas-kernel artifact (T=512)
 
+use kla::api::{prefix_batch, Filter, GlaFilter, GlaInputs, GlaParams,
+               KlaFilter, ScanPlan};
 use kla::bench::{black_box, Suite};
-use kla::kla::{filter_chunked, filter_sequential, random_inputs,
-               random_params};
+use kla::kla::{random_inputs, random_params};
 use kla::runtime::{Runtime, Value};
 use kla::util::Pcg64;
 
@@ -25,19 +35,66 @@ fn main() {
     let threads = kla::util::pool::default_threads();
     let (n, d) = (8, 64);
 
-    // ---- native paths across T ----
+    // ---- native paths across T, strategy selected via ScanPlan ----
     for &t in &[128usize, 512, 2048, 8192, 32768] {
         let mut rng = Pcg64::seeded(t as u64);
         let p = random_params(&mut rng, n, d);
         let inp = random_inputs(&mut rng, t, n, d);
+        let prior = KlaFilter::init(&p);
         suite.bench(&format!("recurrent/native T={t}"), || {
-            black_box(filter_sequential(&p, &inp));
+            black_box(KlaFilter::prefix(&p, &inp, &prior,
+                                        &ScanPlan::sequential()));
         });
         suite.bench(&format!("scan/native-1t T={t}"), || {
-            black_box(filter_chunked(&p, &inp, 1));
+            black_box(KlaFilter::prefix(&p, &inp, &prior,
+                                        &ScanPlan::chunked(1)));
         });
+        if t <= 2048 {
+            suite.bench(&format!("scan/native-blelloch T={t}"), || {
+                black_box(KlaFilter::prefix(&p, &inp, &prior,
+                                            &ScanPlan::blelloch()));
+            });
+        }
         suite.bench(&format!("scan/native-chunked({threads}t) T={t}"), || {
-            black_box(filter_chunked(&p, &inp, threads));
+            black_box(KlaFilter::prefix(&p, &inp, &prior,
+                                        &ScanPlan::chunked(threads)));
+        });
+    }
+
+    // ---- GLA baseline through the same Filter trait, same state size ----
+    let s = n * d;
+    for &t in &[2048usize, 8192] {
+        let mut rng = Pcg64::seeded(t as u64 ^ 0x61_6c67);
+        let gp = GlaParams::zeros(s);
+        let ginp = GlaInputs {
+            t,
+            f: (0..t * s).map(|_| rng.range_f32(0.3, 0.99)).collect(),
+            b: (0..t * s).map(|_| rng.normal_f32()).collect(),
+        };
+        let gprior = GlaFilter::init(&gp);
+        suite.bench(&format!("gla/native-seq T={t}"), || {
+            black_box(GlaFilter::prefix(&gp, &ginp, &gprior,
+                                        &ScanPlan::sequential()));
+        });
+        suite.bench(&format!("gla/native-chunked({threads}t) T={t}"), || {
+            black_box(GlaFilter::prefix(&gp, &ginp, &gprior,
+                                        &ScanPlan::chunked(threads)));
+        });
+    }
+
+    // ---- batched entry point: B rows, one plan ----
+    {
+        let b = 8usize;
+        let t = 2048usize;
+        let mut rng = Pcg64::seeded(99);
+        let p = random_params(&mut rng, n, d);
+        let rows: Vec<_> =
+            (0..b).map(|_| random_inputs(&mut rng, t, n, d)).collect();
+        let beliefs: Vec<_> = (0..b).map(|_| KlaFilter::init(&p)).collect();
+        let plan = ScanPlan::chunked(threads).with_batch(b);
+        suite.bench(&format!("batch/native B={b} T={t}"), || {
+            black_box(prefix_batch::<KlaFilter>(&p, &rows, &beliefs,
+                                                &plan));
         });
     }
 

@@ -1,0 +1,598 @@
+//! # `kla::api` — one `Filter` abstraction for every native scan
+//!
+//! The paper's core observation is that the information-form Kalman
+//! filter, GLA's gated linear recurrence, and decode-time stepping are the
+//! *same associative-scan primitive* at different granularities.  This
+//! module is that observation as an API:
+//!
+//! - [`Filter`] — a filter family with associated `Params`, `Inputs`, a
+//!   carryable `Belief` state and per-step `Output`s.  `prefix()` runs a
+//!   full-sequence scan from any belief; `step()` advances a belief by one
+//!   token.  Chaining `step()` (or `prefix()` over slices, carrying the
+//!   belief) reproduces the full scan — the carry-split property the
+//!   conformance suite (`rust/tests/conformance_api.rs`) pins down.
+//! - [`ScanPlan`] — a builder selecting the execution [`Strategy`]
+//!   (`Sequential` | `Blelloch` | `Chunked { threads }` | `Auto`) and the
+//!   batch dimension `B`, over the time-major layout every implementation
+//!   shares.
+//! - [`prefix_batch`] — the batched `(B, T, …)` entry point: B independent
+//!   sequences scanned under one plan, trading time-parallelism for
+//!   batch-parallelism when B is large.
+//!
+//! Two families implement the trait today: [`KlaFilter`] (the information
+//! filter from `kla::scan`) and [`GlaFilter`] (the gated linear baseline
+//! from `baselines`).  Future backends (SIMD, PJRT-native, sharded) plug
+//! in at this seam.
+//!
+//! ## Migration from the old free functions
+//!
+//! | old (pre-`kla::api`)                  | new                                              |
+//! |---------------------------------------|--------------------------------------------------|
+//! | `filter_sequential(&p, &inp)`         | `KlaFilter::prefix(&p, &inp, &b, &ScanPlan::sequential())` |
+//! | `filter_scan(&p, &inp)`               | `KlaFilter::prefix(&p, &inp, &b, &ScanPlan::chunked(1))` |
+//! | `filter_chunked(&p, &inp, threads)`   | `KlaFilter::prefix(&p, &inp, &b, &ScanPlan::chunked(threads))` |
+//! | (no equivalent)                       | `KlaFilter::prefix(&p, &inp, &b, &ScanPlan::blelloch())` |
+//! | (no equivalent, B=1 only)             | `prefix_batch::<KlaFilter>(&p, &rows, &beliefs, &plan)` |
+//! | `linear_scan_sequential(t, s, …)`     | `GlaFilter::prefix(&p, &inp, &b, &ScanPlan::sequential())` |
+//! | `linear_scan_chunked(t, s, …, th)`    | `GlaFilter::prefix(&p, &inp, &b, &ScanPlan::chunked(th))` |
+//! | manual per-token loops at decode time | `Filter::step(&p, &inp, t, &mut belief)`         |
+//!
+//! where `b = KlaFilter::init(&p)` (resp. `GlaFilter::init`) is the prior
+//! belief.  The free functions remain as the strategy internals.
+
+use crate::baselines::{linear_scan_blelloch, linear_scan_chunked,
+                       linear_scan_sequential};
+use crate::kla::scan::{self, FilterInputs, FilterOutputs, FilterParams};
+
+// --------------------------------------------------------------- plans ---
+
+/// Execution strategy for a prefix scan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Naive time-stepped recurrence (the Fig. 4 recurrent baseline).
+    Sequential,
+    /// Work-efficient up-sweep/down-sweep tree scan, single-threaded —
+    /// the O(log T)-depth reference shape of the L1 kernels.
+    Blelloch,
+    /// Two-level chunked scan across `threads` cores (compose chunk
+    /// summaries in parallel, carry serially, replay in parallel).
+    Chunked { threads: usize },
+    /// Pick a strategy from (T, B) at run time; never reaches the
+    /// implementations (resolved by [`ScanPlan::resolve`]).
+    Auto,
+}
+
+/// Below this sequence length the chunked scan's thread launch overhead
+/// beats its parallel win, so `Auto` stays sequential.
+const AUTO_SEQUENTIAL_MAX_T: usize = 2048;
+
+/// A scan execution plan: strategy + batch dimension, over the shared
+/// time-major layout.  Builder idiom:
+///
+/// ```ignore
+/// let plan = ScanPlan::new()
+///     .with_strategy(Strategy::Chunked { threads: 8 })
+///     .with_batch(4);
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScanPlan {
+    strategy: Strategy,
+    batch: usize,
+}
+
+impl Default for ScanPlan {
+    fn default() -> Self {
+        ScanPlan { strategy: Strategy::Auto, batch: 1 }
+    }
+}
+
+impl ScanPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Shorthand: a sequential plan.
+    pub fn sequential() -> Self {
+        Self::new().with_strategy(Strategy::Sequential)
+    }
+
+    /// Shorthand: a Blelloch tree-scan plan.
+    pub fn blelloch() -> Self {
+        Self::new().with_strategy(Strategy::Blelloch)
+    }
+
+    /// Shorthand: a chunked multi-threaded plan.
+    pub fn chunked(threads: usize) -> Self {
+        Self::new().with_strategy(Strategy::Chunked { threads })
+    }
+
+    /// Shorthand: let the plan pick per sequence length.
+    pub fn auto() -> Self {
+        Self::new()
+    }
+
+    pub fn with_strategy(mut self, strategy: Strategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Declare the batch dimension B (rows handed to [`prefix_batch`]).
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        assert!(batch >= 1, "batch dimension must be >= 1");
+        self.batch = batch;
+        self
+    }
+
+    pub fn strategy(&self) -> Strategy {
+        self.strategy
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Resolve `Auto` for a sequence of length `t_len` (and sanitise
+    /// thread counts).  Never returns [`Strategy::Auto`].
+    pub fn resolve(&self, t_len: usize) -> Strategy {
+        match self.strategy {
+            Strategy::Auto => {
+                if self.batch > 1 || t_len <= AUTO_SEQUENTIAL_MAX_T {
+                    // batched work parallelises across rows instead
+                    // (see prefix_batch); short sequences aren't worth
+                    // the thread launch.
+                    Strategy::Sequential
+                } else {
+                    Strategy::Chunked {
+                        threads: crate::util::pool::default_threads(),
+                    }
+                }
+            }
+            Strategy::Chunked { threads } => {
+                Strategy::Chunked { threads: threads.max(1) }
+            }
+            s => s,
+        }
+    }
+}
+
+// --------------------------------------------------------------- trait ---
+
+/// A Bayesian/linear filter family: one associative-scan primitive viewed
+/// as a full-sequence `prefix()` (train time) or an incremental `step()`
+/// (decode time), with an explicit carryable belief state tying the two
+/// together.
+///
+/// Laws (pinned by `rust/tests/conformance_api.rs`):
+/// - **Strategy conformance:** for any plan, `prefix()` agrees with the
+///   sequential strategy within 1e-5 (relative), provided the precision
+///   trajectory stays strictly inside the `[LAM_MIN, LAM_MAX]` guard
+///   rails.  The clamp is a numerical safety net, not part of the
+///   associative algebra: when it binds mid-sequence (degenerate
+///   parameters — e.g. `pbar = 0` with unbounded evidence), the
+///   reparameterised strategies can deviate from the clamped sequential
+///   recursion, as in the L1 kernels.
+/// - **Carry-split equivalence:** splitting `inputs` at any point, running
+///   `prefix()` on the head, and resuming on the tail from the returned
+///   belief reproduces the full scan; on the sequential strategy this is
+///   exact (bit-for-bit), and chaining `step()` over every t is likewise
+///   exact.
+pub trait Filter {
+    /// Learned parameters (per-channel priors included).
+    type Params;
+    /// One sequence of inputs, time-major.
+    type Inputs;
+    /// The carryable posterior state at a single time step.
+    type Belief: Clone;
+    /// Full-sequence outputs (per-step trajectories / readouts).
+    type Output;
+
+    /// The prior belief (state before any observation).
+    fn init(params: &Self::Params) -> Self::Belief;
+
+    /// Number of time steps in `inputs`.
+    fn len(inputs: &Self::Inputs) -> usize;
+
+    /// True when `inputs` holds no time steps.
+    fn is_empty(inputs: &Self::Inputs) -> bool {
+        Self::len(inputs) == 0
+    }
+
+    /// Time-slice `[lo, hi)` of `inputs` (carry-split execution).
+    fn slice(inputs: &Self::Inputs, lo: usize, hi: usize) -> Self::Inputs;
+
+    /// Full-sequence scan from `belief` under `plan`; returns the per-step
+    /// outputs and the posterior belief after the final step.
+    fn prefix(params: &Self::Params, inputs: &Self::Inputs,
+              belief: &Self::Belief, plan: &ScanPlan)
+              -> (Self::Output, Self::Belief);
+
+    /// One incremental update: advance `belief` through step `t` of
+    /// `inputs` in place, returning that step's readout row.
+    fn step(params: &Self::Params, inputs: &Self::Inputs, t: usize,
+            belief: &mut Self::Belief) -> Vec<f32>;
+}
+
+// ------------------------------------------------------- batched entry ---
+
+/// Batched `(B, T, …)` prefix scan: `rows[i]` scanned from `beliefs[i]`,
+/// all under one plan.  When the plan's strategy carries a thread count
+/// (or resolves to one), rows are distributed across that many workers
+/// and each row runs sequentially — for B ≥ threads this is the
+/// work-optimal layout (no cross-thread carry traffic at all); otherwise
+/// rows run in submission order with the per-row strategy.
+pub fn prefix_batch<F: Filter>(params: &F::Params, rows: &[F::Inputs],
+                               beliefs: &[F::Belief], plan: &ScanPlan)
+                               -> Vec<(F::Output, F::Belief)>
+where
+    F::Params: Sync,
+    F::Inputs: Sync,
+    F::Belief: Send + Sync,
+    F::Output: Send,
+{
+    assert_eq!(rows.len(), beliefs.len(),
+               "prefix_batch: {} rows vs {} beliefs", rows.len(),
+               beliefs.len());
+    assert!(plan.batch() == 1 || plan.batch() == rows.len(),
+            "prefix_batch: plan declares B={} but got {} rows",
+            plan.batch(), rows.len());
+    let b = rows.len();
+    if b == 0 {
+        return Vec::new();
+    }
+    let max_t = rows.iter().map(|r| F::len(r)).max().unwrap_or(0);
+    let workers = match plan.resolve(max_t) {
+        Strategy::Chunked { threads } => threads.min(b),
+        _ => 1,
+    };
+    if b == 1 || workers <= 1 {
+        return rows
+            .iter()
+            .zip(beliefs)
+            .map(|(row, bel)| F::prefix(params, row, bel, plan))
+            .collect();
+    }
+    // Parallelise across rows; per-row work stays sequential so the
+    // machine is not oversubscribed (B-parallelism replaces
+    // T-parallelism).
+    let row_plan = ScanPlan::sequential().with_batch(plan.batch());
+    let mut out: Vec<Option<(F::Output, F::Belief)>> = Vec::new();
+    out.resize_with(b, || None);
+    let chunk = b.div_ceil(workers);
+    std::thread::scope(|scope| {
+        let mut rest = &mut out[..];
+        let mut base = 0usize;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            rest = tail;
+            scope.spawn(move || {
+                for (off, slot) in head.iter_mut().enumerate() {
+                    let r = base + off;
+                    *slot = Some(F::prefix(params, &rows[r], &beliefs[r],
+                                           &row_plan));
+                }
+            });
+            base += take;
+        }
+    });
+    out.into_iter()
+        .map(|slot| slot.expect("every row scanned"))
+        .collect()
+}
+
+// ---------------------------------------------------------- KLA filter ---
+
+/// The posterior belief of the KLA information filter: per-channel
+/// precision `lam` and information mean `eta` over the (N, D) state grid —
+/// the same carry the decode artifact threads through serving
+/// (`crate::serve::state_cache`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct KlaBelief {
+    pub lam: Vec<f32>,
+    pub eta: Vec<f32>,
+}
+
+impl KlaBelief {
+    /// The learned prior belief of `params`.
+    pub fn prior(params: &FilterParams) -> Self {
+        KlaBelief { lam: params.lam0.clone(), eta: params.eta0.clone() }
+    }
+
+    pub fn from_parts(lam: Vec<f32>, eta: Vec<f32>) -> Self {
+        assert_eq!(lam.len(), eta.len(), "lam/eta length mismatch");
+        KlaBelief { lam, eta }
+    }
+
+    /// Number of state channels (N*D).
+    pub fn state(&self) -> usize {
+        self.lam.len()
+    }
+
+    /// Mean posterior variance (1/lam) — the serving-side uncertainty
+    /// signal (paper §7: epistemic uncertainty applications).
+    pub fn mean_variance(&self) -> f32 {
+        mean_variance(&self.lam)
+    }
+}
+
+/// Mean posterior variance (1/lam, floored at 1e-9) over a borrowed
+/// precision slice — THE uncertainty formula, shared by [`KlaBelief`],
+/// the serving belief cache, and the native variance trace so the three
+/// can never drift apart.
+pub fn mean_variance(lam: &[f32]) -> f32 {
+    if lam.is_empty() {
+        return 0.0;
+    }
+    let acc: f64 = lam.iter().map(|&l| 1.0 / l.max(1e-9) as f64).sum();
+    (acc / lam.len() as f64) as f32
+}
+
+/// The KLA information filter (Theorem 1 / `kla::scan`) as a [`Filter`].
+pub struct KlaFilter;
+
+impl Filter for KlaFilter {
+    type Params = FilterParams;
+    type Inputs = FilterInputs;
+    type Belief = KlaBelief;
+    type Output = FilterOutputs;
+
+    fn init(params: &FilterParams) -> KlaBelief {
+        KlaBelief::prior(params)
+    }
+
+    fn len(inputs: &FilterInputs) -> usize {
+        inputs.t
+    }
+
+    fn slice(inputs: &FilterInputs, lo: usize, hi: usize) -> FilterInputs {
+        inputs.slice(lo, hi)
+    }
+
+    fn prefix(params: &FilterParams, inputs: &FilterInputs,
+              belief: &KlaBelief, plan: &ScanPlan)
+              -> (FilterOutputs, KlaBelief) {
+        let out = match plan.resolve(inputs.t) {
+            Strategy::Sequential => scan::filter_sequential_from(
+                params, inputs, &belief.lam, &belief.eta),
+            Strategy::Blelloch => scan::filter_blelloch_from(
+                params, inputs, &belief.lam, &belief.eta),
+            Strategy::Chunked { threads } => scan::filter_chunked_from(
+                params, inputs, threads, &belief.lam, &belief.eta),
+            Strategy::Auto => unreachable!("resolve() never returns Auto"),
+        };
+        let next = if inputs.t == 0 {
+            belief.clone()
+        } else {
+            let s = params.state();
+            KlaBelief {
+                lam: out.lam[(inputs.t - 1) * s..].to_vec(),
+                eta: out.eta[(inputs.t - 1) * s..].to_vec(),
+            }
+        };
+        (out, next)
+    }
+
+    fn step(params: &FilterParams, inputs: &FilterInputs, t: usize,
+            belief: &mut KlaBelief) -> Vec<f32> {
+        scan::step_once(params, inputs, t, &mut belief.lam,
+                        &mut belief.eta)
+    }
+}
+
+// ---------------------------------------------------------- GLA filter ---
+
+/// Parameters of the gated linear (GLA/Mamba-style) baseline: the state
+/// width and the prior state.  The gates and drives arrive as inputs.
+#[derive(Clone, Debug)]
+pub struct GlaParams {
+    pub s: usize,
+    pub h0: Vec<f32>,
+}
+
+impl GlaParams {
+    pub fn zeros(s: usize) -> Self {
+        GlaParams { s, h0: vec![0.0; s] }
+    }
+}
+
+/// One sequence of gated-linear inputs: forget gates f (T, S) and drives
+/// b (T, S), time-major.
+#[derive(Clone, Debug)]
+pub struct GlaInputs {
+    pub t: usize,
+    pub f: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl GlaInputs {
+    pub fn slice(&self, lo: usize, hi: usize) -> GlaInputs {
+        assert!(lo <= hi && hi <= self.t);
+        if self.t == 0 {
+            return GlaInputs { t: 0, f: Vec::new(), b: Vec::new() };
+        }
+        let s = self.f.len() / self.t;
+        GlaInputs {
+            t: hi - lo,
+            f: self.f[lo * s..hi * s].to_vec(),
+            b: self.b[lo * s..hi * s].to_vec(),
+        }
+    }
+}
+
+/// The gated-linear hidden state h (S values).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GlaBelief {
+    pub h: Vec<f32>,
+}
+
+/// The GLA baseline recurrence h_t = f_t ⊙ h_{t-1} + b_t (`baselines`) as
+/// a [`Filter`] — the affine half of the KLA scan at identical state size
+/// and layout, which is what makes the Fig. 4 comparison apples-to-apples.
+pub struct GlaFilter;
+
+impl Filter for GlaFilter {
+    type Params = GlaParams;
+    type Inputs = GlaInputs;
+    type Belief = GlaBelief;
+    /// The full hidden-state trajectory, (T, S) time-major.
+    type Output = Vec<f32>;
+
+    fn init(params: &GlaParams) -> GlaBelief {
+        GlaBelief { h: params.h0.clone() }
+    }
+
+    fn len(inputs: &GlaInputs) -> usize {
+        inputs.t
+    }
+
+    fn slice(inputs: &GlaInputs, lo: usize, hi: usize) -> GlaInputs {
+        inputs.slice(lo, hi)
+    }
+
+    fn prefix(params: &GlaParams, inputs: &GlaInputs, belief: &GlaBelief,
+              plan: &ScanPlan) -> (Vec<f32>, GlaBelief) {
+        let (t, s) = (inputs.t, params.s);
+        let out = match plan.resolve(t) {
+            Strategy::Sequential => linear_scan_sequential(
+                t, s, &inputs.f, &inputs.b, &belief.h),
+            Strategy::Blelloch => linear_scan_blelloch(
+                t, s, &inputs.f, &inputs.b, &belief.h),
+            Strategy::Chunked { threads } => linear_scan_chunked(
+                t, s, &inputs.f, &inputs.b, &belief.h, threads),
+            Strategy::Auto => unreachable!("resolve() never returns Auto"),
+        };
+        let next = if t == 0 {
+            belief.clone()
+        } else {
+            GlaBelief { h: out[(t - 1) * s..].to_vec() }
+        };
+        (out, next)
+    }
+
+    fn step(params: &GlaParams, inputs: &GlaInputs, t: usize,
+            belief: &mut GlaBelief) -> Vec<f32> {
+        let s = params.s;
+        debug_assert!(t < inputs.t);
+        for i in 0..s {
+            belief.h[i] =
+                inputs.f[t * s + i] * belief.h[i] + inputs.b[t * s + i];
+        }
+        belief.h.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kla::scan::{random_inputs, random_params};
+    use crate::util::Pcg64;
+
+    #[test]
+    fn plan_builder_round_trips() {
+        let plan = ScanPlan::new()
+            .with_strategy(Strategy::Chunked { threads: 8 })
+            .with_batch(4);
+        assert_eq!(plan.strategy(), Strategy::Chunked { threads: 8 });
+        assert_eq!(plan.batch(), 4);
+        assert_eq!(ScanPlan::sequential().strategy(), Strategy::Sequential);
+        assert_eq!(ScanPlan::blelloch().strategy(), Strategy::Blelloch);
+        assert_eq!(ScanPlan::chunked(3).strategy(),
+                   Strategy::Chunked { threads: 3 });
+        assert_eq!(ScanPlan::auto().strategy(), Strategy::Auto);
+    }
+
+    #[test]
+    fn auto_resolves_by_length_and_batch() {
+        assert_eq!(ScanPlan::auto().resolve(64), Strategy::Sequential);
+        match ScanPlan::auto().resolve(1 << 16) {
+            Strategy::Chunked { threads } => assert!(threads >= 1),
+            other => panic!("expected chunked, got {other:?}"),
+        }
+        // batched plans keep rows sequential (prefix_batch parallelises
+        // across rows instead)
+        assert_eq!(ScanPlan::auto().with_batch(8).resolve(1 << 16),
+                   Strategy::Sequential);
+        // explicit strategies resolve to themselves
+        assert_eq!(ScanPlan::blelloch().resolve(10), Strategy::Blelloch);
+        assert_eq!(ScanPlan::chunked(0).resolve(10),
+                   Strategy::Chunked { threads: 1 });
+    }
+
+    #[test]
+    fn kla_prefix_carries_final_belief() {
+        let mut rng = Pcg64::seeded(11);
+        let (t, n, d) = (19, 2, 3);
+        let s = n * d;
+        let p = random_params(&mut rng, n, d);
+        let inp = random_inputs(&mut rng, t, n, d);
+        let prior = KlaFilter::init(&p);
+        let (out, belief) =
+            KlaFilter::prefix(&p, &inp, &prior, &ScanPlan::sequential());
+        assert_eq!(&belief.lam[..], &out.lam[(t - 1) * s..]);
+        assert_eq!(&belief.eta[..], &out.eta[(t - 1) * s..]);
+        // empty scan: belief unchanged
+        let empty = KlaFilter::slice(&inp, 0, 0);
+        let (out0, belief0) =
+            KlaFilter::prefix(&p, &empty, &belief, &ScanPlan::sequential());
+        assert!(out0.lam.is_empty());
+        assert_eq!(belief0, belief);
+    }
+
+    #[test]
+    fn prefix_batch_matches_per_row() {
+        let mut rng = Pcg64::seeded(12);
+        let (n, d) = (2, 4);
+        let p = random_params(&mut rng, n, d);
+        let rows: Vec<_> = (0..5)
+            .map(|i| random_inputs(&mut rng, 10 + i, n, d))
+            .collect();
+        let beliefs: Vec<_> =
+            (0..5).map(|_| KlaFilter::init(&p)).collect();
+        let solo: Vec<_> = rows
+            .iter()
+            .zip(&beliefs)
+            .map(|(r, b)| {
+                KlaFilter::prefix(&p, r, b, &ScanPlan::sequential())
+            })
+            .collect();
+        let batched = prefix_batch::<KlaFilter>(
+            &p, &rows, &beliefs, &ScanPlan::chunked(3));
+        assert_eq!(batched.len(), solo.len());
+        for ((a, ab), (b, bb)) in batched.iter().zip(&solo) {
+            // rows run sequentially inside the batch ⇒ exact agreement
+            assert_eq!(a, b);
+            assert_eq!(ab, bb);
+        }
+    }
+
+    #[test]
+    fn gla_step_chain_matches_prefix_exactly() {
+        let mut rng = Pcg64::seeded(13);
+        let (t, s) = (29, 7);
+        let p = GlaParams::zeros(s);
+        let inp = GlaInputs {
+            t,
+            f: (0..t * s).map(|_| rng.range_f32(0.3, 0.95)).collect(),
+            b: (0..t * s).map(|_| rng.normal_f32()).collect(),
+        };
+        let prior = GlaFilter::init(&p);
+        let (out, last) =
+            GlaFilter::prefix(&p, &inp, &prior, &ScanPlan::sequential());
+        let mut belief = GlaFilter::init(&p);
+        for ti in 0..t {
+            let h = GlaFilter::step(&p, &inp, ti, &mut belief);
+            assert_eq!(&out[ti * s..(ti + 1) * s], &h[..], "t={ti}");
+        }
+        assert_eq!(belief, last);
+    }
+
+    #[test]
+    fn belief_mean_variance_tracks_precision() {
+        let lo = KlaBelief::from_parts(vec![1.0; 4], vec![0.0; 4]);
+        let hi = KlaBelief::from_parts(vec![100.0; 4], vec![0.0; 4]);
+        assert!(hi.mean_variance() < lo.mean_variance());
+        assert!((lo.mean_variance() - 1.0).abs() < 1e-6);
+        let empty = KlaBelief::from_parts(vec![], vec![]);
+        assert_eq!(empty.mean_variance(), 0.0);
+    }
+}

@@ -32,8 +32,10 @@ pub fn linear_scan_chunked(t_len: usize, s: usize, f: &[f32], b: &[f32],
     let chunk_len = t_len.div_ceil(threads);
     let n_chunks = t_len.div_ceil(chunk_len);
 
-    // Pass 1: per-chunk (F, B) composition.
-    let mut summ: Vec<(Vec<f32>, Vec<f32>)> =
+    // Pass 1: per-chunk (F, B) composition, in f64 so cross-chunk carries
+    // stay accurate far below the strategy-conformance tolerance (the KLA
+    // chunked scan does the same for its Moebius summaries).
+    let mut summ: Vec<(Vec<f64>, Vec<f64>)> =
         vec![(vec![1.0; s], vec![0.0; s]); n_chunks];
     {
         let cells: Vec<_> = summ.iter_mut().collect();
@@ -44,9 +46,9 @@ pub fn linear_scan_chunked(t_len: usize, s: usize, f: &[f32], b: &[f32],
                     let end = ((c + 1) * chunk_len).min(t_len);
                     for t in start..end {
                         for i in 0..s {
-                            let ft = f[t * s + i];
+                            let ft = f[t * s + i] as f64;
                             slot.0[i] *= ft;
-                            slot.1[i] = ft * slot.1[i] + b[t * s + i];
+                            slot.1[i] = ft * slot.1[i] + b[t * s + i] as f64;
                         }
                     }
                 });
@@ -54,11 +56,12 @@ pub fn linear_scan_chunked(t_len: usize, s: usize, f: &[f32], b: &[f32],
         });
     }
 
-    // Pass 2: carries.
-    let mut carries = vec![init.to_vec()];
+    // Pass 2: carries (f64 chain).
+    let init64: Vec<f64> = init.iter().map(|&x| x as f64).collect();
+    let mut carries = vec![init64];
     for c in 0..n_chunks - 1 {
         let prev = carries.last().unwrap();
-        let mut next = vec![0.0f32; s];
+        let mut next = vec![0.0f64; s];
         for i in 0..s {
             next[i] = summ[c].0[i] * prev[i] + summ[c].1[i];
         }
@@ -79,7 +82,8 @@ pub fn linear_scan_chunked(t_len: usize, s: usize, f: &[f32], b: &[f32],
         }
         std::thread::scope(|scope| {
             for (c, part) in parts.into_iter().enumerate() {
-                let carry = carries[c].clone();
+                let carry: Vec<f32> =
+                    carries[c].iter().map(|&x| x as f32).collect();
                 scope.spawn(move || {
                     let start = c * chunk_len;
                     let end = ((c + 1) * chunk_len).min(t_len);
@@ -93,6 +97,34 @@ pub fn linear_scan_chunked(t_len: usize, s: usize, f: &[f32], b: &[f32],
                 });
             }
         });
+    }
+    out
+}
+
+/// Blelloch tree scan over the affine (f, b) pairs: the work-efficient
+/// O(log T)-depth reference strategy, per channel, with the tree composed
+/// in f64 (matching the KLA side, `kla::scan::filter_blelloch_from`).
+pub fn linear_scan_blelloch(t_len: usize, s: usize, f: &[f32], b: &[f32],
+                            init: &[f32]) -> Vec<f32> {
+    assert_eq!(f.len(), t_len * s);
+    assert_eq!(b.len(), t_len * s);
+    let mut out = vec![0.0f32; t_len * s];
+    if t_len == 0 {
+        return out;
+    }
+    let mut aff: Vec<(f64, f64)> = Vec::with_capacity(t_len);
+    for i in 0..s {
+        aff.clear();
+        for t in 0..t_len {
+            aff.push((f[t * s + i] as f64, b[t * s + i] as f64));
+        }
+        crate::util::prefix::blelloch_inclusive(&mut aff, |a, c| {
+            (c.0 * a.0, c.0 * a.1 + c.1)
+        });
+        let h0 = init[i] as f64;
+        for t in 0..t_len {
+            out[t * s + i] = (aff[t].0 * h0 + aff[t].1) as f32;
+        }
     }
     out
 }
@@ -148,6 +180,19 @@ mod tests {
                 for (i, (a, c)) in seq.iter().zip(&par).enumerate() {
                     assert!((a - c).abs() < 1e-4, "t={t} th={threads} i={i}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn blelloch_matches_sequential() {
+        for &(t, s) in &[(1, 1), (17, 3), (128, 16), (100, 7)] {
+            let (f, b, init) = rand_case(t, s, 100 + t as u64);
+            let seq = linear_scan_sequential(t, s, &f, &b, &init);
+            let par = linear_scan_blelloch(t, s, &f, &b, &init);
+            for (i, (a, c)) in seq.iter().zip(&par).enumerate() {
+                assert!((a - c).abs() < 1e-4 * (1.0 + a.abs()),
+                        "t={t} i={i}: {a} vs {c}");
             }
         }
     }

@@ -8,6 +8,7 @@
 //! Entries are computed from the native filter's gate path, so this is a
 //! pure L3 diagnostic needing no extra artifact.
 
+use crate::api::{Filter, KlaFilter, ScanPlan};
 use crate::kla::{FilterInputs, FilterParams};
 
 /// Per-channel attention matrix for channel (n, d): T x T lower-triangular.
@@ -17,7 +18,8 @@ pub fn kalman_attention(p: &FilterParams, inp: &FilterInputs, n_idx: usize,
     assert!(n_idx < n && d_idx < d);
     let idx = n_idx * d + d_idx;
     // forward pass for lam (needed for gates and the final scaling)
-    let out = crate::kla::filter_sequential(p, inp);
+    let (out, _) = KlaFilter::prefix(p, inp, &KlaFilter::init(p),
+                                     &ScanPlan::sequential());
     let s = n * d;
     // gates f_t = rho_t * abar
     let mut gates = vec![0.0f32; t_len];
@@ -81,7 +83,8 @@ mod tests {
         // make eta0 zero so the matrix form has no init term
         let mut p = p;
         p.eta0.iter_mut().for_each(|x| *x = 0.0);
-        let out = crate::kla::filter_sequential(&p, &inp);
+        let (out, _) = KlaFilter::prefix(&p, &inp, &KlaFilter::init(&p),
+                                         &ScanPlan::sequential());
         let w = kalman_attention(&p, &inp, 0, 0);
         for ti in 0..t {
             let mut acc = 0.0f32;

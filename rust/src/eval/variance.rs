@@ -5,7 +5,9 @@
 
 use anyhow::Result;
 
+use crate::api::{Filter, KlaFilter, ScanPlan};
 use crate::data::{Batch, TaskGen};
+use crate::kla::{FilterInputs, FilterParams};
 use crate::runtime::{Runtime, TrainSession, Value};
 use crate::util::Pcg64;
 
@@ -68,6 +70,29 @@ impl VarianceTrace {
     }
 }
 
+/// Native (artifact-free) variance trace through the unified `Filter`
+/// API: run the information filter over one sequence and record the mean
+/// posterior variance (1/lam over the state grid) at every step — the
+/// B=1 analogue of the `{base}_variance` artifact, usable by diagnostics
+/// and tests without any XLA build.
+pub fn native_trace(p: &FilterParams, inp: &FilterInputs, plan: &ScanPlan)
+                    -> VarianceTrace {
+    let s = p.state();
+    if s == 0 {
+        return VarianceTrace {
+            b: 1,
+            t: inp.t,
+            values: vec![0.0; inp.t],
+            mask: vec![0.0; inp.t],
+        };
+    }
+    let (out, _) = KlaFilter::prefix(p, inp, &KlaFilter::init(p), plan);
+    let values: Vec<f32> = (0..inp.t)
+        .map(|t| crate::api::mean_variance(&out.lam[t * s..(t + 1) * s]))
+        .collect();
+    VarianceTrace { b: 1, t: inp.t, values, mask: vec![0.0; inp.t] }
+}
+
 /// Run the `{base}_variance` artifact on a fresh task batch.
 pub fn trace(rt: &Runtime, session: &TrainSession, task: &dyn TaskGen,
              seed: u64) -> Result<VarianceTrace> {
@@ -88,6 +113,26 @@ pub fn trace(rt: &Runtime, session: &TrainSession, task: &dyn TaskGen,
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kla::scan::random_inputs;
+
+    #[test]
+    fn native_trace_variance_decays_with_evidence() {
+        // abar = 1, pbar = 0: precision only accumulates, so the mean
+        // posterior variance must decay early -> late (paper Fig. 5b).
+        let (n, d, t) = (2, 3, 48);
+        let p = FilterParams::uniform(n, d, 1.0, 0.0);
+        let mut rng = Pcg64::seeded(17);
+        let inp = random_inputs(&mut rng, t, n, d);
+        let tr = native_trace(&p, &inp, &ScanPlan::sequential());
+        assert_eq!(tr.t, t);
+        let (early, late) = tr.early_late();
+        assert!(late <= early + 1e-9, "variance grew: {early} -> {late}");
+        // strategy-independent: chunked plan gives the same trace
+        let tr2 = native_trace(&p, &inp, &ScanPlan::chunked(4));
+        for (a, b) in tr.values.iter().zip(&tr2.values) {
+            assert!((a - b).abs() < 1e-5 * (1.0 + a.abs()));
+        }
+    }
 
     #[test]
     fn early_late_split() {

@@ -59,6 +59,16 @@ impl Mobius {
         self.a * self.d - self.b * self.c
     }
 
+    /// Widen to the f64 representation used for carry composition.
+    pub fn widen(&self) -> Mobius64 {
+        Mobius64 {
+            a: self.a as f64,
+            b: self.b as f64,
+            c: self.c as f64,
+            d: self.d as f64,
+        }
+    }
+
     /// Approximate equality as *maps* (up to scale): compare normalised
     /// entries with the sign fixed by the largest entry.
     pub fn approx_eq(&self, other: &Mobius, tol: f32) -> bool {
@@ -85,6 +95,53 @@ impl Mobius {
             b: self.b / scale,
             c: self.c / scale,
             d: self.d / scale,
+        }
+    }
+}
+
+/// f64 Moebius map — used where long products feed carries (chunk
+/// summaries in the chunked scan, the Blelloch tree): composing in f64
+/// keeps cross-chunk carries accurate to well below the 1e-5 conformance
+/// tolerance even for T in the tens of thousands, while the per-token
+/// replay stays in f32 (bit-matching the sequential path).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Mobius64 {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    pub d: f64,
+}
+
+impl Mobius64 {
+    pub const IDENTITY: Mobius64 =
+        Mobius64 { a: 1.0, b: 0.0, c: 0.0, d: 1.0 };
+
+    /// The KLA token map from Theorem 1 (see `Mobius::kla_step`).
+    #[inline]
+    pub fn kla_step(abar: f64, pbar: f64, phi: f64) -> Mobius64 {
+        let a2 = abar * abar;
+        Mobius64 { a: 1.0 + pbar * phi, b: a2 * phi, c: pbar, d: a2 }
+    }
+
+    #[inline]
+    pub fn apply(&self, lam: f64) -> f64 {
+        (self.a * lam + self.b) / (self.c * lam + self.d)
+    }
+
+    /// `self ∘ other` (apply `other` first), with the same lazy
+    /// renormalisation as the f32 map — maps are scale-free.
+    #[inline]
+    pub fn compose(&self, other: &Mobius64) -> Mobius64 {
+        let a = self.a * other.a + self.b * other.c;
+        let b = self.a * other.b + self.b * other.d;
+        let c = self.c * other.a + self.d * other.c;
+        let d = self.c * other.b + self.d * other.d;
+        let m = a.abs().max(b.abs()).max(c.abs()).max(d.abs());
+        if m > 1e120 || (m < 1e-120 && m > 0.0) {
+            let inv = 1.0 / m.max(1e-300);
+            Mobius64 { a: a * inv, b: b * inv, c: c * inv, d: d * inv }
+        } else {
+            Mobius64 { a, b, c, d }
         }
     }
 }
@@ -183,5 +240,34 @@ mod tests {
         // det = a2*(1+pbar*phi) - a2*phi*pbar = a2 > 0
         let m = Mobius::kla_step(0.9, 0.1, 2.0);
         assert!(m.det() > 0.0);
+    }
+
+    #[test]
+    fn mobius64_tracks_f32_maps() {
+        let mut rng = Pcg64::seeded(7);
+        let mut acc32 = Mobius::IDENTITY;
+        let mut acc64 = Mobius64::IDENTITY;
+        for _ in 0..256 {
+            let m = rand_kla_map(&mut rng);
+            acc32 = m.compose(&acc32);
+            acc64 = m.widen().compose(&acc64);
+        }
+        let lam32 = acc32.apply(1.3);
+        let lam64 = acc64.apply(1.3) as f32;
+        assert!(
+            (lam32 - lam64).abs() < 1e-3 * (1.0 + lam64.abs()),
+            "{lam32} vs {lam64}"
+        );
+    }
+
+    #[test]
+    fn mobius64_long_products_stay_finite() {
+        let mut rng = Pcg64::seeded(8);
+        let mut acc = Mobius64::IDENTITY;
+        for _ in 0..65536 {
+            acc = rand_kla_map(&mut rng).widen().compose(&acc);
+        }
+        let lam = acc.apply(1.0);
+        assert!(lam.is_finite() && lam > 0.0, "{lam}");
     }
 }

@@ -10,7 +10,8 @@ pub mod mobius;
 pub mod ou;
 pub mod scan;
 
-pub use mobius::Mobius;
-pub use scan::{filter_chunked, filter_scan, filter_sequential,
-               random_inputs, random_params, FilterInputs, FilterOutputs,
-               FilterParams};
+pub use mobius::{Mobius, Mobius64};
+pub use scan::{clamp_lam, filter_blelloch_from, filter_chunked,
+               filter_chunked_from, filter_scan, filter_sequential,
+               filter_sequential_from, random_inputs, random_params,
+               FilterInputs, FilterOutputs, FilterParams};

@@ -9,11 +9,35 @@
 //! Data layout: time-major contiguous rows of S = N*D channels, i.e.
 //! `k[t*N + n]`, `v[t*D + d]`, `lam[t*S + n*D + d]` — matching the (B=1)
 //! slices of the Python implementation.
+//!
+//! These are the low-level strategy implementations behind the unified
+//! [`crate::api::Filter`] abstraction; external callers should go through
+//! `kla::api` (`KlaFilter` + `ScanPlan`) rather than calling the
+//! `filter_*` free functions directly.  The `*_from` variants take an
+//! explicit prior belief `(lam_init, eta_init)` so a scan can resume from
+//! any carried posterior — the same carry type decode-time `step()` and
+//! the serving belief cache use.
 
-use crate::kla::mobius::Mobius;
+use crate::kla::mobius::Mobius64;
+use crate::util::prefix::blelloch_inclusive;
 
 pub const LAM_MIN: f32 = 1e-6;
 pub const LAM_MAX: f32 = 1e8;
+
+/// The single clamp applied to posterior precision everywhere — the
+/// sequential, Blelloch, and chunked paths (including chunk carries, via
+/// [`clamp_lam64`]) all funnel through this pair of helpers so the
+/// numerical guard rails cannot drift apart between strategies.
+#[inline]
+pub fn clamp_lam(lam: f32) -> f32 {
+    lam.clamp(LAM_MIN, LAM_MAX)
+}
+
+/// f64 twin of [`clamp_lam`], for the high-precision carry path.
+#[inline]
+pub fn clamp_lam64(lam: f64) -> f64 {
+    lam.clamp(LAM_MIN as f64, LAM_MAX as f64)
+}
 
 /// Per-(N,D)-grid filter parameters.
 #[derive(Clone, Debug)]
@@ -53,12 +77,57 @@ pub struct FilterInputs {
     pub lam_v: Vec<f32>,
 }
 
+impl FilterInputs {
+    /// Time-slice `[lo, hi)` — used by `kla::api` for carry-split
+    /// execution (run a prefix of the sequence, carry the belief, resume).
+    pub fn slice(&self, lo: usize, hi: usize) -> FilterInputs {
+        assert!(lo <= hi && hi <= self.t, "slice [{lo}, {hi}) of t={}",
+                self.t);
+        if self.t == 0 {
+            return FilterInputs {
+                t: 0,
+                k: Vec::new(),
+                q: Vec::new(),
+                v: Vec::new(),
+                lam_v: Vec::new(),
+            };
+        }
+        let n = self.k.len() / self.t;
+        let d = self.v.len() / self.t;
+        FilterInputs {
+            t: hi - lo,
+            k: self.k[lo * n..hi * n].to_vec(),
+            q: self.q[lo * n..hi * n].to_vec(),
+            v: self.v[lo * d..hi * d].to_vec(),
+            lam_v: self.lam_v[lo * d..hi * d].to_vec(),
+        }
+    }
+}
+
 /// Filter outputs: lam, eta (T, N, D) and readout y (T, D).
 #[derive(Clone, Debug, PartialEq)]
 pub struct FilterOutputs {
     pub lam: Vec<f32>,
     pub eta: Vec<f32>,
     pub y: Vec<f32>,
+}
+
+/// One channel's token update — the single source of the KLA recursion
+/// used by every strategy (sequential loop, chunked replay, incremental
+/// `step()`), so the strategies stay bit-identical where they share the
+/// same carry.  `k2` must be `k * k` (hoisted by the caller, which knows
+/// it is constant across the D inner iterations).  Returns
+/// `(lam, eta, gate)` with `gate = rho * abar`.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn kla_update(abar: f32, pbar: f32, k: f32, k2: f32,
+                         lam_v: f32, v: f32, lam_prev: f32,
+                         eta_prev: f32) -> (f32, f32, f32) {
+    let rho = 1.0 / (abar * abar + pbar * lam_prev);
+    let gate = rho * abar;
+    let lam = clamp_lam(rho * lam_prev + k2 * lam_v);
+    let eta = gate * eta_prev + k * lam_v * v;
+    (lam, eta, gate)
 }
 
 #[inline]
@@ -81,40 +150,86 @@ fn readout(p: &FilterParams, inp: &FilterInputs, lam: &[f32], eta: &[f32],
     }
 }
 
+/// One incremental filter update: advance the belief `(lam, eta)` through
+/// step `t` of `inp` in place and return the readout row y_t (D values).
+/// Chaining this over t reproduces `filter_sequential_from` bit-for-bit —
+/// the decode-time face of the same recursion.
+pub(crate) fn step_once(p: &FilterParams, inp: &FilterInputs, t: usize,
+                        lam: &mut [f32], eta: &mut [f32]) -> Vec<f32> {
+    let (n, d) = (p.n, p.d);
+    debug_assert!(t < inp.t);
+    debug_assert_eq!(lam.len(), p.state());
+    let k_t = &inp.k[t * n..(t + 1) * n];
+    let v_t = &inp.v[t * d..(t + 1) * d];
+    let lv_t = &inp.lam_v[t * d..(t + 1) * d];
+    for ni in 0..n {
+        let kk = k_t[ni];
+        let k2 = kk * kk;
+        let row = ni * d;
+        for di in 0..d {
+            let idx = row + di;
+            let (l, e, _) = kla_update(p.abar[idx], p.pbar[idx], kk, k2,
+                                       lv_t[di], v_t[di], lam[idx],
+                                       eta[idx]);
+            lam[idx] = l;
+            eta[idx] = e;
+        }
+    }
+    // readout row — same accumulation order as `readout` above
+    let mut y = vec![0.0f32; d];
+    for ni in 0..n {
+        let qn = inp.q[t * n + ni];
+        if qn == 0.0 {
+            continue;
+        }
+        let row = ni * d;
+        for di in 0..d {
+            y[di] += qn * eta[row + di] / lam[row + di];
+        }
+    }
+    y
+}
+
 /// The naive recurrent (time-stepped) Kalman update — the Fig. 4 baseline.
-/// O(T) sequential steps, each O(N*D).
-pub fn filter_sequential(p: &FilterParams, inp: &FilterInputs)
-                         -> FilterOutputs {
+/// O(T) sequential steps, each O(N*D).  Starts from the explicit belief
+/// `(lam_init, eta_init)`.
+pub fn filter_sequential_from(p: &FilterParams, inp: &FilterInputs,
+                              lam_init: &[f32], eta_init: &[f32])
+                              -> FilterOutputs {
     let (n, d, s, t_len) = (p.n, p.d, p.state(), inp.t);
     let mut lam = vec![0.0f32; t_len * s];
     let mut eta = vec![0.0f32; t_len * s];
-    let mut lam_prev = p.lam0.clone();
-    let mut eta_prev = p.eta0.clone();
+    let mut lam_prev = lam_init.to_vec();
+    let mut eta_prev = eta_init.to_vec();
     for t in 0..t_len {
         let k_t = &inp.k[t * n..(t + 1) * n];
         let v_t = &inp.v[t * d..(t + 1) * d];
         let lv_t = &inp.lam_v[t * d..(t + 1) * d];
         for ni in 0..n {
-            let k2 = k_t[ni] * k_t[ni];
+            let kk = k_t[ni];
+            let k2 = kk * kk;
             let row = ni * d;
             for di in 0..d {
                 let idx = row + di;
-                let abar = p.abar[idx];
-                let rho = 1.0 / (abar * abar + p.pbar[idx] * lam_prev[idx]);
-                let lam_t = (rho * lam_prev[idx] + k2 * lv_t[di])
-                    .clamp(LAM_MIN, LAM_MAX);
-                let eta_t = rho * abar * eta_prev[idx]
-                    + k_t[ni] * lv_t[di] * v_t[di];
-                lam[t * s + idx] = lam_t;
-                eta[t * s + idx] = eta_t;
-                lam_prev[idx] = lam_t;
-                eta_prev[idx] = eta_t;
+                let (l, e, _) = kla_update(p.abar[idx], p.pbar[idx], kk,
+                                           k2, lv_t[di], v_t[di],
+                                           lam_prev[idx], eta_prev[idx]);
+                lam[t * s + idx] = l;
+                eta[t * s + idx] = e;
+                lam_prev[idx] = l;
+                eta_prev[idx] = e;
             }
         }
     }
     let mut y = vec![0.0f32; t_len * d];
     readout(p, inp, &lam, &eta, &mut y);
     FilterOutputs { lam, eta, y }
+}
+
+/// `filter_sequential_from` starting at the learned prior (lam0, eta0).
+pub fn filter_sequential(p: &FilterParams, inp: &FilterInputs)
+                         -> FilterOutputs {
+    filter_sequential_from(p, inp, &p.lam0, &p.eta0)
 }
 
 /// Work-efficient parallel form: two associative prefix scans
@@ -125,17 +240,98 @@ pub fn filter_scan(p: &FilterParams, inp: &FilterInputs) -> FilterOutputs {
     filter_chunked(p, inp, 1)
 }
 
+/// Blelloch tree scan (the paper's "parallel scan" reference shape): per
+/// channel, an up-sweep/down-sweep over the f64 Moebius maps yields every
+/// precision prefix in O(log T) depth; the gates recovered from the lam
+/// trajectory then drive a second tree scan over affine (F, B) pairs for
+/// eta.  Single-threaded here — the point is the dependency structure, not
+/// the core count (that is `filter_chunked`'s job).
+///
+/// The composed maps are unclamped (clamping is not associative); lam is
+/// clamped only when materialised.  Like the L1 kernels, this strategy
+/// therefore assumes the `[LAM_MIN, LAM_MAX]` guard rails do not bind
+/// mid-sequence — see the conformance caveat on `crate::api::Filter`.
+pub fn filter_blelloch_from(p: &FilterParams, inp: &FilterInputs,
+                            lam_init: &[f32], eta_init: &[f32])
+                            -> FilterOutputs {
+    let (n, d, s, t_len) = (p.n, p.d, p.state(), inp.t);
+    if t_len == 0 {
+        return FilterOutputs { lam: vec![], eta: vec![], y: vec![] };
+    }
+    let mut lam = vec![0.0f32; t_len * s];
+    let mut eta = vec![0.0f32; t_len * s];
+    let mut mob: Vec<Mobius64> = Vec::with_capacity(t_len);
+    let mut aff: Vec<(f64, f64)> = Vec::with_capacity(t_len);
+    for ni in 0..n {
+        for di in 0..d {
+            let idx = ni * d + di;
+            let (abar, pbar) = (p.abar[idx] as f64, p.pbar[idx] as f64);
+            // pass A: precision prefixes via the Moebius tree
+            mob.clear();
+            for t in 0..t_len {
+                let k = inp.k[t * n + ni] as f64;
+                let lv = inp.lam_v[t * d + di] as f64;
+                mob.push(Mobius64::kla_step(abar, pbar, k * k * lv));
+            }
+            blelloch_inclusive(&mut mob, |earlier, later| {
+                later.compose(earlier)
+            });
+            let l0 = lam_init[idx] as f64;
+            for t in 0..t_len {
+                lam[t * s + idx] =
+                    clamp_lam64(mob[t].apply(l0)) as f32;
+            }
+            // pass B: gates from lam[t-1], then the affine tree for eta
+            aff.clear();
+            for t in 0..t_len {
+                let lam_prev_f32 = if t == 0 {
+                    lam_init[idx]
+                } else {
+                    lam[(t - 1) * s + idx]
+                };
+                let lam_prev = lam_prev_f32 as f64;
+                let rho = 1.0 / (abar * abar + pbar * lam_prev);
+                let k = inp.k[t * n + ni] as f64;
+                let lv = inp.lam_v[t * d + di] as f64;
+                let v = inp.v[t * d + di] as f64;
+                aff.push((rho * abar, k * lv * v));
+            }
+            blelloch_inclusive(&mut aff, |earlier, later| {
+                (later.0 * earlier.0, later.0 * earlier.1 + later.1)
+            });
+            let e0 = eta_init[idx] as f64;
+            for t in 0..t_len {
+                let (fp, bp) = aff[t];
+                eta[t * s + idx] = (fp * e0 + bp) as f32;
+            }
+        }
+    }
+    let mut y = vec![0.0f32; t_len * d];
+    readout(p, inp, &lam, &eta, &mut y);
+    FilterOutputs { lam, eta, y }
+}
+
 /// Chunked two-level scan over `threads` cores (the CUDA-kernel analogue
-/// from DESIGN.md §4).  Three passes, all O(T·S):
-///   1. (parallel) per-chunk Moebius composition  -> chunk precision maps;
+/// from DESIGN.md §4), starting at the learned prior.
+pub fn filter_chunked(p: &FilterParams, inp: &FilterInputs, threads: usize)
+                      -> FilterOutputs {
+    filter_chunked_from(p, inp, threads, &p.lam0, &p.eta0)
+}
+
+/// Chunked two-level scan from an explicit belief.  Three passes, all
+/// O(T·S):
+///   1. (parallel) per-chunk Moebius composition in f64 -> chunk precision
+///      maps (f64 keeps cross-chunk carries accurate far below the 1e-5
+///      strategy-conformance tolerance);
 ///   2. (serial, cheap) chunk carries for lam and, later, eta;
 ///   3. (parallel, fused) per-chunk replay producing lam, a zero-carry
 ///      eta_partial AND the running gate-prefix G; a final light fixup adds
 ///      G[t] * eta_carry so eta needs no second heavy scan.
-/// Exact (Moebius maps compose associatively); matches `filter_sequential`
-/// to f32 roundoff.
-pub fn filter_chunked(p: &FilterParams, inp: &FilterInputs, threads: usize)
-                      -> FilterOutputs {
+/// Exact (Moebius maps compose associatively); matches
+/// `filter_sequential_from` to f32 roundoff.
+pub fn filter_chunked_from(p: &FilterParams, inp: &FilterInputs,
+                           threads: usize, lam_init: &[f32],
+                           eta_init: &[f32]) -> FilterOutputs {
     let (n, d, s, t_len) = (p.n, p.d, p.state(), inp.t);
     if t_len == 0 {
         return FilterOutputs { lam: vec![], eta: vec![], y: vec![] };
@@ -145,27 +341,28 @@ pub fn filter_chunked(p: &FilterParams, inp: &FilterInputs, threads: usize)
     let n_chunks = t_len.div_ceil(chunk_len); // may be < threads
 
     if n_chunks == 1 {
-        return filter_sequential(p, inp);
+        return filter_sequential_from(p, inp, lam_init, eta_init);
     }
     let dbg = std::env::var("KLA_SCAN_DEBUG").is_ok();
     let t0 = std::time::Instant::now();
 
-    // ---- Pass 1 (parallel): per-chunk Moebius composition ----
-    let mut summaries: Vec<Vec<Mobius>> = vec![Vec::new(); n_chunks];
+    // ---- Pass 1 (parallel): per-chunk Moebius composition (f64) ----
+    let mut summaries: Vec<Vec<Mobius64>> = vec![Vec::new(); n_chunks];
     parallel_chunk_exec(&mut summaries[..], |c, out| {
         let start = c * chunk_len;
         let end = ((c + 1) * chunk_len).min(t_len);
-        let mut mob = vec![Mobius::IDENTITY; s];
+        let mut mob = vec![Mobius64::IDENTITY; s];
         for t in start..end {
             let k_t = &inp.k[t * n..(t + 1) * n];
             let lv_t = &inp.lam_v[t * d..(t + 1) * d];
             for ni in 0..n {
-                let k2 = k_t[ni] * k_t[ni];
+                let k2 = (k_t[ni] as f64) * (k_t[ni] as f64);
                 let row = ni * d;
                 for di in 0..d {
                     let idx = row + di;
-                    let m = Mobius::kla_step(p.abar[idx], p.pbar[idx],
-                                             k2 * lv_t[di]);
+                    let m = Mobius64::kla_step(p.abar[idx] as f64,
+                                               p.pbar[idx] as f64,
+                                               k2 * lv_t[di] as f64);
                     mob[idx] = m.compose(&mob[idx]);
                 }
             }
@@ -175,14 +372,14 @@ pub fn filter_chunked(p: &FilterParams, inp: &FilterInputs, threads: usize)
 
     if dbg { eprintln!("pass1 compose: {:.1} ms", t0.elapsed().as_secs_f64()*1e3); }
     let t0 = std::time::Instant::now();
-    // ---- Pass 2a (serial, cheap): lam carries ----
-    let mut carry_lam = vec![p.lam0.clone()];
+    // ---- Pass 2a (serial, cheap): lam carries (f64 chain) ----
+    let carry0: Vec<f64> = lam_init.iter().map(|&x| x as f64).collect();
+    let mut carry_lam = vec![carry0];
     for c in 0..n_chunks - 1 {
         let prev = carry_lam.last().unwrap();
-        let mut next = vec![0.0f32; s];
+        let mut next = vec![0.0f64; s];
         for idx in 0..s {
-            next[idx] = summaries[c][idx].apply(prev[idx])
-                .clamp(LAM_MIN, LAM_MAX);
+            next[idx] = clamp_lam64(summaries[c][idx].apply(prev[idx]));
         }
         carry_lam.push(next);
     }
@@ -217,7 +414,10 @@ pub fn filter_chunked(p: &FilterParams, inp: &FilterInputs, threads: usize)
         }
         std::thread::scope(|scope| {
             for (c, lam_out, eta_out, g_out, fb) in parts {
-                let lam_carry = carry_lam[c].clone();
+                let lam_carry: Vec<f32> = carry_lam[c]
+                    .iter()
+                    .map(|&x| clamp_lam(x as f32))
+                    .collect();
                 scope.spawn(move || {
                     let start = c * chunk_len;
                     let end = ((c + 1) * chunk_len).min(t_len);
@@ -235,15 +435,10 @@ pub fn filter_chunked(p: &FilterParams, inp: &FilterInputs, threads: usize)
                             let row = ni * d;
                             for di in 0..d {
                                 let idx = row + di;
-                                let abar = p.abar[idx];
-                                let rho = 1.0
-                                    / (abar * abar
-                                        + p.pbar[idx] * cur_l[idx]);
-                                let l = (rho * cur_l[idx] + k2 * lv_t[di])
-                                    .clamp(LAM_MIN, LAM_MAX);
-                                let gate = rho * abar;
-                                let e = gate * cur_e[idx]
-                                    + kk * lv_t[di] * v_t[di];
+                                let (l, e, gate) =
+                                    kla_update(p.abar[idx], p.pbar[idx],
+                                               kk, k2, lv_t[di], v_t[di],
+                                               cur_l[idx], cur_e[idx]);
                                 // prefix gate products decay geometrically;
                                 // flush to zero before they go DENORMAL
                                 // (denormal multiplies are ~100x slower,
@@ -270,7 +465,7 @@ pub fn filter_chunked(p: &FilterParams, inp: &FilterInputs, threads: usize)
     if dbg { eprintln!("pass3 replay: {:.1} ms", t0.elapsed().as_secs_f64()*1e3); }
     let t0 = std::time::Instant::now();
     // ---- Pass 2b (serial, cheap): eta carries from (F, B) ----
-    let mut carry_eta = vec![p.eta0.clone()];
+    let mut carry_eta = vec![eta_init.to_vec()];
     for c in 0..n_chunks - 1 {
         let prev = carry_eta.last().unwrap();
         let (f_c, b_c) = &chunk_fb[c];
@@ -398,6 +593,67 @@ mod tests {
     }
 
     #[test]
+    fn blelloch_matches_sequential() {
+        let mut rng = Pcg64::seeded(4);
+        for &(t, n, d) in &[(1, 1, 1), (7, 2, 3), (64, 4, 8), (129, 3, 5)] {
+            let p = random_params(&mut rng, n, d);
+            let inp = random_inputs(&mut rng, t, n, d);
+            let seq = filter_sequential(&p, &inp);
+            let par = filter_blelloch_from(&p, &inp, &p.lam0, &p.eta0);
+            close(&par.lam, &seq.lam, 1e-4)
+                .unwrap_or_else(|e| panic!("lam t={t}: {e}"));
+            close(&par.eta, &seq.eta, 1e-4)
+                .unwrap_or_else(|e| panic!("eta t={t}: {e}"));
+            close(&par.y, &seq.y, 1e-3)
+                .unwrap_or_else(|e| panic!("y t={t}: {e}"));
+        }
+    }
+
+    #[test]
+    fn explicit_belief_resumes_mid_sequence() {
+        // prefix [0, c) then [c, T) from the carried belief must equal the
+        // full scan bit-for-bit on the sequential path.
+        let mut rng = Pcg64::seeded(5);
+        let (t, n, d) = (37, 2, 3);
+        let s = n * d;
+        let p = random_params(&mut rng, n, d);
+        let inp = random_inputs(&mut rng, t, n, d);
+        let full = filter_sequential(&p, &inp);
+        for &c in &[1usize, 7, 18, 36] {
+            let head = inp.slice(0, c);
+            let tail = inp.slice(c, t);
+            let out_head = filter_sequential(&p, &head);
+            let lam_carry = &out_head.lam[(c - 1) * s..];
+            let eta_carry = &out_head.eta[(c - 1) * s..];
+            let out_tail =
+                filter_sequential_from(&p, &tail, lam_carry, eta_carry);
+            assert_eq!(&full.lam[c * s..], &out_tail.lam[..],
+                       "lam split at {c}");
+            assert_eq!(&full.eta[c * s..], &out_tail.eta[..],
+                       "eta split at {c}");
+            assert_eq!(&full.y[c * d..], &out_tail.y[..], "y split at {c}");
+        }
+    }
+
+    #[test]
+    fn step_once_chain_matches_sequential_exactly() {
+        let mut rng = Pcg64::seeded(6);
+        let (t, n, d) = (23, 3, 4);
+        let s = n * d;
+        let p = random_params(&mut rng, n, d);
+        let inp = random_inputs(&mut rng, t, n, d);
+        let full = filter_sequential(&p, &inp);
+        let mut lam = p.lam0.clone();
+        let mut eta = p.eta0.clone();
+        for ti in 0..t {
+            let y = step_once(&p, &inp, ti, &mut lam, &mut eta);
+            assert_eq!(&full.lam[ti * s..(ti + 1) * s], &lam[..]);
+            assert_eq!(&full.eta[ti * s..(ti + 1) * s], &eta[..]);
+            assert_eq!(&full.y[ti * d..(ti + 1) * d], &y[..]);
+        }
+    }
+
+    #[test]
     fn zero_noise_linear_case() {
         let mut rng = Pcg64::seeded(2);
         let mut p = random_params(&mut rng, 2, 4);
@@ -436,5 +692,14 @@ mod tests {
                                  lam_v: vec![] };
         let out = filter_chunked(&p, &inp, 4);
         assert!(out.lam.is_empty() && out.y.is_empty());
+        let out = filter_blelloch_from(&p, &inp, &p.lam0, &p.eta0);
+        assert!(out.lam.is_empty() && out.y.is_empty());
+    }
+
+    #[test]
+    fn clamp_helpers_agree() {
+        for &x in &[-1.0f32, 0.0, 1e-9, 0.5, 1e9] {
+            assert_eq!(clamp_lam(x), clamp_lam64(x as f64) as f32);
+        }
     }
 }

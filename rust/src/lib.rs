@@ -8,7 +8,33 @@
 //!
 //! Python never runs on the request path; after artifacts are built the
 //! `repro` binary is self-contained.
+//!
+//! ## The `kla::api` surface
+//!
+//! All native scans — the KLA information filter and the GLA baseline,
+//! at train-time (full-sequence) and decode-time (per-token) granularity
+//! — go through one abstraction, [`api::Filter`]:
+//!
+//! ```ignore
+//! use kla::api::{Filter, KlaFilter, ScanPlan};
+//!
+//! let belief = KlaFilter::init(&params);                  // prior
+//! let (out, posterior) = KlaFilter::prefix(              // full scan
+//!     &params, &inputs, &belief, &ScanPlan::chunked(8));
+//! let mut carry = posterior.clone();                     // decode-time
+//! let y_next = KlaFilter::step(&params, &next_inputs, 0, &mut carry);
+//! ```
+//!
+//! Execution strategy (sequential / Blelloch tree / chunked multi-core /
+//! auto) and the batch dimension are selected by [`api::ScanPlan`];
+//! batched `(B, T, …)` work goes through [`api::prefix_batch`].  The
+//! serving engine carries uncertainty in the same belief type
+//! ([`api::KlaBelief`]) the training-side scan produces.  See
+//! `DESIGN.md` §API for the design and the migration table from the old
+//! free-function entry points, and `rust/tests/conformance_api.rs` for
+//! the laws every implementation must satisfy.
 
+pub mod api;
 pub mod baselines;
 pub mod bench;
 pub mod cli;

@@ -178,8 +178,8 @@ fn cmd_serve(m: &Matches) -> Result<()> {
 }
 
 fn cmd_scaling(m: &Matches) -> Result<()> {
-    use kla::kla::{filter_chunked, filter_sequential, random_inputs,
-                   random_params};
+    use kla::api::{Filter, KlaFilter, ScanPlan};
+    use kla::kla::{random_inputs, random_params};
     use kla::util::{Pcg64, Timer};
     let lengths: Vec<usize> = m
         .get_list("lengths")?
@@ -198,11 +198,14 @@ fn cmd_scaling(m: &Matches) -> Result<()> {
         let mut rng = Pcg64::seeded(t as u64);
         let p = random_params(&mut rng, n, d);
         let inp = random_inputs(&mut rng, t, n, d);
+        let prior = KlaFilter::init(&p);
         let timer = Timer::start();
-        let seq = filter_sequential(&p, &inp);
+        let (seq, _) =
+            KlaFilter::prefix(&p, &inp, &prior, &ScanPlan::sequential());
         let seq_ms = timer.elapsed_ms();
         let timer = Timer::start();
-        let par = filter_chunked(&p, &inp, threads);
+        let (par, _) = KlaFilter::prefix(&p, &inp, &prior,
+                                         &ScanPlan::chunked(threads));
         let par_ms = timer.elapsed_ms();
         assert!(seq.y.iter().zip(&par.y).all(|(a, b)| (a - b).abs() < 1e-2));
         println!("{t:>8} {seq_ms:>14.2} {par_ms:>14.2} {:>9.2}x",

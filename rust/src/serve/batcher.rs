@@ -84,17 +84,20 @@ impl Scheduler {
         self.slots.iter().filter(|s| !s.is_free()).count()
     }
 
-    /// Admit queued requests into free slots; returns slot indices that
-    /// must be state-reset before the next step.
-    pub fn admit(&mut self) -> Vec<usize> {
-        let mut reset = Vec::new();
+    /// Admit queued requests into free slots; returns `(slot, request id)`
+    /// pairs — the slot must be state-reset before the next step, and the
+    /// id lets the engine stamp the admit time (queue time ends here, not
+    /// at submit).
+    pub fn admit(&mut self) -> Vec<(usize, u64)> {
+        let mut admitted = Vec::new();
         for (i, slot) in self.slots.iter_mut().enumerate() {
             if !slot.is_free() {
                 continue;
             }
             let Some(req) = self.queue.pop_front() else { break };
+            let id = req.id;
             *slot = Slot::Active {
-                id: req.id,
+                id,
                 prompt: if req.prompt.is_empty() {
                     vec![self.pad]
                 } else {
@@ -104,9 +107,9 @@ impl Scheduler {
                 generated: Vec::new(),
                 max_new: req.max_new.max(1),
             };
-            reset.push(i);
+            admitted.push((i, id));
         }
-        reset
+        admitted
     }
 
     /// Tokens to feed this iteration, one per slot.
@@ -233,6 +236,18 @@ mod tests {
         assert_eq!(done.len(), 3);
         // short request finishes before the long one
         assert_eq!(done[0].id, 2);
+    }
+
+    #[test]
+    fn admit_reports_slot_and_id() {
+        let mut s = Scheduler::new(2, 0);
+        s.submit(SchedRequest { id: 7, prompt: vec![1], max_new: 1 });
+        s.submit(SchedRequest { id: 8, prompt: vec![2], max_new: 1 });
+        s.submit(SchedRequest { id: 9, prompt: vec![3], max_new: 1 });
+        let adm = s.admit();
+        assert_eq!(adm, vec![(0, 7), (1, 8)]);
+        assert!(s.admit().is_empty()); // no free slots left
+        assert_eq!(s.queue.len(), 1); // id 9 still waiting
     }
 
     #[test]

@@ -60,6 +60,65 @@ impl EngineStats {
     }
 }
 
+/// Submit/admit/finish bookkeeping for in-flight requests.
+///
+/// Queue time is the interval from submit until the scheduler actually
+/// admits the request into a batch slot — NOT submit-to-submit (the old
+/// code stamped `start_time` at submit and never updated it, so
+/// `queue_ms` was always ~0 even for requests that waited behind a full
+/// batch).  `admit()` is driven by the `(slot, id)` pairs
+/// `Scheduler::admit` reports.
+struct PendingTable {
+    rows: Vec<PendingRow>,
+}
+
+struct PendingRow {
+    id: u64,
+    resp: Sender<EngineResponse>,
+    submitted: Instant,
+    admitted: Option<Instant>,
+}
+
+impl PendingTable {
+    fn new() -> Self {
+        PendingTable { rows: Vec::new() }
+    }
+
+    fn submit(&mut self, id: u64, resp: Sender<EngineResponse>,
+              now: Instant) {
+        self.rows.push(PendingRow {
+            id,
+            resp,
+            submitted: now,
+            admitted: None,
+        });
+    }
+
+    /// Record the moment `id` entered a batch slot (idempotent).
+    fn admit(&mut self, id: u64, now: Instant) {
+        if let Some(row) = self.rows.iter_mut().find(|r| r.id == id) {
+            if row.admitted.is_none() {
+                row.admitted = Some(now);
+            }
+        }
+    }
+
+    /// Retire `id`: returns the response channel plus
+    /// `(queue_ms, total_ms)` measured at `now`.
+    fn finish(&mut self, id: u64, now: Instant)
+              -> Option<(Sender<EngineResponse>, f64, f64)> {
+        let pos = self.rows.iter().position(|r| r.id == id)?;
+        let row = self.rows.swap_remove(pos);
+        let admitted = row.admitted.unwrap_or(now);
+        let queue_ms =
+            admitted.saturating_duration_since(row.submitted).as_secs_f64()
+                * 1e3;
+        let total_ms =
+            now.saturating_duration_since(row.submitted).as_secs_f64() * 1e3;
+        Some((row.resp, queue_ms, total_ms))
+    }
+}
+
 /// Run the engine loop until `rx` disconnects (or `shutdown` is set) and
 /// all admitted work drains.  `batch_window` bounds how long we wait to
 /// fill empty slots before stepping a partially-full batch.
@@ -74,8 +133,7 @@ pub fn run_engine(session: &DecodeSession, rx: Receiver<EngineRequest>,
     let b = session.batch();
     let mut cache = BeliefStateCache::new(session.init_state()?);
     let mut sched = Scheduler::new(b, 0);
-    let mut pending: Vec<(u64, Sender<EngineResponse>, Instant, Instant)> =
-        Vec::new(); // (id, resp, submit_time, start_time)
+    let mut pending = PendingTable::new();
     let mut next_id = 0u64;
     let mut stats = EngineStats::default();
     let mut disconnected = false;
@@ -129,8 +187,7 @@ pub fn run_engine(session: &DecodeSession, rx: Receiver<EngineRequest>,
                 Some(req) => {
                     let id = next_id;
                     next_id += 1;
-                    let now = Instant::now();
-                    pending.push((id, req.resp, now, now));
+                    pending.submit(id, req.resp, Instant::now());
                     sched.submit(SchedRequest {
                         id,
                         prompt: req.prompt,
@@ -148,9 +205,12 @@ pub fn run_engine(session: &DecodeSession, rx: Receiver<EngineRequest>,
             continue;
         }
 
-        // admit into slots; reset belief state for new slots
-        for slot in sched.admit() {
+        // admit into slots: reset belief state for new slots and stamp
+        // the admit time (queue time ends here)
+        let admit_now = Instant::now();
+        for (slot, id) in sched.admit() {
             cache.reset_slot(slot);
+            pending.admit(id, admit_now);
         }
 
         // build the token vector for this iteration
@@ -181,17 +241,53 @@ pub fn run_engine(session: &DecodeSession, rx: Receiver<EngineRequest>,
             let uncertainty = cache.slot_uncertainty(f.slot);
             cache.reset_slot(f.slot);
             sched.release(f.slot);
-            if let Some(pos) = pending.iter().position(|(id, ..)| *id == f.id)
+            if let Some((resp, queue_ms, total_ms)) =
+                pending.finish(f.id, Instant::now())
             {
-                let (_, resp, submit, start) = pending.swap_remove(pos);
                 let _ = resp.send(EngineResponse {
                     tokens: f.tokens.clone(),
-                    queue_ms: (start - submit).as_secs_f64() * 1e3,
-                    total_ms: submit.elapsed().as_secs_f64() * 1e3,
+                    queue_ms,
+                    total_ms,
                     uncertainty,
                 });
             }
         }
     }
     Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn queue_time_measured_at_admit_not_submit() {
+        let (tx, _rx) = channel();
+        let mut table = PendingTable::new();
+        let t0 = Instant::now();
+        table.submit(1, tx, t0);
+        let admit = t0 + Duration::from_millis(25);
+        table.admit(1, admit);
+        // a later admit call must not move the stamp (idempotent)
+        table.admit(1, admit + Duration::from_millis(50));
+        let finish = admit + Duration::from_millis(10);
+        let (_resp, queue_ms, total_ms) = table.finish(1, finish).unwrap();
+        assert!((queue_ms - 25.0).abs() < 1e-6, "queue_ms {queue_ms}");
+        assert!((total_ms - 35.0).abs() < 1e-6, "total_ms {total_ms}");
+        // finished rows are gone
+        assert!(table.finish(1, finish).is_none());
+    }
+
+    #[test]
+    fn unadmitted_request_counts_full_wait_as_queue_time() {
+        let (tx, _rx) = channel();
+        let mut table = PendingTable::new();
+        let t0 = Instant::now();
+        table.submit(2, tx, t0);
+        let finish = t0 + Duration::from_millis(7);
+        let (_resp, queue_ms, total_ms) = table.finish(2, finish).unwrap();
+        assert!((queue_ms - 7.0).abs() < 1e-6, "queue_ms {queue_ms}");
+        assert!((total_ms - 7.0).abs() < 1e-6, "total_ms {total_ms}");
+    }
 }

@@ -10,14 +10,19 @@
 
 use anyhow::{bail, Result};
 
+use crate::api::KlaBelief;
 use crate::runtime::session::DecodeState;
 
-/// Snapshot of one slot's state (conv window + posterior).
+/// Snapshot of one slot's state: the causal-conv window plus one
+/// posterior belief per layer — the same [`crate::api::Filter::Belief`]
+/// type (`KlaBelief`) the native training-side scan produces, so a
+/// serving slot's uncertainty flows through the exact carry the `prefix`
+/// / `step` API defines.
 #[derive(Clone, Debug)]
 pub struct SlotSnapshot {
     pub conv: Vec<f32>,
-    pub lam: Vec<f32>,
-    pub eta: Vec<f32>,
+    /// Per-layer posterior (precision, information mean).
+    pub beliefs: Vec<KlaBelief>,
 }
 
 pub struct BeliefStateCache {
@@ -88,43 +93,48 @@ impl BeliefStateCache {
         }
     }
 
+    /// One layer's posterior belief for a slot, as the shared carry type.
+    pub fn slot_belief(&self, layer: usize, slot: usize) -> KlaBelief {
+        debug_assert!(layer < self.layers && slot < self.batch);
+        let p0 = (layer * self.batch + slot) * self.post_row;
+        KlaBelief::from_parts(
+            self.state.lam.data()[p0..p0 + self.post_row].to_vec(),
+            self.state.eta.data()[p0..p0 + self.post_row].to_vec(),
+        )
+    }
+
     /// Snapshot a slot (e.g. end of a conversation turn).
     pub fn snapshot(&self, slot: usize) -> SlotSnapshot {
         let mut snap = SlotSnapshot {
             conv: Vec::with_capacity(self.layers * self.conv_row),
-            lam: Vec::with_capacity(self.layers * self.post_row),
-            eta: Vec::with_capacity(self.layers * self.post_row),
+            beliefs: Vec::with_capacity(self.layers),
         };
         for l in 0..self.layers {
             let c0 = (l * self.batch + slot) * self.conv_row;
             snap.conv
                 .extend_from_slice(&self.state.conv.data()[c0..c0 + self.conv_row]);
-            let p0 = (l * self.batch + slot) * self.post_row;
-            snap.lam
-                .extend_from_slice(&self.state.lam.data()[p0..p0 + self.post_row]);
-            snap.eta
-                .extend_from_slice(&self.state.eta.data()[p0..p0 + self.post_row]);
+            snap.beliefs.push(self.slot_belief(l, slot));
         }
         snap
     }
 
     /// Restore a previously snapshotted belief state into a slot.
     pub fn restore(&mut self, slot: usize, snap: &SlotSnapshot) -> Result<()> {
-        if snap.lam.len() != self.layers * self.post_row {
+        if snap.beliefs.len() != self.layers
+            || snap.beliefs.iter().any(|b| b.state() != self.post_row)
+        {
             bail!("snapshot shape mismatch");
         }
-        for l in 0..self.layers {
+        for (l, belief) in snap.beliefs.iter().enumerate() {
             let c0 = (l * self.batch + slot) * self.conv_row;
             self.state.conv.data_mut()[c0..c0 + self.conv_row]
                 .copy_from_slice(
                     &snap.conv[l * self.conv_row..(l + 1) * self.conv_row]);
             let p0 = (l * self.batch + slot) * self.post_row;
             self.state.lam.data_mut()[p0..p0 + self.post_row]
-                .copy_from_slice(
-                    &snap.lam[l * self.post_row..(l + 1) * self.post_row]);
+                .copy_from_slice(&belief.lam);
             self.state.eta.data_mut()[p0..p0 + self.post_row]
-                .copy_from_slice(
-                    &snap.eta[l * self.post_row..(l + 1) * self.post_row]);
+                .copy_from_slice(&belief.eta);
         }
         Ok(())
     }
@@ -140,18 +150,21 @@ impl BeliefStateCache {
     }
 
     /// Mean posterior variance (1/lam) of a slot — the serving-side
-    /// uncertainty signal (paper §7: epistemic uncertainty applications).
+    /// uncertainty signal (paper §7: epistemic uncertainty applications),
+    /// computed with the same `api::mean_variance` formula the belief
+    /// type and the native variance trace use (over borrowed slices; no
+    /// per-request allocation).
     pub fn slot_uncertainty(&self, slot: usize) -> f32 {
+        if self.layers == 0 {
+            return 0.0;
+        }
         let mut acc = 0.0f64;
-        let mut n = 0usize;
         for l in 0..self.layers {
             let p0 = (l * self.batch + slot) * self.post_row;
-            for &lam in &self.state.lam.data()[p0..p0 + self.post_row] {
-                acc += 1.0 / lam.max(1e-9) as f64;
-                n += 1;
-            }
+            let lam = &self.state.lam.data()[p0..p0 + self.post_row];
+            acc += crate::api::mean_variance(lam) as f64;
         }
-        (acc / n.max(1) as f64) as f32
+        (acc / self.layers as f64) as f32
     }
 }
 
@@ -216,6 +229,20 @@ mod tests {
         assert_eq!(cache.state().eta.get(&[0, slot, 0, 0]), 0.0);
         cache.restore(slot, &snap).unwrap();
         assert_eq!(cache.state().eta.get(&[0, slot, 0, 0]), 7.0);
+    }
+
+    #[test]
+    fn snapshot_exposes_filter_beliefs() {
+        let cache = BeliefStateCache::new(tiny_state());
+        let snap = cache.snapshot(0);
+        assert_eq!(snap.beliefs.len(), 2); // one KlaBelief per layer
+        for belief in &snap.beliefs {
+            assert_eq!(belief.state(), 2 * 4); // N*D
+            // lam was initialised to 1.5 everywhere
+            assert!((belief.mean_variance() - 1.0 / 1.5).abs() < 1e-6);
+        }
+        // slot_belief agrees with the snapshot
+        assert_eq!(cache.slot_belief(1, 0), snap.beliefs[1]);
     }
 
     #[test]

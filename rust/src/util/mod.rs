@@ -7,6 +7,7 @@
 pub mod json;
 pub mod logging;
 pub mod pool;
+pub mod prefix;
 pub mod rng;
 pub mod timer;
 

@@ -1,0 +1,109 @@
+//! Generic associative prefix-scan primitives.
+//!
+//! `blelloch_inclusive` is the work-efficient tree scan (up-sweep +
+//! down-sweep, O(n) work / O(log n) depth) shared by the `Blelloch`
+//! execution strategy of both native filters: the KLA Moebius scan
+//! (`kla::scan`) and the GLA affine scan (`baselines`).  It is generic
+//! over any associative combiner, so the same tree drives Moebius maps,
+//! affine (F, B) pairs, and plain sums alike.
+
+/// In-place inclusive prefix scan with a work-efficient tree schedule.
+///
+/// `op(earlier, later)` combines the aggregate of an earlier index range
+/// with the aggregate of the adjacent later range; it must be associative
+/// but need not be commutative.  After the call, `xs[i]` holds
+/// `op(op(..op(x0, x1).., ), xi)` — the inclusive prefix through `i`.
+///
+/// Up-sweep: for each power-of-two stride `d`, fold the left sibling into
+/// the right (`xs[2d-1 + k*2d] = op(xs[.. - d], xs[..])`), building
+/// subtree reductions.  Down-sweep: descending strides propagate the
+/// prefix ending at `i - d` into the interior positions (`i = 3d-1 +
+/// k*2d`).  Handles arbitrary (non-power-of-two) lengths.
+pub fn blelloch_inclusive<M: Copy, F: Fn(&M, &M) -> M>(xs: &mut [M], op: F) {
+    let n = xs.len();
+    if n < 2 {
+        return;
+    }
+    // up-sweep
+    let mut d = 1usize;
+    while d < n {
+        let step = d * 2;
+        let mut i = step - 1;
+        while i < n {
+            xs[i] = op(&xs[i - d], &xs[i]);
+            i += step;
+        }
+        d = step;
+    }
+    // down-sweep (inclusive variant: fill interior prefixes)
+    d /= 2;
+    while d > 0 {
+        let step = d * 2;
+        let mut i = 3 * d - 1;
+        while i < n {
+            xs[i] = op(&xs[i - d], &xs[i]);
+            i += step;
+        }
+        d /= 2;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_sequential_sum_all_lengths() {
+        for n in 0..130usize {
+            let mut xs: Vec<u64> = (0..n as u64).map(|i| i + 1).collect();
+            blelloch_inclusive(&mut xs, |a, b| a + b);
+            let mut acc = 0u64;
+            for (i, &x) in xs.iter().enumerate() {
+                acc += i as u64 + 1;
+                assert_eq!(x, acc, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn non_commutative_op_keeps_order() {
+        // 2x2 integer matrix product: associative, NOT commutative, exact.
+        type M = [i64; 4];
+        fn matmul(a: &M, b: &M) -> M {
+            // combined = later * earlier (apply earlier first)
+            [
+                b[0] * a[0] + b[1] * a[2],
+                b[0] * a[1] + b[1] * a[3],
+                b[2] * a[0] + b[3] * a[2],
+                b[2] * a[1] + b[3] * a[3],
+            ]
+        }
+        for n in 1..40usize {
+            let mats: Vec<M> = (0..n as i64)
+                .map(|i| [1, i % 3, (i + 1) % 2, 1])
+                .collect();
+            let mut xs = mats.clone();
+            blelloch_inclusive(&mut xs, matmul);
+            let mut acc = [1i64, 0, 0, 1];
+            for (i, m) in mats.iter().enumerate() {
+                acc = matmul(&acc, m);
+                assert_eq!(xs[i], acc, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn affine_pairs_compose() {
+        // (F2, B2) ∘ (F1, B1) = (F2*F1, F2*B1 + B2), exact over integers
+        let n = 37usize;
+        let pairs: Vec<(i64, i64)> =
+            (0..n as i64).map(|i| (1 + i % 2, i - 3)).collect();
+        let mut xs = pairs.clone();
+        blelloch_inclusive(&mut xs, |a, b| (b.0 * a.0, b.0 * a.1 + b.1));
+        let mut acc = (1i64, 0i64);
+        for (i, p) in pairs.iter().enumerate() {
+            acc = (p.0 * acc.0, p.0 * acc.1 + p.1);
+            assert_eq!(xs[i], acc, "i={i}");
+        }
+    }
+}

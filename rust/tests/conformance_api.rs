@@ -1,0 +1,284 @@
+//! Conformance suite for the unified `kla::api` surface (the laws in the
+//! `Filter` trait docs):
+//!
+//! 1. **Strategy conformance** — every `ScanPlan` strategy (Sequential,
+//!    Blelloch, Chunked at thread counts 1/2/8) produces the same
+//!    trajectories within 1e-5 (relative), for both the KLA information
+//!    filter and the GLA baseline.
+//! 2. **Carry-split equivalence** — splitting a sequence at arbitrary
+//!    points and chaining `prefix()` through the carried belief (or
+//!    chaining `step()` token by token) reproduces the one-shot
+//!    `prefix()`; on the sequential strategy this is exact (bit-for-bit).
+//! 3. **Batched entry** — `prefix_batch` equals per-row `prefix`.
+
+use kla::api::{prefix_batch, Filter, GlaFilter, GlaInputs, GlaParams,
+               KlaFilter, ScanPlan};
+use kla::kla::{FilterInputs, FilterParams};
+use kla::util::Pcg64;
+
+const TOL: f32 = 1e-5;
+
+fn assert_close(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length {} vs {}", a.len(),
+               b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= TOL * (1.0 + x.abs().max(y.abs())),
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+/// Well-conditioned random params: gates bounded away from 1 so f32
+/// round-off cannot amplify past the 1e-5 conformance tolerance.
+fn tame_params(rng: &mut Pcg64, n: usize, d: usize) -> FilterParams {
+    FilterParams {
+        n,
+        d,
+        abar: (0..n * d).map(|_| rng.range_f32(0.7, 0.95)).collect(),
+        pbar: (0..n * d).map(|_| rng.range_f32(0.02, 0.2)).collect(),
+        lam0: (0..n * d).map(|_| rng.range_f32(0.5, 2.0)).collect(),
+        eta0: (0..n * d).map(|_| rng.range_f32(-0.1, 0.1)).collect(),
+    }
+}
+
+fn tame_inputs(rng: &mut Pcg64, t: usize, n: usize, d: usize)
+               -> FilterInputs {
+    FilterInputs {
+        t,
+        k: (0..t * n).map(|_| rng.normal_f32().clamp(-2.0, 2.0)).collect(),
+        q: (0..t * n).map(|_| rng.normal_f32()).collect(),
+        v: (0..t * d).map(|_| rng.normal_f32()).collect(),
+        lam_v: (0..t * d).map(|_| rng.range_f32(0.1, 1.5)).collect(),
+    }
+}
+
+fn gla_case(rng: &mut Pcg64, t: usize, s: usize) -> (GlaParams, GlaInputs) {
+    (
+        GlaParams {
+            s,
+            h0: (0..s).map(|_| rng.normal_f32()).collect(),
+        },
+        GlaInputs {
+            t,
+            f: (0..t * s).map(|_| rng.range_f32(0.3, 0.95)).collect(),
+            b: (0..t * s).map(|_| rng.normal_f32()).collect(),
+        },
+    )
+}
+
+/// Every non-sequential plan the suite must reconcile with the
+/// sequential reference (thread counts 1/2/8 per the issue).
+fn all_plans() -> [ScanPlan; 4] {
+    [
+        ScanPlan::blelloch(),
+        ScanPlan::chunked(1),
+        ScanPlan::chunked(2),
+        ScanPlan::chunked(8),
+    ]
+}
+
+// ------------------------------------------------ strategy conformance ---
+
+#[test]
+fn kla_strategies_agree_within_tolerance() {
+    let mut rng = Pcg64::seeded(0xC0FF);
+    for &(t, n, d) in
+        &[(1usize, 1usize, 1usize), (7, 2, 3), (64, 4, 8), (129, 3, 5),
+          (300, 2, 4)]
+    {
+        let p = tame_params(&mut rng, n, d);
+        let inp = tame_inputs(&mut rng, t, n, d);
+        let prior = KlaFilter::init(&p);
+        let (seq, seq_belief) =
+            KlaFilter::prefix(&p, &inp, &prior, &ScanPlan::sequential());
+        for plan in all_plans() {
+            let (par, par_belief) =
+                KlaFilter::prefix(&p, &inp, &prior, &plan);
+            let tag = format!("kla t={t} n={n} d={d} plan={plan:?}");
+            assert_close(&seq.lam, &par.lam, &format!("{tag} lam"));
+            assert_close(&seq.eta, &par.eta, &format!("{tag} eta"));
+            assert_close(&seq.y, &par.y, &format!("{tag} y"));
+            assert_close(&seq_belief.lam, &par_belief.lam,
+                         &format!("{tag} belief.lam"));
+            assert_close(&seq_belief.eta, &par_belief.eta,
+                         &format!("{tag} belief.eta"));
+        }
+    }
+}
+
+#[test]
+fn gla_strategies_agree_within_tolerance() {
+    let mut rng = Pcg64::seeded(0x61A);
+    for &(t, s) in &[(1usize, 1usize), (7, 3), (64, 16), (129, 5),
+                     (300, 8)]
+    {
+        let (p, inp) = gla_case(&mut rng, t, s);
+        let prior = GlaFilter::init(&p);
+        let (seq, seq_belief) =
+            GlaFilter::prefix(&p, &inp, &prior, &ScanPlan::sequential());
+        for plan in all_plans() {
+            let (par, par_belief) =
+                GlaFilter::prefix(&p, &inp, &prior, &plan);
+            let tag = format!("gla t={t} s={s} plan={plan:?}");
+            assert_close(&seq, &par, &format!("{tag} h"));
+            assert_close(&seq_belief.h, &par_belief.h,
+                         &format!("{tag} belief"));
+        }
+    }
+}
+
+// --------------------------------------------- carry-split equivalence ---
+
+/// Split `[0, t)` into random contiguous segments.
+fn random_splits(rng: &mut Pcg64, t: usize) -> Vec<(usize, usize)> {
+    let mut cuts = vec![0usize, t];
+    for _ in 0..3 {
+        cuts.push(rng.usize_below(t + 1));
+    }
+    cuts.sort_unstable();
+    cuts.dedup();
+    cuts.windows(2).map(|w| (w[0], w[1])).collect()
+}
+
+#[test]
+fn kla_prefix_chaining_is_exact_on_sequential() {
+    let mut rng = Pcg64::seeded(0x5E9);
+    for &(t, n, d) in &[(5usize, 1usize, 1usize), (37, 2, 3), (128, 3, 4)]
+    {
+        let p = tame_params(&mut rng, n, d);
+        let inp = tame_inputs(&mut rng, t, n, d);
+        let prior = KlaFilter::init(&p);
+        let plan = ScanPlan::sequential();
+        let (full, full_belief) = KlaFilter::prefix(&p, &inp, &prior, &plan);
+        for _ in 0..4 {
+            let mut belief = prior.clone();
+            let mut lam = Vec::new();
+            let mut eta = Vec::new();
+            let mut y = Vec::new();
+            for (lo, hi) in random_splits(&mut rng, t) {
+                let part = KlaFilter::slice(&inp, lo, hi);
+                let (out, next) =
+                    KlaFilter::prefix(&p, &part, &belief, &plan);
+                lam.extend(out.lam);
+                eta.extend(out.eta);
+                y.extend(out.y);
+                belief = next;
+            }
+            // sequential chaining runs the identical op sequence: exact
+            assert_eq!(full.lam, lam, "lam t={t}");
+            assert_eq!(full.eta, eta, "eta t={t}");
+            assert_eq!(full.y, y, "y t={t}");
+            assert_eq!(full_belief, belief, "belief t={t}");
+        }
+    }
+}
+
+#[test]
+fn kla_prefix_chaining_conforms_on_parallel_plans() {
+    let mut rng = Pcg64::seeded(0xCAFE);
+    let (t, n, d) = (200usize, 2usize, 4usize);
+    let p = tame_params(&mut rng, n, d);
+    let inp = tame_inputs(&mut rng, t, n, d);
+    let prior = KlaFilter::init(&p);
+    let (full, _) =
+        KlaFilter::prefix(&p, &inp, &prior, &ScanPlan::sequential());
+    for plan in all_plans() {
+        let mut belief = prior.clone();
+        let mut y = Vec::new();
+        for (lo, hi) in random_splits(&mut rng, t) {
+            let part = KlaFilter::slice(&inp, lo, hi);
+            let (out, next) = KlaFilter::prefix(&p, &part, &belief, &plan);
+            y.extend(out.y);
+            belief = next;
+        }
+        assert_close(&full.y, &y, &format!("chained y plan={plan:?}"));
+    }
+}
+
+#[test]
+fn kla_step_chain_reproduces_prefix_exactly() {
+    let mut rng = Pcg64::seeded(0x57E9);
+    for &(t, n, d) in &[(1usize, 1usize, 1usize), (23, 3, 4), (100, 2, 6)]
+    {
+        let p = tame_params(&mut rng, n, d);
+        let inp = tame_inputs(&mut rng, t, n, d);
+        let prior = KlaFilter::init(&p);
+        let (full, full_belief) =
+            KlaFilter::prefix(&p, &inp, &prior, &ScanPlan::sequential());
+        let s = p.state();
+        let mut belief = prior.clone();
+        for ti in 0..t {
+            let y = KlaFilter::step(&p, &inp, ti, &mut belief);
+            assert_eq!(&full.lam[ti * s..(ti + 1) * s], &belief.lam[..],
+                       "lam t={t} ti={ti}");
+            assert_eq!(&full.eta[ti * s..(ti + 1) * s], &belief.eta[..],
+                       "eta t={t} ti={ti}");
+            assert_eq!(&full.y[ti * d..(ti + 1) * d], &y[..],
+                       "y t={t} ti={ti}");
+        }
+        assert_eq!(full_belief, belief);
+    }
+}
+
+#[test]
+fn gla_carry_split_equivalence() {
+    let mut rng = Pcg64::seeded(0x61A2);
+    for &(t, s) in &[(5usize, 2usize), (37, 4), (128, 8)] {
+        let (p, inp) = gla_case(&mut rng, t, s);
+        let prior = GlaFilter::init(&p);
+        let plan = ScanPlan::sequential();
+        let (full, full_belief) = GlaFilter::prefix(&p, &inp, &prior, &plan);
+        // prefix() chaining over random splits: exact on sequential
+        let mut belief = prior.clone();
+        let mut h = Vec::new();
+        for (lo, hi) in random_splits(&mut rng, t) {
+            let part = GlaFilter::slice(&inp, lo, hi);
+            let (out, next) = GlaFilter::prefix(&p, &part, &belief, &plan);
+            h.extend(out);
+            belief = next;
+        }
+        assert_eq!(full, h, "h t={t}");
+        assert_eq!(full_belief, belief);
+        // step() chaining: exact
+        let mut belief = prior.clone();
+        for ti in 0..t {
+            let row = GlaFilter::step(&p, &inp, ti, &mut belief);
+            assert_eq!(&full[ti * s..(ti + 1) * s], &row[..], "ti={ti}");
+        }
+        assert_eq!(full_belief, belief);
+    }
+}
+
+// -------------------------------------------------------- batched entry ---
+
+#[test]
+fn batched_entry_point_matches_per_row_prefix() {
+    let mut rng = Pcg64::seeded(0xBA7C);
+    let (n, d) = (2usize, 4usize);
+    let p = tame_params(&mut rng, n, d);
+    let rows: Vec<FilterInputs> = (0..6)
+        .map(|i| tame_inputs(&mut rng, 20 + 13 * i, n, d))
+        .collect();
+    let beliefs: Vec<_> = (0..rows.len())
+        .map(|_| KlaFilter::init(&p))
+        .collect();
+    let solo: Vec<_> = rows
+        .iter()
+        .zip(&beliefs)
+        .map(|(r, b)| KlaFilter::prefix(&p, r, b, &ScanPlan::sequential()))
+        .collect();
+    for workers in [1usize, 2, 8] {
+        let plan = ScanPlan::chunked(workers).with_batch(rows.len());
+        let batched =
+            prefix_batch::<KlaFilter>(&p, &rows, &beliefs, &plan);
+        assert_eq!(batched.len(), solo.len());
+        for (i, ((bo, bb), (so, sb))) in
+            batched.iter().zip(&solo).enumerate()
+        {
+            // batched rows run the sequential op order: exact agreement
+            assert_eq!(bo, so, "row {i} output (workers={workers})");
+            assert_eq!(bb, sb, "row {i} belief (workers={workers})");
+        }
+    }
+}

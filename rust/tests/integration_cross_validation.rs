@@ -5,7 +5,8 @@
 //!      serving path must reproduce the scan-parallel forward token by
 //!      token (requires `make artifacts`).
 
-use kla::kla::{filter_chunked, filter_sequential, FilterInputs, FilterParams};
+use kla::api::{Filter, KlaFilter, ScanPlan};
+use kla::kla::{FilterInputs, FilterParams};
 
 // ---- pinned vectors from python/compile/kernels/ref.py (seed 1234) ----
 const T: usize = 6;
@@ -70,20 +71,46 @@ fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
 #[test]
 fn native_sequential_matches_python_oracle() {
     let (p, inp) = pinned_case();
-    let out = filter_sequential(&p, &inp);
+    let (out, belief) = KlaFilter::prefix(&p, &inp, &KlaFilter::init(&p),
+                                          &ScanPlan::sequential());
     assert_close(&out.lam[(T - 1) * N * D..], LAM_LAST, 1e-5, "lam[T-1]");
     assert_close(&out.eta[(T - 1) * N * D..], ETA_LAST, 1e-5, "eta[T-1]");
     assert_close(&out.y, Y, 1e-5, "y");
+    // the carried belief IS the pinned posterior
+    assert_close(&belief.lam, LAM_LAST, 1e-5, "belief.lam");
+    assert_close(&belief.eta, ETA_LAST, 1e-5, "belief.eta");
 }
 
 #[test]
-fn native_chunked_matches_python_oracle() {
+fn native_parallel_strategies_match_python_oracle() {
     let (p, inp) = pinned_case();
-    for threads in [1, 2, 3, 6] {
-        let out = filter_chunked(&p, &inp, threads);
-        assert_close(&out.y, Y, 1e-4, "y (chunked)");
+    let prior = KlaFilter::init(&p);
+    let plans = [
+        ScanPlan::blelloch(),
+        ScanPlan::chunked(1),
+        ScanPlan::chunked(2),
+        ScanPlan::chunked(3),
+        ScanPlan::chunked(6),
+    ];
+    for plan in plans {
+        let (out, _) = KlaFilter::prefix(&p, &inp, &prior, &plan);
+        assert_close(&out.y, Y, 1e-4, "y (parallel)");
         assert_close(&out.lam[(T - 1) * N * D..], LAM_LAST, 1e-4, "lam");
     }
+}
+
+#[test]
+fn native_step_chain_matches_python_oracle() {
+    // the decode-time face of the same primitive: step() over every token
+    let (p, inp) = pinned_case();
+    let mut belief = KlaFilter::init(&p);
+    let mut y_all = Vec::new();
+    for t in 0..T {
+        y_all.extend(KlaFilter::step(&p, &inp, t, &mut belief));
+    }
+    assert_close(&y_all, Y, 1e-5, "y (stepped)");
+    assert_close(&belief.lam, LAM_LAST, 1e-5, "lam (stepped)");
+    assert_close(&belief.eta, ETA_LAST, 1e-5, "eta (stepped)");
 }
 
 // --------------------------------------------------------- XLA vs XLA ----

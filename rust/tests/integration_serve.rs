@@ -48,7 +48,10 @@ fn serve_end_to_end() {
     let r2 = c.request(&[5, 6, 7], 4).unwrap();
     assert_eq!(r.req("tokens").unwrap(), r2.req("tokens").unwrap());
 
-    // concurrent load: more requests than slots, varied prompt lengths
+    // concurrent load: more requests than slots (12 > max_batch 8), varied
+    // prompt lengths — the overflow requests must wait for a free slot,
+    // which has to show up as a nonzero queue_ms (measured submit->admit;
+    // the old engine stamped admit time at submit, so this was always 0).
     let mut joins = Vec::new();
     for i in 0..12u64 {
         let addr = addr.clone();
@@ -58,11 +61,16 @@ fn serve_end_to_end() {
                 (0..(1 + i % 5)).map(|j| (i + j) as i32 % 64).collect();
             let r = c.request(&prompt, 3).unwrap();
             assert_eq!(r.req("tokens").unwrap().as_arr().unwrap().len(), 3);
+            r.req("queue_ms").unwrap().as_f64().unwrap()
         }));
     }
-    for j in joins {
-        j.join().unwrap();
-    }
+    let queue_times: Vec<f64> =
+        joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let max_queue = queue_times.iter().fold(0.0f64, |a, &b| a.max(b));
+    assert!(queue_times.iter().all(|&q| q >= 0.0));
+    assert!(max_queue > 0.0,
+            "no request waited behind the full batch (queue_ms all zero: \
+             {queue_times:?})");
 
     // malformed request gets an error, connection stays usable
     let bad = {

@@ -2,27 +2,63 @@
 //! the coordinator invariants (routing, batching, state) plus the filter
 //! algebra at scale.
 
-use kla::baselines::{linear_scan_chunked, linear_scan_sequential};
-use kla::kla::{filter_chunked, filter_sequential, random_inputs,
-               random_params, Mobius};
+use kla::api::{Filter, GlaFilter, GlaInputs, GlaParams, KlaFilter,
+               ScanPlan};
+use kla::kla::{random_inputs, random_params, Mobius};
 use kla::serve::batcher::{Feed, SchedRequest, Scheduler};
 use kla::testing::property;
 
 #[test]
-fn prop_chunked_equals_sequential() {
-    property("chunked==sequential", 40, |g| {
+fn prop_scan_strategies_equal_sequential() {
+    property("strategies==sequential", 40, |g| {
         let t = g.usize_in(1, 200);
         let n = g.usize_in(1, 6);
         let d = g.usize_in(1, 10);
         let threads = g.usize_in(1, 9);
         let p = random_params(g.rng, n, d);
         let inp = random_inputs(g.rng, t, n, d);
-        let seq = filter_sequential(&p, &inp);
-        let par = filter_chunked(&p, &inp, threads);
-        for (i, (a, b)) in seq.y.iter().zip(&par.y).enumerate() {
-            if (a - b).abs() > 1e-3 * (1.0 + a.abs()) {
+        let prior = KlaFilter::init(&p);
+        let (seq, _) =
+            KlaFilter::prefix(&p, &inp, &prior, &ScanPlan::sequential());
+        for plan in [ScanPlan::chunked(threads), ScanPlan::blelloch()] {
+            let (par, _) = KlaFilter::prefix(&p, &inp, &prior, &plan);
+            for (i, (a, b)) in seq.y.iter().zip(&par.y).enumerate() {
+                if (a - b).abs() > 1e-3 * (1.0 + a.abs()) {
+                    return Err(format!(
+                        "t={t} n={n} d={d} plan={plan:?} y[{i}]: {a} vs {b}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_carried_belief_resumes_scan() {
+    // prefix(head) + prefix(tail, carry) == prefix(full) for any split —
+    // the carry-split law, at property-test scale.
+    property("carry-split", 40, |g| {
+        let t = g.usize_in(2, 120);
+        let n = g.usize_in(1, 4);
+        let d = g.usize_in(1, 6);
+        let cut = g.usize_in(1, t - 1);
+        let p = random_params(g.rng, n, d);
+        let inp = random_inputs(g.rng, t, n, d);
+        let prior = KlaFilter::init(&p);
+        let plan = ScanPlan::sequential();
+        let (full, _) = KlaFilter::prefix(&p, &inp, &prior, &plan);
+        let head = KlaFilter::slice(&inp, 0, cut);
+        let tail = KlaFilter::slice(&inp, cut, t);
+        let (_, carry) = KlaFilter::prefix(&p, &head, &prior, &plan);
+        let (rest, _) = KlaFilter::prefix(&p, &tail, &carry, &plan);
+        let s = p.state();
+        for (i, (a, b)) in
+            full.lam[cut * s..].iter().zip(&rest.lam).enumerate()
+        {
+            if a != b {
                 return Err(format!(
-                    "t={t} n={n} d={d} threads={threads} y[{i}]: {a} vs {b}"
+                    "t={t} cut={cut} lam[{i}]: {a} vs {b} (not exact)"
                 ));
             }
         }
@@ -52,7 +88,8 @@ fn prop_precision_bounded_by_noise_floor() {
         for x in inp.k.iter_mut() {
             *x = x.clamp(-2.0, 2.0);
         }
-        let out = filter_sequential(&p, &inp);
+        let (out, _) = KlaFilter::prefix(&p, &inp, &KlaFilter::init(&p),
+                                         &ScanPlan::sequential());
         // upper bound: lam <= 1/pbar' + phi_max where prior precision can
         // never exceed 1/pbar (predict step adds pbar variance)
         let bound = 1.0 / pbar + phi_max + 1.0;
@@ -100,19 +137,26 @@ fn prop_mobius_prefix_equals_stepwise() {
 }
 
 #[test]
-fn prop_linear_scan_threads_agree() {
-    property("linear scan threads", 40, |g| {
+fn prop_linear_scan_strategies_agree() {
+    property("linear scan strategies", 40, |g| {
         let t = g.usize_in(1, 300);
         let s = g.usize_in(1, 32);
         let threads = g.usize_in(1, 8);
-        let f = g.vec_f32(t * s, 0.2, 0.99);
-        let b = g.vec_normal(t * s);
-        let init = g.vec_normal(s);
-        let seq = linear_scan_sequential(t, s, &f, &b, &init);
-        let par = linear_scan_chunked(t, s, &f, &b, &init, threads);
-        for (i, (x, y)) in seq.iter().zip(&par).enumerate() {
-            if (x - y).abs() > 1e-3 * (1.0 + x.abs()) {
-                return Err(format!("[{i}] {x} vs {y}"));
+        let p = GlaParams { s, h0: g.vec_normal(s) };
+        let inp = GlaInputs {
+            t,
+            f: g.vec_f32(t * s, 0.2, 0.99),
+            b: g.vec_normal(t * s),
+        };
+        let prior = GlaFilter::init(&p);
+        let (seq, _) =
+            GlaFilter::prefix(&p, &inp, &prior, &ScanPlan::sequential());
+        for plan in [ScanPlan::chunked(threads), ScanPlan::blelloch()] {
+            let (par, _) = GlaFilter::prefix(&p, &inp, &prior, &plan);
+            for (i, (x, y)) in seq.iter().zip(&par).enumerate() {
+                if (x - y).abs() > 1e-3 * (1.0 + x.abs()) {
+                    return Err(format!("plan={plan:?} [{i}] {x} vs {y}"));
+                }
             }
         }
         Ok(())

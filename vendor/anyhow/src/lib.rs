@@ -1,0 +1,135 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access to crates.io (DESIGN.md
+//! §S16), so this vendored crate implements exactly the subset the repo
+//! uses: `Result`, `Error`, the `anyhow!` / `bail!` macros, and the
+//! `Context` extension trait with `context` / `with_context`.
+
+use std::fmt;
+
+/// A type-erased error: a rendered message plus an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap with a higher-level context message (kept in the rendering).
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+
+    /// The root-cause error, if this error wrapped one.
+    pub fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match &self.source {
+            Some(e) => Some(&**e),
+            None => None,
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that
+// keeps this blanket conversion coherent (the same trick anyhow uses).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding context to fallible results.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+        -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+        -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/path")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = io_fail().unwrap_err();
+        assert!(err.source().is_some());
+    }
+
+    #[test]
+    fn context_prepends() {
+        let err: Result<()> = io_fail()
+            .map(|_| ())
+            .with_context(|| "reading config".to_string());
+        let msg = format!("{}", err.unwrap_err());
+        assert!(msg.starts_with("reading config: "), "{msg}");
+    }
+
+    #[test]
+    fn bail_and_anyhow_format() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative input {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "negative input -1");
+        let e = anyhow!("plain {}", 42);
+        assert_eq!(e.to_string(), "plain 42");
+    }
+}
