@@ -1,13 +1,16 @@
 //! Serving demo: boot the belief-state server, fire concurrent requests,
 //! print per-request latency + the posterior-uncertainty signal, then
-//! shut down and report engine stats.
+//! shut down and report engine stats.  Uses the XLA artifact backend when
+//! artifacts are present, else the pure-Rust native backend — the demo
+//! always runs.
 //!
 //!   cargo run --release --example serve_demo [n_requests]
 
 use anyhow::Result;
 use kla::config::ServeConfig;
-use kla::runtime::Runtime;
-use kla::serve::{serve, Client};
+use kla::kla::NativeLmConfig;
+use kla::runtime::{NativeBackend, Runtime};
+use kla::serve::{serve, serve_native, Client};
 
 fn main() -> Result<()> {
     let n_requests: usize = std::env::args()
@@ -15,9 +18,6 @@ fn main() -> Result<()> {
         .and_then(|s| s.parse().ok())
         .unwrap_or(16);
 
-    let rt = Runtime::discover()?;
-    let init = rt.load("lm_kla_init")?;
-    let params = init.run(&[])?;
     let cfg = ServeConfig {
         addr: "127.0.0.1:0".into(),
         artifact: "serve_kla_b8".into(),
@@ -25,8 +25,25 @@ fn main() -> Result<()> {
         batch_window_us: 300,
         ..Default::default()
     };
-    let handle = serve(rt.dir().to_path_buf(), cfg.artifact.clone(),
-                       params, &cfg)?;
+    // try the full XLA setup; ANY failure (missing dir, missing
+    // artifact, compile error) falls back to the native backend so the
+    // demo always runs
+    let xla = || -> Result<kla::serve::ServerHandle> {
+        let rt = Runtime::discover()?;
+        let init = rt.load("lm_kla_init")?;
+        let params = init.run(&[])?;
+        serve(rt.dir().to_path_buf(), cfg.artifact.clone(), params, &cfg)
+    };
+    let handle = match xla() {
+        Ok(h) => h,
+        Err(e) => {
+            println!("xla backend unavailable ({e}); using the native \
+                      backend");
+            let backend =
+                NativeBackend::seeded(&NativeLmConfig::default(), 0, 8);
+            serve_native(backend, &cfg)?
+        }
+    };
     let addr = handle.addr.clone();
     println!("server up on {addr}; sending {n_requests} concurrent \
               requests (8 slots, continuous batching)\n");

@@ -4,8 +4,9 @@
 
 use kla::bench::Suite;
 use kla::config::ServeConfig;
-use kla::runtime::Runtime;
-use kla::serve::{serve, Client};
+use kla::kla::NativeLmConfig;
+use kla::runtime::{NativeBackend, Runtime};
+use kla::serve::{serve, serve_native, Client};
 use kla::util::Stats;
 
 fn load_once(addr: &str, n_requests: usize, max_new: usize)
@@ -32,16 +33,52 @@ fn load_once(addr: &str, n_requests: usize, max_new: usize)
 }
 
 fn main() {
+    let mut suite = Suite::new("serve_throughput");
+
+    // ---- native backend: always runs (no artifacts required) ----
+    for (slots, label) in [(8usize, "native_batch8"), (1, "native_batch1")]
+    {
+        for window_us in [100u64, 1000] {
+            let cfg = ServeConfig {
+                addr: "127.0.0.1:0".into(),
+                backend: "native".into(),
+                batch_window_us: window_us,
+                max_new_tokens: 8,
+                ..Default::default()
+            };
+            let backend =
+                NativeBackend::seeded(&NativeLmConfig::default(), 0, slots);
+            let handle = serve_native(backend, &cfg).unwrap();
+            let addr = handle.addr.clone();
+            let _ = load_once(&addr, 2, 2); // warm
+            let (tps, lat) = load_once(&addr, 24, 8);
+            let stats = handle.stop().unwrap();
+            suite.metric_row(
+                &format!("{label}/window{window_us}us"),
+                vec![
+                    ("tokens_per_s".into(), tps),
+                    ("p50_ms".into(), lat.percentile(50.0)),
+                    ("p99_ms".into(), lat.percentile(99.0)),
+                    ("engine_step_ms".into(), stats.mean_step_ms()),
+                    ("occupancy".into(),
+                     stats.batch_occupancy.iter().sum::<f64>()
+                         / stats.batch_occupancy.len().max(1) as f64),
+                ],
+            );
+        }
+    }
+
+    // ---- XLA artifact backend: skips without artifacts ----
     let rt = match Runtime::discover() {
         Ok(rt) => rt,
         Err(e) => {
-            println!("SKIP serve bench: {e}");
+            println!("note: xla rows skipped (no artifacts): {e}");
+            suite.finish();
             return;
         }
     };
     let init = rt.load("lm_kla_init").unwrap();
     let params = init.run(&[]).unwrap();
-    let mut suite = Suite::new("serve_throughput");
 
     for (artifact, label) in [("serve_kla_b8", "batch8"),
                               ("serve_kla_b1", "batch1")] {

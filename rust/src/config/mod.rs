@@ -152,23 +152,30 @@ impl TrainConfig {
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     pub addr: String,
+    /// Decode backend: "xla" (artifact session) | "native" (pure Rust).
+    pub backend: String,
     pub artifact: String,
     pub max_batch: usize,
     /// Batching window: how long the batcher waits to fill a batch.
     pub batch_window_us: u64,
     pub max_new_tokens: usize,
     pub state_pool: usize,
+    /// Weight seed for the native backend's deterministic init (ignored
+    /// when a checkpoint supplies the weights, and by the XLA backend).
+    pub seed: u64,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
             addr: "127.0.0.1:7878".into(),
+            backend: "xla".into(),
             artifact: "serve_kla_b8".into(),
             max_batch: 8,
             batch_window_us: 500,
             max_new_tokens: 32,
             state_pool: 64,
+            seed: 0,
         }
     }
 }

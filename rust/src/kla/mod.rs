@@ -4,13 +4,17 @@
 //! algebra, the OU prior discretisation, and three filter execution
 //! strategies (sequential, scan, chunked multi-threaded).  Used for the
 //! Fig. 4 compute-scaling study, property tests, and cross-validation
-//! against the Python oracle.
+//! against the Python oracle.  `model` builds a full pure-Rust KLA
+//! language model on top of these kernels — the native decode backend
+//! the serve stack runs on without XLA artifacts (DESIGN.md §S17).
 
 pub mod mobius;
+pub mod model;
 pub mod ou;
 pub mod scan;
 
 pub use mobius::{Mobius, Mobius64};
+pub use model::{NativeLm, NativeLmConfig};
 pub use scan::{clamp_lam, filter_blelloch_from, filter_chunked,
                filter_chunked_from, filter_scan, filter_sequential,
                filter_sequential_from, random_inputs, random_params,

@@ -1,0 +1,685 @@
+//! Pure-Rust KLA language model — the native decode substrate.
+//!
+//! Mirrors `python/compile/models/{lm,kla,decode}.py` at the (B, T) level:
+//! embed -> L x [RMSNorm -> causal conv(K) -> SiLU -> (k, q, v, lam_v)
+//! projections -> information-filter update -> gated output -> residual]
+//! -> RMSNorm -> head.  The filter update is NOT re-implemented here: the
+//! full-sequence `prefix()` and the O(1) `step()` both go through
+//! `kla::api::Filter` (`KlaFilter`), so model-level step-vs-prefix parity
+//! reduces to the carry laws the conformance suite already pins at the
+//! filter level.  Every per-position op (norm, conv window, projections)
+//! is one shared helper used by both paths, so the parity is exact up to
+//! identical f32 op order.
+//!
+//! Weights come from a deterministic seeded init (`NativeLm::seeded`,
+//! mirroring `init_lm`'s scales) or from the train-checkpoint / init
+//! artifact flatten ABI (`NativeLm::from_values`): per layer, the sorted
+//! block keys [a_raw, blam, conv_b, conv_w, dt_raw, lam0_raw, norm,
+//! p_raw, wg, wk, wlam, wo, wq, wv], then embed, head, norm_f.
+
+use anyhow::{bail, Result};
+
+use crate::api::{Filter, KlaBelief, KlaFilter, ScanPlan};
+use crate::kla::ou::{discretise_raw, sigmoid, softplus};
+use crate::kla::scan::{FilterInputs, FilterParams};
+use crate::runtime::backend::DecodeState;
+use crate::runtime::Value;
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::Pcg64;
+
+/// Value-precision floor (python `models/kla.py::LAMV_FLOOR`).
+pub const LAMV_FLOOR: f32 = 1e-4;
+/// Prior-precision floor (python `models/kla.py::LAM0_FLOOR`).
+pub const LAM0_FLOOR: f32 = 1e-3;
+
+/// Arrays per KLA block in the flatten ABI (sorted block keys).
+const BLOCK_ARRAYS: usize = 14;
+
+/// Hyperparameters of a native KLA LM (the pure-KLA subset of the Python
+/// `ModelConfig`; hybrids contain softmax attention and have no O(1)
+/// recurrent state, so they stay on the XLA path).
+#[derive(Clone, Copy, Debug)]
+pub struct NativeLmConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_state: usize,
+    pub conv_kernel: usize,
+    pub process_noise: bool,
+    pub ou_exact: bool,
+}
+
+impl Default for NativeLmConfig {
+    fn default() -> Self {
+        NativeLmConfig {
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_state: 4,
+            conv_kernel: 4,
+            process_noise: true,
+            ou_exact: true,
+        }
+    }
+}
+
+/// One KLA mixer block: raw weights plus the OU dynamics already
+/// discretised into `filter` (abar, pbar, lam0; eta0 = 0) — the same
+/// `FilterParams` the native scan strategies consume.
+#[derive(Clone, Debug)]
+pub struct KlaBlock {
+    pub norm: Vec<f32>,     // (D)
+    pub conv_w: Vec<f32>,   // (K, D) row-major
+    pub conv_b: Vec<f32>,   // (D)
+    pub wk: Vec<f32>,       // (D, N)
+    pub wq: Vec<f32>,       // (D, N)
+    pub wv: Vec<f32>,       // (D, D)
+    pub wlam: Vec<f32>,     // (D, D)
+    pub blam: Vec<f32>,     // (D)
+    pub wg: Vec<f32>,       // (D, D)
+    pub wo: Vec<f32>,       // (D, D)
+    // raw OU / prior params (kept for checkpoint round-tripping)
+    pub a_raw: Vec<f32>,    // (N, D)
+    pub p_raw: Vec<f32>,    // (N, D)
+    pub dt_raw: Vec<f32>,   // (N, D)
+    pub lam0_raw: Vec<f32>, // (N, D)
+    pub filter: FilterParams,
+}
+
+impl KlaBlock {
+    fn seeded(cfg: &NativeLmConfig, rng: &mut Pcg64) -> Self {
+        let (d, n, k) = (cfg.d_model, cfg.n_state, cfg.conv_kernel);
+        let a_raw: Vec<f32> =
+            (0..n * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let p_raw = vec![-4.6f32; n * d]; // softplus^-1(0.01), paper G.2
+        let dt_raw: Vec<f32> =
+            (0..n * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let lam0_raw = vec![0.5413f32; n * d]; // softplus(0.5413) = 1.0
+        let filter = build_filter(cfg, &a_raw, &p_raw, &dt_raw, &lam0_raw);
+        KlaBlock {
+            norm: vec![1.0; d],
+            conv_w: (0..k * d).map(|_| rng.normal_f32() * 0.2).collect(),
+            conv_b: vec![0.0; d],
+            wk: dense(rng, d, n, 1.0),
+            wq: dense(rng, d, n, 1.0),
+            wv: dense(rng, d, d, 1.0),
+            wlam: dense(rng, d, d, 0.5),
+            blam: vec![0.5413; d],
+            wg: dense(rng, d, d, 1.0),
+            wo: dense(rng, d, d, 0.5),
+            a_raw,
+            p_raw,
+            dt_raw,
+            lam0_raw,
+            filter,
+        }
+    }
+}
+
+/// LeCun-normal dense init, std = scale / sqrt(d_in), row-major
+/// (d_in, d_out) — same scales as `models/common.py::dense_init`.
+fn dense(rng: &mut Pcg64, d_in: usize, d_out: usize, scale: f32)
+         -> Vec<f32> {
+    let std = scale / (d_in as f32).sqrt();
+    (0..d_in * d_out).map(|_| rng.normal_f32() * std).collect()
+}
+
+/// Discretise the raw OU params into the native `FilterParams` carry.
+fn build_filter(cfg: &NativeLmConfig, a_raw: &[f32], p_raw: &[f32],
+                dt_raw: &[f32], lam0_raw: &[f32]) -> FilterParams {
+    let s = cfg.n_state * cfg.d_model;
+    let mut abar = vec![0.0f32; s];
+    let mut pbar = vec![0.0f32; s];
+    let mut lam0 = vec![0.0f32; s];
+    for i in 0..s {
+        let (ab, pb) = discretise_raw(a_raw[i], p_raw[i], dt_raw[i],
+                                      cfg.process_noise, cfg.ou_exact);
+        abar[i] = ab;
+        pbar[i] = pb;
+        lam0[i] = softplus(lam0_raw[i]) + LAM0_FLOOR;
+    }
+    FilterParams {
+        n: cfg.n_state,
+        d: cfg.d_model,
+        abar,
+        pbar,
+        lam0,
+        eta0: vec![0.0; s],
+    }
+}
+
+/// The native KLA language model.
+#[derive(Clone, Debug)]
+pub struct NativeLm {
+    pub cfg: NativeLmConfig,
+    pub embed: Vec<f32>,  // (V, D)
+    pub blocks: Vec<KlaBlock>,
+    pub norm_f: Vec<f32>, // (D)
+    pub head: Vec<f32>,   // (D, V)
+}
+
+// ------------------------------------------------- per-position helpers ---
+// One set of helpers used by BOTH prefix() and step(), in the same op
+// order, so the two paths agree bit-for-bit (the model-level analogue of
+// the filter carry-split law).
+
+fn rmsnorm_row(x: &[f32], scale: &[f32]) -> Vec<f32> {
+    let d = x.len();
+    let ms: f32 = x.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+    let r = 1.0 / (ms + 1e-6).sqrt();
+    x.iter().zip(scale).map(|(&v, &s)| v * r * s).collect()
+}
+
+fn l2norm_row(x: &mut [f32]) {
+    let n: f32 = x.iter().map(|&v| v * v).sum::<f32>();
+    let r = 1.0 / (n + 1e-6).sqrt();
+    for v in x.iter_mut() {
+        *v *= r;
+    }
+}
+
+fn silu(x: f32) -> f32 {
+    x * sigmoid(x)
+}
+
+/// out[j] = sum_i x[i] * w[i * d_out + j]  (w row-major (d_in, d_out)).
+fn matvec(x: &[f32], w: &[f32], d_in: usize, d_out: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), d_in);
+    debug_assert_eq!(w.len(), d_in * d_out);
+    let mut out = vec![0.0f32; d_out];
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * d_out..(i + 1) * d_out];
+        for (o, &wij) in out.iter_mut().zip(row) {
+            *o += xi * wij;
+        }
+    }
+    out
+}
+
+/// Causal-conv output at one position: `window` holds the K-1 previous
+/// normed inputs (oldest first), `xn` the current one — the O(1) mirror
+/// of `causal_conv1d` (python `conv_state_step`).
+fn conv_row(conv_w: &[f32], conv_b: &[f32], window: &[f32], xn: &[f32],
+            k_sz: usize, d: usize) -> Vec<f32> {
+    let mut cy = vec![0.0f32; d];
+    for ki in 0..k_sz - 1 {
+        let wrow = &conv_w[ki * d..(ki + 1) * d];
+        let srow = &window[ki * d..(ki + 1) * d];
+        for di in 0..d {
+            cy[di] += wrow[di] * srow[di];
+        }
+    }
+    let wlast = &conv_w[(k_sz - 1) * d..k_sz * d];
+    for di in 0..d {
+        cy[di] += wlast[di] * xn[di] + conv_b[di];
+    }
+    cy
+}
+
+/// Shift the conv window left by one row and append `xn`.
+fn push_window(window: &mut [f32], xn: &[f32], k_sz: usize, d: usize) {
+    if k_sz < 2 {
+        return;
+    }
+    window.copy_within(d.., 0);
+    window[(k_sz - 2) * d..].copy_from_slice(xn);
+}
+
+/// One position's projections for one sequence; advances `window`.
+struct RowProj {
+    k: Vec<f32>,     // (N)
+    q: Vec<f32>,     // (N)
+    v: Vec<f32>,     // (D)
+    lam_v: Vec<f32>, // (D)
+    gate: Vec<f32>,  // (D)
+}
+
+fn project_row(blk: &KlaBlock, x: &[f32], window: &mut [f32], d: usize,
+               n: usize, k_sz: usize) -> RowProj {
+    let xn = rmsnorm_row(x, &blk.norm);
+    let mut c = conv_row(&blk.conv_w, &blk.conv_b, window, &xn, k_sz, d);
+    push_window(window, &xn, k_sz, d);
+    for v in c.iter_mut() {
+        *v = silu(*v);
+    }
+    let mut k = matvec(&c, &blk.wk, d, n);
+    l2norm_row(&mut k);
+    let mut q = matvec(&c, &blk.wq, d, n);
+    l2norm_row(&mut q);
+    let v = matvec(&c, &blk.wv, d, d);
+    let mut lam_v = matvec(&c, &blk.wlam, d, d);
+    for (lv, &b) in lam_v.iter_mut().zip(&blk.blam) {
+        *lv = softplus(*lv + b) + LAMV_FLOOR;
+    }
+    let mut gate = matvec(&xn, &blk.wg, d, d);
+    for g in gate.iter_mut() {
+        *g = silu(*g);
+    }
+    RowProj { k, q, v, lam_v, gate }
+}
+
+impl NativeLm {
+    /// Deterministic seeded init, mirroring `init_lm`'s scales.
+    pub fn seeded(cfg: &NativeLmConfig, seed: u64) -> Self {
+        assert!(cfg.vocab >= 2 && cfg.d_model >= 1 && cfg.n_layers >= 1
+                    && cfg.n_state >= 1 && cfg.conv_kernel >= 1,
+                "degenerate NativeLmConfig {cfg:?}");
+        let mut rng = Pcg64::seeded(seed);
+        let (v, d) = (cfg.vocab, cfg.d_model);
+        let embed: Vec<f32> =
+            (0..v * d).map(|_| rng.normal_f32() * 0.02).collect();
+        let blocks = (0..cfg.n_layers)
+            .map(|_| KlaBlock::seeded(cfg, &mut rng))
+            .collect();
+        let norm_f = vec![1.0; d];
+        let head = dense(&mut rng, d, v, 0.5);
+        NativeLm { cfg: *cfg, embed, blocks, norm_f, head }
+    }
+
+    /// Load from the flatten-ABI param list (the order `{base}_init`
+    /// emits and `train::checkpoint` stores).  Dimensions are inferred
+    /// from the array shapes; the two ablation switches are not recorded
+    /// in the ABI and must be supplied.
+    pub fn from_values(values: &[Value], process_noise: bool,
+                       ou_exact: bool) -> Result<Self> {
+        if values.len() < BLOCK_ARRAYS + 3
+            || (values.len() - 3) % BLOCK_ARRAYS != 0
+        {
+            bail!("param list of {} arrays is not a KLA LM \
+                   ({BLOCK_ARRAYS} per block + embed/head/norm_f)",
+                  values.len());
+        }
+        let n_layers = (values.len() - 3) / BLOCK_ARRAYS;
+        let embed_t = values[n_layers * BLOCK_ARRAYS].as_f32()?;
+        let es = embed_t.shape();
+        if es.len() != 2 {
+            bail!("embed must be 2-D, got {es:?}");
+        }
+        let (vocab, d_model) = (es[0], es[1]);
+        let a0 = values[0].as_f32()?;
+        if a0.shape().len() != 2 || a0.shape()[1] != d_model {
+            bail!("a_raw shape {:?} inconsistent with d_model {d_model}",
+                  a0.shape());
+        }
+        let n_state = a0.shape()[0];
+        let cw0 = values[3].as_f32()?;
+        if cw0.shape().len() != 2 || cw0.shape()[1] != d_model {
+            bail!("conv_w shape {:?} inconsistent with d_model {d_model}",
+                  cw0.shape());
+        }
+        let conv_kernel = cw0.shape()[0];
+        if vocab < 2 || d_model < 1 || n_state < 1 || conv_kernel < 1 {
+            bail!("degenerate inferred dims: vocab={vocab} d={d_model} \
+                   n={n_state} k={conv_kernel}");
+        }
+        let cfg = NativeLmConfig {
+            vocab,
+            d_model,
+            n_layers,
+            n_state,
+            conv_kernel,
+            process_noise,
+            ou_exact,
+        };
+        let (d, n, k) = (d_model, n_state, conv_kernel);
+        let grab = |i: usize, shape: &[usize], what: &str|
+                    -> Result<Vec<f32>> {
+            let t = values[i].as_f32()?;
+            if t.shape() != shape {
+                bail!("{what} (param {i}): shape {:?}, expected {shape:?}",
+                      t.shape());
+            }
+            Ok(t.data().to_vec())
+        };
+        let mut blocks = Vec::with_capacity(n_layers);
+        for l in 0..n_layers {
+            let b = l * BLOCK_ARRAYS;
+            let a_raw = grab(b, &[n, d], "a_raw")?;
+            let blam = grab(b + 1, &[d], "blam")?;
+            let conv_b = grab(b + 2, &[d], "conv_b")?;
+            let conv_w = grab(b + 3, &[k, d], "conv_w")?;
+            let dt_raw = grab(b + 4, &[n, d], "dt_raw")?;
+            let lam0_raw = grab(b + 5, &[n, d], "lam0_raw")?;
+            let norm = grab(b + 6, &[d], "norm")?;
+            let p_raw = grab(b + 7, &[n, d], "p_raw")?;
+            let wg = grab(b + 8, &[d, d], "wg")?;
+            let wk = grab(b + 9, &[d, n], "wk")?;
+            let wlam = grab(b + 10, &[d, d], "wlam")?;
+            let wo = grab(b + 11, &[d, d], "wo")?;
+            let wq = grab(b + 12, &[d, n], "wq")?;
+            let wv = grab(b + 13, &[d, d], "wv")?;
+            let filter =
+                build_filter(&cfg, &a_raw, &p_raw, &dt_raw, &lam0_raw);
+            blocks.push(KlaBlock {
+                norm, conv_w, conv_b, wk, wq, wv, wlam, blam, wg, wo,
+                a_raw, p_raw, dt_raw, lam0_raw, filter,
+            });
+        }
+        let base = n_layers * BLOCK_ARRAYS;
+        let embed = grab(base, &[vocab, d], "embed")?;
+        let head = grab(base + 1, &[d, vocab], "head")?;
+        let norm_f = grab(base + 2, &[d], "norm_f")?;
+        Ok(NativeLm { cfg, embed, blocks, norm_f, head })
+    }
+
+    /// Export in the same flatten ABI (inverse of `from_values`), e.g.
+    /// for `train::checkpoint::save`.
+    pub fn to_values(&self) -> Vec<Value> {
+        let (v, d, n, k) = (self.cfg.vocab, self.cfg.d_model,
+                            self.cfg.n_state, self.cfg.conv_kernel);
+        let t = |shape: &[usize], data: &[f32]| {
+            Value::F32(Tensor::new(shape, data.to_vec())
+                .expect("consistent model shapes"))
+        };
+        let mut out = Vec::with_capacity(
+            self.blocks.len() * BLOCK_ARRAYS + 3);
+        for blk in &self.blocks {
+            out.push(t(&[n, d], &blk.a_raw));
+            out.push(t(&[d], &blk.blam));
+            out.push(t(&[d], &blk.conv_b));
+            out.push(t(&[k, d], &blk.conv_w));
+            out.push(t(&[n, d], &blk.dt_raw));
+            out.push(t(&[n, d], &blk.lam0_raw));
+            out.push(t(&[d], &blk.norm));
+            out.push(t(&[n, d], &blk.p_raw));
+            out.push(t(&[d, d], &blk.wg));
+            out.push(t(&[d, n], &blk.wk));
+            out.push(t(&[d, d], &blk.wlam));
+            out.push(t(&[d, d], &blk.wo));
+            out.push(t(&[d, n], &blk.wq));
+            out.push(t(&[d, d], &blk.wv));
+        }
+        out.push(t(&[v, d], &self.embed));
+        out.push(t(&[d, v], &self.head));
+        out.push(t(&[d], &self.norm_f));
+        out
+    }
+
+    /// Embedding row for a token id, clamped into [0, vocab) — network
+    /// clients can send arbitrary ids.
+    fn embed_row(&self, tok: i32) -> &[f32] {
+        let d = self.cfg.d_model;
+        let id = (tok.max(0) as usize).min(self.cfg.vocab - 1);
+        &self.embed[id * d..(id + 1) * d]
+    }
+
+    /// Fresh decode state for `batch` sequences: conv window zeros,
+    /// precision at the learned prior lam0, information mean zero —
+    /// the native mirror of `decode.py::decode_init_state`.
+    pub fn init_state(&self, batch: usize) -> DecodeState {
+        let (l, d, n, k) = (self.cfg.n_layers, self.cfg.d_model,
+                            self.cfg.n_state, self.cfg.conv_kernel);
+        let conv = Tensor::zeros(&[l, batch, k - 1, d]);
+        let mut lam = Tensor::zeros(&[l, batch, n, d]);
+        for (li, blk) in self.blocks.iter().enumerate() {
+            for bi in 0..batch {
+                let off = (li * batch + bi) * n * d;
+                lam.data_mut()[off..off + n * d]
+                    .copy_from_slice(&blk.filter.lam0);
+            }
+        }
+        let eta = Tensor::zeros(&[l, batch, n, d]);
+        DecodeState { conv, lam, eta }
+    }
+
+    /// Batched full-sequence forward: tokens (B, T) -> logits (B, T, V).
+    /// Each block runs the per-position projections through the same
+    /// helpers `step()` uses, then one `KlaFilter::prefix` per sequence
+    /// (sequential plan — bit-identical to chained `step()`).
+    pub fn prefix(&self, tokens: &IntTensor) -> Result<Tensor> {
+        let ts = tokens.shape();
+        if ts.len() != 2 {
+            bail!("prefix wants (B, T) tokens, got {ts:?}");
+        }
+        let (b, t) = (ts[0], ts[1]);
+        let (d, n, k_sz, v) = (self.cfg.d_model, self.cfg.n_state,
+                               self.cfg.conv_kernel, self.cfg.vocab);
+        let mut h = vec![0.0f32; b * t * d];
+        for (i, &tok) in tokens.data().iter().enumerate() {
+            h[i * d..(i + 1) * d].copy_from_slice(self.embed_row(tok));
+        }
+        for blk in &self.blocks {
+            for bi in 0..b {
+                let mut window = vec![0.0f32; (k_sz - 1) * d];
+                let mut k_all = Vec::with_capacity(t * n);
+                let mut q_all = Vec::with_capacity(t * n);
+                let mut v_all = Vec::with_capacity(t * d);
+                let mut lamv_all = Vec::with_capacity(t * d);
+                let mut gate_all = Vec::with_capacity(t * d);
+                for ti in 0..t {
+                    let row = &h[(bi * t + ti) * d..(bi * t + ti + 1) * d];
+                    let pr = project_row(blk, row, &mut window, d, n, k_sz);
+                    k_all.extend_from_slice(&pr.k);
+                    q_all.extend_from_slice(&pr.q);
+                    v_all.extend_from_slice(&pr.v);
+                    lamv_all.extend_from_slice(&pr.lam_v);
+                    gate_all.extend_from_slice(&pr.gate);
+                }
+                let inp = FilterInputs {
+                    t,
+                    k: k_all,
+                    q: q_all,
+                    v: v_all,
+                    lam_v: lamv_all,
+                };
+                let prior = KlaBelief::prior(&blk.filter);
+                let (out, _) = KlaFilter::prefix(&blk.filter, &inp, &prior,
+                                                 &ScanPlan::sequential());
+                for ti in 0..t {
+                    let y = &out.y[ti * d..(ti + 1) * d];
+                    let gate = &gate_all[ti * d..(ti + 1) * d];
+                    let yg: Vec<f32> =
+                        y.iter().zip(gate).map(|(&a, &g)| a * g).collect();
+                    let delta = matvec(&yg, &blk.wo, d, d);
+                    let row =
+                        &mut h[(bi * t + ti) * d..(bi * t + ti + 1) * d];
+                    for di in 0..d {
+                        row[di] += delta[di];
+                    }
+                }
+            }
+        }
+        let mut logits = vec![0.0f32; b * t * v];
+        for r in 0..b * t {
+            let hn = rmsnorm_row(&h[r * d..(r + 1) * d], &self.norm_f);
+            let lrow = matvec(&hn, &self.head, d, v);
+            logits[r * v..(r + 1) * v].copy_from_slice(&lrow);
+        }
+        Tensor::new(&[b, t, v], logits)
+    }
+
+    /// One autoregressive step: tokens (B,) + state -> (logits (B, V),
+    /// new state).  State layout (L,B,K-1,D) / (L,B,N,D) — the same one
+    /// the XLA decode artifact uses, so `BeliefStateCache` works
+    /// unchanged on either backend.
+    pub fn step(&self, tokens: &IntTensor, state: &DecodeState)
+                -> Result<(Tensor, DecodeState)> {
+        let ts = tokens.shape();
+        if ts.len() != 1 {
+            bail!("step wants (B,) tokens, got {ts:?}");
+        }
+        let b = ts[0];
+        let (l_n, d, n, k_sz, v) =
+            (self.cfg.n_layers, self.cfg.d_model, self.cfg.n_state,
+             self.cfg.conv_kernel, self.cfg.vocab);
+        if state.conv.shape() != [l_n, b, k_sz - 1, d]
+            || state.lam.shape() != [l_n, b, n, d]
+            || state.eta.shape() != [l_n, b, n, d]
+        {
+            bail!("decode state shapes {:?}/{:?}/{:?} do not match model \
+                   (L={l_n}, B={b}, K={k_sz}, N={n}, D={d})",
+                  state.conv.shape(), state.lam.shape(),
+                  state.eta.shape());
+        }
+        let conv_sz = (k_sz - 1) * d;
+        let post_sz = n * d;
+        let mut next = state.clone();
+        let mut logits = vec![0.0f32; b * v];
+        for bi in 0..b {
+            let mut x = self.embed_row(tokens.data()[bi]).to_vec();
+            for (li, blk) in self.blocks.iter().enumerate() {
+                let coff = (li * b + bi) * conv_sz;
+                let poff = (li * b + bi) * post_sz;
+                let pr = {
+                    let window =
+                        &mut next.conv.data_mut()[coff..coff + conv_sz];
+                    project_row(blk, &x, window, d, n, k_sz)
+                };
+                let mut belief = KlaBelief::from_parts(
+                    next.lam.data()[poff..poff + post_sz].to_vec(),
+                    next.eta.data()[poff..poff + post_sz].to_vec(),
+                );
+                let inp = FilterInputs {
+                    t: 1,
+                    k: pr.k,
+                    q: pr.q,
+                    v: pr.v,
+                    lam_v: pr.lam_v,
+                };
+                let y = KlaFilter::step(&blk.filter, &inp, 0, &mut belief);
+                next.lam.data_mut()[poff..poff + post_sz]
+                    .copy_from_slice(&belief.lam);
+                next.eta.data_mut()[poff..poff + post_sz]
+                    .copy_from_slice(&belief.eta);
+                let yg: Vec<f32> = y
+                    .iter()
+                    .zip(&pr.gate)
+                    .map(|(&a, &g)| a * g)
+                    .collect();
+                let delta = matvec(&yg, &blk.wo, d, d);
+                for di in 0..d {
+                    x[di] += delta[di];
+                }
+            }
+            let hn = rmsnorm_row(&x, &self.norm_f);
+            let lrow = matvec(&hn, &self.head, d, v);
+            logits[bi * v..(bi + 1) * v].copy_from_slice(&lrow);
+        }
+        Ok((Tensor::new(&[b, v], logits)?, next))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> NativeLmConfig {
+        NativeLmConfig {
+            vocab: 16,
+            d_model: 8,
+            n_layers: 2,
+            n_state: 2,
+            conv_kernel: 3,
+            process_noise: true,
+            ou_exact: true,
+        }
+    }
+
+    #[test]
+    fn seeded_init_is_deterministic_and_seed_sensitive() {
+        let a = NativeLm::seeded(&tiny(), 5);
+        let b = NativeLm::seeded(&tiny(), 5);
+        assert_eq!(a.embed, b.embed);
+        assert_eq!(a.head, b.head);
+        assert_eq!(a.blocks[1].wk, b.blocks[1].wk);
+        let c = NativeLm::seeded(&tiny(), 6);
+        assert_ne!(a.embed, c.embed);
+    }
+
+    #[test]
+    fn prefix_logits_finite_and_spread() {
+        let lm = NativeLm::seeded(&tiny(), 1);
+        let toks = IntTensor::new(&[2, 9],
+                                  (0..18).map(|i| i % 16).collect())
+            .unwrap();
+        let logits = lm.prefix(&toks).unwrap();
+        assert_eq!(logits.shape(), &[2, 9, 16]);
+        assert!(logits.data().iter().all(|x| x.is_finite()));
+        let (lo, hi) = logits
+            .data()
+            .iter()
+            .fold((f32::MAX, f32::MIN), |(l, h), &x| (l.min(x), h.max(x)));
+        assert!(hi - lo > 1e-4, "uniform logits: [{lo}, {hi}]");
+    }
+
+    #[test]
+    fn step_chain_matches_prefix_exactly() {
+        let lm = NativeLm::seeded(&tiny(), 2);
+        let (b, t) = (2usize, 7usize);
+        let toks: Vec<i32> = (0..b * t).map(|i| (i * 5 % 16) as i32)
+            .collect();
+        let full = lm
+            .prefix(&IntTensor::new(&[b, t], toks.clone()).unwrap())
+            .unwrap();
+        let mut state = lm.init_state(b);
+        for ti in 0..t {
+            let col: Vec<i32> =
+                (0..b).map(|bi| toks[bi * t + ti]).collect();
+            let (logits, next) = lm
+                .step(&IntTensor::new(&[b], col).unwrap(), &state)
+                .unwrap();
+            state = next;
+            for bi in 0..b {
+                for vi in 0..16 {
+                    assert_eq!(logits.get(&[bi, vi]),
+                               full.get(&[bi, ti, vi]),
+                               "bi={bi} ti={ti} vi={vi}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_range_tokens_clamp() {
+        let lm = NativeLm::seeded(&tiny(), 3);
+        let state = lm.init_state(1);
+        let lo = lm.step(&IntTensor::new(&[1], vec![-7]).unwrap(), &state)
+            .unwrap();
+        let lo0 = lm.step(&IntTensor::new(&[1], vec![0]).unwrap(), &state)
+            .unwrap();
+        assert_eq!(lo.0.data(), lo0.0.data());
+        let hi = lm.step(&IntTensor::new(&[1], vec![999]).unwrap(), &state)
+            .unwrap();
+        let hi0 = lm.step(&IntTensor::new(&[1], vec![15]).unwrap(), &state)
+            .unwrap();
+        assert_eq!(hi.0.data(), hi0.0.data());
+    }
+
+    #[test]
+    fn values_roundtrip_preserves_model() {
+        let lm = NativeLm::seeded(&tiny(), 4);
+        let vals = lm.to_values();
+        assert_eq!(vals.len(), 2 * 14 + 3);
+        let lm2 = NativeLm::from_values(&vals, true, true).unwrap();
+        assert_eq!(lm2.cfg.vocab, 16);
+        assert_eq!(lm2.cfg.n_layers, 2);
+        assert_eq!(lm2.cfg.conv_kernel, 3);
+        let toks = IntTensor::new(&[1, 6], vec![1, 2, 3, 4, 5, 6]).unwrap();
+        assert_eq!(lm.prefix(&toks).unwrap().data(),
+                   lm2.prefix(&toks).unwrap().data());
+    }
+
+    #[test]
+    fn from_values_rejects_malformed_lists() {
+        let lm = NativeLm::seeded(&tiny(), 4);
+        let mut vals = lm.to_values();
+        vals.pop();
+        assert!(NativeLm::from_values(&vals, true, true).is_err());
+    }
+
+    #[test]
+    fn step_increases_precision() {
+        let lm = NativeLm::seeded(&tiny(), 8);
+        let state = lm.init_state(1);
+        let lam0: f32 = state.lam.data().iter().sum();
+        let (_, next) = lm
+            .step(&IntTensor::new(&[1], vec![3]).unwrap(), &state)
+            .unwrap();
+        let lam1: f32 = next.lam.data().iter().sum();
+        assert!(lam1.is_finite() && (lam1 - lam0).abs() > 1e-9,
+                "step left precision untouched: {lam0} -> {lam1}");
+    }
+}

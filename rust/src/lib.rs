@@ -33,6 +33,15 @@
 //! `DESIGN.md` §API for the design and the migration table from the old
 //! free-function entry points, and `rust/tests/conformance_api.rs` for
 //! the laws every implementation must satisfy.
+//!
+//! ## Decode backends
+//!
+//! Serving is generic over [`runtime::backend::DecodeBackend`]: the
+//! pure-Rust [`runtime::NativeBackend`] (over [`kla::NativeLm`]) runs the
+//! whole engine/batcher/belief-cache stack with no XLA artifacts, while
+//! [`runtime::DecodeSession`] is the PJRT implementation of the same
+//! seam.  See `DESIGN.md` §S17 for the backend matrix and per-backend
+//! test coverage.
 
 pub mod api;
 pub mod baselines;

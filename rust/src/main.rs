@@ -32,11 +32,22 @@ fn app() -> App {
         )
         .command(
             Command::new("serve", "serve a KLA model (O(1) belief-state decode)")
-                .opt("artifact", "serve_kla_b8", "decode artifact base")
+                .opt("backend", "xla", "decode backend: xla|native")
+                .opt("artifact", "serve_kla_b8", "decode artifact base (xla)")
                 .opt("addr", "127.0.0.1:7878", "listen address")
                 .opt("checkpoint", "", "load params from checkpoint")
                 .opt("max-new", "32", "default max new tokens")
-                .opt("window-us", "500", "batching window (microseconds)"),
+                .opt("window-us", "500", "batching window (microseconds)")
+                .opt("batch", "8", "batch slots (native backend)")
+                .opt("seed", "0", "weight seed (native, no checkpoint)")
+                .opt("vocab", "64", "vocab size (native, no checkpoint)")
+                .opt("d-model", "32", "model width (native, no checkpoint)")
+                .opt("layers", "2", "layer count (native, no checkpoint)")
+                .opt("n-state", "4", "state expansion N (native, no checkpoint)")
+                .flag("no-process-noise",
+                      "native: weights trained with pbar=0 (Fig. 6b ablation)")
+                .flag("no-ou-exact",
+                      "native: weights trained with Euler OU (Fig. 3b ablation)"),
         )
         .command(
             Command::new("scaling", "native recurrent-vs-scan scaling (Fig. 4 core)")
@@ -150,27 +161,61 @@ fn cmd_mad(m: &Matches) -> Result<()> {
 }
 
 fn cmd_serve(m: &Matches) -> Result<()> {
-    let rt = Runtime::discover()?;
     let cfg = ServeConfig {
         addr: m.get_string("addr")?,
+        backend: m.get_string("backend")?,
         artifact: m.get_string("artifact")?,
         max_new_tokens: m.get_usize("max-new")?,
         batch_window_us: m.get_u64("window-us")?,
+        seed: m.get_u64("seed")?,
         ..Default::default()
     };
-    // params: checkpoint if given, else fresh init from the lm artifact
-    let params = {
-        let ckpt = m.get_string("checkpoint")?;
-        if ckpt.is_empty() {
-            let init = rt.load("lm_kla_init")?;
-            init.run(&[])?
-        } else {
-            kla::train::checkpoint::load(std::path::Path::new(&ckpt))?
+    let ckpt = m.get_string("checkpoint")?;
+    let handle = match cfg.backend.as_str() {
+        // pure-Rust path: no artifacts, no PJRT — weights from the
+        // checkpoint if given, else a deterministic seeded init
+        "native" => {
+            use kla::runtime::NativeBackend;
+            let batch = m.get_usize("batch")?;
+            // the flatten ABI does not record the two ablation switches,
+            // so they must match how the checkpoint was trained
+            let process_noise = !m.get_flag("no-process-noise");
+            let ou_exact = !m.get_flag("no-ou-exact");
+            let backend = if ckpt.is_empty() {
+                let lm_cfg = kla::kla::NativeLmConfig {
+                    vocab: m.get_usize("vocab")?,
+                    d_model: m.get_usize("d-model")?,
+                    n_layers: m.get_usize("layers")?,
+                    n_state: m.get_usize("n-state")?,
+                    process_noise,
+                    ou_exact,
+                    ..Default::default()
+                };
+                NativeBackend::seeded(&lm_cfg, cfg.seed, batch)
+            } else {
+                NativeBackend::from_checkpoint(
+                    std::path::Path::new(&ckpt), batch, process_noise,
+                    ou_exact)?
+            };
+            kla::serve::serve_native(backend, &cfg)?
         }
+        "xla" => {
+            let rt = Runtime::discover()?;
+            // params: checkpoint if given, else fresh init from the
+            // lm artifact
+            let params = if ckpt.is_empty() {
+                let init = rt.load("lm_kla_init")?;
+                init.run(&[])?
+            } else {
+                kla::train::checkpoint::load(std::path::Path::new(&ckpt))?
+            };
+            kla::serve::serve(rt.dir().to_path_buf(),
+                              cfg.artifact.clone(), params, &cfg)?
+        }
+        other => bail!("unknown backend {other:?} (use xla|native)"),
     };
-    let handle = kla::serve::serve(rt.dir().to_path_buf(),
-                                   cfg.artifact.clone(), params, &cfg)?;
-    println!("serving on {} — Ctrl-C to stop", handle.addr);
+    println!("serving on {} ({} backend) — Ctrl-C to stop", handle.addr,
+             cfg.backend);
     // block forever (the handle's engine thread does the work)
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -1,0 +1,184 @@
+//! `DecodeBackend` — the execution seam for O(1) autoregressive decoding.
+//!
+//! The serve stack (engine, continuous batcher, `BeliefStateCache`, TCP
+//! server) needs exactly three things from a model: a fixed batch width,
+//! a fresh belief state, and a one-token step `(tokens, state) ->
+//! (logits, state')`.  This trait is that contract; the engine, the
+//! state cache, and the server are generic over it.
+//!
+//! Two implementations:
+//!
+//! - [`crate::runtime::DecodeSession`] — the XLA/PJRT path over a
+//!   `{base}_decode` HLO artifact (requires `make artifacts`);
+//! - [`NativeBackend`] — a pure-Rust KLA LM (`kla::model::NativeLm`)
+//!   whose per-layer filter update goes through the same
+//!   `kla::api::Filter::step()` carry the training-side scan uses.  No
+//!   artifacts needed: weights come from a deterministic seeded init or
+//!   a `train::checkpoint` file, so the whole continuous-batching stack
+//!   runs (and is tested) offline.
+//!
+//! Both backends share the `DecodeState` layout (L,B,K-1,D) /
+//! (L,B,N,D), so slot pooling, snapshot/restore, and the uncertainty
+//! signal work unchanged on either path.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::kla::model::{NativeLm, NativeLmConfig};
+use crate::tensor::{IntTensor, Tensor};
+
+/// One model's recurrent decode state: (conv, lam, eta), shapes
+/// (L,B,K-1,D) / (L,B,N,D) / (L,B,N,D).  Slots live in the batch
+/// dimension (see `crate::serve::state_cache`).
+#[derive(Clone, Debug)]
+pub struct DecodeState {
+    pub conv: Tensor,
+    pub lam: Tensor,
+    pub eta: Tensor,
+}
+
+/// A decode execution backend: init state + step a batch of tokens.
+pub trait DecodeBackend {
+    /// Fixed batch width (the serving engine's slot count).
+    fn batch(&self) -> usize;
+
+    /// Vocabulary size.  The serving engine clamps incoming token ids
+    /// into [0, vocab) before `step()` (the native model additionally
+    /// clamps internally; the XLA gather does not).
+    fn vocab(&self) -> usize;
+
+    /// Short backend tag for logs: "native" | "xla".
+    fn kind(&self) -> &'static str;
+
+    /// Fresh state for `batch()` sequences at the learned prior.
+    fn init_state(&self) -> Result<DecodeState>;
+
+    /// One autoregressive step for the whole batch:
+    /// tokens (B,) -> (logits (B, V), new state).
+    fn step(&self, tokens: &IntTensor, state: &DecodeState)
+            -> Result<(Tensor, DecodeState)>;
+}
+
+/// The pure-Rust backend: a `NativeLm` pinned to a fixed batch width.
+pub struct NativeBackend {
+    lm: NativeLm,
+    batch: usize,
+}
+
+impl NativeBackend {
+    pub fn new(lm: NativeLm, batch: usize) -> Self {
+        assert!(batch >= 1, "backend batch must be >= 1");
+        NativeBackend { lm, batch }
+    }
+
+    /// Deterministic seeded weights (same seed => same tokens out).
+    pub fn seeded(cfg: &NativeLmConfig, seed: u64, batch: usize) -> Self {
+        Self::new(NativeLm::seeded(cfg, seed), batch)
+    }
+
+    /// Load weights from a flatten-ABI param list (init artifact output
+    /// or checkpoint contents).
+    pub fn from_values(values: &[crate::runtime::Value], batch: usize,
+                       process_noise: bool, ou_exact: bool)
+                       -> Result<Self> {
+        Ok(Self::new(NativeLm::from_values(values, process_noise,
+                                           ou_exact)?,
+                     batch))
+    }
+
+    /// Load weights from a `train::checkpoint` file.
+    pub fn from_checkpoint(path: &Path, batch: usize, process_noise: bool,
+                           ou_exact: bool) -> Result<Self> {
+        let values = crate::train::checkpoint::load(path)?;
+        Self::from_values(&values, batch, process_noise, ou_exact)
+    }
+
+    pub fn lm(&self) -> &NativeLm {
+        &self.lm
+    }
+}
+
+impl DecodeBackend for NativeBackend {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn vocab(&self) -> usize {
+        self.lm.cfg.vocab
+    }
+
+    fn kind(&self) -> &'static str {
+        "native"
+    }
+
+    fn init_state(&self) -> Result<DecodeState> {
+        Ok(self.lm.init_state(self.batch))
+    }
+
+    fn step(&self, tokens: &IntTensor, state: &DecodeState)
+            -> Result<(Tensor, DecodeState)> {
+        self.lm.step(tokens, state)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend() -> NativeBackend {
+        let cfg = NativeLmConfig {
+            vocab: 16,
+            d_model: 8,
+            n_layers: 2,
+            n_state: 2,
+            conv_kernel: 3,
+            ..Default::default()
+        };
+        NativeBackend::seeded(&cfg, 42, 3)
+    }
+
+    #[test]
+    fn native_backend_shapes_and_kind() {
+        let be = backend();
+        assert_eq!(be.batch(), 3);
+        assert_eq!(be.vocab(), 16);
+        assert_eq!(be.kind(), "native");
+        let st = be.init_state().unwrap();
+        assert_eq!(st.conv.shape(), &[2, 3, 2, 8]);
+        assert_eq!(st.lam.shape(), &[2, 3, 2, 8]);
+        assert_eq!(st.eta.shape(), &[2, 3, 2, 8]);
+    }
+
+    #[test]
+    fn native_backend_step_is_deterministic() {
+        let be = backend();
+        let toks = IntTensor::new(&[3], vec![1, 2, 3]).unwrap();
+        let st = be.init_state().unwrap();
+        let (a, sa) = be.step(&toks, &st).unwrap();
+        let (b, sb) = be.step(&toks, &st).unwrap();
+        assert_eq!(a.data(), b.data());
+        assert_eq!(sa.lam.data(), sb.lam.data());
+        assert_eq!(a.shape(), &[3, 16]);
+    }
+
+    #[test]
+    fn native_backend_usable_as_trait_object() {
+        let be = backend();
+        let dynref: &dyn DecodeBackend = &be;
+        assert_eq!(dynref.batch(), 3);
+        assert!(dynref.init_state().is_ok());
+    }
+
+    #[test]
+    fn from_values_roundtrip_matches_seeded() {
+        let be = backend();
+        let vals = be.lm().to_values();
+        let be2 = NativeBackend::from_values(&vals, 3, true, true).unwrap();
+        let toks = IntTensor::new(&[3], vec![5, 6, 7]).unwrap();
+        let st = be.init_state().unwrap();
+        let (a, _) = be.step(&toks, &st).unwrap();
+        let (b, _) = be2.step(&toks, &st).unwrap();
+        assert_eq!(a.data(), b.data());
+    }
+}

@@ -6,6 +6,7 @@
 //! name.  All host values cross the boundary as `Value` (f32/i32 tensors),
 //! converted to/from `xla::Literal`.
 
+pub mod backend;
 pub mod meta;
 pub mod session;
 
@@ -18,6 +19,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::tensor::{IntTensor, Tensor};
 use crate::util::json;
+pub use backend::{DecodeBackend, DecodeState, NativeBackend};
 pub use meta::{ArgMeta, ArtifactMeta, DType, ModelMeta};
 pub use session::{DecodeSession, EvalResult, ScoreSession, TrainSession};
 

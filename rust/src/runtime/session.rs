@@ -201,7 +201,8 @@ impl ScoreSession {
     }
 }
 
-/// O(1) recurrent decoding session over a `{base}_decode` artifact.
+/// O(1) recurrent decoding session over a `{base}_decode` artifact — the
+/// XLA implementation of [`crate::runtime::backend::DecodeBackend`].
 /// The belief state (conv window, precision, information mean) is owned by
 /// the caller (see `crate::serve::state_cache`), making this session
 /// stateless and shareable across requests.
@@ -210,14 +211,7 @@ pub struct DecodeSession {
     params: Vec<Value>,
 }
 
-/// One model's recurrent state: (conv, lam, eta), shapes (L,B,K-1,D) /
-/// (L,B,N,D) / (L,B,N,D).
-#[derive(Clone, Debug)]
-pub struct DecodeState {
-    pub conv: Tensor,
-    pub lam: Tensor,
-    pub eta: Tensor,
-}
+pub use super::backend::DecodeState;
 
 impl DecodeSession {
     pub fn new(rt: &Runtime, base: &str, params: Vec<Value>) -> Result<Self> {
@@ -296,5 +290,32 @@ impl DecodeSession {
                 eta: eta.as_f32()?.clone(),
             },
         ))
+    }
+}
+
+/// The XLA artifact path behind the shared backend seam — the serving
+/// engine is generic over `DecodeBackend`, so this session and the
+/// native model are interchangeable there.  (Inherent methods win method
+/// resolution, so the delegations below are not self-recursive.)
+impl super::backend::DecodeBackend for DecodeSession {
+    fn batch(&self) -> usize {
+        self.batch()
+    }
+
+    fn vocab(&self) -> usize {
+        self.decode.meta.model.vocab
+    }
+
+    fn kind(&self) -> &'static str {
+        "xla"
+    }
+
+    fn init_state(&self) -> Result<DecodeState> {
+        self.init_state()
+    }
+
+    fn step(&self, tokens: &IntTensor, state: &DecodeState)
+            -> Result<(Tensor, DecodeState)> {
+        self.step(tokens, state)
     }
 }

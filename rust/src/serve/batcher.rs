@@ -264,4 +264,88 @@ mod tests {
         let s = Scheduler::new(3, 7);
         assert_eq!(s.feeds(), vec![Feed::Idle; 3]);
     }
+
+    // ------------------------------------------------- edge cases -----
+
+    #[test]
+    fn max_new_zero_is_clamped_to_one_token() {
+        let mut s = Scheduler::new(1, 0);
+        s.submit(SchedRequest { id: 1, prompt: vec![4, 5], max_new: 0 });
+        let done = drive(&mut s, 10);
+        assert_eq!(done.len(), 1);
+        // a request can never complete with zero tokens: max_new is
+        // clamped to >= 1 at admission
+        assert_eq!(done[0].tokens.len(), 1);
+        assert!(!s.has_work());
+    }
+
+    #[test]
+    fn max_new_one_samples_exactly_at_last_prompt_token() {
+        let mut s = Scheduler::new(1, 0);
+        s.submit(SchedRequest { id: 2, prompt: vec![1, 2, 3], max_new: 1 });
+        s.admit();
+        assert_eq!(s.feeds(), vec![Feed::Prefill(1)]);
+        assert!(s.advance(&[9]).is_empty());
+        assert_eq!(s.feeds(), vec![Feed::Prefill(2)]);
+        assert!(s.advance(&[9]).is_empty());
+        // last prompt token: the output of this step IS the one token
+        assert_eq!(s.feeds(), vec![Feed::Decode(3)]);
+        let done = s.advance(&[42]);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].tokens, vec![42]);
+    }
+
+    #[test]
+    fn admit_is_fifo_under_slot_starvation() {
+        // one slot, four queued requests: completion order must follow
+        // submission order exactly (no overtaking when slots free up)
+        let mut s = Scheduler::new(1, 0);
+        for id in 1..=4u64 {
+            s.submit(SchedRequest {
+                id,
+                prompt: vec![id as i32],
+                max_new: 2,
+            });
+        }
+        let done = drive(&mut s, 40);
+        let order: Vec<u64> = done.iter().map(|f| f.id).collect();
+        assert_eq!(order, vec![1, 2, 3, 4]);
+        // while the slot is held, admit() must not touch the queue
+        let mut s = Scheduler::new(1, 0);
+        s.submit(SchedRequest { id: 9, prompt: vec![1], max_new: 5 });
+        assert_eq!(s.admit().len(), 1);
+        s.submit(SchedRequest { id: 10, prompt: vec![2], max_new: 1 });
+        assert!(s.admit().is_empty());
+        assert_eq!(s.queue.len(), 1);
+        assert_eq!(s.queue[0].id, 10);
+    }
+
+    #[test]
+    fn has_work_and_active_count_through_full_lifecycle() {
+        let mut s = Scheduler::new(2, 0);
+        // idle: no work, no active slots
+        assert!(!s.has_work());
+        assert_eq!(s.active_count(), 0);
+        // queued but not admitted: work pending, still zero active
+        s.submit(SchedRequest { id: 1, prompt: vec![5], max_new: 1 });
+        assert!(s.has_work());
+        assert_eq!(s.active_count(), 0);
+        // admitted: one active slot, queue drained
+        s.admit();
+        assert_eq!(s.active_count(), 1);
+        assert!(s.queue.is_empty());
+        assert!(s.has_work());
+        // feeds always covers every slot (active + idle)
+        assert_eq!(s.feeds().len(), 2);
+        // finished requests keep their slot until release (the engine
+        // must free belief state first)
+        let done = s.advance(&[7]);
+        assert_eq!(done.len(), 1);
+        assert_eq!(s.active_count(), 1);
+        assert!(s.has_work());
+        // released: back to fully idle
+        s.release(done[0].slot);
+        assert_eq!(s.active_count(), 0);
+        assert!(!s.has_work());
+    }
 }

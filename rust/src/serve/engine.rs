@@ -1,6 +1,9 @@
-//! Generation engine: marries the scheduler (batcher.rs) to the XLA decode
-//! step and the belief-state cache.  One engine thread owns the model; the
-//! router (server.rs) talks to it over an mpsc channel.
+//! Generation engine: marries the scheduler (batcher.rs) to a
+//! [`DecodeBackend`] (XLA artifact session or the pure-Rust native model)
+//! and the belief-state cache.  One engine thread owns the model; the
+//! router (server.rs) talks to it over an mpsc channel.  The engine is
+//! generic over the backend, so the continuous-batching logic is tested
+//! end-to-end offline on `NativeBackend` and runs unchanged on PJRT.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
@@ -11,7 +14,7 @@ use anyhow::Result;
 
 use super::batcher::{Feed, SchedRequest, Scheduler};
 use super::state_cache::BeliefStateCache;
-use crate::runtime::session::DecodeSession;
+use crate::runtime::backend::DecodeBackend;
 use crate::tensor::IntTensor;
 use crate::util::Stats;
 
@@ -19,6 +22,11 @@ use crate::util::Stats;
 pub struct EngineRequest {
     pub prompt: Vec<i32>,
     pub max_new: usize,
+    /// Stamped by the producer at enqueue time, so queue_ms includes
+    /// time spent in the mpsc channel before engine intake (under
+    /// overload, intake stops draining once the scheduler queue reaches
+    /// batch size — that channel wait is real queueing).
+    pub submitted: Instant,
     pub resp: Sender<EngineResponse>,
 }
 
@@ -127,11 +135,13 @@ impl PendingTable {
 /// `tx` clones for as long as their sockets live, so a blocking `recv()`
 /// would deadlock `ServerHandle::stop()` against any client that keeps its
 /// connection open (seen in integration_serve).
-pub fn run_engine(session: &DecodeSession, rx: Receiver<EngineRequest>,
-                  batch_window: Duration, shutdown: Arc<AtomicBool>)
-                  -> Result<EngineStats> {
-    let b = session.batch();
-    let mut cache = BeliefStateCache::new(session.init_state()?);
+pub fn run_engine<B: DecodeBackend>(backend: &B,
+                                    rx: Receiver<EngineRequest>,
+                                    batch_window: Duration,
+                                    shutdown: Arc<AtomicBool>)
+                                    -> Result<EngineStats> {
+    let b = backend.batch();
+    let mut cache = BeliefStateCache::for_backend(backend)?;
     let mut sched = Scheduler::new(b, 0);
     let mut pending = PendingTable::new();
     let mut next_id = 0u64;
@@ -187,7 +197,7 @@ pub fn run_engine(session: &DecodeSession, rx: Receiver<EngineRequest>,
                 Some(req) => {
                     let id = next_id;
                     next_id += 1;
-                    pending.submit(id, req.resp, Instant::now());
+                    pending.submit(id, req.resp, req.submitted);
                     sched.submit(SchedRequest {
                         id,
                         prompt: req.prompt,
@@ -213,19 +223,22 @@ pub fn run_engine(session: &DecodeSession, rx: Receiver<EngineRequest>,
             pending.admit(id, admit_now);
         }
 
-        // build the token vector for this iteration
+        // build the token vector for this iteration; ids are clamped
+        // into [0, vocab) HERE so the trait contract holds for every
+        // backend (the XLA gather has no clamp of its own)
+        let vmax = (backend.vocab() as i32 - 1).max(0);
         let feeds = sched.feeds();
         let tokens: Vec<i32> = feeds
             .iter()
             .map(|f| match f {
-                Feed::Prefill(t) | Feed::Decode(t) => *t,
+                Feed::Prefill(t) | Feed::Decode(t) => (*t).clamp(0, vmax),
                 Feed::Idle => sched.pad(),
             })
             .collect();
 
         let t0 = Instant::now();
         let (logits, new_state) =
-            session.step(&IntTensor::new(&[b], tokens)?, cache.state())?;
+            backend.step(&IntTensor::new(&[b], tokens)?, cache.state())?;
         cache.set_state(new_state);
         stats.step_ms.push(t0.elapsed().as_secs_f64() * 1e3);
         stats.steps += 1;

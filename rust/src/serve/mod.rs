@@ -1,16 +1,20 @@
-//! Serving runtime (DESIGN.md §S15): a request router + continuous batcher
-//! + belief-state cache manager over the O(1) recurrent decode artifact.
+//! Serving runtime (DESIGN.md §S15/§S17): a request router + continuous
+//! batcher + belief-state cache manager over an O(1) recurrent decode
+//! backend.
 //!
 //! Architecture (vLLM-router-shaped, adapted to constant-size state):
 //!
-//!   TCP conns ──> router threads ──mpsc──> engine thread ──> PJRT decode
-//!                                             │
+//!   TCP conns ──> router threads ──mpsc──> engine thread ──> DecodeBackend
+//!                                             │              (native | xla)
 //!                                   BeliefStateCache (slot pool,
 //!                                   reset / snapshot / restore)
 //!
-//! Because a KLA sequence's state never grows, scheduling has no memory
-//! watermark: admission is purely slot-bound and prefill/decode unify into
-//! one recurrent step per token (batcher.rs).
+//! The engine is generic over `runtime::backend::DecodeBackend`: the
+//! pure-Rust `NativeBackend` runs (and is integration-tested) with no
+//! artifacts at all, while the XLA artifact session plugs into the same
+//! seam in production.  Because a KLA sequence's state never grows,
+//! scheduling has no memory watermark: admission is purely slot-bound and
+//! prefill/decode unify into one recurrent step per token (batcher.rs).
 
 pub mod batcher;
 pub mod engine;
@@ -18,6 +22,7 @@ pub mod server;
 pub mod state_cache;
 
 pub use batcher::{Feed, SchedRequest, Scheduler};
-pub use engine::{EngineRequest, EngineResponse, EngineStats};
-pub use server::{serve, Client, ServerHandle};
+pub use engine::{run_engine, EngineRequest, EngineResponse, EngineStats};
+pub use server::{serve, serve_native, serve_with, Client, EngineSpec,
+                 ServerHandle};
 pub use state_cache::BeliefStateCache;

@@ -14,7 +14,7 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use std::path::PathBuf;
 
@@ -22,6 +22,7 @@ use anyhow::{Context, Result};
 
 use super::engine::{run_engine, EngineRequest, EngineStats};
 use crate::config::ServeConfig;
+use crate::runtime::backend::NativeBackend;
 use crate::runtime::{Runtime, Value};
 use crate::util::Json;
 
@@ -48,12 +49,55 @@ impl ServerHandle {
     }
 }
 
-/// Start the server; returns once the socket is listening.
+/// Which decode backend the engine thread should build.
 ///
-/// PJRT handles are not Send, so the engine thread builds its own Runtime
-/// and DecodeSession from plain data (artifact dir + base + params).
+/// PJRT handles are not Send, so the XLA variant carries plain data
+/// (artifact dir + base + params) and the engine thread builds its own
+/// Runtime and DecodeSession; the native variant is plain data already
+/// and moves straight into the engine thread.
+pub enum EngineSpec {
+    /// XLA/PJRT over a `{base}_decode` artifact (needs `make artifacts`).
+    Xla {
+        artifacts_dir: PathBuf,
+        artifact: String,
+        params: Vec<Value>,
+    },
+    /// Pure-Rust KLA model — no artifacts required.
+    Native(NativeBackend),
+}
+
+impl EngineSpec {
+    fn kind(&self) -> &'static str {
+        match self {
+            EngineSpec::Xla { .. } => "xla",
+            EngineSpec::Native(_) => "native",
+        }
+    }
+}
+
+/// Start the server on the XLA artifact backend; returns once the socket
+/// is listening.  (Kept as the historical entry point — thin wrapper
+/// over [`serve_with`].)
 pub fn serve(artifacts_dir: PathBuf, artifact_base: String,
              params: Vec<Value>, cfg: &ServeConfig) -> Result<ServerHandle> {
+    serve_with(EngineSpec::Xla {
+        artifacts_dir,
+        artifact: artifact_base,
+        params,
+    }, cfg)
+}
+
+/// Start the server on the pure-Rust native backend — the offline path:
+/// no artifacts, no PJRT, same engine/batcher/cache stack.
+pub fn serve_native(backend: NativeBackend, cfg: &ServeConfig)
+                    -> Result<ServerHandle> {
+    serve_with(EngineSpec::Native(backend), cfg)
+}
+
+/// Start the server over any [`EngineSpec`]; returns once the socket is
+/// listening.
+pub fn serve_with(spec: EngineSpec, cfg: &ServeConfig)
+                  -> Result<ServerHandle> {
     let listener = TcpListener::bind(&cfg.addr)
         .with_context(|| format!("binding {}", cfg.addr))?;
     let addr = listener.local_addr()?.to_string();
@@ -61,11 +105,17 @@ pub fn serve(artifacts_dir: PathBuf, artifact_base: String,
     let window = Duration::from_micros(cfg.batch_window_us);
     let shutdown = Arc::new(AtomicBool::new(false));
     let shutdown_engine = shutdown.clone();
-    let engine_join = std::thread::spawn(move || {
-        let rt = Runtime::new(&artifacts_dir)?;
-        let session = crate::runtime::DecodeSession::new(
-            &rt, &artifact_base, params)?;
-        run_engine(&session, rx, window, shutdown_engine)
+    let backend_kind = spec.kind();
+    let engine_join = std::thread::spawn(move || match spec {
+        EngineSpec::Xla { artifacts_dir, artifact, params } => {
+            let rt = Runtime::new(&artifacts_dir)?;
+            let session = crate::runtime::DecodeSession::new(
+                &rt, &artifact, params)?;
+            run_engine(&session, rx, window, shutdown_engine)
+        }
+        EngineSpec::Native(backend) => {
+            run_engine(&backend, rx, window, shutdown_engine)
+        }
     });
 
     let shutdown2 = shutdown.clone();
@@ -86,7 +136,7 @@ pub fn serve(artifacts_dir: PathBuf, artifact_base: String,
         // engine's queue, letting run_engine drain and exit.
     });
 
-    crate::log_info!("serving on {addr}");
+    crate::log_info!("serving on {addr} ({backend_kind} backend)");
     Ok(ServerHandle {
         addr,
         shutdown,
@@ -147,8 +197,13 @@ fn handle_line(line: &str, tx: &Sender<EngineRequest>,
         .and_then(|x| x.as_usize().ok())
         .unwrap_or(default_max_new);
     let (rtx, rrx) = channel();
-    tx.send(EngineRequest { prompt, max_new, resp: rtx })
-        .map_err(|_| anyhow::anyhow!("engine is shut down"))?;
+    tx.send(EngineRequest {
+        prompt,
+        max_new,
+        submitted: Instant::now(),
+        resp: rtx,
+    })
+    .map_err(|_| anyhow::anyhow!("engine is shut down"))?;
     let resp = rrx
         .recv()
         .map_err(|_| anyhow::anyhow!("engine dropped the request"))?;

@@ -11,7 +11,7 @@
 use anyhow::{bail, Result};
 
 use crate::api::KlaBelief;
-use crate::runtime::session::DecodeState;
+use crate::runtime::backend::{DecodeBackend, DecodeState};
 
 /// Snapshot of one slot's state: the causal-conv window plus one
 /// posterior belief per layer — the same [`crate::api::Filter::Belief`]
@@ -54,6 +54,14 @@ impl BeliefStateCache {
         }
     }
 
+    /// Slot pool over a backend's prior state — works identically for
+    /// the XLA artifact session and the native model, since both share
+    /// the `DecodeState` layout.
+    pub fn for_backend<B: DecodeBackend + ?Sized>(backend: &B)
+                                                  -> Result<Self> {
+        Ok(Self::new(backend.init_state()?))
+    }
+
     pub fn batch(&self) -> usize {
         self.batch
     }
@@ -69,10 +77,14 @@ impl BeliefStateCache {
         Some(slot)
     }
 
-    /// Release a slot back to the pool.
+    /// Release a slot back to the pool.  The slot's state is reset to
+    /// the learned prior immediately (not lazily at the next acquire),
+    /// so a released slot can never leak a previous request's posterior
+    /// — the invariant `prop_state_cache.rs` pins.
     pub fn release(&mut self, slot: usize) {
         debug_assert!(slot < self.batch);
         debug_assert!(!self.free.contains(&slot));
+        self.reset_slot(slot);
         self.free.push(slot);
     }
 
@@ -243,6 +255,40 @@ mod tests {
         }
         // slot_belief agrees with the snapshot
         assert_eq!(cache.slot_belief(1, 0), snap.beliefs[1]);
+    }
+
+    #[test]
+    fn release_resets_slot_to_prior() {
+        let mut cache = BeliefStateCache::new(tiny_state());
+        let slot = cache.acquire().unwrap();
+        let mut s = cache.state().clone();
+        s.lam.data_mut().iter_mut().for_each(|x| *x = 77.0);
+        s.eta.data_mut().iter_mut().for_each(|x| *x = -3.0);
+        cache.set_state(s);
+        cache.release(slot);
+        // released slot is back at the prior even before re-acquire
+        assert_eq!(cache.state().lam.get(&[0, slot, 0, 0]), 1.5);
+        assert_eq!(cache.state().eta.get(&[0, slot, 0, 0]), 0.0);
+    }
+
+    #[test]
+    fn for_backend_pools_native_batch() {
+        use crate::kla::model::NativeLmConfig;
+        use crate::runtime::backend::NativeBackend;
+        let cfg = NativeLmConfig {
+            vocab: 16,
+            d_model: 8,
+            n_layers: 1,
+            n_state: 2,
+            conv_kernel: 3,
+            ..Default::default()
+        };
+        let backend = NativeBackend::seeded(&cfg, 9, 5);
+        let cache = BeliefStateCache::for_backend(&backend).unwrap();
+        assert_eq!(cache.batch(), 5);
+        assert_eq!(cache.free_slots(), 5);
+        // prior precision is the learned lam0 (> the 1e-3 floor)
+        assert!(cache.slot_uncertainty(0) > 0.0);
     }
 
     #[test]

@@ -282,3 +282,124 @@ fn batched_entry_point_matches_per_row_prefix() {
         }
     }
 }
+
+// ---------------------------------------------- native model-level law ---
+// The filter-level laws above lift to the full language model: the native
+// LM's O(1) `step()` chain must reproduce its batched `prefix()` forward,
+// because every per-position op is shared and the filter carry obeys the
+// step-chain law.  This is the model-level parity the serve stack rests
+// on (the engine only ever calls `step()`).
+
+use kla::kla::model::{NativeLm, NativeLmConfig};
+use kla::tensor::IntTensor;
+
+#[test]
+fn native_model_step_chain_matches_prefix() {
+    let cfg = NativeLmConfig {
+        vocab: 24,
+        d_model: 12,
+        n_layers: 2,
+        n_state: 3,
+        conv_kernel: 4,
+        process_noise: true,
+        ou_exact: true,
+    };
+    let lm = NativeLm::seeded(&cfg, 0xD0D0);
+    let (b, t) = (3usize, 17usize);
+    let mut rng = Pcg64::seeded(99);
+    let toks: Vec<i32> = (0..b * t)
+        .map(|_| rng.below(cfg.vocab as u64) as i32)
+        .collect();
+    let full = lm
+        .prefix(&IntTensor::new(&[b, t], toks.clone()).unwrap())
+        .unwrap();
+    let mut state = lm.init_state(b);
+    for ti in 0..t {
+        let col: Vec<i32> = (0..b).map(|bi| toks[bi * t + ti]).collect();
+        let (logits, next) = lm
+            .step(&IntTensor::new(&[b], col).unwrap(), &state)
+            .unwrap();
+        state = next;
+        for bi in 0..b {
+            for vi in 0..cfg.vocab {
+                let a = logits.get(&[bi, vi]);
+                let e = full.get(&[bi, ti, vi]);
+                assert!(
+                    (a - e).abs() <= TOL * (1.0 + a.abs().max(e.abs())),
+                    "model parity bi={bi} ti={ti} vi={vi}: step {a} vs \
+                     prefix {e}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn native_model_ablation_variants_keep_parity() {
+    // the two paper ablation switches change the dynamics, not the
+    // carry-split structure — parity must hold for every variant
+    for (process_noise, ou_exact) in
+        [(false, true), (true, false), (false, false)]
+    {
+        let cfg = NativeLmConfig {
+            vocab: 12,
+            d_model: 8,
+            n_layers: 1,
+            n_state: 2,
+            conv_kernel: 3,
+            process_noise,
+            ou_exact,
+        };
+        let lm = NativeLm::seeded(&cfg, 5);
+        let t = 9usize;
+        let toks: Vec<i32> = (0..t).map(|i| (i * 7 % 12) as i32).collect();
+        let full = lm
+            .prefix(&IntTensor::new(&[1, t], toks.clone()).unwrap())
+            .unwrap();
+        let mut state = lm.init_state(1);
+        for (ti, &tok) in toks.iter().enumerate() {
+            let (logits, next) = lm
+                .step(&IntTensor::new(&[1], vec![tok]).unwrap(), &state)
+                .unwrap();
+            state = next;
+            for vi in 0..cfg.vocab {
+                let a = logits.get(&[0, vi]);
+                let e = full.get(&[0, ti, vi]);
+                assert!(
+                    (a - e).abs() <= TOL * (1.0 + a.abs().max(e.abs())),
+                    "pn={process_noise} oe={ou_exact} ti={ti} vi={vi}: \
+                     {a} vs {e}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn native_model_checkpoint_roundtrip_preserves_logits() {
+    let cfg = NativeLmConfig {
+        vocab: 16,
+        d_model: 8,
+        n_layers: 2,
+        n_state: 2,
+        conv_kernel: 4,
+        process_noise: true,
+        ou_exact: true,
+    };
+    let lm = NativeLm::seeded(&cfg, 77);
+    // per-process dir: concurrent test runs must not race on the file
+    let dir = std::env::temp_dir()
+        .join(format!("kla_native_ckpt_test_{}", std::process::id()));
+    let dir_s = dir.to_str().unwrap();
+    let path =
+        kla::train::checkpoint::save(dir_s, "native_lm", &lm.to_values())
+            .unwrap();
+    let loaded = kla::train::checkpoint::load(&path).unwrap();
+    let lm2 = NativeLm::from_values(&loaded, true, true).unwrap();
+    let toks =
+        IntTensor::new(&[2, 6], (0..12).map(|i| i % 16).collect()).unwrap();
+    // the checkpoint format is lossless: logits identical bit-for-bit
+    assert_eq!(lm.prefix(&toks).unwrap().data(),
+               lm2.prefix(&toks).unwrap().data());
+    std::fs::remove_file(path).ok();
+}

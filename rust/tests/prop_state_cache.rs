@@ -1,0 +1,191 @@
+//! Property test (via `testing::property`) for the `BeliefStateCache`
+//! slot pool, driven through the native backend so every invariant is
+//! checked against REAL decode semantics (logits), not just raw state
+//! bytes:
+//!
+//! 1. random acquire/release/snapshot/restore/step interleavings never
+//!    alias slots (`free + held == batch`, acquired slots distinct);
+//! 2. restoring a snapshot into ANY slot reproduces the snapshotted
+//!    logits (per-slot state independence included);
+//! 3. released slots always reset to the learned prior — immediately,
+//!    and again after re-acquire.
+
+use kla::kla::NativeLmConfig;
+use kla::runtime::{DecodeBackend, NativeBackend};
+use kla::serve::state_cache::SlotSnapshot;
+use kla::serve::BeliefStateCache;
+use kla::tensor::IntTensor;
+use kla::testing::{property, Gen};
+
+/// Next-token logits every slot would see for a fixed probe token — a
+/// pure function of the cache's current state (no mutation).
+fn probe_rows(backend: &NativeBackend, cache: &BeliefStateCache)
+              -> Vec<Vec<f32>> {
+    let b = backend.batch();
+    let v = backend.vocab();
+    let toks = IntTensor::new(&[b], vec![1; b]).unwrap();
+    let (logits, _) = backend.step(&toks, cache.state()).unwrap();
+    (0..b).map(|s| logits.data()[s * v..(s + 1) * v].to_vec()).collect()
+}
+
+fn rows_close(a: &[f32], b: &[f32], what: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{what}: len {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > 1e-6 * (1.0 + x.abs().max(y.abs())) {
+            return Err(format!("{what}[{i}]: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn native_state_cache_interleavings_preserve_slot_isolation() {
+    property("state_cache_interleavings", 25, |g: &mut Gen| {
+        let batch = g.usize_in(2, 4);
+        let cfg = NativeLmConfig {
+            vocab: 16,
+            d_model: 8,
+            n_layers: g.usize_in(1, 2),
+            n_state: 2,
+            conv_kernel: 3,
+            ..Default::default()
+        };
+        let backend = NativeBackend::seeded(&cfg, 11, batch);
+        let mut cache = BeliefStateCache::for_backend(&backend)
+            .map_err(|e| e.to_string())?;
+        let prior = probe_rows(&backend, &cache);
+        let mut held: Vec<usize> = Vec::new();
+        let mut snaps: Vec<(SlotSnapshot, Vec<f32>)> = Vec::new();
+
+        let ops = g.usize_in(4, 14);
+        for op in 0..ops {
+            match g.usize_in(0, 4) {
+                // acquire: fresh, distinct, in range
+                0 => {
+                    if let Some(s) = cache.acquire() {
+                        kla::prop_assert!(s < batch,
+                                          "op {op}: slot {s} out of range");
+                        kla::prop_assert!(!held.contains(&s),
+                                          "op {op}: slot {s} aliased");
+                        held.push(s);
+                    } else {
+                        kla::prop_assert!(held.len() == batch,
+                                          "op {op}: pool empty with only \
+                                           {} of {batch} held",
+                                          held.len());
+                    }
+                }
+                // release: slot back to the pool AND back at the prior
+                1 => {
+                    if !held.is_empty() {
+                        let s =
+                            held.swap_remove(g.usize_in(0, held.len() - 1)
+                                             % held.len());
+                        cache.release(s);
+                        let rows = probe_rows(&backend, &cache);
+                        rows_close(&rows[s], &prior[s],
+                                   &format!("op {op}: released slot {s} \
+                                             not at prior"))?;
+                    }
+                }
+                // decode step: dirties every slot's posterior
+                2 => {
+                    let toks: Vec<i32> = (0..batch)
+                        .map(|i| ((op + i) % 16) as i32)
+                        .collect();
+                    let t = IntTensor::new(&[batch], toks).unwrap();
+                    let (_, next) = backend
+                        .step(&t, cache.state())
+                        .map_err(|e| e.to_string())?;
+                    cache.set_state(next);
+                }
+                // snapshot a held slot, remembering its probe logits
+                3 => {
+                    if !held.is_empty() {
+                        let s = held[g.usize_in(0, held.len() - 1)
+                                     % held.len()];
+                        let rows = probe_rows(&backend, &cache);
+                        snaps.push((cache.snapshot(s), rows[s].clone()));
+                    }
+                }
+                // restore any snapshot into any held slot: logits of
+                // THAT slot must reproduce the snapshotted ones
+                _ => {
+                    if !held.is_empty() && !snaps.is_empty() {
+                        let s = held[g.usize_in(0, held.len() - 1)
+                                     % held.len()];
+                        let (snap, expect) =
+                            &snaps[g.usize_in(0, snaps.len() - 1)
+                                   % snaps.len()];
+                        cache.restore(s, snap).map_err(|e| e.to_string())?;
+                        let rows = probe_rows(&backend, &cache);
+                        rows_close(&rows[s], expect,
+                                   &format!("op {op}: restore into slot \
+                                             {s} lost the belief"))?;
+                    }
+                }
+            }
+            // pool accounting never drifts
+            kla::prop_assert!(
+                cache.free_slots() + held.len() == batch,
+                "op {op}: {} free + {} held != {batch}",
+                cache.free_slots(), held.len()
+            );
+        }
+
+        // drain, then reclaim the whole pool: release resets each held
+        // slot, and every acquire hands back a slot at the prior — even
+        // for slots that were dirtied batch-wide while sitting free
+        // (decode steps advance every row; reset happens at the
+        // acquire/release boundaries, exactly like the engine).
+        for s in held.drain(..) {
+            cache.release(s);
+        }
+        kla::prop_assert!(cache.free_slots() == batch,
+                          "pool not full after draining");
+        for _ in 0..batch {
+            let s = cache
+                .acquire()
+                .ok_or_else(|| "pool drained early".to_string())?;
+            let rows = probe_rows(&backend, &cache);
+            rows_close(&rows[s], &prior[s],
+                       &format!("acquired slot {s} not at prior"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn native_state_cache_restore_rejects_wrong_shape() {
+    let backend = NativeBackend::seeded(
+        &NativeLmConfig {
+            vocab: 16,
+            d_model: 8,
+            n_layers: 2,
+            n_state: 2,
+            conv_kernel: 3,
+            ..Default::default()
+        },
+        1,
+        2,
+    );
+    let other = NativeBackend::seeded(
+        &NativeLmConfig {
+            vocab: 16,
+            d_model: 8,
+            n_layers: 1, // wrong layer count
+            n_state: 2,
+            conv_kernel: 3,
+            ..Default::default()
+        },
+        1,
+        2,
+    );
+    let mut cache = BeliefStateCache::for_backend(&backend).unwrap();
+    let foreign = BeliefStateCache::for_backend(&other).unwrap();
+    let snap = foreign.snapshot(0);
+    assert!(cache.restore(0, &snap).is_err(),
+            "restore accepted a snapshot from a different model shape");
+}
