@@ -76,5 +76,9 @@ fn main() -> Result<()> {
              stats.tokens_per_sec(), stats.mean_step_ms(),
              stats.batch_occupancy.iter().sum::<f64>()
                  / stats.batch_occupancy.len().max(1) as f64);
+    // chunked scan prefill runs on the native backend; the XLA path
+    // interleaves token-by-token, so the line stays backend-agnostic
+    println!("prefill: {} prompt tokens at {:.1} tok/s",
+             stats.prefill_tokens, stats.prefill_tokens_per_sec());
     Ok(())
 }

@@ -9,16 +9,17 @@ use kla::runtime::{NativeBackend, Runtime};
 use kla::serve::{serve, serve_native, Client};
 use kla::util::Stats;
 
-fn load_once(addr: &str, n_requests: usize, max_new: usize)
-             -> (f64, Stats) {
+fn load_once(addr: &str, n_requests: usize, prompt_len: usize,
+             max_new: usize) -> (f64, Stats) {
     let t0 = std::time::Instant::now();
     let mut joins = Vec::new();
     for i in 0..n_requests {
         let addr = addr.to_string();
         joins.push(std::thread::spawn(move || {
             let mut c = Client::connect(&addr).unwrap();
-            let prompt: Vec<i32> =
-                (0..4).map(|j| ((i * 13 + j) % 200) as i32).collect();
+            let prompt: Vec<i32> = (0..prompt_len)
+                .map(|j| ((i * 13 + j) % 200) as i32)
+                .collect();
             let r = c.request(&prompt, max_new).unwrap();
             r.req("total_ms").unwrap().as_f64().unwrap()
         }));
@@ -36,7 +37,13 @@ fn main() {
     let mut suite = Suite::new("serve_throughput");
 
     // ---- native backend: always runs (no artifacts required) ----
-    for (slots, label) in [(8usize, "native_batch8"), (1, "native_batch1")]
+    // prompt-heavy load (64-token prompts, 8 new tokens) so the chunked
+    // scan prefill shows up: chunk=1 is the legacy token-per-iteration
+    // baseline, chunk=64 consumes a whole prompt per prefill call
+    for (slots, chunk, label) in
+        [(8usize, 64usize, "native_batch8_chunk64"),
+         (8, 1, "native_batch8_chunk1"),
+         (1, 64, "native_batch1_chunk64")]
     {
         for window_us in [100u64, 1000] {
             let cfg = ServeConfig {
@@ -44,14 +51,15 @@ fn main() {
                 backend: "native".into(),
                 batch_window_us: window_us,
                 max_new_tokens: 8,
+                prefill_chunk: chunk,
                 ..Default::default()
             };
             let backend =
                 NativeBackend::seeded(&NativeLmConfig::default(), 0, slots);
             let handle = serve_native(backend, &cfg).unwrap();
             let addr = handle.addr.clone();
-            let _ = load_once(&addr, 2, 2); // warm
-            let (tps, lat) = load_once(&addr, 24, 8);
+            let _ = load_once(&addr, 2, 64, 2); // warm
+            let (tps, lat) = load_once(&addr, 24, 64, 8);
             let stats = handle.stop().unwrap();
             suite.metric_row(
                 &format!("{label}/window{window_us}us"),
@@ -63,6 +71,18 @@ fn main() {
                     ("occupancy".into(),
                      stats.batch_occupancy.iter().sum::<f64>()
                          / stats.batch_occupancy.len().max(1) as f64),
+                ],
+            );
+            // prefill throughput gets its own row, so the scan-prefill
+            // win is measured separately from decode tokens/s
+            suite.metric_row(
+                &format!("{label}/window{window_us}us/prefill"),
+                vec![
+                    ("prefill_tok_s".into(),
+                     stats.prefill_tokens_per_sec()),
+                    ("decode_tok_s".into(), stats.tokens_per_sec()),
+                    ("prefill_tokens".into(),
+                     stats.prefill_tokens as f64),
                 ],
             );
         }
@@ -95,8 +115,8 @@ fn main() {
             let addr = handle.addr.clone();
             // warm the engine (first step compiles nothing but touches
             // the executable)
-            let _ = load_once(&addr, 2, 2);
-            let (tps, lat) = load_once(&addr, 24, 8);
+            let _ = load_once(&addr, 2, 4, 2);
+            let (tps, lat) = load_once(&addr, 24, 4, 8);
             let stats = handle.stop().unwrap();
             suite.metric_row(
                 &format!("{label}/window{window_us}us"),
@@ -108,6 +128,16 @@ fn main() {
                     ("occupancy".into(),
                      stats.batch_occupancy.iter().sum::<f64>()
                          / stats.batch_occupancy.len().max(1) as f64),
+                ],
+            );
+            suite.metric_row(
+                &format!("{label}/window{window_us}us/prefill"),
+                vec![
+                    ("prefill_tok_s".into(),
+                     stats.prefill_tokens_per_sec()),
+                    ("decode_tok_s".into(), stats.tokens_per_sec()),
+                    ("prefill_tokens".into(),
+                     stats.prefill_tokens as f64),
                 ],
             );
         }

@@ -163,6 +163,17 @@ pub struct ServeConfig {
     /// Weight seed for the native backend's deterministic init (ignored
     /// when a checkpoint supplies the weights, and by the XLA backend).
     pub seed: u64,
+    /// Pad token id, used for idle batch lanes and empty prompts.  Must
+    /// be a valid vocab id; the engine clamps it into [0, vocab) like
+    /// every other token.  (Previously hardcoded to 0, which is a live
+    /// vocab id — now an explicit, configurable choice.)
+    pub pad: i32,
+    /// Max prompt tokens consumed per backend `prefill()` call at admit
+    /// time.  1 = legacy token-per-engine-iteration prefill (prompt
+    /// tokens interleave with decode steps in the shared batched step);
+    /// >1 = scan-based chunked prefill (the prompt cursor jumps by up to
+    /// this many tokens per call).
+    pub prefill_chunk: usize,
 }
 
 impl Default for ServeConfig {
@@ -176,6 +187,8 @@ impl Default for ServeConfig {
             max_new_tokens: 32,
             state_pool: 64,
             seed: 0,
+            pad: 0,
+            prefill_chunk: 64,
         }
     }
 }

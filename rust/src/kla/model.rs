@@ -426,37 +426,125 @@ impl NativeLm {
     }
 
     /// Batched full-sequence forward: tokens (B, T) -> logits (B, T, V).
-    /// Each block runs the per-position projections through the same
-    /// helpers `step()` uses, then one `KlaFilter::prefix` per sequence
-    /// (sequential plan — bit-identical to chained `step()`).
+    /// Runs [`Self::prefix_from`] from the zero-history prior state under
+    /// the sequential plan — bit-identical to chained `step()`.
     pub fn prefix(&self, tokens: &IntTensor) -> Result<Tensor> {
         let ts = tokens.shape();
         if ts.len() != 2 {
             bail!("prefix wants (B, T) tokens, got {ts:?}");
         }
+        let state = self.init_state(ts[0]);
+        let (logits, _) =
+            self.prefix_from(tokens, &state, &ScanPlan::sequential())?;
+        Ok(logits)
+    }
+
+    /// Batched full-sequence forward FROM a carried decode state: tokens
+    /// (B, T) + state -> (logits (B, T, V), advanced state) — the
+    /// batched-prefix entry behind scan-based chunked prefill.  Each
+    /// block runs the per-position projections (norm, conv window,
+    /// k/q/v/lam_v, gate) through the same helpers `step()` uses, then
+    /// one `KlaFilter::prefix` per lane under `plan`: the sequential
+    /// strategy is bit-identical to chained `step()`, Chunked/Blelloch
+    /// agree within the 1e-5 conformance tolerance (the `Filter` trait
+    /// laws), so prefilling a prompt in one call is generation-equivalent
+    /// to feeding it token by token.
+    pub fn prefix_from(&self, tokens: &IntTensor, state: &DecodeState,
+                       plan: &ScanPlan) -> Result<(Tensor, DecodeState)> {
+        let (d, v) = (self.cfg.d_model, self.cfg.vocab);
+        let (h, next) = self.forward_from(tokens, state, plan)?;
+        let (b, t) = (tokens.shape()[0], tokens.shape()[1]);
+        let mut logits = vec![0.0f32; b * t * v];
+        for r in 0..b * t {
+            let hn = rmsnorm_row(&h[r * d..(r + 1) * d], &self.norm_f);
+            let lrow = matvec(&hn, &self.head, d, v);
+            logits[r * v..(r + 1) * v].copy_from_slice(&lrow);
+        }
+        Ok((Tensor::new(&[b, t, v], logits)?, next))
+    }
+
+    /// Scan-based prefill of ONE batch lane: consume `tokens` (T,) for
+    /// `slot` starting from that lane's carried state, returning the
+    /// logits (V,) after the last token and the advanced single-lane
+    /// (B=1) state.  Lanes are independent, so no other lane of `state`
+    /// is read or advanced — the serving engine prefills freshly admitted
+    /// slots without stepping the whole batch, and only the last
+    /// position's head projection is computed (prefill outputs before the
+    /// final token are never sampled).
+    pub fn prefill_slot(&self, tokens: &IntTensor, slot: usize,
+                        state: &DecodeState, plan: &ScanPlan)
+                        -> Result<(Tensor, DecodeState)> {
+        let ts = tokens.shape();
+        if ts.len() != 1 || ts[0] == 0 {
+            bail!("prefill_slot wants non-empty (T,) tokens, got {ts:?}");
+        }
+        let t = ts[0];
+        let lane = state.slot(slot)?;
+        let toks = IntTensor::new(&[1, t], tokens.data().to_vec())?;
+        let (h, next) = self.forward_from(&toks, &lane, plan)?;
+        let (d, v) = (self.cfg.d_model, self.cfg.vocab);
+        let hn = rmsnorm_row(&h[(t - 1) * d..t * d], &self.norm_f);
+        let lrow = matvec(&hn, &self.head, d, v);
+        Ok((Tensor::new(&[v], lrow)?, next))
+    }
+
+    /// Shared forward core of [`Self::prefix_from`] / [`Self::prefill_slot`]:
+    /// residual stream h (B, T, D) plus the advanced state, head not yet
+    /// applied.  The conv window in `state` seeds each lane's projection
+    /// history and the (lam, eta) lanes seed each layer's filter belief,
+    /// so a forward over a token slice composes exactly like the carry-
+    /// split law of the underlying `Filter`.
+    fn forward_from(&self, tokens: &IntTensor, state: &DecodeState,
+                    plan: &ScanPlan) -> Result<(Vec<f32>, DecodeState)> {
+        let ts = tokens.shape();
+        if ts.len() != 2 {
+            bail!("forward wants (B, T) tokens, got {ts:?}");
+        }
         let (b, t) = (ts[0], ts[1]);
-        let (d, n, k_sz, v) = (self.cfg.d_model, self.cfg.n_state,
-                               self.cfg.conv_kernel, self.cfg.vocab);
+        let (l_n, d, n, k_sz) =
+            (self.cfg.n_layers, self.cfg.d_model, self.cfg.n_state,
+             self.cfg.conv_kernel);
+        if state.conv.shape() != [l_n, b, k_sz - 1, d]
+            || state.lam.shape() != [l_n, b, n, d]
+            || state.eta.shape() != [l_n, b, n, d]
+        {
+            bail!("decode state shapes {:?}/{:?}/{:?} do not match model \
+                   (L={l_n}, B={b}, K={k_sz}, N={n}, D={d})",
+                  state.conv.shape(), state.lam.shape(),
+                  state.eta.shape());
+        }
+        let conv_sz = (k_sz - 1) * d;
+        let post_sz = n * d;
+        let mut next = state.clone();
         let mut h = vec![0.0f32; b * t * d];
         for (i, &tok) in tokens.data().iter().enumerate() {
             h[i * d..(i + 1) * d].copy_from_slice(self.embed_row(tok));
         }
-        for blk in &self.blocks {
+        if t == 0 {
+            return Ok((h, next));
+        }
+        for (li, blk) in self.blocks.iter().enumerate() {
             for bi in 0..b {
-                let mut window = vec![0.0f32; (k_sz - 1) * d];
+                let coff = (li * b + bi) * conv_sz;
+                let poff = (li * b + bi) * post_sz;
                 let mut k_all = Vec::with_capacity(t * n);
                 let mut q_all = Vec::with_capacity(t * n);
                 let mut v_all = Vec::with_capacity(t * d);
                 let mut lamv_all = Vec::with_capacity(t * d);
                 let mut gate_all = Vec::with_capacity(t * d);
-                for ti in 0..t {
-                    let row = &h[(bi * t + ti) * d..(bi * t + ti + 1) * d];
-                    let pr = project_row(blk, row, &mut window, d, n, k_sz);
-                    k_all.extend_from_slice(&pr.k);
-                    q_all.extend_from_slice(&pr.q);
-                    v_all.extend_from_slice(&pr.v);
-                    lamv_all.extend_from_slice(&pr.lam_v);
-                    gate_all.extend_from_slice(&pr.gate);
+                {
+                    let window =
+                        &mut next.conv.data_mut()[coff..coff + conv_sz];
+                    for ti in 0..t {
+                        let row =
+                            &h[(bi * t + ti) * d..(bi * t + ti + 1) * d];
+                        let pr = project_row(blk, row, window, d, n, k_sz);
+                        k_all.extend_from_slice(&pr.k);
+                        q_all.extend_from_slice(&pr.q);
+                        v_all.extend_from_slice(&pr.v);
+                        lamv_all.extend_from_slice(&pr.lam_v);
+                        gate_all.extend_from_slice(&pr.gate);
+                    }
                 }
                 let inp = FilterInputs {
                     t,
@@ -465,9 +553,16 @@ impl NativeLm {
                     v: v_all,
                     lam_v: lamv_all,
                 };
-                let prior = KlaBelief::prior(&blk.filter);
-                let (out, _) = KlaFilter::prefix(&blk.filter, &inp, &prior,
-                                                 &ScanPlan::sequential());
+                let belief = KlaBelief::from_parts(
+                    next.lam.data()[poff..poff + post_sz].to_vec(),
+                    next.eta.data()[poff..poff + post_sz].to_vec(),
+                );
+                let (out, carried) =
+                    KlaFilter::prefix(&blk.filter, &inp, &belief, plan);
+                next.lam.data_mut()[poff..poff + post_sz]
+                    .copy_from_slice(&carried.lam);
+                next.eta.data_mut()[poff..poff + post_sz]
+                    .copy_from_slice(&carried.eta);
                 for ti in 0..t {
                     let y = &out.y[ti * d..(ti + 1) * d];
                     let gate = &gate_all[ti * d..(ti + 1) * d];
@@ -482,13 +577,7 @@ impl NativeLm {
                 }
             }
         }
-        let mut logits = vec![0.0f32; b * t * v];
-        for r in 0..b * t {
-            let hn = rmsnorm_row(&h[r * d..(r + 1) * d], &self.norm_f);
-            let lrow = matvec(&hn, &self.head, d, v);
-            logits[r * v..(r + 1) * v].copy_from_slice(&lrow);
-        }
-        Tensor::new(&[b, t, v], logits)
+        Ok((h, next))
     }
 
     /// One autoregressive step: tokens (B,) + state -> (logits (B, V),
@@ -668,6 +757,123 @@ mod tests {
         let mut vals = lm.to_values();
         vals.pop();
         assert!(NativeLm::from_values(&vals, true, true).is_err());
+    }
+
+    #[test]
+    fn prefix_from_chaining_is_exact_on_sequential() {
+        // carry-split at the model level: running a prompt in two
+        // prefix_from calls through the carried state reproduces the
+        // one-shot prefix bit-for-bit on the sequential plan
+        let lm = NativeLm::seeded(&tiny(), 11);
+        let (b, t) = (2usize, 11usize);
+        let toks: Vec<i32> =
+            (0..b * t).map(|i| (i * 3 % 16) as i32).collect();
+        let full = lm
+            .prefix(&IntTensor::new(&[b, t], toks.clone()).unwrap())
+            .unwrap();
+        for cut in [0usize, 1, 5, t - 1, t] {
+            let plan = ScanPlan::sequential();
+            let state = lm.init_state(b);
+            let head: Vec<i32> = (0..b)
+                .flat_map(|bi| toks[bi * t..bi * t + cut].to_vec())
+                .collect();
+            let tail: Vec<i32> = (0..b)
+                .flat_map(|bi| toks[bi * t + cut..(bi + 1) * t].to_vec())
+                .collect();
+            let (lo, mid) = lm
+                .prefix_from(&IntTensor::new(&[b, cut], head).unwrap(),
+                             &state, &plan)
+                .unwrap();
+            let (hi, _) = lm
+                .prefix_from(&IntTensor::new(&[b, t - cut], tail).unwrap(),
+                             &mid, &plan)
+                .unwrap();
+            for bi in 0..b {
+                for ti in 0..t {
+                    for vi in 0..16 {
+                        let got = if ti < cut {
+                            lo.get(&[bi, ti, vi])
+                        } else {
+                            hi.get(&[bi, ti - cut, vi])
+                        };
+                        assert_eq!(got, full.get(&[bi, ti, vi]),
+                                   "cut={cut} bi={bi} ti={ti} vi={vi}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_slot_matches_step_chain() {
+        let lm = NativeLm::seeded(&tiny(), 21);
+        let b = 3usize;
+        let t = 13usize;
+        let toks: Vec<i32> = (0..t).map(|i| (i * 5 % 16) as i32).collect();
+        // dirty the state first so the prefill resumes a real carry
+        let mut state = lm.init_state(b);
+        for warm in [2i32, 9, 4] {
+            let (_, next) = lm
+                .step(&IntTensor::new(&[b], vec![warm; b]).unwrap(), &state)
+                .unwrap();
+            state = next;
+        }
+        // reference: chain step() feeding the same token to every lane
+        let mut ref_state = state.clone();
+        let mut ref_logits = Tensor::zeros(&[b, 16]);
+        for &tok in &toks {
+            let (lg, next) = lm
+                .step(&IntTensor::new(&[b], vec![tok; b]).unwrap(),
+                      &ref_state)
+                .unwrap();
+            ref_state = next;
+            ref_logits = lg;
+        }
+        let slot = 1usize;
+        let ref_lane = ref_state.slot(slot).unwrap();
+        let tok_t = IntTensor::new(&[t], toks.clone()).unwrap();
+        // sequential plan: exact
+        let (lg, lane) = lm
+            .prefill_slot(&tok_t, slot, &state, &ScanPlan::sequential())
+            .unwrap();
+        assert_eq!(lg.shape(), &[16]);
+        for vi in 0..16 {
+            assert_eq!(lg.get(&[vi]), ref_logits.get(&[slot, vi]), "{vi}");
+        }
+        assert_eq!(lane.lam.data(), ref_lane.lam.data());
+        assert_eq!(lane.eta.data(), ref_lane.eta.data());
+        assert_eq!(lane.conv.data(), ref_lane.conv.data());
+        // parallel plans: the 1e-5 conformance tolerance
+        for plan in [ScanPlan::blelloch(), ScanPlan::chunked(2)] {
+            let (lg, lane) =
+                lm.prefill_slot(&tok_t, slot, &state, &plan).unwrap();
+            let close =
+                |a: f32, e: f32| crate::testing::rel_close(a, e, 1e-5);
+            for vi in 0..16 {
+                assert!(close(lg.get(&[vi]), ref_logits.get(&[slot, vi])),
+                        "plan={plan:?} vi={vi}");
+            }
+            for (a, e) in lane.lam.data().iter().zip(ref_lane.lam.data()) {
+                assert!(close(*a, *e), "plan={plan:?} lam {a} vs {e}");
+            }
+            for (a, e) in lane.eta.data().iter().zip(ref_lane.eta.data()) {
+                assert!(close(*a, *e), "plan={plan:?} eta {a} vs {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_slot_rejects_empty_and_bad_slot() {
+        let lm = NativeLm::seeded(&tiny(), 22);
+        let state = lm.init_state(2);
+        let empty = IntTensor::new(&[0], vec![]).unwrap();
+        assert!(lm
+            .prefill_slot(&empty, 0, &state, &ScanPlan::sequential())
+            .is_err());
+        let one = IntTensor::new(&[1], vec![3]).unwrap();
+        assert!(lm
+            .prefill_slot(&one, 2, &state, &ScanPlan::sequential())
+            .is_err());
     }
 
     #[test]

@@ -39,6 +39,12 @@ fn app() -> App {
                 .opt("max-new", "32", "default max new tokens")
                 .opt("window-us", "500", "batching window (microseconds)")
                 .opt("batch", "8", "batch slots (native backend)")
+                .opt("prefill-chunk", "64",
+                     "prompt tokens per scan-prefill call, native \
+                      backend (1 = token-by-token prefill; xla always \
+                      interleaves token-by-token)")
+                .opt("pad", "0", "pad token id for idle lanes and empty \
+                      prompts")
                 .opt("seed", "0", "weight seed (native, no checkpoint)")
                 .opt("vocab", "64", "vocab size (native, no checkpoint)")
                 .opt("d-model", "32", "model width (native, no checkpoint)")
@@ -168,6 +174,10 @@ fn cmd_serve(m: &Matches) -> Result<()> {
         max_new_tokens: m.get_usize("max-new")?,
         batch_window_us: m.get_u64("window-us")?,
         seed: m.get_u64("seed")?,
+        prefill_chunk: m.get_usize("prefill-chunk")?,
+        pad: m.get("pad")?
+            .parse::<i32>()
+            .map_err(|e| anyhow!("--pad: not an i32: {e}"))?,
         ..Default::default()
     };
     let ckpt = m.get_string("checkpoint")?;

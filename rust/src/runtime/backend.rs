@@ -23,8 +23,9 @@
 
 use std::path::Path;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
+use crate::api::ScanPlan;
 use crate::kla::model::{NativeLm, NativeLmConfig};
 use crate::tensor::{IntTensor, Tensor};
 
@@ -36,6 +37,43 @@ pub struct DecodeState {
     pub conv: Tensor,
     pub lam: Tensor,
     pub eta: Tensor,
+}
+
+impl DecodeState {
+    /// Batch width B of this state.
+    pub fn batch(&self) -> usize {
+        self.lam.shape()[1]
+    }
+
+    /// Extract one batch lane as a standalone B=1 state — the shape
+    /// `DecodeBackend::prefill` returns and
+    /// `crate::serve::BeliefStateCache::write_slot` accepts.
+    pub fn slot(&self, slot: usize) -> Result<DecodeState> {
+        Ok(DecodeState {
+            conv: take_lane(&self.conv, slot)?,
+            lam: take_lane(&self.lam, slot)?,
+            eta: take_lane(&self.eta, slot)?,
+        })
+    }
+}
+
+/// Copy lane `slot` of a (L,B,R,C) tensor into a fresh (L,1,R,C) one.
+fn take_lane(t: &Tensor, slot: usize) -> Result<Tensor> {
+    let s = t.shape();
+    if s.len() != 4 {
+        bail!("decode state tensors are 4-D, got {s:?}");
+    }
+    let (l, b, row) = (s[0], s[1], s[2] * s[3]);
+    if slot >= b {
+        bail!("slot {slot} out of range for batch {b}");
+    }
+    let mut out = Tensor::zeros(&[l, 1, s[2], s[3]]);
+    for li in 0..l {
+        let src = (li * b + slot) * row;
+        out.data_mut()[li * row..(li + 1) * row]
+            .copy_from_slice(&t.data()[src..src + row]);
+    }
+    Ok(out)
 }
 
 /// A decode execution backend: init state + step a batch of tokens.
@@ -58,18 +96,78 @@ pub trait DecodeBackend {
     /// tokens (B,) -> (logits (B, V), new state).
     fn step(&self, tokens: &IntTensor, state: &DecodeState)
             -> Result<(Tensor, DecodeState)>;
+
+    /// Whether `prefill()` is genuinely time-parallel (a scan), i.e.
+    /// cheaper than feeding tokens one per batched `step()`.  The
+    /// serving engine only routes prompts through chunked prefill when
+    /// this is true: for a backend stuck with the sequential fallback
+    /// (the XLA artifact), chunked prefill would spend T dedicated
+    /// batch-wide steps per prompt that the legacy interleaved path
+    /// shares with concurrent decode lanes — strictly more work.
+    fn prefill_is_parallel(&self) -> bool {
+        false
+    }
+
+    /// Consume a whole prompt chunk for ONE batch lane: `tokens` (T,
+    /// non-empty) are fed in order starting from lane `slot` of `state`;
+    /// returns the logits (V,) after the last token plus the advanced
+    /// single-lane (B=1) state — the engine writes it back with
+    /// `crate::serve::BeliefStateCache::write_slot`.  No other lane of
+    /// `state` is advanced.
+    ///
+    /// The default implementation is a correct sequential fallback over
+    /// `step()` for backends whose execution graph is fixed at one token
+    /// per call (the XLA decode artifact): it steps a scratch copy of
+    /// the batched state and keeps only lane `slot`.  Backends with a
+    /// native time-parallel scan override this with a chunked prefix
+    /// (`NativeBackend` runs `kla::api::Filter::prefix` per layer).
+    fn prefill(&self, tokens: &IntTensor, slot: usize,
+               state: &DecodeState) -> Result<(Tensor, DecodeState)> {
+        let ts = tokens.shape();
+        if ts.len() != 1 || ts[0] == 0 {
+            bail!("prefill wants non-empty (T,) tokens, got {ts:?}");
+        }
+        let b = self.batch();
+        if slot >= b {
+            bail!("prefill slot {slot} out of range for batch {b}");
+        }
+        let mut cur = state.clone();
+        let mut last: Option<Tensor> = None;
+        for &tok in tokens.data() {
+            // every lane gets the same token; all but `slot` are scratch
+            let (logits, next) =
+                self.step(&IntTensor::new(&[b], vec![tok; b])?, &cur)?;
+            cur = next;
+            last = Some(logits);
+        }
+        let v = self.vocab();
+        let logits = last.expect("tokens checked non-empty");
+        let row = logits.data()[slot * v..(slot + 1) * v].to_vec();
+        Ok((Tensor::new(&[v], row)?, cur.slot(slot)?))
+    }
 }
 
 /// The pure-Rust backend: a `NativeLm` pinned to a fixed batch width.
 pub struct NativeBackend {
     lm: NativeLm,
     batch: usize,
+    /// Scan strategy for `prefill()` chunks.  Blelloch by default: the
+    /// O(log T)-depth tree over `util::prefix::blelloch_inclusive`, with
+    /// no thread-launch overhead at serving chunk sizes; swap in
+    /// `ScanPlan::chunked(threads)` for multi-core prompts.
+    prefill_plan: ScanPlan,
 }
 
 impl NativeBackend {
     pub fn new(lm: NativeLm, batch: usize) -> Self {
         assert!(batch >= 1, "backend batch must be >= 1");
-        NativeBackend { lm, batch }
+        NativeBackend { lm, batch, prefill_plan: ScanPlan::blelloch() }
+    }
+
+    /// Override the scan plan `prefill()` uses per layer.
+    pub fn with_prefill_plan(mut self, plan: ScanPlan) -> Self {
+        self.prefill_plan = plan;
+        self
     }
 
     /// Deterministic seeded weights (same seed => same tokens out).
@@ -120,6 +218,15 @@ impl DecodeBackend for NativeBackend {
             -> Result<(Tensor, DecodeState)> {
         self.lm.step(tokens, state)
     }
+
+    fn prefill_is_parallel(&self) -> bool {
+        true
+    }
+
+    fn prefill(&self, tokens: &IntTensor, slot: usize,
+               state: &DecodeState) -> Result<(Tensor, DecodeState)> {
+        self.lm.prefill_slot(tokens, slot, state, &self.prefill_plan)
+    }
 }
 
 #[cfg(test)]
@@ -168,6 +275,91 @@ mod tests {
         let dynref: &dyn DecodeBackend = &be;
         assert_eq!(dynref.batch(), 3);
         assert!(dynref.init_state().is_ok());
+    }
+
+    /// Delegates everything but `prefill` — exercises the trait's
+    /// sequential fallback (the XLA path's code shape) against the
+    /// native scan override.
+    struct SeqOnly(NativeBackend);
+
+    impl DecodeBackend for SeqOnly {
+        fn batch(&self) -> usize {
+            self.0.batch()
+        }
+        fn vocab(&self) -> usize {
+            self.0.vocab()
+        }
+        fn kind(&self) -> &'static str {
+            "seq-only"
+        }
+        fn init_state(&self) -> Result<DecodeState> {
+            self.0.init_state()
+        }
+        fn step(&self, tokens: &IntTensor, state: &DecodeState)
+                -> Result<(Tensor, DecodeState)> {
+            self.0.step(tokens, state)
+        }
+    }
+
+    #[test]
+    fn prefill_fallback_and_scan_override_agree() {
+        let be = backend();
+        let st = be.init_state().unwrap();
+        let toks =
+            IntTensor::new(&[9], (0..9).map(|i| i % 16).collect()).unwrap();
+        let slot = 2usize;
+        let (lg_seq, lane_seq) = SeqOnly(backend())
+            .prefill(&toks, slot, &st)
+            .unwrap();
+        let (lg_scan, lane_scan) = be.prefill(&toks, slot, &st).unwrap();
+        assert_eq!(lg_seq.shape(), &[16]);
+        assert_eq!(lane_seq.batch(), 1);
+        assert_eq!(lane_scan.batch(), 1);
+        let close =
+            |a: f32, e: f32| crate::testing::rel_close(a, e, 1e-5);
+        for (a, e) in lg_scan.data().iter().zip(lg_seq.data()) {
+            assert!(close(*a, *e), "logits {a} vs {e}");
+        }
+        for (a, e) in lane_scan.lam.data().iter().zip(lane_seq.lam.data())
+        {
+            assert!(close(*a, *e), "lam {a} vs {e}");
+        }
+        for (a, e) in lane_scan.eta.data().iter().zip(lane_seq.eta.data())
+        {
+            assert!(close(*a, *e), "eta {a} vs {e}");
+        }
+        // conv windows of layers > 0 see the previous layer's scan
+        // output, so they too agree at the conformance tolerance (layer
+        // 0 is bit-exact, later layers within 1e-5)
+        for (a, e) in
+            lane_scan.conv.data().iter().zip(lane_seq.conv.data())
+        {
+            assert!(close(*a, *e), "conv {a} vs {e}");
+        }
+    }
+
+    #[test]
+    fn prefill_rejects_empty_tokens_and_bad_slot() {
+        let be = backend();
+        let st = be.init_state().unwrap();
+        let empty = IntTensor::new(&[0], vec![]).unwrap();
+        assert!(be.prefill(&empty, 0, &st).is_err());
+        assert!(SeqOnly(backend()).prefill(&empty, 0, &st).is_err());
+        let one = IntTensor::new(&[1], vec![5]).unwrap();
+        assert!(be.prefill(&one, 3, &st).is_err());
+        assert!(SeqOnly(backend()).prefill(&one, 3, &st).is_err());
+    }
+
+    #[test]
+    fn decode_state_slot_extracts_one_lane() {
+        let be = backend();
+        let st = be.init_state().unwrap();
+        let lane = st.slot(1).unwrap();
+        assert_eq!(lane.conv.shape(), &[2, 1, 2, 8]);
+        assert_eq!(lane.lam.shape(), &[2, 1, 2, 8]);
+        assert_eq!(st.batch(), 3);
+        assert_eq!(lane.batch(), 1);
+        assert!(st.slot(3).is_err());
     }
 
     #[test]

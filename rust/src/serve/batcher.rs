@@ -112,6 +112,28 @@ impl Scheduler {
         admitted
     }
 
+    /// Take up to `max` prompt tokens from `slot` for chunked prefill,
+    /// advancing its cursor (the cursor jumps, instead of moving one
+    /// token per engine iteration through `Feed::Prefill`).  The LAST
+    /// prompt token is never taken: it stays behind for a sampled
+    /// `Feed::Decode` step, so chunked and token-per-iteration prefill
+    /// hand the engine identical feeds from there on.  Returns empty for
+    /// free slots, slots already at/past the last prompt token, and
+    /// `max == 0`.
+    pub fn take_prefill(&mut self, slot: usize, max: usize) -> Vec<i32> {
+        let Slot::Active { prompt, cursor, .. } = &mut self.slots[slot]
+        else {
+            return Vec::new();
+        };
+        if *cursor + 1 >= prompt.len() {
+            return Vec::new();
+        }
+        let hi = (*cursor + max).min(prompt.len() - 1);
+        let out = prompt[*cursor..hi].to_vec();
+        *cursor = hi;
+        out
+    }
+
     /// Tokens to feed this iteration, one per slot.
     pub fn feeds(&self) -> Vec<Feed> {
         self.slots
@@ -318,6 +340,57 @@ mod tests {
         assert!(s.admit().is_empty());
         assert_eq!(s.queue.len(), 1);
         assert_eq!(s.queue[0].id, 10);
+    }
+
+    #[test]
+    fn take_prefill_jumps_cursor_but_leaves_last_prompt_token() {
+        let mut s = Scheduler::new(2, 0);
+        s.submit(SchedRequest {
+            id: 1,
+            prompt: (1..=10).collect(),
+            max_new: 2,
+        });
+        s.admit();
+        // free slot: nothing to prefill
+        assert!(s.take_prefill(1, 4).is_empty());
+        // chunked consumption: 4 + 4 + 1 (token 10 is held back)
+        assert_eq!(s.take_prefill(0, 4), vec![1, 2, 3, 4]);
+        assert_eq!(s.take_prefill(0, 4), vec![5, 6, 7, 8]);
+        assert_eq!(s.take_prefill(0, 4), vec![9]);
+        assert!(s.take_prefill(0, 4).is_empty());
+        // the last prompt token still arrives as a sampled Decode feed
+        assert_eq!(s.feeds()[0], Feed::Decode(10));
+        // decode proceeds as if the prompt had been fed token by token
+        let done = s.advance(&[42, 0]);
+        assert!(done.is_empty());
+        assert_eq!(s.feeds()[0], Feed::Decode(42));
+    }
+
+    #[test]
+    fn take_prefill_edge_cases() {
+        let mut s = Scheduler::new(1, 7);
+        // empty prompt becomes a single PAD token: no prefill work
+        s.submit(SchedRequest { id: 1, prompt: vec![], max_new: 1 });
+        s.admit();
+        assert!(s.take_prefill(0, 8).is_empty());
+        assert_eq!(s.feeds(), vec![Feed::Decode(7)]);
+        s.advance(&[3]);
+        s.release(0);
+        // single-token prompt: no prefill either
+        s.submit(SchedRequest { id: 2, prompt: vec![5], max_new: 1 });
+        s.admit();
+        assert!(s.take_prefill(0, 8).is_empty());
+        // chunk larger than the prompt: one call takes all but the last
+        s.release(0);
+        s.submit(SchedRequest { id: 3, prompt: vec![1, 2, 3], max_new: 1 });
+        s.admit();
+        assert_eq!(s.take_prefill(0, 100), vec![1, 2]);
+        // max == 0 takes nothing
+        s.release(0);
+        s.submit(SchedRequest { id: 4, prompt: vec![1, 2, 3], max_new: 1 });
+        s.admit();
+        assert!(s.take_prefill(0, 0).is_empty());
+        assert_eq!(s.feeds(), vec![Feed::Prefill(1)]);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! generic over the backend, so the continuous-batching logic is tested
 //! end-to-end offline on `NativeBackend` and runs unchanged on PJRT.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -14,6 +14,7 @@ use anyhow::Result;
 
 use super::batcher::{Feed, SchedRequest, Scheduler};
 use super::state_cache::BeliefStateCache;
+use crate::config::ServeConfig;
 use crate::runtime::backend::DecodeBackend;
 use crate::tensor::IntTensor;
 use crate::util::Stats;
@@ -39,21 +40,46 @@ pub struct EngineResponse {
     pub uncertainty: f32,
 }
 
-/// Engine statistics (read after shutdown).
+/// Engine statistics (read after shutdown; live counters are mirrored
+/// into [`LiveStats`] for the `{"cmd":"stats"}` protocol line).
 #[derive(Clone, Debug, Default)]
 pub struct EngineStats {
     pub requests: usize,
+    /// All batched engine iterations, prefill-only ones included
+    /// (chunked `prefill()` calls are not steps — their time lands in
+    /// `prefill_ms`).
     pub steps: usize,
     pub tokens_out: usize,
+    /// Wall time of batched steps where at least one lane sampled.
     pub step_ms: Vec<f64>,
+    /// Wall time of prefill work: chunked backend `prefill()` calls plus
+    /// batched steps where every live lane was still prefilling.
+    pub prefill_ms: Vec<f64>,
+    /// Prompt tokens consumed as prefill (chunked calls + legacy
+    /// `Feed::Prefill` lanes).
+    pub prefill_tokens: usize,
     pub batch_occupancy: Vec<f64>,
 }
 
 impl EngineStats {
+    /// Generated tokens per second of DECODE step time.  Prefill time is
+    /// excluded (it has [`Self::prefill_tokens_per_sec`] of its own) —
+    /// the old formula divided by a total that included prefill steps,
+    /// understating decode throughput for prompt-heavy traffic.
     pub fn tokens_per_sec(&self) -> f64 {
         let total_s: f64 = self.step_ms.iter().sum::<f64>() / 1e3;
         if total_s > 0.0 {
             self.tokens_out as f64 / total_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Prompt tokens consumed per second of prefill time.
+    pub fn prefill_tokens_per_sec(&self) -> f64 {
+        let total_s: f64 = self.prefill_ms.iter().sum::<f64>() / 1e3;
+        if total_s > 0.0 {
+            self.prefill_tokens as f64 / total_s
         } else {
             0.0
         }
@@ -65,6 +91,44 @@ impl EngineStats {
             s.push(x);
         }
         s.mean()
+    }
+}
+
+/// Live engine counters, shared with the router threads so the
+/// documented `{"cmd":"stats"}` line can answer DURING serving —
+/// `EngineStats` itself is only returned after shutdown.
+#[derive(Debug, Default)]
+pub struct LiveStats {
+    pub requests: AtomicUsize,
+    pub steps: AtomicUsize,
+    pub tokens_out: AtomicUsize,
+    pub prefill_tokens: AtomicUsize,
+}
+
+/// Engine tuning knobs beyond the backend itself (threaded through from
+/// [`ServeConfig`] by the server; tests construct it directly).
+#[derive(Clone, Copy, Debug)]
+pub struct EngineOptions {
+    /// How long to wait to fill empty slots before stepping a
+    /// partially-full batch.
+    pub batch_window: Duration,
+    /// Pad token for idle lanes and empty prompts (a real, configurable
+    /// vocab id — previously hardcoded to 0).
+    pub pad: i32,
+    /// Max prompt tokens per backend `prefill()` call (one chunk round
+    /// per slot per engine iteration); <= 1 keeps the legacy
+    /// token-per-iteration prefill path, as do backends whose
+    /// `prefill_is_parallel()` is false.
+    pub prefill_chunk: usize,
+}
+
+impl EngineOptions {
+    pub fn from_serve(cfg: &ServeConfig) -> Self {
+        EngineOptions {
+            batch_window: Duration::from_micros(cfg.batch_window_us),
+            pad: cfg.pad,
+            prefill_chunk: cfg.prefill_chunk,
+        }
     }
 }
 
@@ -140,13 +204,35 @@ pub fn run_engine<B: DecodeBackend>(backend: &B,
                                     batch_window: Duration,
                                     shutdown: Arc<AtomicBool>)
                                     -> Result<EngineStats> {
+    let opts = EngineOptions {
+        batch_window,
+        ..EngineOptions::from_serve(&ServeConfig::default())
+    };
+    run_engine_opts(backend, rx, &opts, shutdown,
+                    &Arc::new(LiveStats::default()))
+}
+
+/// [`run_engine`] with explicit [`EngineOptions`] and shared
+/// [`LiveStats`] counters (the server passes the same `Arc` to the
+/// router threads for the `stats` protocol line).
+pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
+                                         rx: Receiver<EngineRequest>,
+                                         opts: &EngineOptions,
+                                         shutdown: Arc<AtomicBool>,
+                                         live: &Arc<LiveStats>)
+                                         -> Result<EngineStats> {
     let b = backend.batch();
+    let batch_window = opts.batch_window;
     let mut cache = BeliefStateCache::for_backend(backend)?;
-    let mut sched = Scheduler::new(b, 0);
+    let mut sched = Scheduler::new(b, opts.pad);
     let mut pending = PendingTable::new();
     let mut next_id = 0u64;
     let mut stats = EngineStats::default();
     let mut disconnected = false;
+    // token ids are clamped into [0, vocab) before any backend call so
+    // the trait contract holds for every backend (the XLA gather has no
+    // clamp of its own)
+    let vmax = (backend.vocab() as i32 - 1).max(0);
 
     while (!disconnected && !shutdown.load(Ordering::SeqCst))
         || sched.has_work()
@@ -204,6 +290,7 @@ pub fn run_engine<B: DecodeBackend>(backend: &B,
                         max_new: req.max_new,
                     });
                     stats.requests += 1;
+                    live.requests.fetch_add(1, Ordering::Relaxed);
                 }
                 None => break,
             }
@@ -223,27 +310,84 @@ pub fn run_engine<B: DecodeBackend>(backend: &B,
             pending.admit(id, admit_now);
         }
 
-        // build the token vector for this iteration; ids are clamped
-        // into [0, vocab) HERE so the trait contract holds for every
-        // backend (the XLA gather has no clamp of its own)
-        let vmax = (backend.vocab() as i32 - 1).max(0);
+        // chunked prefill: ONE chunk round per engine iteration — each
+        // prefilling slot advances its prompt cursor by up to
+        // prefill_chunk tokens through a per-slot backend prefill()
+        // call, then the shared batched step below still runs, so
+        // in-flight decode lanes stall by at most one chunk scan per
+        // PREFILLING SLOT per iteration (a single long prompt never
+        // monopolises the engine; concurrent admissions each contribute
+        // one bounded chunk).
+        // Remaining prompt tokens flow through Feed::Prefill in the
+        // batched step exactly like the legacy path.  Skipped entirely
+        // at prefill_chunk <= 1, and for backends whose prefill() is the
+        // sequential fallback (XLA) — for those, chunked prefill would
+        // cost dedicated batch-wide steps the interleaved path shares.
+        if opts.prefill_chunk > 1 && backend.prefill_is_parallel() {
+            for slot in 0..b {
+                let toks = sched.take_prefill(slot, opts.prefill_chunk);
+                if toks.is_empty() {
+                    continue;
+                }
+                let n_toks = toks.len();
+                let clamped: Vec<i32> =
+                    toks.iter().map(|&t| t.clamp(0, vmax)).collect();
+                let t0 = Instant::now();
+                let (_, lane) = backend.prefill(
+                    &IntTensor::new(&[n_toks], clamped)?, slot,
+                    cache.state())?;
+                cache.write_slot(slot, &lane)?;
+                stats.prefill_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                stats.prefill_tokens += n_toks;
+                live.prefill_tokens.fetch_add(n_toks, Ordering::Relaxed);
+            }
+        }
+
+        // build the token vector for this iteration
         let feeds = sched.feeds();
         let tokens: Vec<i32> = feeds
             .iter()
             .map(|f| match f {
                 Feed::Prefill(t) | Feed::Decode(t) => (*t).clamp(0, vmax),
-                Feed::Idle => sched.pad(),
+                Feed::Idle => sched.pad().clamp(0, vmax),
             })
             .collect();
+        // occupancy counts the lanes doing real work in THIS step —
+        // derived from the feeds themselves, not slot bookkeeping, so
+        // finished-but-unreleased slots can never inflate it
+        let live_lanes =
+            feeds.iter().filter(|f| !matches!(f, Feed::Idle)).count();
+        let sampling = feeds.iter().any(|f| matches!(f, Feed::Decode(_)));
+        let legacy_prefill_lanes =
+            feeds.iter().filter(|f| matches!(f, Feed::Prefill(_))).count();
 
         let t0 = Instant::now();
         let (logits, new_state) =
             backend.step(&IntTensor::new(&[b], tokens)?, cache.state())?;
         cache.set_state(new_state);
-        stats.step_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        let elapsed_ms = t0.elapsed().as_secs_f64() * 1e3;
+        // apportion the step's wall time between the prefill and decode
+        // meters by lane fraction, so a mixed step (some lanes still
+        // consuming prompt, some sampling) charges each side fairly —
+        // without this, prefill lanes' tokens were counted against only
+        // the rare pure-prefill steps' time, inflating
+        // prefill_tokens_per_sec and diluting tokens_per_sec
+        let prefill_frac =
+            legacy_prefill_lanes as f64 / live_lanes.max(1) as f64;
+        if legacy_prefill_lanes > 0 {
+            stats.prefill_ms.push(elapsed_ms * prefill_frac);
+        }
+        if sampling {
+            stats.step_ms.push(elapsed_ms * (1.0 - prefill_frac));
+        }
         stats.steps += 1;
-        stats.batch_occupancy
-            .push(sched.active_count() as f64 / b as f64);
+        live.steps.fetch_add(1, Ordering::Relaxed);
+        if legacy_prefill_lanes > 0 {
+            stats.prefill_tokens += legacy_prefill_lanes;
+            live.prefill_tokens.fetch_add(legacy_prefill_lanes,
+                                          Ordering::Relaxed);
+        }
+        stats.batch_occupancy.push(live_lanes as f64 / b as f64);
 
         // greedy sampling per slot
         let am = logits.argmax_last();
@@ -251,6 +395,7 @@ pub fn run_engine<B: DecodeBackend>(backend: &B,
         let finished = sched.advance(&sampled);
         for f in &finished {
             stats.tokens_out += f.tokens.len();
+            live.tokens_out.fetch_add(f.tokens.len(), Ordering::Relaxed);
             let uncertainty = cache.slot_uncertainty(f.slot);
             cache.reset_slot(f.slot);
             sched.release(f.slot);
@@ -290,6 +435,120 @@ mod tests {
         assert!((total_ms - 35.0).abs() < 1e-6, "total_ms {total_ms}");
         // finished rows are gone
         assert!(table.finish(1, finish).is_none());
+    }
+
+    fn tiny_backend(batch: usize) -> crate::runtime::backend::NativeBackend {
+        use crate::kla::model::NativeLmConfig;
+        let cfg = NativeLmConfig {
+            vocab: 16,
+            d_model: 8,
+            n_layers: 1,
+            n_state: 2,
+            conv_kernel: 3,
+            ..Default::default()
+        };
+        crate::runtime::backend::NativeBackend::seeded(&cfg, 1, batch)
+    }
+
+    fn one_request(prompt: Vec<i32>, max_new: usize)
+                   -> (Receiver<EngineRequest>,
+                       Receiver<EngineResponse>) {
+        let (tx, rx) = channel::<EngineRequest>();
+        let (rtx, rrx) = channel();
+        tx.send(EngineRequest {
+            prompt,
+            max_new,
+            submitted: Instant::now(),
+            resp: rtx,
+        })
+        .unwrap();
+        drop(tx);
+        (rx, rrx)
+    }
+
+    #[test]
+    fn chunked_prefill_splits_timings_and_counts_occupancy() {
+        let backend = tiny_backend(2);
+        let prompt: Vec<i32> = (0..17).map(|i| i % 16).collect();
+        let (rx, rrx) = one_request(prompt, 3);
+        let live = Arc::new(LiveStats::default());
+        let opts = EngineOptions {
+            batch_window: Duration::from_micros(100),
+            pad: 0,
+            prefill_chunk: 8,
+        };
+        let stats = run_engine_opts(&backend, rx, &opts,
+                                    Arc::new(AtomicBool::new(false)),
+                                    &live)
+            .unwrap();
+        assert_eq!(rrx.recv().unwrap().tokens.len(), 3);
+        // 16 prefill tokens: one chunk round per iteration (8, then the
+        // remaining 7 after a legacy token interleaves), so 2 chunked
+        // calls + 1 all-prefill batched step on the prefill meter
+        assert_eq!(stats.prefill_tokens, 16);
+        assert_eq!(stats.prefill_ms.len(), 3);
+        // batched steps: 1 interleaved prefill + 3 sampled decode steps
+        // (last prompt token + 2 generated)
+        assert_eq!(stats.steps, 4);
+        assert_eq!(stats.step_ms.len(), 3);
+        assert_eq!(stats.tokens_out, 3);
+        assert!(stats.tokens_per_sec() > 0.0);
+        assert!(stats.prefill_tokens_per_sec() > 0.0);
+        // one request on a 2-slot engine: every step at occupancy 1/2
+        assert!(!stats.batch_occupancy.is_empty());
+        assert!(stats.batch_occupancy
+            .iter()
+            .all(|&o| (o - 0.5).abs() < 1e-9),
+                "occupancy {:?}", stats.batch_occupancy);
+        // live mirror saw the same counters
+        assert_eq!(live.requests.load(Ordering::SeqCst), 1);
+        assert_eq!(live.steps.load(Ordering::SeqCst), 4);
+        assert_eq!(live.tokens_out.load(Ordering::SeqCst), 3);
+        assert_eq!(live.prefill_tokens.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn legacy_prefill_steps_are_metered_as_prefill_not_decode() {
+        let backend = tiny_backend(1);
+        let (rx, rrx) = one_request(vec![1, 2, 3, 4, 5], 1);
+        let live = Arc::new(LiveStats::default());
+        let opts = EngineOptions {
+            batch_window: Duration::from_micros(100),
+            pad: 0,
+            prefill_chunk: 1, // legacy token-per-iteration path
+        };
+        let stats = run_engine_opts(&backend, rx, &opts,
+                                    Arc::new(AtomicBool::new(false)),
+                                    &live)
+            .unwrap();
+        assert_eq!(rrx.recv().unwrap().tokens.len(), 1);
+        // four Feed::Prefill iterations, then one sampled Decode step
+        assert_eq!(stats.prefill_tokens, 4);
+        assert_eq!(stats.prefill_ms.len(), 4);
+        assert_eq!(stats.step_ms.len(), 1);
+        assert_eq!(stats.steps, 5);
+        assert_eq!(stats.tokens_out, 1);
+        // single-slot engine fully occupied throughout
+        assert!(stats.batch_occupancy.iter().all(|&o| o == 1.0));
+    }
+
+    #[test]
+    fn pad_option_reaches_the_scheduler() {
+        let backend = tiny_backend(1);
+        // empty prompt: the scheduler substitutes the configured pad
+        // token, and generation still works (pad 9 is a live vocab id)
+        let (rx, rrx) = one_request(vec![], 2);
+        let opts = EngineOptions {
+            batch_window: Duration::from_micros(100),
+            pad: 9,
+            prefill_chunk: 64,
+        };
+        let stats = run_engine_opts(&backend, rx, &opts,
+                                    Arc::new(AtomicBool::new(false)),
+                                    &Arc::new(LiveStats::default()))
+            .unwrap();
+        assert_eq!(rrx.recv().unwrap().tokens.len(), 2);
+        assert_eq!(stats.tokens_out, 2);
     }
 
     #[test]

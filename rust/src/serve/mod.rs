@@ -13,8 +13,15 @@
 //! pure-Rust `NativeBackend` runs (and is integration-tested) with no
 //! artifacts at all, while the XLA artifact session plugs into the same
 //! seam in production.  Because a KLA sequence's state never grows,
-//! scheduling has no memory watermark: admission is purely slot-bound and
-//! prefill/decode unify into one recurrent step per token (batcher.rs).
+//! scheduling has no memory watermark: admission is purely slot-bound.
+//! Prompt prefill is scan-based and chunked: one chunk round per engine
+//! iteration, up to `ServeConfig::prefill_chunk` tokens per slot per
+//! `DecodeBackend::prefill` call (the paper's time-parallel associative
+//! scan doing the work on the native backend), bounded so in-flight
+//! decodes never stall longer than one chunk scan per prefilling slot
+//! per iteration.  At `prefill_chunk <= 1`,
+//! or on backends without a parallel prefill (XLA), prompts fall back
+//! to one recurrent step per token interleaved with decode (batcher.rs).
 
 pub mod batcher;
 pub mod engine;
@@ -22,7 +29,8 @@ pub mod server;
 pub mod state_cache;
 
 pub use batcher::{Feed, SchedRequest, Scheduler};
-pub use engine::{run_engine, EngineRequest, EngineResponse, EngineStats};
+pub use engine::{run_engine, run_engine_opts, EngineOptions,
+                 EngineRequest, EngineResponse, EngineStats, LiveStats};
 pub use server::{serve, serve_native, serve_with, Client, EngineSpec,
                  ServerHandle};
 pub use state_cache::BeliefStateCache;

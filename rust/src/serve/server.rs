@@ -6,21 +6,25 @@
 //!   -> {"prompt": [1,2,3], "max_new_tokens": 8}
 //!   <- {"tokens": [...], "total_ms": 12.3, "queue_ms": 0.1,
 //!       "uncertainty": 0.42}
-//!   -> {"cmd": "stats"}    <- {"requests": N, ...}
-//!   -> {"cmd": "shutdown"} <- {"ok": true}    (stops the listener)
+//!   -> {"cmd": "stats"}    <- {"requests": N, "steps": N,
+//!       "tokens_out": N, "prefill_tokens": N}   (live counters)
+//!   -> {"cmd": "shutdown"} <- {"ok": true}    (stops the listener —
+//!       the handler pokes the accept loop itself, no external
+//!       connection needed for the server to quiesce)
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
-use super::engine::{run_engine, EngineRequest, EngineStats};
+use super::engine::{run_engine_opts, EngineOptions, EngineRequest,
+                    EngineStats, LiveStats};
 use crate::config::ServeConfig;
 use crate::runtime::backend::NativeBackend;
 use crate::runtime::{Runtime, Value};
@@ -102,24 +106,29 @@ pub fn serve_with(spec: EngineSpec, cfg: &ServeConfig)
         .with_context(|| format!("binding {}", cfg.addr))?;
     let addr = listener.local_addr()?.to_string();
     let (tx, rx) = channel::<EngineRequest>();
-    let window = Duration::from_micros(cfg.batch_window_us);
+    let opts = EngineOptions::from_serve(cfg);
     let shutdown = Arc::new(AtomicBool::new(false));
+    let live = Arc::new(LiveStats::default());
     let shutdown_engine = shutdown.clone();
+    let live_engine = live.clone();
     let backend_kind = spec.kind();
     let engine_join = std::thread::spawn(move || match spec {
         EngineSpec::Xla { artifacts_dir, artifact, params } => {
             let rt = Runtime::new(&artifacts_dir)?;
             let session = crate::runtime::DecodeSession::new(
                 &rt, &artifact, params)?;
-            run_engine(&session, rx, window, shutdown_engine)
+            run_engine_opts(&session, rx, &opts, shutdown_engine,
+                            &live_engine)
         }
         EngineSpec::Native(backend) => {
-            run_engine(&backend, rx, window, shutdown_engine)
+            run_engine_opts(&backend, rx, &opts, shutdown_engine,
+                            &live_engine)
         }
     });
 
     let shutdown2 = shutdown.clone();
     let max_new = cfg.max_new_tokens;
+    let self_addr = addr.clone();
     let listener_join = std::thread::spawn(move || {
         for stream in listener.incoming() {
             if shutdown2.load(Ordering::SeqCst) {
@@ -128,8 +137,11 @@ pub fn serve_with(spec: EngineSpec, cfg: &ServeConfig)
             let Ok(stream) = stream else { continue };
             let tx = tx.clone();
             let shutdown3 = shutdown2.clone();
+            let live3 = live.clone();
+            let addr3 = self_addr.clone();
             std::thread::spawn(move || {
-                let _ = handle_conn(stream, tx, max_new, shutdown3);
+                let _ = handle_conn(stream, tx, max_new, shutdown3,
+                                    live3, addr3);
             });
         }
         // tx (and all clones in finished handlers) dropping closes the
@@ -146,7 +158,8 @@ pub fn serve_with(spec: EngineSpec, cfg: &ServeConfig)
 }
 
 fn handle_conn(stream: TcpStream, tx: Sender<EngineRequest>,
-               default_max_new: usize, shutdown: Arc<AtomicBool>)
+               default_max_new: usize, shutdown: Arc<AtomicBool>,
+               live: Arc<LiveStats>, self_addr: String)
                -> Result<()> {
     let peer = stream.peer_addr().ok();
     let mut writer = stream.try_clone()?;
@@ -157,7 +170,7 @@ fn handle_conn(stream: TcpStream, tx: Sender<EngineRequest>,
             continue;
         }
         let reply = match handle_line(&line, &tx, default_max_new,
-                                      &shutdown) {
+                                      &shutdown, &live, &self_addr) {
             Ok(json) => json,
             Err(e) => Json::obj(vec![("error", Json::str(&e.to_string()))]),
         };
@@ -173,16 +186,32 @@ fn handle_conn(stream: TcpStream, tx: Sender<EngineRequest>,
 }
 
 fn handle_line(line: &str, tx: &Sender<EngineRequest>,
-               default_max_new: usize, shutdown: &AtomicBool)
-               -> Result<Json> {
+               default_max_new: usize, shutdown: &AtomicBool,
+               live: &LiveStats, self_addr: &str) -> Result<Json> {
     let req = crate::util::json::parse(line)?;
     if let Some(cmd) = req.get("cmd") {
         match cmd.as_str()? {
             "shutdown" => {
                 shutdown.store(true, Ordering::SeqCst);
+                // poke our own accept() so the listener observes the
+                // flag and exits — without this, a client-issued
+                // shutdown left the listener thread blocked until some
+                // EXTERNAL connection happened to arrive
+                let _ = TcpStream::connect(self_addr);
                 return Ok(Json::obj(vec![("ok", Json::Bool(true))]));
             }
             "ping" => return Ok(Json::obj(vec![("ok", Json::Bool(true))])),
+            "stats" => {
+                let n = |v: usize| Json::num(v as f64);
+                return Ok(Json::obj(vec![
+                    ("requests", n(live.requests.load(Ordering::Relaxed))),
+                    ("steps", n(live.steps.load(Ordering::Relaxed))),
+                    ("tokens_out",
+                     n(live.tokens_out.load(Ordering::Relaxed))),
+                    ("prefill_tokens",
+                     n(live.prefill_tokens.load(Ordering::Relaxed))),
+                ]));
+            }
             other => anyhow::bail!("unknown cmd {other:?}"),
         }
     }
@@ -242,6 +271,12 @@ impl Client {
 
     pub fn ping(&mut self) -> Result<Json> {
         self.send_line(r#"{"cmd":"ping"}"#)
+    }
+
+    /// Live engine counters: requests, steps, tokens_out,
+    /// prefill_tokens — answered mid-serve, not only after shutdown.
+    pub fn stats(&mut self) -> Result<Json> {
+        self.send_line(r#"{"cmd":"stats"}"#)
     }
 
     pub fn shutdown(&mut self) -> Result<Json> {

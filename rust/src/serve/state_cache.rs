@@ -132,7 +132,11 @@ impl BeliefStateCache {
 
     /// Restore a previously snapshotted belief state into a slot.
     pub fn restore(&mut self, slot: usize, snap: &SlotSnapshot) -> Result<()> {
+        // the conv window length must be validated too: a snapshot taken
+        // under a different conv_kernel would otherwise panic inside
+        // copy_from_slice instead of erroring
         if snap.beliefs.len() != self.layers
+            || snap.conv.len() != self.layers * self.conv_row
             || snap.beliefs.iter().any(|b| b.state() != self.post_row)
         {
             bail!("snapshot shape mismatch");
@@ -147,6 +151,45 @@ impl BeliefStateCache {
                 .copy_from_slice(&belief.lam);
             self.state.eta.data_mut()[p0..p0 + self.post_row]
                 .copy_from_slice(&belief.eta);
+        }
+        Ok(())
+    }
+
+    /// Write a single-lane (B=1) state — the result of a
+    /// `DecodeBackend::prefill` call — into `slot` of the batched state.
+    /// Shape-checked; no other lane is touched.
+    pub fn write_slot(&mut self, slot: usize, lane: &DecodeState)
+                      -> Result<()> {
+        if slot >= self.batch {
+            bail!("write_slot: slot {slot} out of range for batch {}",
+                  self.batch);
+        }
+        let cs = self.state.conv.shape();
+        let ps = self.state.lam.shape();
+        if lane.conv.shape() != [cs[0], 1, cs[2], cs[3]]
+            || lane.lam.shape() != [ps[0], 1, ps[2], ps[3]]
+            || lane.eta.shape() != [ps[0], 1, ps[2], ps[3]]
+        {
+            bail!("write_slot: lane shapes {:?}/{:?}/{:?} do not match \
+                   cache layout {:?}/{:?}",
+                  lane.conv.shape(), lane.lam.shape(), lane.eta.shape(),
+                  cs, ps);
+        }
+        for l in 0..self.layers {
+            let c0 = (l * self.batch + slot) * self.conv_row;
+            self.state.conv.data_mut()[c0..c0 + self.conv_row]
+                .copy_from_slice(
+                    &lane.conv.data()
+                        [l * self.conv_row..(l + 1) * self.conv_row]);
+            let p0 = (l * self.batch + slot) * self.post_row;
+            self.state.lam.data_mut()[p0..p0 + self.post_row]
+                .copy_from_slice(
+                    &lane.lam.data()
+                        [l * self.post_row..(l + 1) * self.post_row]);
+            self.state.eta.data_mut()[p0..p0 + self.post_row]
+                .copy_from_slice(
+                    &lane.eta.data()
+                        [l * self.post_row..(l + 1) * self.post_row]);
         }
         Ok(())
     }
@@ -269,6 +312,52 @@ mod tests {
         // released slot is back at the prior even before re-acquire
         assert_eq!(cache.state().lam.get(&[0, slot, 0, 0]), 1.5);
         assert_eq!(cache.state().eta.get(&[0, slot, 0, 0]), 0.0);
+    }
+
+    #[test]
+    fn write_slot_roundtrips_an_extracted_lane() {
+        let mut cache = BeliefStateCache::new(tiny_state());
+        // dirty lane 1, extract it, reset it, write it back
+        let mut s = cache.state().clone();
+        s.eta.data_mut().iter_mut().for_each(|x| *x = 4.0);
+        cache.set_state(s);
+        let lane = cache.state().slot(1).unwrap();
+        cache.reset_slot(1);
+        assert_eq!(cache.state().eta.get(&[0, 1, 0, 0]), 0.0);
+        cache.write_slot(1, &lane).unwrap();
+        assert_eq!(cache.state().eta.get(&[0, 1, 0, 0]), 4.0);
+        assert_eq!(cache.state().eta.get(&[1, 1, 1, 3]), 4.0);
+        // neighbouring lanes untouched
+        assert_eq!(cache.state().lam.get(&[0, 0, 0, 0]), 1.5);
+    }
+
+    #[test]
+    fn write_slot_rejects_bad_shapes_and_slots() {
+        let mut cache = BeliefStateCache::new(tiny_state());
+        let lane = cache.state().slot(0).unwrap();
+        assert!(cache.write_slot(3, &lane).is_err()); // batch is 3
+        // lane from a different geometry (K-1 = 1 instead of 3)
+        let bad = DecodeState {
+            conv: Tensor::zeros(&[2, 1, 1, 4]),
+            lam: Tensor::zeros(&[2, 1, 2, 4]),
+            eta: Tensor::zeros(&[2, 1, 2, 4]),
+        };
+        assert!(cache.write_slot(0, &bad).is_err());
+        // a full batched state is not a lane
+        let full = cache.state().clone();
+        assert!(cache.write_slot(0, &full).is_err());
+    }
+
+    #[test]
+    fn restore_rejects_conv_window_length_mismatch() {
+        let mut cache = BeliefStateCache::new(tiny_state());
+        let mut snap = cache.snapshot(0);
+        // a snapshot from a model with a different conv_kernel: beliefs
+        // match but the conv window does not — must error, not panic
+        snap.conv.truncate(snap.conv.len() - 1);
+        assert!(cache.restore(0, &snap).is_err());
+        snap.conv.clear();
+        assert!(cache.restore(0, &snap).is_err());
     }
 
     #[test]

@@ -31,6 +31,20 @@ impl<'a> Gen<'a> {
     }
 }
 
+/// Relative-closeness predicate used by the scan-conformance style
+/// assertions: `|a - e| <= tol * (1 + max(|a|, |e|))`.  One definition so
+/// the tolerance formula cannot drift between suites (the conformance
+/// tolerance itself is 1e-5; callers pass a looser `tol` only where
+/// deviations legitimately compound, and say so).
+pub fn rel_close(a: f32, e: f32, tol: f32) -> bool {
+    (a - e).abs() <= tol * (1.0 + a.abs().max(e.abs()))
+}
+
+/// f64 twin of [`rel_close`] (e.g. for JSON-roundtripped metrics).
+pub fn rel_close64(a: f64, e: f64, tol: f64) -> bool {
+    (a - e).abs() <= tol * (1.0 + a.abs().max(e.abs()))
+}
+
 /// Run `cases` random checks of `prop`.  `prop` returns Err(description)
 /// on failure.  Panics with the seed and description so failures are
 /// reproducible by re-running with `KLA_PROP_SEED`.

@@ -376,6 +376,68 @@ fn native_model_ablation_variants_keep_parity() {
 }
 
 #[test]
+fn native_model_prefill_slot_conforms_across_plans() {
+    // the serving-side lift of the strategy-conformance law: prefilling
+    // one lane with a whole token chunk under ANY ScanPlan agrees with
+    // chaining step() over the same tokens — exactly on the sequential
+    // plan, within 1e-5 on Blelloch/Chunked (the scan strategies the
+    // engine uses for chunked prompt prefill)
+    let cfg = NativeLmConfig {
+        vocab: 24,
+        d_model: 12,
+        n_layers: 2,
+        n_state: 3,
+        conv_kernel: 4,
+        process_noise: true,
+        ou_exact: true,
+    };
+    let lm = NativeLm::seeded(&cfg, 0xBEEF);
+    let b = 2usize;
+    let slot = 1usize;
+    let mut rng = Pcg64::seeded(7);
+    for t in [1usize, 3, 64, 129] {
+        let toks: Vec<i32> = (0..t)
+            .map(|_| rng.below(cfg.vocab as u64) as i32)
+            .collect();
+        // reference: chained step() over the whole batch
+        let mut state = lm.init_state(b);
+        let mut last = None;
+        for &tok in &toks {
+            let (lg, next) = lm
+                .step(&IntTensor::new(&[b], vec![tok; b]).unwrap(), &state)
+                .unwrap();
+            state = next;
+            last = Some(lg);
+        }
+        let ref_logits = last.unwrap();
+        let lane_ref = state.slot(slot).unwrap();
+        for plan in [ScanPlan::sequential(), ScanPlan::blelloch(),
+                     ScanPlan::chunked(2), ScanPlan::chunked(8)]
+        {
+            let (lg, lane) = lm
+                .prefill_slot(&IntTensor::new(&[t], toks.clone()).unwrap(),
+                              slot, &lm.init_state(b), &plan)
+                .unwrap();
+            let tag = format!("t={t} plan={plan:?}");
+            for vi in 0..cfg.vocab {
+                let a = lg.get(&[vi]);
+                let e = ref_logits.get(&[slot, vi]);
+                assert!(
+                    (a - e).abs() <= TOL * (1.0 + a.abs().max(e.abs())),
+                    "{tag} logits[{vi}]: {a} vs {e}"
+                );
+            }
+            assert_close(lane.lam.data(), lane_ref.lam.data(),
+                         &format!("{tag} lane.lam"));
+            assert_close(lane.eta.data(), lane_ref.eta.data(),
+                         &format!("{tag} lane.eta"));
+            assert_close(lane.conv.data(), lane_ref.conv.data(),
+                         &format!("{tag} lane.conv"));
+        }
+    }
+}
+
+#[test]
 fn native_model_checkpoint_roundtrip_preserves_logits() {
     let cfg = NativeLmConfig {
         vocab: 16,

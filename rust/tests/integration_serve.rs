@@ -229,6 +229,126 @@ fn native_serve_end_to_end() {
 }
 
 #[test]
+fn native_prefill_chunk_parity_with_token_by_token() {
+    // The acceptance invariant of scan-based chunked prefill: for any
+    // chunk size, generations are IDENTICAL to token-by-token prefill
+    // (chunk=1, the legacy Feed::Prefill path), and the slot state
+    // agrees within the 1e-5 scan-conformance tolerance (observed here
+    // through the uncertainty signal, a pure function of the belief).
+    // Prompt lengths cover the edges: empty, single token, one conv
+    // window (K-1 = 3 for small_lm), and a long 512-token prompt that
+    // spans many chunks.
+    let prompts: Vec<Vec<i32>> = vec![
+        vec![],
+        vec![7],
+        (0..3).map(|i| i * 5 % 32).collect(),
+        (0..512).map(|i| i * 13 % 32).collect(),
+    ];
+    let run = |chunk: usize| -> Vec<(Vec<String>, f64)> {
+        let backend = NativeBackend::seeded(&small_lm(), 42, 2);
+        let mut cfg = native_cfg();
+        cfg.prefill_chunk = chunk;
+        let handle = serve_native(backend, &cfg).unwrap();
+        let mut c = Client::connect(&handle.addr).unwrap();
+        let out = prompts
+            .iter()
+            .map(|p| {
+                let r = c.request(p, 6).unwrap();
+                let toks: Vec<String> = r
+                    .req("tokens")
+                    .unwrap()
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|t| t.to_string())
+                    .collect();
+                assert_eq!(toks.len(), 6);
+                (toks, r.req("uncertainty").unwrap().as_f64().unwrap())
+            })
+            .collect();
+        handle.stop().unwrap();
+        out
+    };
+    let reference = run(1);
+    println!("prefill parity chunk=1 baseline: ok");
+    for chunk in [8usize, 64] {
+        let got = run(chunk);
+        for (i, ((ref_toks, ref_unc), (toks, unc))) in
+            reference.iter().zip(&got).enumerate()
+        {
+            // exact token equality is the acceptance bar; it follows
+            // from the 1e-5 state parity only when no greedy top-2
+            // margin is that thin, which holds for this pinned seed —
+            // if a future model change trips this, inspect the margins
+            // before reaching for a looser assertion
+            assert_eq!(ref_toks, toks,
+                       "prompt {i}: chunk={chunk} generated different \
+                        tokens than token-by-token prefill");
+            assert!(kla::testing::rel_close64(*ref_unc, *unc, 1e-5),
+                    "prompt {i}: chunk={chunk} uncertainty {unc} vs \
+                     sequential {ref_unc}");
+        }
+        println!("prefill parity chunk={chunk} vs chunk=1: ok");
+    }
+}
+
+#[test]
+fn native_stats_cmd_reports_live_counters() {
+    let backend = NativeBackend::seeded(&small_lm(), 9, 2);
+    let mut cfg = native_cfg();
+    cfg.prefill_chunk = 8;
+    let handle = serve_native(backend, &cfg).unwrap();
+    let mut c = Client::connect(&handle.addr).unwrap();
+    // documented protocol line answers (it used to bail "unknown cmd")
+    let s0 = c.stats().unwrap();
+    assert_eq!(s0.req("requests").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(s0.req("tokens_out").unwrap().as_usize().unwrap(), 0);
+    let prompt: Vec<i32> = (0..20).map(|i| i % 32).collect();
+    let r = c.request(&prompt, 3).unwrap();
+    assert_eq!(r.req("tokens").unwrap().as_arr().unwrap().len(), 3);
+    // counters are LIVE — the server is still running when we read them
+    let s1 = c.stats().unwrap();
+    assert_eq!(s1.req("requests").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(s1.req("tokens_out").unwrap().as_usize().unwrap(), 3);
+    assert!(s1.req("steps").unwrap().as_usize().unwrap() >= 3);
+    // a 20-token prompt leaves 19 tokens for the scan prefill
+    assert_eq!(s1.req("prefill_tokens").unwrap().as_usize().unwrap(), 19);
+    let stats = handle.stop().unwrap();
+    assert_eq!(stats.requests, 1);
+    assert_eq!(stats.prefill_tokens, 19);
+}
+
+#[test]
+fn native_client_shutdown_quiesces_listener_without_external_poke() {
+    let backend = NativeBackend::seeded(&small_lm(), 5, 2);
+    let handle = serve_native(backend, &native_cfg()).unwrap();
+    let addr = handle.addr.clone();
+    let mut c = Client::connect(&addr).unwrap();
+    let _ = c.request(&[1, 2, 3], 2).unwrap();
+    assert!(c.shutdown().unwrap().req("ok").unwrap().as_bool().unwrap());
+    drop(c);
+    // the shutdown handler pokes its own accept(), so the listener must
+    // exit and close the socket WITHOUT any external help.  Pre-fix the
+    // accept() blocked forever holding the port open, so this loop never
+    // saw a refused connection.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        match std::net::TcpStream::connect(&addr) {
+            Err(_) => break, // listener gone: server quiesced
+            Ok(_) => {
+                assert!(std::time::Instant::now() < deadline,
+                        "listener still accepting after client shutdown");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+    // stop() reduces to a join and must not hang
+    let stats = handle.stop().unwrap();
+    assert!(stats.requests >= 1);
+    assert_eq!(stats.tokens_out, 2);
+}
+
+#[test]
 fn native_tokens_deterministic_for_fixed_seed_across_servers() {
     let run = |seed: u64| -> Vec<String> {
         let backend = NativeBackend::seeded(&small_lm(), seed, 2);

@@ -158,6 +158,110 @@ fn native_state_cache_interleavings_preserve_slot_isolation() {
 }
 
 #[test]
+fn native_prefill_write_slot_preserves_other_lanes() {
+    // chunked prefill advances exactly one lane: after prefill() +
+    // write_slot(), every OTHER slot's next-token logits are unchanged,
+    // and the prefilled slot matches feeding the same tokens through
+    // batched step()s (within the scan conformance tolerance).
+    property("prefill_write_slot", 20, |g: &mut Gen| {
+        let batch = g.usize_in(2, 4);
+        let cfg = NativeLmConfig {
+            vocab: 16,
+            d_model: 8,
+            n_layers: g.usize_in(1, 2),
+            n_state: 2,
+            conv_kernel: 3,
+            ..Default::default()
+        };
+        let backend = NativeBackend::seeded(&cfg, 17, batch);
+        let mut cache = BeliefStateCache::for_backend(&backend)
+            .map_err(|e| e.to_string())?;
+        // dirty every lane so the prefill resumes a real carry
+        for w in 0..g.usize_in(1, 3) {
+            let toks: Vec<i32> =
+                (0..batch).map(|i| ((w + i + 3) % 16) as i32).collect();
+            let t = IntTensor::new(&[batch], toks).unwrap();
+            let (_, next) = backend
+                .step(&t, cache.state())
+                .map_err(|e| e.to_string())?;
+            cache.set_state(next);
+        }
+        let before = probe_rows(&backend, &cache);
+        let slot = g.usize_in(0, batch - 1);
+        let t_len = g.usize_in(1, 9);
+        let toks: Vec<i32> =
+            (0..t_len).map(|_| g.usize_in(0, 15) as i32).collect();
+        // reference: batched step() chain, lane `slot` only
+        let mut ref_state = cache.state().clone();
+        for &tok in &toks {
+            let bt = IntTensor::new(&[batch], vec![tok; batch]).unwrap();
+            let (_, next) = backend
+                .step(&bt, &ref_state)
+                .map_err(|e| e.to_string())?;
+            ref_state = next;
+        }
+        let (_, lane) = backend
+            .prefill(&IntTensor::new(&[t_len], toks).unwrap(), slot,
+                     cache.state())
+            .map_err(|e| e.to_string())?;
+        cache.write_slot(slot, &lane).map_err(|e| e.to_string())?;
+        let after = probe_rows(&backend, &cache);
+        for s in 0..batch {
+            if s == slot {
+                continue;
+            }
+            rows_close(&before[s], &after[s],
+                       &format!("prefill of slot {slot} drifted lane {s}"))?;
+        }
+        let mut ref_cache = BeliefStateCache::for_backend(&backend)
+            .map_err(|e| e.to_string())?;
+        ref_cache.set_state(ref_state);
+        let want = probe_rows(&backend, &ref_cache);
+        // the prefill ran a parallel scan (Blelloch), the reference a
+        // sequential chain; the probe step then compounds the per-layer
+        // 1e-5 conformance deviation through the full model once more,
+        // hence the deliberately looser 1e-4 here
+        for (i, (a, e)) in after[slot].iter().zip(&want[slot]).enumerate()
+        {
+            if !kla::testing::rel_close(*a, *e, 1e-4) {
+                return Err(format!(
+                    "prefilled slot {slot} != step chain at [{i}]: {a} \
+                     vs {e}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn native_state_cache_restore_rejects_conv_kernel_mismatch() {
+    // same layer count and state width, DIFFERENT conv kernel: the
+    // beliefs validate, so before the conv-length check this panicked
+    // inside copy_from_slice instead of returning the shape error
+    let mk = |k: usize| {
+        NativeBackend::seeded(
+            &NativeLmConfig {
+                vocab: 16,
+                d_model: 8,
+                n_layers: 2,
+                n_state: 2,
+                conv_kernel: k,
+                ..Default::default()
+            },
+            1,
+            2,
+        )
+    };
+    let mut cache = BeliefStateCache::for_backend(&mk(3)).unwrap();
+    // smaller kernel => shorter snapshot window => pre-fix, the layer-1
+    // copy sliced past the end of snap.conv and panicked
+    let foreign = BeliefStateCache::for_backend(&mk(2)).unwrap();
+    let snap = foreign.snapshot(0);
+    assert!(cache.restore(0, &snap).is_err(),
+            "restore accepted a snapshot with a foreign conv window");
+}
+
+#[test]
 fn native_state_cache_restore_rejects_wrong_shape() {
     let backend = NativeBackend::seeded(
         &NativeLmConfig {
