@@ -10,7 +10,7 @@ use anyhow::Result;
 use kla::config::ServeConfig;
 use kla::kla::NativeLmConfig;
 use kla::runtime::{NativeBackend, Runtime};
-use kla::serve::{serve, serve_native, Client};
+use kla::serve::{serve, serve_native, Client, RequestOpts};
 
 fn main() -> Result<()> {
     let n_requests: usize = std::env::args()
@@ -66,6 +66,32 @@ fn main() -> Result<()> {
     }
     for j in joins {
         println!("{}", j.join().unwrap()?);
+    }
+
+    // sampled decoding: same prompt, two explicit seeds — reproducible
+    // per seed, and the uncertainty-scaled temperature samples hotter
+    // where the belief is diffuse (uncertainty_temp couples them)
+    println!("\nseeded sampling (temperature 0.9, top_p 0.95, \
+              uncertainty_temp 0.5):");
+    let mut c = Client::connect(&addr)?;
+    let prompt: Vec<i32> = (0..6).map(|j| (j * 17) % 200).collect();
+    for seed in [7u64, 8] {
+        let opts = RequestOpts {
+            temperature: Some(0.9),
+            top_p: Some(0.95),
+            uncertainty_temp: Some(0.5),
+            seed: Some(seed),
+            ..Default::default()
+        };
+        let r = c.request_opts(&prompt, 8, &opts)?;
+        let toks: Vec<String> = r
+            .req("tokens")?
+            .as_arr()?
+            .iter()
+            .map(|t| t.to_string())
+            .collect();
+        println!("  seed {seed}: [{}] uncertainty {:.4}",
+                 toks.join(", "), r.req("uncertainty")?.as_f64()?);
     }
 
     let stats = handle.stop()?;

@@ -6,21 +6,32 @@ use kla::bench::Suite;
 use kla::config::ServeConfig;
 use kla::kla::NativeLmConfig;
 use kla::runtime::{NativeBackend, Runtime};
-use kla::serve::{serve, serve_native, Client};
+use kla::serve::{serve, serve_native, Client, RequestOpts};
 use kla::util::Stats;
 
 fn load_once(addr: &str, n_requests: usize, prompt_len: usize,
              max_new: usize) -> (f64, Stats) {
+    load_once_opts(addr, n_requests, prompt_len, max_new,
+                   &RequestOpts::default())
+}
+
+fn load_once_opts(addr: &str, n_requests: usize, prompt_len: usize,
+                  max_new: usize, opts: &RequestOpts) -> (f64, Stats) {
     let t0 = std::time::Instant::now();
     let mut joins = Vec::new();
     for i in 0..n_requests {
         let addr = addr.to_string();
+        let mut opts = opts.clone();
+        // per-request seed so sampled rows are reproducible run to run
+        if opts.temperature.is_some() {
+            opts.seed = Some(i as u64);
+        }
         joins.push(std::thread::spawn(move || {
             let mut c = Client::connect(&addr).unwrap();
             let prompt: Vec<i32> = (0..prompt_len)
                 .map(|j| ((i * 13 + j) % 200) as i32)
                 .collect();
-            let r = c.request(&prompt, max_new).unwrap();
+            let r = c.request_opts(&prompt, max_new, &opts).unwrap();
             r.req("total_ms").unwrap().as_f64().unwrap()
         }));
     }
@@ -86,6 +97,45 @@ fn main() {
                 ],
             );
         }
+    }
+
+    // ---- sampling overhead: seeded temperature/top-p vs greedy ----
+    // same load as native_batch8_chunk64/window1000us, but every request
+    // samples (temperature 0.9, top_p 0.95, per-request seed), so the
+    // per-lane softmax + nucleus cost shows up next to the greedy row
+    {
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            backend: "native".into(),
+            batch_window_us: 1000,
+            max_new_tokens: 8,
+            prefill_chunk: 64,
+            ..Default::default()
+        };
+        let backend =
+            NativeBackend::seeded(&NativeLmConfig::default(), 0, 8);
+        let handle = serve_native(backend, &cfg).unwrap();
+        let addr = handle.addr.clone();
+        let opts = RequestOpts {
+            temperature: Some(0.9),
+            top_p: Some(0.95),
+            ..Default::default()
+        };
+        let _ = load_once_opts(&addr, 2, 64, 2, &opts); // warm
+        let (tps, lat) = load_once_opts(&addr, 24, 64, 8, &opts);
+        let stats = handle.stop().unwrap();
+        suite.metric_row(
+            "native_batch8_chunk64_sampled/window1000us",
+            vec![
+                ("tokens_per_s".into(), tps),
+                ("p50_ms".into(), lat.percentile(50.0)),
+                ("p99_ms".into(), lat.percentile(99.0)),
+                ("engine_step_ms".into(), stats.mean_step_ms()),
+                ("occupancy".into(),
+                 stats.batch_occupancy.iter().sum::<f64>()
+                     / stats.batch_occupancy.len().max(1) as f64),
+            ],
+        );
     }
 
     // ---- XLA artifact backend: skips without artifacts ----

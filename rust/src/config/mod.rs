@@ -160,9 +160,33 @@ pub struct ServeConfig {
     pub batch_window_us: u64,
     pub max_new_tokens: usize,
     pub state_pool: usize,
-    /// Weight seed for the native backend's deterministic init (ignored
-    /// when a checkpoint supplies the weights, and by the XLA backend).
+    /// Engine seed: keys the counter-based sampling RNG for every
+    /// request (see `serve::sampling::request_key`), and doubles as the
+    /// weight seed for the native backend's deterministic init (ignored
+    /// for weights when a checkpoint supplies them, and by the XLA
+    /// backend — but still used for sampling on both).
     pub seed: u64,
+    /// Upper bound on a request's `max_new_tokens`; requests asking for
+    /// more are REJECTED with a structured `{"err": ...}` reply (never
+    /// silently clamped).
+    pub max_new_limit: usize,
+    /// Default sampling temperature (0 = greedy argmax, the historical
+    /// behaviour).  Per-request `temperature` overrides it.
+    pub temperature: f64,
+    /// Default top-k cutoff (0 = off, 1 = greedy).  Per-request `top_k`
+    /// overrides it.
+    pub top_k: usize,
+    /// Default nucleus mass (>= 1 = off).  Per-request `top_p` overrides.
+    pub top_p: f64,
+    /// Default uncertainty->temperature coupling `c` in
+    /// `tau_eff = tau * (1 + c * u)` over the slot's mean posterior
+    /// variance (0 = off).  Per-request `uncertainty_temp` overrides.
+    pub uncertainty_temp: f64,
+    /// Default stop token ids (sampling one terminates the request; the
+    /// stop token is included in the output).  A per-request
+    /// `stop_tokens` REPLACES this list; `eos` appends one id to
+    /// whatever list is in effect.
+    pub stop_tokens: Vec<i32>,
     /// Pad token id, used for idle batch lanes and empty prompts.  Must
     /// be a valid vocab id; the engine clamps it into [0, vocab) like
     /// every other token.  (Previously hardcoded to 0, which is a live
@@ -187,6 +211,12 @@ impl Default for ServeConfig {
             max_new_tokens: 32,
             state_pool: 64,
             seed: 0,
+            max_new_limit: 1024,
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            uncertainty_temp: 0.0,
+            stop_tokens: Vec::new(),
             pad: 0,
             prefill_chunk: 64,
         }

@@ -45,7 +45,20 @@ fn app() -> App {
                       interleaves token-by-token)")
                 .opt("pad", "0", "pad token id for idle lanes and empty \
                       prompts")
-                .opt("seed", "0", "weight seed (native, no checkpoint)")
+                .opt("temperature", "0",
+                     "default sampling temperature (0 = greedy argmax)")
+                .opt("top-k", "0", "default top-k cutoff (0 = off, 1 = \
+                      greedy)")
+                .opt("top-p", "1", "default nucleus mass (>= 1 = off)")
+                .opt("uncertainty-temp", "0",
+                     "scale temperature by belief uncertainty: \
+                      tau*(1 + c*u)")
+                .opt("stop", "", "default stop token ids, comma-separated")
+                .opt("max-new-limit", "1024",
+                     "reject requests asking for more than this many \
+                      new tokens")
+                .opt("seed", "0", "engine seed: keys the sampling RNG, \
+                      and the weight init (native, no checkpoint)")
                 .opt("vocab", "64", "vocab size (native, no checkpoint)")
                 .opt("d-model", "32", "model width (native, no checkpoint)")
                 .opt("layers", "2", "layer count (native, no checkpoint)")
@@ -167,13 +180,25 @@ fn cmd_mad(m: &Matches) -> Result<()> {
 }
 
 fn cmd_serve(m: &Matches) -> Result<()> {
+    let stop_tokens: Vec<i32> = m
+        .get_list("stop")?
+        .iter()
+        .map(|s| s.parse::<i32>()
+            .map_err(|e| anyhow!("--stop: {s:?} is not a token id: {e}")))
+        .collect::<Result<_>>()?;
     let cfg = ServeConfig {
         addr: m.get_string("addr")?,
         backend: m.get_string("backend")?,
         artifact: m.get_string("artifact")?,
         max_new_tokens: m.get_usize("max-new")?,
+        max_new_limit: m.get_usize("max-new-limit")?,
         batch_window_us: m.get_u64("window-us")?,
         seed: m.get_u64("seed")?,
+        temperature: m.get_f64("temperature")?,
+        top_k: m.get_usize("top-k")?,
+        top_p: m.get_f64("top-p")?,
+        uncertainty_temp: m.get_f64("uncertainty-temp")?,
+        stop_tokens,
         prefill_chunk: m.get_usize("prefill-chunk")?,
         pad: m.get("pad")?
             .parse::<i32>()

@@ -9,12 +9,35 @@
 
 use std::collections::VecDeque;
 
+use super::sampling::SamplerConfig;
+
 /// A request as seen by the scheduler.
 #[derive(Clone, Debug)]
 pub struct SchedRequest {
     pub id: u64,
     pub prompt: Vec<i32>,
+    /// How many tokens to sample.  0 is honoured: prefill only — the
+    /// prompt is consumed (belief state advances, uncertainty reported)
+    /// and the request finishes with empty `tokens`.
     pub max_new: usize,
+    /// Per-request sampling & termination config.
+    pub sampler: SamplerConfig,
+    /// Counter-based RNG key (`sampling::request_key`), stamped by the
+    /// engine at submit from `(engine seed, request id, client seed)`.
+    pub key: u64,
+}
+
+impl SchedRequest {
+    /// A request with the historical greedy behaviour (tests, defaults).
+    pub fn greedy(id: u64, prompt: Vec<i32>, max_new: usize) -> Self {
+        SchedRequest {
+            id,
+            prompt,
+            max_new,
+            sampler: SamplerConfig::greedy(),
+            key: 0,
+        }
+    }
 }
 
 /// Per-slot progress.
@@ -28,6 +51,8 @@ pub enum Slot {
         cursor: usize,
         generated: Vec<i32>,
         max_new: usize,
+        sampler: SamplerConfig,
+        key: u64,
     },
 }
 
@@ -105,7 +130,12 @@ impl Scheduler {
                 },
                 cursor: 0,
                 generated: Vec::new(),
-                max_new: req.max_new.max(1),
+                // max_new passes through unclamped: 0 means prefill-only
+                // (the old `.max(1)` silently generated a token the
+                // client never asked for)
+                max_new: req.max_new,
+                sampler: req.sampler,
+                key: req.key,
             };
             admitted.push((i, id));
         }
@@ -115,23 +145,48 @@ impl Scheduler {
     /// Take up to `max` prompt tokens from `slot` for chunked prefill,
     /// advancing its cursor (the cursor jumps, instead of moving one
     /// token per engine iteration through `Feed::Prefill`).  The LAST
-    /// prompt token is never taken: it stays behind for a sampled
-    /// `Feed::Decode` step, so chunked and token-per-iteration prefill
-    /// hand the engine identical feeds from there on.  Returns empty for
-    /// free slots, slots already at/past the last prompt token, and
-    /// `max == 0`.
+    /// prompt token is never taken when the request will sample: it stays
+    /// behind for a sampled `Feed::Decode` step, so chunked and
+    /// token-per-iteration prefill hand the engine identical feeds from
+    /// there on.  A `max_new == 0` request has nothing to sample, so its
+    /// prompt is consumed to the very end (`take_prefill_only_finished`
+    /// then retires it without a batched step).  Returns empty for free
+    /// slots, slots with no prefill work left, and `max == 0`.
     pub fn take_prefill(&mut self, slot: usize, max: usize) -> Vec<i32> {
-        let Slot::Active { prompt, cursor, .. } = &mut self.slots[slot]
+        let Slot::Active { prompt, cursor, max_new, .. } =
+            &mut self.slots[slot]
         else {
             return Vec::new();
         };
-        if *cursor + 1 >= prompt.len() {
+        let keep = usize::from(*max_new > 0);
+        if *cursor + keep >= prompt.len() {
             return Vec::new();
         }
-        let hi = (*cursor + max).min(prompt.len() - 1);
+        let hi = (*cursor + max).min(prompt.len() - keep);
         let out = prompt[*cursor..hi].to_vec();
         *cursor = hi;
         out
+    }
+
+    /// Retire `max_new == 0` requests whose prompt has been fully
+    /// consumed by chunked prefill: they finish with empty tokens WITHOUT
+    /// a batched step, so the reported uncertainty reflects exactly the
+    /// prompt (no stray pad feed).  Like `advance`, slots stay occupied
+    /// until `release`.  (On the legacy token-per-iteration path the last
+    /// prompt token arrives as a `Feed::Prefill` and `advance` retires
+    /// the request instead.)
+    pub fn take_prefill_only_finished(&mut self) -> Vec<Finished> {
+        let mut done = Vec::new();
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            let Slot::Active { id, prompt, cursor, max_new, .. } = slot
+            else {
+                continue;
+            };
+            if *max_new == 0 && *cursor >= prompt.len() {
+                done.push(Finished { id: *id, slot: i, tokens: Vec::new() });
+            }
+        }
+        done
     }
 
     /// Tokens to feed this iteration, one per slot.
@@ -140,14 +195,21 @@ impl Scheduler {
             .iter()
             .map(|slot| match slot {
                 Slot::Free => Feed::Idle,
-                Slot::Active { prompt, cursor, generated, .. } => {
+                Slot::Active { prompt, cursor, generated, max_new, .. } => {
                     if *cursor < prompt.len() {
                         let tok = prompt[*cursor];
-                        if *cursor + 1 == prompt.len() {
+                        if *cursor + 1 == prompt.len() && *max_new > 0 {
                             Feed::Decode(tok) // last prompt token: sample
                         } else {
+                            // mid-prompt, or a prefill-only request whose
+                            // last token needs no sampling
                             Feed::Prefill(tok)
                         }
+                    } else if *max_new == 0 {
+                        // prefill-only request already fully consumed
+                        // (awaiting take_prefill_only_finished): nothing
+                        // to feed, nothing to sample
+                        Feed::Idle
                     } else {
                         // feed the last generated token, sample again
                         Feed::Decode(*generated.last().unwrap_or(&self.pad))
@@ -157,27 +219,53 @@ impl Scheduler {
             .collect()
     }
 
+    /// Sampling context for the token a slot is about to emit: the
+    /// request's [`SamplerConfig`], its RNG key, and the per-request draw
+    /// counter (tokens sampled so far).  Counter-based: the draw for
+    /// token `t` of a request depends only on `(key, t)`, never on batch
+    /// composition, slot assignment, or prefill chunking.
+    pub fn sampling_lane(&self, slot: usize)
+                         -> Option<(&SamplerConfig, u64, u64)> {
+        match &self.slots[slot] {
+            Slot::Active { sampler, key, generated, .. } => {
+                Some((sampler, *key, generated.len() as u64))
+            }
+            Slot::Free => None,
+        }
+    }
+
     /// Apply the engine's sampled tokens (one per slot; ignored for idle /
     /// prefill slots).  Returns finished requests (their slots stay
     /// occupied until `release` — the engine must free state first).
+    /// A request finishes when it has `max_new` tokens OR its sampled
+    /// token is one of its stop tokens (stop ids inside the prompt never
+    /// terminate — only sampled tokens are checked).
     pub fn advance(&mut self, sampled: &[i32]) -> Vec<Finished> {
         let mut done = Vec::new();
         for (i, slot) in self.slots.iter_mut().enumerate() {
-            let Slot::Active { id, prompt, cursor, generated, max_new } =
-                slot
+            let Slot::Active {
+                id, prompt, cursor, generated, max_new, sampler, ..
+            } = slot
             else {
                 continue;
             };
+            let mut pushed = None;
             if *cursor < prompt.len() {
-                let sampled_now = *cursor + 1 == prompt.len();
+                let sampled_now =
+                    *cursor + 1 == prompt.len() && *max_new > 0;
                 *cursor += 1;
                 if sampled_now {
                     generated.push(sampled[i]);
+                    pushed = Some(sampled[i]);
                 }
-            } else {
+            } else if *max_new > 0 {
                 generated.push(sampled[i]);
+                pushed = Some(sampled[i]);
             }
-            if generated.len() >= *max_new {
+            let stop_hit = pushed.is_some_and(|t| sampler.is_stop(t));
+            if stop_hit
+                || (*cursor >= prompt.len() && generated.len() >= *max_new)
+            {
                 done.push(Finished {
                     id: *id,
                     slot: i,
@@ -224,7 +312,7 @@ mod tests {
     #[test]
     fn single_request_lifecycle() {
         let mut s = Scheduler::new(2, 0);
-        s.submit(SchedRequest { id: 1, prompt: vec![5, 6, 7], max_new: 3 });
+        s.submit(SchedRequest::greedy(1, vec![5, 6, 7], 3));
         let done = drive(&mut s, 20);
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].id, 1);
@@ -235,7 +323,7 @@ mod tests {
     #[test]
     fn prefill_then_decode_feeds() {
         let mut s = Scheduler::new(1, 0);
-        s.submit(SchedRequest { id: 9, prompt: vec![5, 6], max_new: 2 });
+        s.submit(SchedRequest::greedy(9, vec![5, 6], 2));
         s.admit();
         assert_eq!(s.feeds(), vec![Feed::Prefill(5)]);
         s.advance(&[0]);
@@ -247,9 +335,9 @@ mod tests {
     #[test]
     fn continuous_batching_overlaps_requests() {
         let mut s = Scheduler::new(2, 0);
-        s.submit(SchedRequest { id: 1, prompt: vec![1; 10], max_new: 5 });
-        s.submit(SchedRequest { id: 2, prompt: vec![2], max_new: 2 });
-        s.submit(SchedRequest { id: 3, prompt: vec![3], max_new: 2 });
+        s.submit(SchedRequest::greedy(1, vec![1; 10], 5));
+        s.submit(SchedRequest::greedy(2, vec![2], 2));
+        s.submit(SchedRequest::greedy(3, vec![3], 2));
         s.admit();
         // both slots busy, third queued
         assert_eq!(s.active_count(), 2);
@@ -263,9 +351,9 @@ mod tests {
     #[test]
     fn admit_reports_slot_and_id() {
         let mut s = Scheduler::new(2, 0);
-        s.submit(SchedRequest { id: 7, prompt: vec![1], max_new: 1 });
-        s.submit(SchedRequest { id: 8, prompt: vec![2], max_new: 1 });
-        s.submit(SchedRequest { id: 9, prompt: vec![3], max_new: 1 });
+        s.submit(SchedRequest::greedy(7, vec![1], 1));
+        s.submit(SchedRequest::greedy(8, vec![2], 1));
+        s.submit(SchedRequest::greedy(9, vec![3], 1));
         let adm = s.admit();
         assert_eq!(adm, vec![(0, 7), (1, 8)]);
         assert!(s.admit().is_empty()); // no free slots left
@@ -275,7 +363,7 @@ mod tests {
     #[test]
     fn empty_prompt_handled() {
         let mut s = Scheduler::new(1, 0);
-        s.submit(SchedRequest { id: 4, prompt: vec![], max_new: 1 });
+        s.submit(SchedRequest::greedy(4, vec![], 1));
         let done = drive(&mut s, 5);
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].tokens.len(), 1);
@@ -290,21 +378,113 @@ mod tests {
     // ------------------------------------------------- edge cases -----
 
     #[test]
-    fn max_new_zero_is_clamped_to_one_token() {
+    fn max_new_zero_is_prefill_only() {
+        // regression: `max_new: req.max_new.max(1)` used to silently
+        // generate a token the client never asked for.  Now the prompt is
+        // consumed as pure prefill and the request finishes empty.
         let mut s = Scheduler::new(1, 0);
-        s.submit(SchedRequest { id: 1, prompt: vec![4, 5], max_new: 0 });
-        let done = drive(&mut s, 10);
+        s.submit(SchedRequest::greedy(1, vec![4, 5], 0));
+        s.admit();
+        assert_eq!(s.feeds(), vec![Feed::Prefill(4)]);
+        assert!(s.advance(&[9]).is_empty());
+        // the LAST prompt token is still a Prefill feed — nothing will
+        // ever be sampled for this request
+        assert_eq!(s.feeds(), vec![Feed::Prefill(5)]);
+        let done = s.advance(&[9]);
         assert_eq!(done.len(), 1);
-        // a request can never complete with zero tokens: max_new is
-        // clamped to >= 1 at admission
-        assert_eq!(done[0].tokens.len(), 1);
+        assert!(done[0].tokens.is_empty());
+        s.release(done[0].slot);
         assert!(!s.has_work());
+    }
+
+    #[test]
+    fn max_new_zero_chunked_prefill_consumes_whole_prompt() {
+        // the chunked path: take_prefill keeps no token back (there is no
+        // Decode step to hold it for) and take_prefill_only_finished
+        // retires the request without a batched step
+        let mut s = Scheduler::new(1, 0);
+        s.submit(SchedRequest::greedy(1, vec![1, 2, 3], 0));
+        s.admit();
+        assert!(s.take_prefill_only_finished().is_empty());
+        assert_eq!(s.take_prefill(0, 100), vec![1, 2, 3]);
+        assert!(s.take_prefill(0, 100).is_empty());
+        // nothing left to feed or sample
+        assert_eq!(s.feeds(), vec![Feed::Idle]);
+        let done = s.take_prefill_only_finished();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 1);
+        assert!(done[0].tokens.is_empty());
+        s.release(done[0].slot);
+        assert!(!s.has_work());
+        // a sampling request is never retired by the prefill-only sweep
+        s.submit(SchedRequest::greedy(2, vec![1, 2, 3], 1));
+        s.admit();
+        assert_eq!(s.take_prefill(0, 100), vec![1, 2]);
+        assert!(s.take_prefill_only_finished().is_empty());
+        assert_eq!(s.feeds(), vec![Feed::Decode(3)]);
+    }
+
+    #[test]
+    fn stop_token_terminates_early_and_is_included() {
+        let mut s = Scheduler::new(1, 0);
+        let mut req = SchedRequest::greedy(1, vec![5], 4);
+        req.sampler.stop_tokens = vec![42];
+        s.submit(req);
+        s.admit();
+        assert_eq!(s.feeds(), vec![Feed::Decode(5)]);
+        assert!(s.advance(&[7]).is_empty()); // 7 is not a stop
+        let done = s.advance(&[42]);
+        assert_eq!(done.len(), 1);
+        // terminated at 2 of 4 tokens; the stop token IS in the output
+        assert_eq!(done[0].tokens, vec![7, 42]);
+    }
+
+    #[test]
+    fn stop_token_on_first_sampled_token_and_not_in_prompt() {
+        // stop id 5 appears in the PROMPT: prefill must not terminate
+        let mut s = Scheduler::new(1, 0);
+        let mut req = SchedRequest::greedy(1, vec![5, 5, 6], 3);
+        req.sampler.stop_tokens = vec![5];
+        s.submit(req);
+        s.admit();
+        assert_eq!(s.feeds(), vec![Feed::Prefill(5)]);
+        assert!(s.advance(&[5]).is_empty()); // prefill output ignored
+        assert_eq!(s.feeds(), vec![Feed::Prefill(5)]);
+        assert!(s.advance(&[5]).is_empty());
+        // first SAMPLED token (at the last prompt token) is the stop
+        assert_eq!(s.feeds(), vec![Feed::Decode(6)]);
+        let done = s.advance(&[5]);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].tokens, vec![5]);
+    }
+
+    #[test]
+    fn sampling_lane_exposes_config_key_and_counter() {
+        let mut s = Scheduler::new(2, 0);
+        let mut req = SchedRequest::greedy(1, vec![5, 6], 3);
+        req.sampler.temperature = 0.8;
+        req.key = 0xdead_beef;
+        s.submit(req);
+        s.admit();
+        // free slot has no lane
+        assert!(s.sampling_lane(1).is_none());
+        let (cfg, key, counter) = s.sampling_lane(0).unwrap();
+        assert_eq!(cfg.temperature, 0.8);
+        assert_eq!(key, 0xdead_beef);
+        assert_eq!(counter, 0);
+        s.advance(&[9]); // prefill token
+        assert_eq!(s.sampling_lane(0).unwrap().2, 0); // still no samples
+        s.advance(&[9]); // last prompt token: first sample
+        // counter == tokens sampled so far, independent of prompt length
+        assert_eq!(s.sampling_lane(0).unwrap().2, 1);
+        s.advance(&[9]);
+        assert_eq!(s.sampling_lane(0).unwrap().2, 2);
     }
 
     #[test]
     fn max_new_one_samples_exactly_at_last_prompt_token() {
         let mut s = Scheduler::new(1, 0);
-        s.submit(SchedRequest { id: 2, prompt: vec![1, 2, 3], max_new: 1 });
+        s.submit(SchedRequest::greedy(2, vec![1, 2, 3], 1));
         s.admit();
         assert_eq!(s.feeds(), vec![Feed::Prefill(1)]);
         assert!(s.advance(&[9]).is_empty());
@@ -323,20 +503,16 @@ mod tests {
         // submission order exactly (no overtaking when slots free up)
         let mut s = Scheduler::new(1, 0);
         for id in 1..=4u64 {
-            s.submit(SchedRequest {
-                id,
-                prompt: vec![id as i32],
-                max_new: 2,
-            });
+            s.submit(SchedRequest::greedy(id, vec![id as i32], 2));
         }
         let done = drive(&mut s, 40);
         let order: Vec<u64> = done.iter().map(|f| f.id).collect();
         assert_eq!(order, vec![1, 2, 3, 4]);
         // while the slot is held, admit() must not touch the queue
         let mut s = Scheduler::new(1, 0);
-        s.submit(SchedRequest { id: 9, prompt: vec![1], max_new: 5 });
+        s.submit(SchedRequest::greedy(9, vec![1], 5));
         assert_eq!(s.admit().len(), 1);
-        s.submit(SchedRequest { id: 10, prompt: vec![2], max_new: 1 });
+        s.submit(SchedRequest::greedy(10, vec![2], 1));
         assert!(s.admit().is_empty());
         assert_eq!(s.queue.len(), 1);
         assert_eq!(s.queue[0].id, 10);
@@ -345,11 +521,7 @@ mod tests {
     #[test]
     fn take_prefill_jumps_cursor_but_leaves_last_prompt_token() {
         let mut s = Scheduler::new(2, 0);
-        s.submit(SchedRequest {
-            id: 1,
-            prompt: (1..=10).collect(),
-            max_new: 2,
-        });
+        s.submit(SchedRequest::greedy(1, (1..=10).collect(), 2));
         s.admit();
         // free slot: nothing to prefill
         assert!(s.take_prefill(1, 4).is_empty());
@@ -370,24 +542,24 @@ mod tests {
     fn take_prefill_edge_cases() {
         let mut s = Scheduler::new(1, 7);
         // empty prompt becomes a single PAD token: no prefill work
-        s.submit(SchedRequest { id: 1, prompt: vec![], max_new: 1 });
+        s.submit(SchedRequest::greedy(1, vec![], 1));
         s.admit();
         assert!(s.take_prefill(0, 8).is_empty());
         assert_eq!(s.feeds(), vec![Feed::Decode(7)]);
         s.advance(&[3]);
         s.release(0);
         // single-token prompt: no prefill either
-        s.submit(SchedRequest { id: 2, prompt: vec![5], max_new: 1 });
+        s.submit(SchedRequest::greedy(2, vec![5], 1));
         s.admit();
         assert!(s.take_prefill(0, 8).is_empty());
         // chunk larger than the prompt: one call takes all but the last
         s.release(0);
-        s.submit(SchedRequest { id: 3, prompt: vec![1, 2, 3], max_new: 1 });
+        s.submit(SchedRequest::greedy(3, vec![1, 2, 3], 1));
         s.admit();
         assert_eq!(s.take_prefill(0, 100), vec![1, 2]);
         // max == 0 takes nothing
         s.release(0);
-        s.submit(SchedRequest { id: 4, prompt: vec![1, 2, 3], max_new: 1 });
+        s.submit(SchedRequest::greedy(4, vec![1, 2, 3], 1));
         s.admit();
         assert!(s.take_prefill(0, 0).is_empty());
         assert_eq!(s.feeds(), vec![Feed::Prefill(1)]);
@@ -400,7 +572,7 @@ mod tests {
         assert!(!s.has_work());
         assert_eq!(s.active_count(), 0);
         // queued but not admitted: work pending, still zero active
-        s.submit(SchedRequest { id: 1, prompt: vec![5], max_new: 1 });
+        s.submit(SchedRequest::greedy(1, vec![5], 1));
         assert!(s.has_work());
         assert_eq!(s.active_count(), 0);
         // admitted: one active slot, queue drained

@@ -12,7 +12,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::batcher::{Feed, SchedRequest, Scheduler};
+use super::batcher::{Feed, Finished, SchedRequest, Scheduler};
+use super::sampling::{self, SamplerConfig};
 use super::state_cache::BeliefStateCache;
 use crate::config::ServeConfig;
 use crate::runtime::backend::DecodeBackend;
@@ -22,7 +23,13 @@ use crate::util::Stats;
 /// A request entering the engine.
 pub struct EngineRequest {
     pub prompt: Vec<i32>,
+    /// Tokens to sample; 0 = prefill only (empty `tokens` reply, the
+    /// belief-state `uncertainty` still reported).
     pub max_new: usize,
+    /// Per-request sampling & termination config
+    /// ([`SamplerConfig::greedy`] reproduces the historical behaviour
+    /// exactly).
+    pub sampler: SamplerConfig,
     /// Stamped by the producer at enqueue time, so queue_ms includes
     /// time spent in the mpsc channel before engine intake (under
     /// overload, intake stops draining once the scheduler queue reaches
@@ -120,6 +127,9 @@ pub struct EngineOptions {
     /// token-per-iteration prefill path, as do backends whose
     /// `prefill_is_parallel()` is false.
     pub prefill_chunk: usize,
+    /// Engine seed: keys the counter-based sampling RNG
+    /// (`sampling::request_key(seed, request id, client seed)`).
+    pub seed: u64,
 }
 
 impl EngineOptions {
@@ -128,6 +138,7 @@ impl EngineOptions {
             batch_window: Duration::from_micros(cfg.batch_window_us),
             pad: cfg.pad,
             prefill_chunk: cfg.prefill_chunk,
+            seed: cfg.seed,
         }
     }
 }
@@ -188,6 +199,30 @@ impl PendingTable {
         let total_ms =
             now.saturating_duration_since(row.submitted).as_secs_f64() * 1e3;
         Some((row.resp, queue_ms, total_ms))
+    }
+}
+
+/// Retire one finished request: account its tokens, read the slot's
+/// belief uncertainty, reset + release the slot, and answer the client.
+/// Shared by the decode path (`Scheduler::advance`) and the prefill-only
+/// path (`Scheduler::take_prefill_only_finished`).
+fn finish_request(f: &Finished, cache: &mut BeliefStateCache,
+                  sched: &mut Scheduler, pending: &mut PendingTable,
+                  stats: &mut EngineStats, live: &LiveStats) {
+    stats.tokens_out += f.tokens.len();
+    live.tokens_out.fetch_add(f.tokens.len(), Ordering::Relaxed);
+    let uncertainty = cache.slot_uncertainty(f.slot);
+    cache.reset_slot(f.slot);
+    sched.release(f.slot);
+    if let Some((resp, queue_ms, total_ms)) =
+        pending.finish(f.id, Instant::now())
+    {
+        let _ = resp.send(EngineResponse {
+            tokens: f.tokens.clone(),
+            queue_ms,
+            total_ms,
+            uncertainty,
+        });
     }
 }
 
@@ -284,10 +319,17 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
                     let id = next_id;
                     next_id += 1;
                     pending.submit(id, req.resp, req.submitted);
+                    // RNG key stamped here: explicit client seeds make it
+                    // independent of the engine-assigned id (and thus of
+                    // arrival order / batch composition)
+                    let key = sampling::request_key(opts.seed, id,
+                                                    req.sampler.seed);
                     sched.submit(SchedRequest {
                         id,
                         prompt: req.prompt,
                         max_new: req.max_new,
+                        sampler: req.sampler,
+                        key,
                     });
                     stats.requests += 1;
                     live.requests.fetch_add(1, Ordering::Relaxed);
@@ -343,6 +385,20 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
             }
         }
 
+        // prefill-only requests (max_new == 0) whose prompt was fully
+        // consumed by chunked prefill finish HERE, before the batched
+        // step, so the reported uncertainty reflects exactly the prompt
+        // (never a stray pad feed).  On the legacy path their last
+        // prompt token flows through Feed::Prefill and advance() retires
+        // them below instead.
+        for f in sched.take_prefill_only_finished() {
+            finish_request(&f, &mut cache, &mut sched, &mut pending,
+                           &mut stats, live);
+        }
+        if !sched.has_work() {
+            continue;
+        }
+
         // build the token vector for this iteration
         let feeds = sched.feeds();
         let tokens: Vec<i32> = feeds
@@ -357,7 +413,8 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
         // finished-but-unreleased slots can never inflate it
         let live_lanes =
             feeds.iter().filter(|f| !matches!(f, Feed::Idle)).count();
-        let sampling = feeds.iter().any(|f| matches!(f, Feed::Decode(_)));
+        let any_decode =
+            feeds.iter().any(|f| matches!(f, Feed::Decode(_)));
         let legacy_prefill_lanes =
             feeds.iter().filter(|f| matches!(f, Feed::Prefill(_))).count();
 
@@ -377,7 +434,7 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
         if legacy_prefill_lanes > 0 {
             stats.prefill_ms.push(elapsed_ms * prefill_frac);
         }
-        if sampling {
+        if any_decode {
             stats.step_ms.push(elapsed_ms * (1.0 - prefill_frac));
         }
         stats.steps += 1;
@@ -389,26 +446,34 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
         }
         stats.batch_occupancy.push(live_lanes as f64 / b as f64);
 
-        // greedy sampling per slot
-        let am = logits.argmax_last();
-        let sampled: Vec<i32> = am.data().to_vec();
+        // per-lane sampling: each Decode lane samples under ITS request's
+        // SamplerConfig with the counter-based draw for (key, tokens
+        // sampled so far) — greedy configs reduce to the exact NaN-aware
+        // argmax the old batched argmax_last path computed.  The state is
+        // already post-step, so the uncertainty feeding the
+        // uncertainty-scaled temperature reflects the current token.
+        let vocab = backend.vocab();
+        let mut sampled = vec![0i32; b];
+        for (slot, f) in feeds.iter().enumerate() {
+            if !matches!(f, Feed::Decode(_)) {
+                continue;
+            }
+            let Some((cfg, key, counter)) = sched.sampling_lane(slot)
+            else {
+                continue;
+            };
+            let unc = if cfg.uncertainty_temp != 0.0 {
+                cache.slot_uncertainty(slot)
+            } else {
+                0.0
+            };
+            let row = &logits.data()[slot * vocab..(slot + 1) * vocab];
+            sampled[slot] = sampling::sample(row, cfg, key, counter, unc);
+        }
         let finished = sched.advance(&sampled);
         for f in &finished {
-            stats.tokens_out += f.tokens.len();
-            live.tokens_out.fetch_add(f.tokens.len(), Ordering::Relaxed);
-            let uncertainty = cache.slot_uncertainty(f.slot);
-            cache.reset_slot(f.slot);
-            sched.release(f.slot);
-            if let Some((resp, queue_ms, total_ms)) =
-                pending.finish(f.id, Instant::now())
-            {
-                let _ = resp.send(EngineResponse {
-                    tokens: f.tokens.clone(),
-                    queue_ms,
-                    total_ms,
-                    uncertainty,
-                });
-            }
+            finish_request(f, &mut cache, &mut sched, &mut pending,
+                           &mut stats, live);
         }
     }
     Ok(stats)
@@ -453,11 +518,19 @@ mod tests {
     fn one_request(prompt: Vec<i32>, max_new: usize)
                    -> (Receiver<EngineRequest>,
                        Receiver<EngineResponse>) {
+        one_request_with(prompt, max_new, SamplerConfig::greedy())
+    }
+
+    fn one_request_with(prompt: Vec<i32>, max_new: usize,
+                        sampler: SamplerConfig)
+                        -> (Receiver<EngineRequest>,
+                            Receiver<EngineResponse>) {
         let (tx, rx) = channel::<EngineRequest>();
         let (rtx, rrx) = channel();
         tx.send(EngineRequest {
             prompt,
             max_new,
+            sampler,
             submitted: Instant::now(),
             resp: rtx,
         })
@@ -476,6 +549,7 @@ mod tests {
             batch_window: Duration::from_micros(100),
             pad: 0,
             prefill_chunk: 8,
+            seed: 0,
         };
         let stats = run_engine_opts(&backend, rx, &opts,
                                     Arc::new(AtomicBool::new(false)),
@@ -516,6 +590,7 @@ mod tests {
             batch_window: Duration::from_micros(100),
             pad: 0,
             prefill_chunk: 1, // legacy token-per-iteration path
+            seed: 0,
         };
         let stats = run_engine_opts(&backend, rx, &opts,
                                     Arc::new(AtomicBool::new(false)),
@@ -542,6 +617,7 @@ mod tests {
             batch_window: Duration::from_micros(100),
             pad: 9,
             prefill_chunk: 64,
+            seed: 0,
         };
         let stats = run_engine_opts(&backend, rx, &opts,
                                     Arc::new(AtomicBool::new(false)),
@@ -549,6 +625,123 @@ mod tests {
             .unwrap();
         assert_eq!(rrx.recv().unwrap().tokens.len(), 2);
         assert_eq!(stats.tokens_out, 2);
+    }
+
+    #[test]
+    fn zero_max_new_is_prefill_only_on_the_chunked_path() {
+        let backend = tiny_backend(2);
+        let (rx, rrx) = one_request((0..12).map(|i| i % 16).collect(), 0);
+        let opts = EngineOptions {
+            batch_window: Duration::from_micros(100),
+            pad: 0,
+            prefill_chunk: 8,
+            seed: 0,
+        };
+        let stats = run_engine_opts(&backend, rx, &opts,
+                                    Arc::new(AtomicBool::new(false)),
+                                    &Arc::new(LiveStats::default()))
+            .unwrap();
+        let resp = rrx.recv().unwrap();
+        // no tokens generated, but the prompt WAS consumed and the
+        // belief-state uncertainty is reported
+        assert!(resp.tokens.is_empty());
+        assert!(resp.uncertainty > 0.0);
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.tokens_out, 0);
+        // chunk of 8, one interleaved legacy token, final chunk of 3
+        assert_eq!(stats.prefill_tokens, 12);
+    }
+
+    #[test]
+    fn zero_max_new_is_prefill_only_on_the_legacy_path() {
+        let backend = tiny_backend(1);
+        let (rx, rrx) = one_request(vec![1, 2, 3], 0);
+        let opts = EngineOptions {
+            batch_window: Duration::from_micros(100),
+            pad: 0,
+            prefill_chunk: 1,
+            seed: 0,
+        };
+        let stats = run_engine_opts(&backend, rx, &opts,
+                                    Arc::new(AtomicBool::new(false)),
+                                    &Arc::new(LiveStats::default()))
+            .unwrap();
+        let resp = rrx.recv().unwrap();
+        assert!(resp.tokens.is_empty());
+        assert!(resp.uncertainty > 0.0);
+        assert_eq!(stats.tokens_out, 0);
+        // all three prompt tokens flowed through Feed::Prefill (the last
+        // one is NOT a sampled Decode feed when max_new == 0)
+        assert_eq!(stats.prefill_tokens, 3);
+        assert!(stats.step_ms.is_empty(), "no decode step may run");
+    }
+
+    #[test]
+    fn seeded_sampling_is_reproducible_and_differs_from_greedy_keyspace()
+    {
+        // same explicit client seed => identical tokens across engines;
+        // the counter-based draws make this independent of everything
+        // else (pinned end-to-end against batch width in
+        // integration_serve)
+        let run = |client_seed: Option<u64>| -> Vec<i32> {
+            let backend = tiny_backend(2);
+            let sampler = SamplerConfig {
+                temperature: 1.2,
+                top_p: 0.95,
+                seed: client_seed,
+                ..SamplerConfig::greedy()
+            };
+            let (rx, rrx) =
+                one_request_with(vec![1, 2, 3], 8, sampler);
+            let opts = EngineOptions {
+                batch_window: Duration::from_micros(100),
+                pad: 0,
+                prefill_chunk: 64,
+                seed: 7,
+            };
+            run_engine_opts(&backend, rx, &opts,
+                            Arc::new(AtomicBool::new(false)),
+                            &Arc::new(LiveStats::default()))
+                .unwrap();
+            rrx.recv().unwrap().tokens
+        };
+        let a = run(Some(99));
+        let b = run(Some(99));
+        assert_eq!(a, b, "same client seed must reproduce");
+        assert_eq!(a.len(), 8);
+        // without a client seed the id-derived key is still reproducible
+        // for the same arrival order
+        assert_eq!(run(None), run(None));
+    }
+
+    #[test]
+    fn stop_token_ends_generation_early_through_the_engine() {
+        // greedy pass to learn the model's continuation, then stop on
+        // its second generated token
+        let full = {
+            let backend = tiny_backend(1);
+            let (rx, rrx) = one_request(vec![4, 9], 6);
+            run_engine(&backend, rx, Duration::from_micros(100),
+                       Arc::new(AtomicBool::new(false)))
+                .unwrap();
+            rrx.recv().unwrap().tokens
+        };
+        assert_eq!(full.len(), 6);
+        let stop = full[1];
+        let first = full.iter().position(|&t| t == stop).unwrap();
+        let backend = tiny_backend(1);
+        let sampler = SamplerConfig {
+            stop_tokens: vec![stop],
+            ..SamplerConfig::greedy()
+        };
+        let (rx, rrx) = one_request_with(vec![4, 9], 6, sampler);
+        let stats = run_engine(&backend, rx, Duration::from_micros(100),
+                               Arc::new(AtomicBool::new(false)))
+            .unwrap();
+        let got = rrx.recv().unwrap().tokens;
+        // terminated at the first occurrence, stop token included
+        assert_eq!(got, full[..=first].to_vec());
+        assert_eq!(stats.tokens_out, first + 1);
     }
 
     #[test]

@@ -23,14 +23,24 @@
 //! or on backends without a parallel prefill (XLA), prompts fall back
 //! to one recurrent step per token interleaved with decode (batcher.rs).
 
+//! Per-request sampling & termination live in `sampling`: a composable
+//! [`SamplerConfig`] (greedy | temperature | top-k | top-p, optional
+//! uncertainty-scaled temperature over the slot's belief variance, stop
+//! tokens) with counter-based RNG draws keyed per request, so sampled
+//! outputs are deterministic regardless of batch composition, slot
+//! assignment, or prefill chunking (greedy is the exact argmax special
+//! case).
+
 pub mod batcher;
 pub mod engine;
+pub mod sampling;
 pub mod server;
 pub mod state_cache;
 
 pub use batcher::{Feed, SchedRequest, Scheduler};
 pub use engine::{run_engine, run_engine_opts, EngineOptions,
                  EngineRequest, EngineResponse, EngineStats, LiveStats};
+pub use sampling::SamplerConfig;
 pub use server::{serve, serve_native, serve_with, Client, EngineSpec,
-                 ServerHandle};
+                 RequestOpts, ServerHandle};
 pub use state_cache::BeliefStateCache;

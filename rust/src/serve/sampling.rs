@@ -1,0 +1,416 @@
+//! Per-request sampling & termination (DESIGN.md §S15).
+//!
+//! A [`SamplerConfig`] composes the classic decoding controls — greedy,
+//! temperature, top-k, top-p — plus two KLA-specific pieces:
+//!
+//! - **uncertainty-scaled temperature**: the serving engine already
+//!   computes each slot's mean posterior variance (the belief-state
+//!   uncertainty the paper surfaces, `BeliefStateCache::slot_uncertainty`).
+//!   With `uncertainty_temp = c > 0` the effective temperature becomes
+//!   `tau * (1 + c * u)` — the model samples more conservatively where its
+//!   belief is precise and more exploratorily where it is diffuse, in the
+//!   spirit of Robust Filter Attention's precision-weighted estimation.
+//! - **stop tokens**: sampling a token in `stop_tokens` terminates the
+//!   request early (the stop token IS included in the returned tokens).
+//!   Stop ids appearing inside the *prompt* never terminate anything —
+//!   only sampled tokens are checked.
+//!
+//! **Determinism contract.** Draws are *counter-based*: the uniform used
+//! for token `t` of a request is a pure function of `(key, t)` where
+//! `key = request_key(engine seed, request id, client seed)`.  No RNG
+//! state is shared across slots or steps, so the DRAWS a request sees are
+//! identical regardless of batch composition, slot assignment, and
+//! prefill chunking.  Token identity follows wherever the logits are
+//! identical too: the native model computes each lane independently, so
+//! with an explicit client `seed` the same `(engine seed, client seed,
+//! prompt, sampler, prefill chunk)` reproduces token-for-token across
+//! server restarts, batch widths, and slot assignments.  Across
+//! *different* prefill chunk sizes the logits agree only to the 1e-5
+//! scan-conformance tolerance (different scan plans), so a draw landing
+//! within 1e-5 of a CDF boundary can — rarely — pick a different token;
+//! greedy requests inherit the same caveat the chunked-prefill parity
+//! pin documents.  Without a client seed the key falls back to
+//! `(engine seed, request id)` — stable for a fixed arrival order.
+//!
+//! Greedy is the exact special case: `temperature == 0`, `top_k == 1`,
+//! `top_p -> 0`, and `temperature <= 1e-6` all reduce to the NaN-aware
+//! argmax ([`crate::tensor::argmax_row`]), bit-identical to the engine's
+//! old batched `argmax_last` path.
+
+use anyhow::{bail, Result};
+
+use crate::config::ServeConfig;
+use crate::tensor::argmax_row;
+
+/// Temperatures at or below this are treated as exactly greedy, so the
+/// "temperature -> 0 reproduces greedy" property holds token-for-token
+/// instead of merely with overwhelming probability.
+pub const GREEDY_TEMPERATURE: f32 = 1e-6;
+
+/// Per-request sampling & termination configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SamplerConfig {
+    /// Softmax temperature; `<= GREEDY_TEMPERATURE` means greedy argmax.
+    pub temperature: f32,
+    /// Keep only the `top_k` highest logits before sampling (0 = off;
+    /// 1 = greedy).
+    pub top_k: usize,
+    /// Nucleus sampling: keep the smallest probability-sorted prefix with
+    /// cumulative mass >= `top_p` (>= 1.0 = off; -> 0 = greedy).
+    pub top_p: f32,
+    /// Explicit client seed; see the determinism contract above.
+    pub seed: Option<u64>,
+    /// Uncertainty->temperature coupling coefficient `c` in
+    /// `tau_eff = tau * (1 + c * u)`; 0 = off.
+    pub uncertainty_temp: f32,
+    /// Sampling any of these ids terminates the request early (the stop
+    /// token is included in the output).
+    pub stop_tokens: Vec<i32>,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        Self::greedy()
+    }
+}
+
+impl SamplerConfig {
+    /// The engine's historical behaviour: deterministic argmax, no stops.
+    pub fn greedy() -> Self {
+        SamplerConfig {
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            seed: None,
+            uncertainty_temp: 0.0,
+            stop_tokens: Vec::new(),
+        }
+    }
+
+    /// Server-wide defaults from [`ServeConfig`] (per-request protocol
+    /// fields override them; the config never carries a seed).
+    pub fn from_serve(cfg: &ServeConfig) -> Self {
+        SamplerConfig {
+            temperature: cfg.temperature as f32,
+            top_k: cfg.top_k,
+            top_p: cfg.top_p as f32,
+            seed: None,
+            uncertainty_temp: cfg.uncertainty_temp as f32,
+            stop_tokens: cfg.stop_tokens.clone(),
+        }
+    }
+
+    /// Degenerate configs that reduce to exact argmax.
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= GREEDY_TEMPERATURE || self.top_k == 1
+    }
+
+    /// `tau * (1 + c * u)`, with non-finite or negative uncertainty
+    /// ignored (a slot's mean posterior variance is >= 0 by construction;
+    /// anything else is a numerical accident that must not poison the
+    /// temperature).
+    pub fn effective_temperature(&self, uncertainty: f32) -> f32 {
+        let u = if uncertainty.is_finite() { uncertainty.max(0.0) } else { 0.0 };
+        self.temperature * (1.0 + self.uncertainty_temp * u)
+    }
+
+    pub fn is_stop(&self, tok: i32) -> bool {
+        self.stop_tokens.contains(&tok)
+    }
+
+    /// Boot-time validation (server defaults and CLI flags go through
+    /// this; per-request fields are validated protocol-side with
+    /// structured error replies).
+    pub fn validate(&self) -> Result<()> {
+        if !self.temperature.is_finite() || self.temperature < 0.0 {
+            bail!("temperature must be finite and >= 0, got {}",
+                  self.temperature);
+        }
+        if !self.top_p.is_finite() || self.top_p <= 0.0 {
+            bail!("top_p must be in (0, 1] (>= 1 disables), got {}",
+                  self.top_p);
+        }
+        if !self.uncertainty_temp.is_finite() || self.uncertainty_temp < 0.0 {
+            bail!("uncertainty_temp must be finite and >= 0, got {}",
+                  self.uncertainty_temp);
+        }
+        Ok(())
+    }
+}
+
+/// SplitMix64 finalizer — the bijective mixer behind the counter-based
+/// draws (Steele et al. 2014; same construction the JAX threefry-style
+/// key-splitting relies on conceptually: statelessness via hashing).
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Derive a request's RNG key.  Explicit client seeds make the key
+/// independent of the engine-assigned request id (and therefore of
+/// arrival order and batch composition); otherwise the key is a stable
+/// function of `(engine seed, request id)`.
+pub fn request_key(engine_seed: u64, request_id: u64,
+                   client_seed: Option<u64>) -> u64 {
+    match client_seed {
+        Some(s) => splitmix64(splitmix64(s ^ 0x5eed_5eed_5eed_5eed)
+            ^ engine_seed.rotate_left(32)),
+        None => splitmix64(splitmix64(engine_seed) ^ request_id),
+    }
+}
+
+/// One uniform draw in [0, 1) that depends ONLY on `(key, counter)` —
+/// counter-based, no carried RNG state.
+pub fn draw(key: u64, counter: u64) -> f64 {
+    let x = splitmix64(
+        key ^ splitmix64(counter.wrapping_add(0x517c_c1b7_2722_0a95)));
+    (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Sample one token from a logits row under `cfg`, using the counter-based
+/// draw for `(key, counter)`.  `counter` is the number of tokens this
+/// request has sampled so far; `uncertainty` is the slot's current mean
+/// posterior variance (only read when `uncertainty_temp != 0`).
+///
+/// NaN logits are excluded from the support entirely (and the greedy path
+/// shares [`argmax_row`]'s NaN handling); an all-NaN row debug-asserts
+/// and falls back to token 0.
+pub fn sample(logits: &[f32], cfg: &SamplerConfig, key: u64, counter: u64,
+              uncertainty: f32) -> i32 {
+    debug_assert!(!logits.is_empty(), "sampling from an empty logits row");
+    if cfg.is_greedy() {
+        return argmax_row(logits) as i32;
+    }
+    let tau = cfg.effective_temperature(uncertainty);
+    if tau <= GREEDY_TEMPERATURE {
+        return argmax_row(logits) as i32;
+    }
+    let tau = tau as f64;
+
+    // candidate set: non-NaN logits, sorted descending (stable, so ties
+    // keep the lowest index first — matching argmax_row's tie rule)
+    let mut cand: Vec<(usize, f64)> = logits
+        .iter()
+        .enumerate()
+        .filter(|(_, x)| !x.is_nan())
+        .map(|(i, &x)| (i, x as f64))
+        .collect();
+    debug_assert!(!cand.is_empty(), "sampling from an all-NaN logits row");
+    if cand.is_empty() {
+        return 0;
+    }
+    cand.sort_by(|a, b| b.1.partial_cmp(&a.1).expect("NaNs filtered"));
+    if cfg.top_k > 0 && cfg.top_k < cand.len() {
+        cand.truncate(cfg.top_k);
+    }
+
+    // softmax with max-subtraction, in f64
+    let m = cand[0].1;
+    let mut probs: Vec<f64> =
+        cand.iter().map(|(_, l)| ((l - m) / tau).exp()).collect();
+
+    // nucleus: smallest probability-sorted prefix with mass >= top_p
+    if (cfg.top_p as f64) < 1.0 {
+        let total: f64 = probs.iter().sum();
+        let target = (cfg.top_p as f64).max(0.0) * total;
+        let mut acc = 0.0;
+        let mut keep = cand.len();
+        for (i, p) in probs.iter().enumerate() {
+            acc += p;
+            if acc >= target {
+                keep = i + 1;
+                break;
+            }
+        }
+        cand.truncate(keep);
+        probs.truncate(keep);
+    }
+
+    let total: f64 = probs.iter().sum();
+    let u = draw(key, counter) * total;
+    let mut acc = 0.0;
+    for ((i, _), p) in cand.iter().zip(&probs) {
+        acc += p;
+        if u < acc {
+            return *i as i32;
+        }
+    }
+    cand.last().expect("non-empty candidate set").0 as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row() -> Vec<f32> {
+        vec![0.1, 2.0, -1.0, 1.5, 0.0, -3.0, 1.9, 0.5]
+    }
+
+    #[test]
+    fn degenerate_configs_reduce_to_exact_argmax() {
+        let logits = row();
+        let am = argmax_row(&logits) as i32;
+        assert_eq!(am, 1);
+        let configs = [
+            SamplerConfig::greedy(),
+            SamplerConfig { temperature: 1e-7, ..SamplerConfig::greedy() },
+            SamplerConfig {
+                temperature: 1.3,
+                top_k: 1,
+                ..SamplerConfig::greedy()
+            },
+            SamplerConfig {
+                temperature: 1.3,
+                top_p: 1e-9,
+                ..SamplerConfig::greedy()
+            },
+        ];
+        for cfg in &configs {
+            for key in 0..64u64 {
+                for counter in 0..4u64 {
+                    assert_eq!(sample(&logits, cfg, key, counter, 0.0), am,
+                               "cfg {cfg:?} key {key} counter {counter}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_temperature_matches_greedy_past_the_shortcut() {
+        // 1e-3 is above GREEDY_TEMPERATURE, so this goes through the real
+        // softmax path; the top-2 logit gap of 0.1 gives the runner-up
+        // relative mass e^{-100} — no 53-bit draw can land on it
+        let logits = row();
+        let cfg =
+            SamplerConfig { temperature: 1e-3, ..SamplerConfig::greedy() };
+        for key in 0..64u64 {
+            assert_eq!(sample(&logits, &cfg, key, 0, 0.0), 1);
+        }
+    }
+
+    #[test]
+    fn draws_are_counter_based_and_uniform() {
+        assert_eq!(draw(1, 2), draw(1, 2));
+        assert_ne!(draw(1, 2), draw(1, 3));
+        assert_ne!(draw(1, 2), draw(2, 2));
+        let mut sum = 0.0;
+        for c in 0..10_000u64 {
+            let u = draw(7, c);
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn request_key_contract() {
+        // explicit client seed: independent of the request id
+        assert_eq!(request_key(5, 0, Some(9)), request_key(5, 77, Some(9)));
+        assert_ne!(request_key(5, 0, Some(9)), request_key(5, 0, Some(10)));
+        assert_ne!(request_key(4, 0, Some(9)), request_key(5, 0, Some(9)));
+        // derived: distinct per request, reproducible per (seed, id)
+        assert_ne!(request_key(5, 0, None), request_key(5, 1, None));
+        assert_eq!(request_key(5, 3, None), request_key(5, 3, None));
+    }
+
+    #[test]
+    fn top_k_restricts_support_without_killing_it() {
+        // near-flat at high temperature: top-2 support is {1, 6}
+        let logits = row();
+        let cfg = SamplerConfig {
+            temperature: 50.0,
+            top_k: 2,
+            ..SamplerConfig::greedy()
+        };
+        let mut seen = [false; 8];
+        for key in 0..256u64 {
+            let s = sample(&logits, &cfg, key, 0, 0.0) as usize;
+            assert!(s == 1 || s == 6, "sampled {s} outside top-2");
+            seen[s] = true;
+        }
+        assert!(seen[1] && seen[6], "high temperature must reach both");
+    }
+
+    #[test]
+    fn top_p_keeps_smallest_sufficient_nucleus() {
+        // peaked: the top token holds ~all mass, p=0.5 pins it
+        let peaked = vec![10.0, 0.0, 0.0, 0.0];
+        let cfg = SamplerConfig {
+            temperature: 1.0,
+            top_p: 0.5,
+            ..SamplerConfig::greedy()
+        };
+        for key in 0..128u64 {
+            assert_eq!(sample(&peaked, &cfg, key, 0, 0.0), 0);
+        }
+        // flat: p=1.0 (off) leaves every index reachable
+        let flat = vec![0.0; 4];
+        let cfg =
+            SamplerConfig { temperature: 1.0, ..SamplerConfig::greedy() };
+        let mut seen = [false; 4];
+        for key in 0..256u64 {
+            seen[sample(&flat, &cfg, key, 0, 0.0) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "flat sampling must cover: {seen:?}");
+    }
+
+    #[test]
+    fn nan_logits_never_win() {
+        let logits = vec![f32::NAN, 1.0, 3.0, 2.0];
+        assert_eq!(sample(&logits, &SamplerConfig::greedy(), 0, 0, 0.0), 2);
+        let cfg =
+            SamplerConfig { temperature: 10.0, ..SamplerConfig::greedy() };
+        for key in 0..256u64 {
+            assert_ne!(sample(&logits, &cfg, key, 0, 0.0), 0,
+                       "NaN index sampled");
+        }
+    }
+
+    #[test]
+    fn uncertainty_scales_temperature() {
+        let cfg = SamplerConfig {
+            temperature: 0.5,
+            uncertainty_temp: 2.0,
+            ..SamplerConfig::greedy()
+        };
+        assert_eq!(cfg.effective_temperature(0.0), 0.5);
+        assert!((cfg.effective_temperature(1.0) - 1.5).abs() < 1e-6);
+        // off by default; robust to non-finite uncertainty
+        assert_eq!(SamplerConfig::greedy().effective_temperature(10.0), 0.0);
+        assert_eq!(cfg.effective_temperature(f32::NAN), 0.5);
+        assert_eq!(cfg.effective_temperature(-3.0), 0.5);
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs() {
+        assert!(SamplerConfig::greedy().validate().is_ok());
+        let bad_t = SamplerConfig {
+            temperature: -0.1,
+            ..SamplerConfig::greedy()
+        };
+        assert!(bad_t.validate().is_err());
+        let bad_p =
+            SamplerConfig { top_p: 0.0, ..SamplerConfig::greedy() };
+        assert!(bad_p.validate().is_err());
+        let bad_u = SamplerConfig {
+            uncertainty_temp: f32::NAN,
+            ..SamplerConfig::greedy()
+        };
+        assert!(bad_u.validate().is_err());
+    }
+
+    #[test]
+    fn stop_membership() {
+        let cfg = SamplerConfig {
+            stop_tokens: vec![0, 31],
+            ..SamplerConfig::greedy()
+        };
+        assert!(cfg.is_stop(0));
+        assert!(cfg.is_stop(31));
+        assert!(!cfg.is_stop(5));
+        assert!(!SamplerConfig::greedy().is_stop(0));
+    }
+}

@@ -2,15 +2,56 @@
 //! no tokio offline).  One reader thread per connection; all generation
 //! funnels into the single engine thread (continuous batching).
 //!
-//! Protocol (one JSON object per line):
-//!   -> {"prompt": [1,2,3], "max_new_tokens": 8}
+//! Protocol (one JSON object per line).  Generation request — everything
+//! after `prompt` is optional and overrides the server default from
+//! [`ServeConfig`]:
+//!   -> {"prompt": [1,2,3],
+//!       "max_new_tokens": 8,       0 = prefill only (empty tokens;
+//!                                  uncertainty still reported); values
+//!                                  above the server's max_new_limit are
+//!                                  REJECTED, never clamped
+//!       "temperature": 0.8,        0 = greedy argmax (the default)
+//!       "top_k": 40,               0 = off, 1 = greedy
+//!       "top_p": 0.95,             >= 1 = off
+//!       "seed": 7,                 explicit sampling seed, an integer
+//!                                  in [0, 2^53] (see below)
+//!       "stop_tokens": [0, 31],    sampling one of these ends the
+//!                                  request (stop token included in the
+//!                                  output; prompt occurrences ignored)
+//!       "eos": 0,                  shorthand: one extra stop token
+//!       "uncertainty_temp": 0.5}   c in tau_eff = tau*(1 + c*u), u =
+//!                                  slot mean posterior variance
 //!   <- {"tokens": [...], "total_ms": 12.3, "queue_ms": 0.1,
 //!       "uncertainty": 0.42}
+//!
+//! Commands:
+//!   -> {"cmd": "ping"}     <- {"ok": true}
 //!   -> {"cmd": "stats"}    <- {"requests": N, "steps": N,
 //!       "tokens_out": N, "prefill_tokens": N}   (live counters)
 //!   -> {"cmd": "shutdown"} <- {"ok": true}    (stops the listener —
 //!       the handler pokes the accept loop itself, no external
 //!       connection needed for the server to quiesce)
+//!
+//! Errors.  Every malformed or rejected line gets a structured reply and
+//! the connection stays usable:
+//!   <- {"err": {"code": "<kebab-case-code>", "msg": "<human detail>"}}
+//! Codes: bad-json, unknown-cmd, bad-cmd, missing-prompt, bad-prompt,
+//! bad-prompt-token (a prompt entry is not an integer in i32 range —
+//! previously truncated silently), bad-max-new, max-new-too-large (over
+//! the server's max_new_limit — previously clamped silently),
+//! bad-temperature, bad-top-k, bad-top-p, bad-seed, bad-stop-tokens,
+//! bad-eos, bad-uncertainty-temp, unavailable (engine shut down).
+//!
+//! Determinism contract: sampling draws are counter-based
+//! (`serve::sampling`) — token `t` of a request depends only on its RNG
+//! key and `t`.  With an explicit `seed`, the key is
+//! `(engine seed, seed)`, so the same request reproduces token-for-token
+//! across server restarts, batch widths, and slot assignments (for a
+//! fixed prefill-chunk setting; across different chunk sizes logits
+//! agree only to the 1e-5 scan tolerance — see `serve::sampling`);
+//! without one it falls back to `(engine seed, request id)`, stable for
+//! a fixed arrival order.  Greedy requests (temperature 0) are
+//! deterministic with no seed at all.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -25,10 +66,38 @@ use anyhow::{Context, Result};
 
 use super::engine::{run_engine_opts, EngineOptions, EngineRequest,
                     EngineStats, LiveStats};
+use super::sampling::SamplerConfig;
 use crate::config::ServeConfig;
 use crate::runtime::backend::NativeBackend;
 use crate::runtime::{Runtime, Value};
 use crate::util::Json;
+
+/// Server-side request defaults + limits, shared by the router threads.
+#[derive(Clone, Debug)]
+struct ProtocolDefaults {
+    max_new: usize,
+    max_new_limit: usize,
+    sampler: SamplerConfig,
+}
+
+impl ProtocolDefaults {
+    fn from_serve(cfg: &ServeConfig) -> Self {
+        ProtocolDefaults {
+            max_new: cfg.max_new_tokens,
+            max_new_limit: cfg.max_new_limit,
+            sampler: SamplerConfig::from_serve(cfg),
+        }
+    }
+}
+
+/// The documented structured error reply:
+/// `{"err": {"code": ..., "msg": ...}}`.
+fn err_reply(code: &str, msg: &str) -> Json {
+    Json::obj(vec![(
+        "err",
+        Json::obj(vec![("code", Json::str(code)), ("msg", Json::str(msg))]),
+    )])
+}
 
 pub struct ServerHandle {
     pub addr: String,
@@ -102,6 +171,20 @@ pub fn serve_native(backend: NativeBackend, cfg: &ServeConfig)
 /// listening.
 pub fn serve_with(spec: EngineSpec, cfg: &ServeConfig)
                   -> Result<ServerHandle> {
+    // boot-time validation of the server-wide sampling defaults (per-
+    // request fields are validated protocol-side with {"err": ...})
+    SamplerConfig::from_serve(cfg)
+        .validate()
+        .context("serve config sampling defaults")?;
+    // a default max_new above the limit would reject every request that
+    // OMITS max_new_tokens with an error about a value the client never
+    // sent — refuse to boot instead
+    if cfg.max_new_tokens > cfg.max_new_limit {
+        anyhow::bail!(
+            "serve config: max_new_tokens default {} exceeds \
+             max_new_limit {}",
+            cfg.max_new_tokens, cfg.max_new_limit);
+    }
     let listener = TcpListener::bind(&cfg.addr)
         .with_context(|| format!("binding {}", cfg.addr))?;
     let addr = listener.local_addr()?.to_string();
@@ -127,7 +210,7 @@ pub fn serve_with(spec: EngineSpec, cfg: &ServeConfig)
     });
 
     let shutdown2 = shutdown.clone();
-    let max_new = cfg.max_new_tokens;
+    let defaults = Arc::new(ProtocolDefaults::from_serve(cfg));
     let self_addr = addr.clone();
     let listener_join = std::thread::spawn(move || {
         for stream in listener.incoming() {
@@ -139,8 +222,9 @@ pub fn serve_with(spec: EngineSpec, cfg: &ServeConfig)
             let shutdown3 = shutdown2.clone();
             let live3 = live.clone();
             let addr3 = self_addr.clone();
+            let defaults3 = defaults.clone();
             std::thread::spawn(move || {
-                let _ = handle_conn(stream, tx, max_new, shutdown3,
+                let _ = handle_conn(stream, tx, defaults3, shutdown3,
                                     live3, addr3);
             });
         }
@@ -158,7 +242,7 @@ pub fn serve_with(spec: EngineSpec, cfg: &ServeConfig)
 }
 
 fn handle_conn(stream: TcpStream, tx: Sender<EngineRequest>,
-               default_max_new: usize, shutdown: Arc<AtomicBool>,
+               defaults: Arc<ProtocolDefaults>, shutdown: Arc<AtomicBool>,
                live: Arc<LiveStats>, self_addr: String)
                -> Result<()> {
     let peer = stream.peer_addr().ok();
@@ -169,11 +253,8 @@ fn handle_conn(stream: TcpStream, tx: Sender<EngineRequest>,
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match handle_line(&line, &tx, default_max_new,
-                                      &shutdown, &live, &self_addr) {
-            Ok(json) => json,
-            Err(e) => Json::obj(vec![("error", Json::str(&e.to_string()))]),
-        };
+        let reply = handle_line(&line, &tx, &defaults, &shutdown, &live,
+                                &self_addr);
         writer.write_all(reply.to_string().as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
@@ -185,12 +266,21 @@ fn handle_conn(stream: TcpStream, tx: Sender<EngineRequest>,
     Ok(())
 }
 
+/// One protocol line in, one reply out.  Every failure mode is a
+/// structured `{"err": {"code", "msg"}}` reply (documented atop this
+/// file) — the connection always stays usable.
 fn handle_line(line: &str, tx: &Sender<EngineRequest>,
-               default_max_new: usize, shutdown: &AtomicBool,
-               live: &LiveStats, self_addr: &str) -> Result<Json> {
-    let req = crate::util::json::parse(line)?;
+               defaults: &ProtocolDefaults, shutdown: &AtomicBool,
+               live: &LiveStats, self_addr: &str) -> Json {
+    let req = match crate::util::json::parse(line) {
+        Ok(v) => v,
+        Err(e) => return err_reply("bad-json", &e.to_string()),
+    };
     if let Some(cmd) = req.get("cmd") {
-        match cmd.as_str()? {
+        let Ok(cmd) = cmd.as_str() else {
+            return err_reply("bad-cmd", "cmd must be a string");
+        };
+        match cmd {
             "shutdown" => {
                 shutdown.store(true, Ordering::SeqCst);
                 // poke our own accept() so the listener observes the
@@ -198,52 +288,222 @@ fn handle_line(line: &str, tx: &Sender<EngineRequest>,
                 // shutdown left the listener thread blocked until some
                 // EXTERNAL connection happened to arrive
                 let _ = TcpStream::connect(self_addr);
-                return Ok(Json::obj(vec![("ok", Json::Bool(true))]));
+                return Json::obj(vec![("ok", Json::Bool(true))]);
             }
-            "ping" => return Ok(Json::obj(vec![("ok", Json::Bool(true))])),
+            "ping" => return Json::obj(vec![("ok", Json::Bool(true))]),
             "stats" => {
                 let n = |v: usize| Json::num(v as f64);
-                return Ok(Json::obj(vec![
+                return Json::obj(vec![
                     ("requests", n(live.requests.load(Ordering::Relaxed))),
                     ("steps", n(live.steps.load(Ordering::Relaxed))),
                     ("tokens_out",
                      n(live.tokens_out.load(Ordering::Relaxed))),
                     ("prefill_tokens",
                      n(live.prefill_tokens.load(Ordering::Relaxed))),
-                ]));
+                ]);
             }
-            other => anyhow::bail!("unknown cmd {other:?}"),
+            other => {
+                return err_reply("unknown-cmd",
+                                 &format!("unknown cmd {other:?}"));
+            }
         }
     }
-    let prompt: Vec<i32> = req
-        .req("prompt")?
-        .as_arr()?
-        .iter()
-        .map(|x| Ok(x.as_i64()? as i32))
-        .collect::<Result<_>>()?;
-    let max_new = req
-        .get("max_new_tokens")
-        .and_then(|x| x.as_usize().ok())
-        .unwrap_or(default_max_new);
+    let (prompt, max_new, sampler) = match parse_request(&req, defaults) {
+        Ok(parts) => parts,
+        Err(reply) => return reply,
+    };
     let (rtx, rrx) = channel();
-    tx.send(EngineRequest {
-        prompt,
-        max_new,
-        submitted: Instant::now(),
-        resp: rtx,
-    })
-    .map_err(|_| anyhow::anyhow!("engine is shut down"))?;
-    let resp = rrx
-        .recv()
-        .map_err(|_| anyhow::anyhow!("engine dropped the request"))?;
-    Ok(Json::obj(vec![
-        ("tokens",
-         Json::Arr(resp.tokens.iter().map(|&t| Json::num(t as f64))
-             .collect())),
-        ("queue_ms", Json::num(resp.queue_ms)),
-        ("total_ms", Json::num(resp.total_ms)),
-        ("uncertainty", Json::num(resp.uncertainty as f64)),
-    ]))
+    if tx
+        .send(EngineRequest {
+            prompt,
+            max_new,
+            sampler,
+            submitted: Instant::now(),
+            resp: rtx,
+        })
+        .is_err()
+    {
+        return err_reply("unavailable", "engine is shut down");
+    }
+    match rrx.recv() {
+        Ok(resp) => Json::obj(vec![
+            ("tokens",
+             Json::Arr(resp.tokens.iter().map(|&t| Json::num(t as f64))
+                 .collect())),
+            ("queue_ms", Json::num(resp.queue_ms)),
+            ("total_ms", Json::num(resp.total_ms)),
+            ("uncertainty", Json::num(resp.uncertainty as f64)),
+        ]),
+        Err(_) => err_reply("unavailable", "engine dropped the request"),
+    }
+}
+
+/// A JSON number that is an exact integer within [lo, hi].
+fn int_in_range(x: &Json, lo: f64, hi: f64) -> Option<f64> {
+    let n = x.as_f64().ok()?;
+    if n.fract() == 0.0 && n >= lo && n <= hi {
+        Some(n)
+    } else {
+        None
+    }
+}
+
+/// Parse one i32 token id, rejecting non-integers and out-of-range
+/// values (the old `x.as_i64()? as i32` silently truncated both).
+fn token_id(x: &Json) -> Option<i32> {
+    int_in_range(x, i32::MIN as f64, i32::MAX as f64).map(|n| n as i32)
+}
+
+/// Validate a generation request against the server defaults; any
+/// violation is the structured error reply to send back.
+#[allow(clippy::result_large_err)]
+fn parse_request(req: &Json, d: &ProtocolDefaults)
+                 -> std::result::Result<(Vec<i32>, usize, SamplerConfig),
+                                        Json> {
+    let fail = |code: &str, msg: String| Err(err_reply(code, &msg));
+    let Some(prompt_val) = req.get("prompt") else {
+        return fail("missing-prompt", "request has no \"prompt\"".into());
+    };
+    let Ok(arr) = prompt_val.as_arr() else {
+        return fail("bad-prompt", "\"prompt\" must be an array".into());
+    };
+    let mut prompt = Vec::with_capacity(arr.len());
+    for (i, x) in arr.iter().enumerate() {
+        match token_id(x) {
+            Some(t) => prompt.push(t),
+            None => {
+                return fail("bad-prompt-token", format!(
+                    "prompt[{i}] = {} is not a token id (want an \
+                     integer in [{}, {}])",
+                    x.to_string(), i32::MIN, i32::MAX));
+            }
+        }
+    }
+    let max_new = match req.get("max_new_tokens") {
+        None => d.max_new,
+        Some(x) => match int_in_range(x, 0.0, usize::MAX as f64) {
+            Some(n) => n as usize,
+            None => {
+                return fail("bad-max-new", format!(
+                    "max_new_tokens = {} must be a non-negative integer",
+                    x.to_string()));
+            }
+        },
+    };
+    if max_new > d.max_new_limit {
+        return fail("max-new-too-large", format!(
+            "max_new_tokens {max_new} exceeds the server limit {} (the \
+             server never clamps silently — ask for less)",
+            d.max_new_limit));
+    }
+    let mut s = d.sampler.clone();
+    if let Some(x) = req.get("temperature") {
+        // finiteness is checked AFTER the f32 cast: an f64 like 1e39 is
+        // finite but saturates to f32::INFINITY, which would silently
+        // turn the softmax uniform
+        match x.as_f64() {
+            Ok(t) if (t as f32).is_finite() && t >= 0.0 => {
+                s.temperature = t as f32;
+            }
+            _ => {
+                return fail("bad-temperature", format!(
+                    "temperature = {} must be a finite number >= 0",
+                    x.to_string()));
+            }
+        }
+    }
+    if let Some(x) = req.get("top_k") {
+        match int_in_range(x, 0.0, usize::MAX as f64) {
+            Some(k) => s.top_k = k as usize,
+            None => {
+                return fail("bad-top-k", format!(
+                    "top_k = {} must be a non-negative integer",
+                    x.to_string()));
+            }
+        }
+    }
+    if let Some(x) = req.get("top_p") {
+        match x.as_f64() {
+            Ok(p) if p.is_finite() && p > 0.0 => s.top_p = p.min(1.0) as f32,
+            _ => {
+                return fail("bad-top-p", format!(
+                    "top_p = {} must be a finite number in (0, 1] \
+                     (>= 1 disables)",
+                    x.to_string()));
+            }
+        }
+    }
+    if let Some(x) = req.get("uncertainty_temp") {
+        match x.as_f64() {
+            Ok(c) if (c as f32).is_finite() && c >= 0.0 => {
+                s.uncertainty_temp = c as f32;
+            }
+            _ => {
+                return fail("bad-uncertainty-temp", format!(
+                    "uncertainty_temp = {} must be a finite number >= 0",
+                    x.to_string()));
+            }
+        }
+    }
+    if let Some(x) = req.get("seed") {
+        // bounded by 2^53, the largest integer range f64 (and therefore
+        // JSON) represents exactly — beyond it distinct seeds would
+        // silently collapse to the same key, the very class of silent
+        // coercion this protocol rejects elsewhere
+        match int_in_range(x, 0.0, (1u64 << 53) as f64) {
+            Some(n) => s.seed = Some(n as u64),
+            None => {
+                return fail("bad-seed", format!(
+                    "seed = {} must be an integer in [0, 2^53] (JSON \
+                     numbers are exact only up to 2^53)",
+                    x.to_string()));
+            }
+        }
+    }
+    if let Some(x) = req.get("stop_tokens") {
+        let Ok(arr) = x.as_arr() else {
+            return fail("bad-stop-tokens",
+                        "\"stop_tokens\" must be an array".into());
+        };
+        let mut stops = Vec::with_capacity(arr.len());
+        for (i, t) in arr.iter().enumerate() {
+            match token_id(t) {
+                Some(id) => stops.push(id),
+                None => {
+                    return fail("bad-stop-tokens", format!(
+                        "stop_tokens[{i}] = {} is not a token id",
+                        t.to_string()));
+                }
+            }
+        }
+        s.stop_tokens = stops; // REPLACES the server default list
+    }
+    if let Some(x) = req.get("eos") {
+        match token_id(x) {
+            Some(id) => s.stop_tokens.push(id),
+            None => {
+                return fail("bad-eos", format!(
+                    "eos = {} is not a token id", x.to_string()));
+            }
+        }
+    }
+    Ok((prompt, max_new, s))
+}
+
+/// Optional per-request sampling & termination fields for
+/// [`Client::request_opts`].  `None` fields are omitted from the wire
+/// request, so the server default applies.
+#[derive(Clone, Debug, Default)]
+pub struct RequestOpts {
+    pub temperature: Option<f64>,
+    pub top_k: Option<usize>,
+    pub top_p: Option<f64>,
+    /// Sampling seed; the protocol carries it as a JSON number, so the
+    /// server only accepts values up to 2^53 (exact-integer f64 range).
+    pub seed: Option<u64>,
+    pub stop_tokens: Option<Vec<i32>>,
+    pub eos: Option<i32>,
+    pub uncertainty_temp: Option<f64>,
 }
 
 /// Minimal blocking client (used by tests, the serve_demo example and the
@@ -260,12 +520,44 @@ impl Client {
 
     pub fn request(&mut self, prompt: &[i32], max_new: usize)
                    -> Result<Json> {
-        let req = Json::obj(vec![
+        self.request_opts(prompt, max_new, &RequestOpts::default())
+    }
+
+    /// A generation request with explicit sampling & termination fields
+    /// (the protocol line documented atop this file).
+    pub fn request_opts(&mut self, prompt: &[i32], max_new: usize,
+                        opts: &RequestOpts) -> Result<Json> {
+        let mut pairs = vec![
             ("prompt",
              Json::Arr(prompt.iter().map(|&t| Json::num(t as f64))
                  .collect())),
             ("max_new_tokens", Json::num(max_new as f64)),
-        ]);
+        ];
+        if let Some(t) = opts.temperature {
+            pairs.push(("temperature", Json::num(t)));
+        }
+        if let Some(k) = opts.top_k {
+            pairs.push(("top_k", Json::num(k as f64)));
+        }
+        if let Some(p) = opts.top_p {
+            pairs.push(("top_p", Json::num(p)));
+        }
+        if let Some(s) = opts.seed {
+            pairs.push(("seed", Json::num(s as f64)));
+        }
+        if let Some(stops) = &opts.stop_tokens {
+            pairs.push(("stop_tokens",
+                        Json::Arr(stops.iter()
+                            .map(|&t| Json::num(t as f64))
+                            .collect())));
+        }
+        if let Some(e) = opts.eos {
+            pairs.push(("eos", Json::num(e as f64)));
+        }
+        if let Some(c) = opts.uncertainty_temp {
+            pairs.push(("uncertainty_temp", Json::num(c)));
+        }
+        let req = Json::obj(pairs);
         self.send_line(&req.to_string())
     }
 

@@ -130,6 +130,9 @@ impl Tensor {
     }
 
     /// argmax over the last axis; returns an IntTensor of the leading shape.
+    /// NaN-aware via [`argmax_row`]: NaN entries can never win (the old
+    /// loop compared `x > row[best]` against a NaN seed at position 0,
+    /// which made every comparison false and silently returned token 0).
     pub fn argmax_last(&self) -> IntTensor {
         let last = *self.shape.last().expect("argmax on scalar");
         let lead: Vec<usize> = self.shape[..self.shape.len() - 1].to_vec();
@@ -137,16 +140,29 @@ impl Tensor {
         let mut out = Vec::with_capacity(rows);
         for r in 0..rows {
             let row = &self.data[r * last..(r + 1) * last];
-            let mut best = 0;
-            for (i, &x) in row.iter().enumerate() {
-                if x > row[best] {
-                    best = i;
-                }
-            }
-            out.push(best as i32);
+            out.push(argmax_row(row) as i32);
         }
         IntTensor { shape: lead, data: out }
     }
+}
+
+/// NaN-aware argmax over one row: NaN entries are skipped, ties go to the
+/// lowest index.  An all-NaN row is a model bug — debug-asserted, and 0
+/// is returned as a release-mode fallback.  Shared by
+/// [`Tensor::argmax_last`] and the greedy path of `serve::sampling`.
+pub fn argmax_row(row: &[f32]) -> usize {
+    let mut best: Option<usize> = None;
+    for (i, &x) in row.iter().enumerate() {
+        if x.is_nan() {
+            continue;
+        }
+        match best {
+            Some(b) if x <= row[b] => {}
+            _ => best = Some(i),
+        }
+    }
+    debug_assert!(best.is_some(), "argmax over an all-NaN row");
+    best.unwrap_or(0)
 }
 
 /// Row-major i32 tensor (token ids, masks as 0/1).
@@ -238,6 +254,27 @@ mod tests {
         let am = t.argmax_last();
         assert_eq!(am.shape(), &[2]);
         assert_eq!(am.data(), &[1, 0]);
+    }
+
+    #[test]
+    fn argmax_skips_nans() {
+        // NaN in position 0 used to poison the whole row: every `x >
+        // row[best]` comparison against the NaN seed was false, so the
+        // argmax silently returned token 0
+        assert_eq!(argmax_row(&[f32::NAN, 1.0, 3.0, 2.0]), 2);
+        assert_eq!(argmax_row(&[1.0, f32::NAN, 0.5]), 0);
+        assert_eq!(argmax_row(&[f32::NEG_INFINITY, f32::NAN, -1.0]), 2);
+        let t = Tensor::new(&[2, 3],
+                            vec![f32::NAN, 5.0, 2.0, 9.0, f32::NAN, 3.0])
+            .unwrap();
+        assert_eq!(t.argmax_last().data(), &[1, 0]);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "all-NaN")]
+    fn argmax_all_nan_row_asserts_in_debug() {
+        argmax_row(&[f32::NAN, f32::NAN]);
     }
 
     #[test]

@@ -16,7 +16,44 @@ use std::time::Duration;
 use kla::config::ServeConfig;
 use kla::kla::NativeLmConfig;
 use kla::runtime::{NativeBackend, Runtime};
-use kla::serve::{run_engine, serve, serve_native, Client, EngineRequest};
+use kla::serve::{run_engine, serve, serve_native, Client, EngineRequest,
+                 RequestOpts, SamplerConfig};
+use kla::util::Json;
+
+fn tokens_of(r: &Json) -> Vec<i64> {
+    r.req("tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_i64().unwrap())
+        .collect()
+}
+
+/// Send a raw protocol line and parse the reply (for malformed requests
+/// the typed `Client` cannot express).
+fn send_raw(addr: &str, line: &str) -> Json {
+    use std::io::{BufRead, Write};
+    let stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    w.write_all(line.as_bytes()).unwrap();
+    w.write_all(b"\n").unwrap();
+    w.flush().unwrap();
+    let mut r = std::io::BufReader::new(stream);
+    let mut reply = String::new();
+    r.read_line(&mut reply).unwrap();
+    kla::util::json::parse(reply.trim()).unwrap()
+}
+
+fn err_code(r: &Json) -> String {
+    r.req("err")
+        .unwrap()
+        .req("code")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string()
+}
 
 fn setup() -> Option<(std::path::PathBuf, Vec<kla::runtime::Value>)> {
     let rt = match Runtime::discover() {
@@ -85,26 +122,9 @@ fn serve_end_to_end() {
             "no request waited behind the full batch (queue_ms all zero: \
              {queue_times:?})");
 
-    // malformed request gets an error, connection stays usable
-    let bad = {
-        let mut c2 = Client::connect(&addr).unwrap();
-        // raw invalid json via the ping path is awkward; send a request
-        // missing the prompt field instead
-        let reply = {
-            use std::io::{BufRead, Write};
-            let stream = std::net::TcpStream::connect(&addr).unwrap();
-            let mut w = stream.try_clone().unwrap();
-            w.write_all(b"{\"max_new_tokens\": 2}\n").unwrap();
-            w.flush().unwrap();
-            let mut r = std::io::BufReader::new(stream);
-            let mut line = String::new();
-            r.read_line(&mut line).unwrap();
-            line
-        };
-        let _ = c2;
-        reply
-    };
-    assert!(bad.contains("error"), "no error for bad request: {bad}");
+    // malformed request gets a structured error, connection stays usable
+    let bad = send_raw(&addr, "{\"max_new_tokens\": 2}");
+    assert_eq!(err_code(&bad), "missing-prompt", "bad reply: {bad:?}");
 
     let stats = handle.stop().unwrap();
     assert!(stats.requests >= 14, "requests seen: {}", stats.requests);
@@ -199,19 +219,9 @@ fn native_serve_end_to_end() {
     assert!(max_queue > 0.0,
             "no request waited behind the full batch: {queue_times:?}");
 
-    // malformed request gets an error, server survives
-    let bad = {
-        use std::io::{BufRead, Write};
-        let stream = std::net::TcpStream::connect(&addr).unwrap();
-        let mut w = stream.try_clone().unwrap();
-        w.write_all(b"{\"max_new_tokens\": 2}\n").unwrap();
-        w.flush().unwrap();
-        let mut r = std::io::BufReader::new(stream);
-        let mut line = String::new();
-        r.read_line(&mut line).unwrap();
-        line
-    };
-    assert!(bad.contains("error"), "no error for bad request: {bad}");
+    // malformed request gets a structured error, server survives
+    let bad = send_raw(&addr, "{\"max_new_tokens\": 2}");
+    assert_eq!(err_code(&bad), "missing-prompt", "bad reply: {bad:?}");
 
     // clean shutdown: stats account for everything served
     let stats = handle.stop().unwrap();
@@ -384,6 +394,7 @@ fn native_engine_fifo_completion_on_single_slot() {
         tx.send(EngineRequest {
             prompt: vec![i as i32 + 1, i as i32 + 2],
             max_new: i + 1,
+            sampler: SamplerConfig::greedy(),
             submitted: std::time::Instant::now(),
             resp: rtx.clone(),
         })
@@ -408,4 +419,208 @@ fn native_engine_fifo_completion_on_single_slot() {
             "third request cannot have zero queue time on one slot");
     assert_eq!(stats.requests, 3);
     assert_eq!(stats.tokens_out, 6);
+}
+
+// ================================================= sampling subsystem ====
+// Per-request sampling & termination (serve::sampling), pinned end to
+// end through the real TCP server.  CI's `sampling-parity` step runs
+// every `native_sampling_*` test with --nocapture and greps the result
+// lines below, failing on any SKIP.
+
+#[test]
+fn native_sampling_degenerate_configs_match_greedy() {
+    // the greedy-reduction property, token for token: temperature -> 0,
+    // top_k = 1, and top_p -> 0 all reproduce the default greedy output
+    // exactly, for every prompt shape (empty / single / long)
+    let backend = NativeBackend::seeded(&small_lm(), 11, 2);
+    let handle = serve_native(backend, &native_cfg()).unwrap();
+    let mut c = Client::connect(&handle.addr).unwrap();
+    let prompts: Vec<Vec<i32>> = vec![
+        vec![],
+        vec![3],
+        (0..40).map(|i| (i * 7) % 32).collect(),
+    ];
+    for (pi, p) in prompts.iter().enumerate() {
+        let greedy = tokens_of(&c.request(p, 6).unwrap());
+        assert_eq!(greedy.len(), 6);
+        let cases: Vec<(&str, RequestOpts)> = vec![
+            ("temperature->0", RequestOpts {
+                temperature: Some(1e-7),
+                seed: Some(9),
+                ..Default::default()
+            }),
+            ("top_k=1", RequestOpts {
+                temperature: Some(1.7),
+                top_k: Some(1),
+                seed: Some(9),
+                ..Default::default()
+            }),
+            ("top_p->0", RequestOpts {
+                temperature: Some(1.7),
+                top_p: Some(1e-9),
+                seed: Some(9),
+                ..Default::default()
+            }),
+        ];
+        for (name, opts) in &cases {
+            let got = tokens_of(&c.request_opts(p, 6, opts).unwrap());
+            assert_eq!(&greedy, &got,
+                       "prompt {pi}: {name} diverged from greedy");
+        }
+        println!("sampling parity prompt {pi}: ok");
+    }
+    handle.stop().unwrap();
+}
+
+#[test]
+fn native_sampling_seeded_deterministic_across_restarts_and_batch() {
+    // four concurrent temperature/top-p requests with explicit seeds:
+    // identical tokens whether each runs alone on a 1-slot server or
+    // batched with the other three on a 4-slot server, and identical
+    // again after a full server restart — the counter-based RNG contract.
+    let prompts: Vec<Vec<i32>> = (0..4u64)
+        .map(|i| (0..6 + i).map(|j| ((i * 11 + j) % 32) as i32).collect())
+        .collect();
+    let run = |slots: usize| -> Vec<Vec<i64>> {
+        let backend = NativeBackend::seeded(&small_lm(), 21, slots);
+        let handle = serve_native(backend, &native_cfg()).unwrap();
+        let addr = handle.addr.clone();
+        let barrier = Arc::new(std::sync::Barrier::new(prompts.len()));
+        let joins: Vec<_> = prompts
+            .iter()
+            .cloned()
+            .enumerate()
+            .map(|(i, prompt)| {
+                let addr = addr.clone();
+                let barrier = barrier.clone();
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(&addr).unwrap();
+                    let opts = RequestOpts {
+                        temperature: Some(0.9),
+                        top_p: Some(0.9),
+                        seed: Some(1000 + i as u64),
+                        ..Default::default()
+                    };
+                    barrier.wait();
+                    tokens_of(&c.request_opts(&prompt, 6, &opts).unwrap())
+                })
+            })
+            .collect();
+        let out: Vec<Vec<i64>> =
+            joins.into_iter().map(|j| j.join().unwrap()).collect();
+        handle.stop().unwrap();
+        out
+    };
+    let solo = run(1);
+    let batched = run(4);
+    let restarted = run(4);
+    assert_eq!(solo, batched,
+               "seeded sampling changed with batch width 1 vs 4");
+    assert_eq!(batched, restarted,
+               "seeded sampling changed across a server restart");
+    assert!(solo.iter().all(|t| t.len() == 6));
+    println!("sampling determinism across batch sizes + restarts: ok");
+}
+
+#[test]
+fn native_sampling_max_new_zero_is_prefill_only() {
+    // regression for the silent `max_new.max(1)` clamp: max_new_tokens 0
+    // now means prefill only — empty tokens, uncertainty still reported —
+    // on both the chunked and the legacy prefill path
+    for chunk in [1usize, 8] {
+        let backend = NativeBackend::seeded(&small_lm(), 5, 2);
+        let mut cfg = native_cfg();
+        cfg.prefill_chunk = chunk;
+        let handle = serve_native(backend, &cfg).unwrap();
+        let mut c = Client::connect(&handle.addr).unwrap();
+        let prompt: Vec<i32> = (0..20).map(|i| i % 32).collect();
+        let r = c.request(&prompt, 0).unwrap();
+        assert!(tokens_of(&r).is_empty(),
+                "chunk={chunk}: max_new 0 must generate nothing");
+        assert!(r.req("uncertainty").unwrap().as_f64().unwrap() > 0.0,
+                "chunk={chunk}: uncertainty must still be reported");
+        // the server keeps serving normally afterwards
+        let r2 = c.request(&[1, 2, 3], 2).unwrap();
+        assert_eq!(tokens_of(&r2).len(), 2);
+        let stats = handle.stop().unwrap();
+        assert_eq!(stats.requests, 2);
+        assert_eq!(stats.tokens_out, 2);
+        println!("sampling max_new=0 chunk={chunk}: ok");
+    }
+}
+
+#[test]
+fn native_sampling_stop_tokens_terminate_early() {
+    let backend = NativeBackend::seeded(&small_lm(), 13, 2);
+    let handle = serve_native(backend, &native_cfg()).unwrap();
+    let mut c = Client::connect(&handle.addr).unwrap();
+    let prompt = vec![2, 4, 6];
+    let full = tokens_of(&c.request(&prompt, 8).unwrap());
+    assert_eq!(full.len(), 8);
+    // stop on a token the greedy continuation is known to produce
+    let stop = full[3] as i32;
+    let first = full.iter().position(|&t| t == stop as i64).unwrap();
+    let opts = RequestOpts {
+        stop_tokens: Some(vec![stop]),
+        ..Default::default()
+    };
+    let got = tokens_of(&c.request_opts(&prompt, 8, &opts).unwrap());
+    // terminated at the first occurrence; the stop token IS included
+    assert_eq!(got, full[..=first].to_vec());
+    // the `eos` shorthand behaves identically
+    let eos_opts = RequestOpts { eos: Some(stop), ..Default::default() };
+    let got_eos =
+        tokens_of(&c.request_opts(&prompt, 8, &eos_opts).unwrap());
+    assert_eq!(got_eos, full[..=first].to_vec());
+    // stop ids in the PROMPT never terminate: prompt starts with the
+    // stop token, yet generation still runs to the stop or max_new
+    let mut stopped_prompt = vec![stop];
+    stopped_prompt.extend_from_slice(&prompt);
+    let r = c.request_opts(&stopped_prompt, 4, &opts).unwrap();
+    assert!(!tokens_of(&r).is_empty());
+    handle.stop().unwrap();
+    println!("sampling stop tokens: ok");
+}
+
+#[test]
+fn native_sampling_request_validation_structured_errors() {
+    let backend = NativeBackend::seeded(&small_lm(), 3, 2);
+    let handle = serve_native(backend, &native_cfg()).unwrap();
+    let addr = handle.addr.clone();
+    // out-of-i32-range prompt id: previously truncated silently by
+    // `as_i64()? as i32`
+    let r = send_raw(&addr, r#"{"prompt": [3000000000], "max_new_tokens": 2}"#);
+    assert_eq!(err_code(&r), "bad-prompt-token", "{r:?}");
+    // fractional token ids are not ids
+    let r = send_raw(&addr, r#"{"prompt": [1.5]}"#);
+    assert_eq!(err_code(&r), "bad-prompt-token", "{r:?}");
+    // oversized max_new_tokens: previously clamped silently, now rejected
+    let r = send_raw(&addr,
+                     r#"{"prompt": [1], "max_new_tokens": 999999}"#);
+    assert_eq!(err_code(&r), "max-new-too-large", "{r:?}");
+    // sampler field validation
+    let r = send_raw(&addr, r#"{"prompt": [1], "temperature": -1}"#);
+    assert_eq!(err_code(&r), "bad-temperature", "{r:?}");
+    let r = send_raw(&addr, r#"{"prompt": [1], "top_p": 0}"#);
+    assert_eq!(err_code(&r), "bad-top-p", "{r:?}");
+    let r = send_raw(&addr, r#"{"prompt": [1], "top_k": 2.5}"#);
+    assert_eq!(err_code(&r), "bad-top-k", "{r:?}");
+    let r = send_raw(&addr, r#"{"prompt": [1], "seed": -4}"#);
+    assert_eq!(err_code(&r), "bad-seed", "{r:?}");
+    // seeds beyond 2^53 would silently collapse in f64 — rejected
+    let r = send_raw(&addr, r#"{"prompt": [1], "seed": 1e17}"#);
+    assert_eq!(err_code(&r), "bad-seed", "{r:?}");
+    let r = send_raw(&addr, r#"{"prompt": [1], "stop_tokens": [1e12]}"#);
+    assert_eq!(err_code(&r), "bad-stop-tokens", "{r:?}");
+    let r = send_raw(&addr, "not json at all");
+    assert_eq!(err_code(&r), "bad-json", "{r:?}");
+    let r = send_raw(&addr, r#"{"cmd": "frobnicate"}"#);
+    assert_eq!(err_code(&r), "unknown-cmd", "{r:?}");
+    // after all that abuse the server still serves
+    let mut c = Client::connect(&addr).unwrap();
+    let ok = c.request(&[1, 2], 2).unwrap();
+    assert_eq!(tokens_of(&ok).len(), 2);
+    let stats = handle.stop().unwrap();
+    assert_eq!(stats.requests, 1, "rejected requests never reach the engine");
+    println!("sampling request validation: ok");
 }

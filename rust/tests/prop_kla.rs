@@ -181,15 +181,14 @@ fn prop_scheduler_conserves_requests() {
             // random arrivals
             while submitted < n_reqs && g.rng.bool(0.5) {
                 let plen = g.usize_in(0, 8);
-                let max_new = g.usize_in(1, 6);
+                // max_new 0 included: prefill-only requests must finish
+                // exactly once with exactly zero tokens (no silent clamp)
+                let max_new = g.usize_in(0, 6);
                 let prompt = (0..plen).map(|_| g.rng.below(64) as i32)
                     .collect::<Vec<_>>();
-                sched.submit(SchedRequest {
-                    id: submitted as u64,
-                    prompt,
-                    max_new,
-                });
-                expected.insert(submitted as u64, max_new.max(1));
+                sched.submit(SchedRequest::greedy(
+                    submitted as u64, prompt, max_new));
+                expected.insert(submitted as u64, max_new);
                 submitted += 1;
             }
             sched.admit();
@@ -235,8 +234,7 @@ fn prop_scheduler_feeds_prompt_in_order() {
         let prompt: Vec<i32> =
             (0..plen).map(|i| 100 + i as i32).collect();
         let mut sched = Scheduler::new(1, 0);
-        sched.submit(SchedRequest { id: 0, prompt: prompt.clone(),
-                                    max_new: 2 });
+        sched.submit(SchedRequest::greedy(0, prompt.clone(), 2));
         sched.admit();
         let mut fed = Vec::new();
         for _ in 0..plen {
