@@ -10,7 +10,7 @@ use anyhow::Result;
 use kla::config::ServeConfig;
 use kla::kla::NativeLmConfig;
 use kla::runtime::{NativeBackend, Runtime};
-use kla::serve::{serve, serve_native, Client, RequestOpts};
+use kla::serve::{serve, serve_native, Client, RequestOpts, StreamEvent};
 
 fn main() -> Result<()> {
     let n_requests: usize = std::env::args()
@@ -92,6 +92,36 @@ fn main() -> Result<()> {
             .collect();
         println!("  seed {seed}: [{}] uncertainty {:.4}",
                  toks.join(", "), r.req("uncertainty")?.as_f64()?);
+    }
+
+    // protocol v2 streaming: tokens arrive the moment they are sampled,
+    // each tagged with the slot's post-step posterior uncertainty — the
+    // paper's belief trajectory, printed live instead of summarised
+    println!("\nstreaming (per-token posterior uncertainty trajectory):");
+    let stream_opts = RequestOpts {
+        temperature: Some(0.9),
+        top_p: Some(0.95),
+        uncertainty_temp: Some(0.5),
+        seed: Some(7),
+        ..Default::default()
+    };
+    for ev in c.stream(&prompt, 10, &stream_opts)? {
+        match ev {
+            StreamEvent::Start { queue_ms, .. } => {
+                println!("  start (queued {queue_ms:.2} ms)");
+            }
+            StreamEvent::Token { index, token, uncertainty, .. } => {
+                println!("  token[{index:>2}] = {token:<5} \
+                          uncertainty {uncertainty:.4}");
+            }
+            StreamEvent::Done { total_ms, uncertainty, .. } => {
+                println!("  done in {total_ms:.1} ms \
+                          (final uncertainty {uncertainty:.4})");
+            }
+            StreamEvent::Err { code, msg, .. } => {
+                println!("  err {code}: {msg}");
+            }
+        }
     }
 
     let stats = handle.stop()?;

@@ -6,7 +6,7 @@ use kla::bench::Suite;
 use kla::config::ServeConfig;
 use kla::kla::NativeLmConfig;
 use kla::runtime::{NativeBackend, Runtime};
-use kla::serve::{serve, serve_native, Client, RequestOpts};
+use kla::serve::{serve, serve_native, Client, RequestOpts, StreamEvent};
 use kla::util::Stats;
 
 fn load_once(addr: &str, n_requests: usize, prompt_len: usize,
@@ -44,6 +44,54 @@ fn load_once_opts(addr: &str, n_requests: usize, prompt_len: usize,
     (toks / wall_s, lat)
 }
 
+/// Time-to-first-token under the v2 streaming protocol: concurrent
+/// streaming clients, each measuring submit -> first `token` event.
+/// TTFT is the metric chunked scan prefill actually moves (a 64-token
+/// prompt is one prefill call instead of 64 interleaved steps before
+/// the first sample exists), so it gets its own row next to the
+/// whole-request latency percentiles.
+fn ttft_once(addr: &str, n_requests: usize, prompt_len: usize,
+             max_new: usize) -> Stats {
+    let mut joins = Vec::new();
+    for i in 0..n_requests {
+        let addr = addr.to_string();
+        joins.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            let prompt: Vec<i32> = (0..prompt_len)
+                .map(|j| ((i * 13 + j) % 200) as i32)
+                .collect();
+            let t0 = std::time::Instant::now();
+            let mut ttft_ms = None;
+            for ev in c
+                .stream(&prompt, max_new, &RequestOpts::default())
+                .unwrap()
+            {
+                if let StreamEvent::Token { index: 0, .. } = ev {
+                    ttft_ms = Some(t0.elapsed().as_secs_f64() * 1e3);
+                }
+                // keep draining to the terminal event so the engine
+                // finishes cleanly before the next load phase
+            }
+            ttft_ms
+        }));
+    }
+    let mut ttft = Stats::new();
+    let mut missing = 0usize;
+    for j in joins {
+        // a stream that ended without any token event (err / transport
+        // failure) must not poison the percentile sort with a NaN —
+        // count it out loud instead
+        match j.join().unwrap() {
+            Some(ms) => ttft.push(ms),
+            None => missing += 1,
+        }
+    }
+    if missing > 0 {
+        println!("note: {missing} ttft stream(s) ended without a token");
+    }
+    ttft
+}
+
 fn main() {
     let mut suite = Suite::new("serve_throughput");
 
@@ -71,6 +119,10 @@ fn main() {
             let addr = handle.addr.clone();
             let _ = load_once(&addr, 2, 64, 2); // warm
             let (tps, lat) = load_once(&addr, 24, 64, 8);
+            // streaming TTFT over the same 64-token prompts: chunk=1
+            // pays one engine iteration per prompt token before the
+            // first sample, chunk=64 one scan-prefill call
+            let ttft = ttft_once(&addr, 8, 64, 8);
             let stats = handle.stop().unwrap();
             suite.metric_row(
                 &format!("{label}/window{window_us}us"),
@@ -94,6 +146,15 @@ fn main() {
                     ("decode_tok_s".into(), stats.tokens_per_sec()),
                     ("prefill_tokens".into(),
                      stats.prefill_tokens as f64),
+                ],
+            );
+            // time-to-first-token through the streaming protocol — the
+            // latency chunked prefill buys down for prompt-heavy load
+            suite.metric_row(
+                &format!("{label}/window{window_us}us/ttft"),
+                vec![
+                    ("ttft_p50_ms".into(), ttft.percentile(50.0)),
+                    ("ttft_p99_ms".into(), ttft.percentile(99.0)),
                 ],
             );
         }

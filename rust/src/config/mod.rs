@@ -198,6 +198,11 @@ pub struct ServeConfig {
     /// >1 = scan-based chunked prefill (the prompt cursor jumps by up to
     /// this many tokens per call).
     pub prefill_chunk: usize,
+    /// Max requests in flight per connection (protocol v2 multiplexes
+    /// any number of streaming requests over one socket; this caps how
+    /// much of the engine queue a single connection can claim).
+    /// Requests beyond it are rejected with `too-many-inflight`.
+    pub max_inflight: usize,
 }
 
 impl Default for ServeConfig {
@@ -219,6 +224,7 @@ impl Default for ServeConfig {
             stop_tokens: Vec::new(),
             pad: 0,
             prefill_chunk: 64,
+            max_inflight: 64,
         }
     }
 }

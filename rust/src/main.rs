@@ -57,6 +57,9 @@ fn app() -> App {
                 .opt("max-new-limit", "1024",
                      "reject requests asking for more than this many \
                       new tokens")
+                .opt("max-inflight", "64",
+                     "max multiplexed in-flight requests per connection \
+                      (protocol v2 streaming sessions)")
                 .opt("seed", "0", "engine seed: keys the sampling RNG, \
                       and the weight init (native, no checkpoint)")
                 .opt("vocab", "64", "vocab size (native, no checkpoint)")
@@ -192,6 +195,7 @@ fn cmd_serve(m: &Matches) -> Result<()> {
         artifact: m.get_string("artifact")?,
         max_new_tokens: m.get_usize("max-new")?,
         max_new_limit: m.get_usize("max-new-limit")?,
+        max_inflight: m.get_usize("max-inflight")?,
         batch_window_us: m.get_u64("window-us")?,
         seed: m.get_u64("seed")?,
         temperature: m.get_f64("temperature")?,

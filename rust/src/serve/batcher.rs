@@ -82,6 +82,18 @@ pub struct Finished {
     pub tokens: Vec<i32>,
 }
 
+/// Outcome of [`Scheduler::cancel`].
+#[derive(Clone, Debug)]
+pub enum Cancelled {
+    /// The request was still queued: removed before it ever touched a
+    /// slot (no tokens, no state to clean up).
+    Queued,
+    /// The request was active: the tokens generated so far come back,
+    /// and — like [`Scheduler::advance`] — the slot stays occupied until
+    /// `release` (the engine must reset belief state first).
+    Active(Finished),
+}
+
 pub struct Scheduler {
     pub queue: VecDeque<SchedRequest>,
     pub slots: Vec<Slot>,
@@ -274,6 +286,42 @@ impl Scheduler {
             }
         }
         done
+    }
+
+    /// Cancel a request by engine id, wherever it is in its lifecycle:
+    /// still queued (dropped, `Cancelled::Queued`), or active in a slot
+    /// (`Cancelled::Active` with the tokens generated so far; the slot
+    /// stays occupied until `release`, mirroring `advance`'s contract so
+    /// the engine resets belief state before the slot is reused).
+    /// `None` means the id is unknown — already finished or never
+    /// submitted — and nothing changed.
+    pub fn cancel(&mut self, id: u64) -> Option<Cancelled> {
+        if let Some(pos) = self.queue.iter().position(|r| r.id == id) {
+            self.queue.remove(pos);
+            return Some(Cancelled::Queued);
+        }
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            if let Slot::Active { id: sid, generated, .. } = slot {
+                if *sid == id {
+                    return Some(Cancelled::Active(Finished {
+                        id,
+                        slot: i,
+                        tokens: std::mem::take(generated),
+                    }));
+                }
+            }
+        }
+        None
+    }
+
+    /// The engine id occupying a slot (None for free slots) — the
+    /// engine's per-token event stream uses it to route each sampled
+    /// token to its request's sink.
+    pub fn slot_id(&self, slot: usize) -> Option<u64> {
+        match &self.slots[slot] {
+            Slot::Active { id, .. } => Some(*id),
+            Slot::Free => None,
+        }
     }
 
     pub fn release(&mut self, slot: usize) {
@@ -563,6 +611,49 @@ mod tests {
         s.admit();
         assert!(s.take_prefill(0, 0).is_empty());
         assert_eq!(s.feeds(), vec![Feed::Prefill(1)]);
+    }
+
+    #[test]
+    fn cancel_drops_queued_and_retires_active_requests() {
+        let mut s = Scheduler::new(1, 0);
+        s.submit(SchedRequest::greedy(1, vec![1, 2], 8));
+        s.submit(SchedRequest::greedy(2, vec![3], 8));
+        s.admit();
+        // id 2 never got a slot: cancelling it only touches the queue
+        assert!(matches!(s.cancel(2), Some(Cancelled::Queued)));
+        assert!(s.queue.is_empty());
+        assert_eq!(s.active_count(), 1);
+        // advance id 1 into decode so it has generated tokens
+        assert!(s.advance(&[7]).is_empty()); // prefill token
+        assert!(s.advance(&[8]).is_empty()); // last prompt token: sampled
+        let Some(Cancelled::Active(f)) = s.cancel(1) else {
+            panic!("active request must cancel as Active");
+        };
+        assert_eq!(f.id, 1);
+        assert_eq!(f.slot, 0);
+        assert_eq!(f.tokens, vec![8]);
+        // like advance(), the slot stays occupied until release
+        assert_eq!(s.active_count(), 1);
+        s.release(f.slot);
+        assert!(!s.has_work());
+        // unknown / already-cancelled ids are a no-op
+        assert!(s.cancel(1).is_none());
+        assert!(s.cancel(99).is_none());
+        // the freed slot admits the next submission
+        s.submit(SchedRequest::greedy(3, vec![5], 1));
+        assert_eq!(s.admit(), vec![(0, 3)]);
+    }
+
+    #[test]
+    fn slot_id_maps_slots_to_requests() {
+        let mut s = Scheduler::new(2, 0);
+        assert_eq!(s.slot_id(0), None);
+        s.submit(SchedRequest::greedy(42, vec![1], 1));
+        s.admit();
+        assert_eq!(s.slot_id(0), Some(42));
+        assert_eq!(s.slot_id(1), None);
+        s.release(0);
+        assert_eq!(s.slot_id(0), None);
     }
 
     #[test]

@@ -4,6 +4,18 @@
 //! router (server.rs) talks to it over an mpsc channel.  The engine is
 //! generic over the backend, so the continuous-batching logic is tested
 //! end-to-end offline on `NativeBackend` and runs unchanged on PJRT.
+//!
+//! Since protocol v2 the engine STREAMS: every request carries an
+//! [`EventSink`], and the decode loop emits each sampled token the
+//! moment it exists — together with the slot's post-step posterior
+//! uncertainty, the paper's belief signal — instead of accumulating a
+//! reply.  Requests are cancellable mid-flight: a shared cancel flag
+//! (set by the router on `{"cmd":"cancel"}` or client disconnect) or a
+//! closed sink retires the slot at the next iteration's sweep, which
+//! runs BEFORE `admit()` so a queued request takes over the freed slot
+//! within the same engine iteration.  Streaming and cancellation live
+//! entirely engine-side: backends keep returning raw logits, so every
+//! [`DecodeBackend`] inherits both for free (DESIGN.md §S17).
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
@@ -12,13 +24,68 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::batcher::{Feed, Finished, SchedRequest, Scheduler};
+use super::batcher::{Cancelled, Feed, Finished, SchedRequest, Scheduler};
 use super::sampling::{self, SamplerConfig};
 use super::state_cache::BeliefStateCache;
 use crate::config::ServeConfig;
 use crate::runtime::backend::DecodeBackend;
 use crate::tensor::IntTensor;
 use crate::util::Stats;
+
+/// One event in a request's stream, in emission order: `Started` once at
+/// admit (queue time is final there), `Token` per sampled token, `Done`
+/// exactly once as the terminal event (also for cancelled requests).
+#[derive(Clone, Debug)]
+pub enum EngineEvent {
+    /// The request entered a batch slot; generation begins this
+    /// iteration.
+    Started { queue_ms: f64 },
+    /// One sampled token.  `index` counts tokens sampled for this
+    /// request (0-based); `uncertainty` is the slot's mean posterior
+    /// variance AFTER the step that produced the token — the per-step
+    /// belief trajectory the paper surfaces.
+    Token { index: usize, token: i32, uncertainty: f32 },
+    /// Terminal: the full reply (`tokens` holds every sampled token, so
+    /// collecting only this event reproduces the legacy one-shot reply).
+    Done(EngineResponse),
+}
+
+/// Returned by [`EventSink::send`] when the receiving side is gone; the
+/// engine treats it as an implicit cancel (a dead client must not keep
+/// burning a batch lane).
+#[derive(Clone, Copy, Debug)]
+pub struct SinkClosed;
+
+/// Where a request's events go.  The server backs this with the
+/// per-connection writer thread; tests use plain mpsc senders.
+pub trait EventSink: Send {
+    fn send(&self, ev: EngineEvent) -> std::result::Result<(), SinkClosed>;
+}
+
+/// Full event stream into an mpsc channel (the engine-level test sink).
+impl EventSink for Sender<EngineEvent> {
+    fn send(&self, ev: EngineEvent) -> std::result::Result<(), SinkClosed> {
+        Sender::send(self, ev).map_err(|_| SinkClosed)
+    }
+}
+
+/// Collect-only compatibility sink: forwards the terminal
+/// [`EngineEvent::Done`] and drops `Started`/`Token`, reproducing the
+/// pre-streaming blocking behaviour for callers that only want the
+/// finished reply.  Note the engine cannot observe disconnection of
+/// this sink from token sends (they are swallowed here), so a dropped
+/// receiver only surfaces at `Done` — use an `EngineEvent` sink where
+/// implicit cancel matters.
+impl EventSink for Sender<EngineResponse> {
+    fn send(&self, ev: EngineEvent) -> std::result::Result<(), SinkClosed> {
+        match ev {
+            EngineEvent::Done(resp) => {
+                Sender::send(self, resp).map_err(|_| SinkClosed)
+            }
+            EngineEvent::Started { .. } | EngineEvent::Token { .. } => Ok(()),
+        }
+    }
+}
 
 /// A request entering the engine.
 pub struct EngineRequest {
@@ -35,16 +102,40 @@ pub struct EngineRequest {
     /// overload, intake stops draining once the scheduler queue reaches
     /// batch size — that channel wait is real queueing).
     pub submitted: Instant,
-    pub resp: Sender<EngineResponse>,
+    /// Cooperative cancel flag: set it (router-side on
+    /// `{"cmd":"cancel"}` or client disconnect) and the engine retires
+    /// the request at its next iteration's sweep, replying with a
+    /// `cancelled: true` [`EngineEvent::Done`].
+    pub cancel: Arc<AtomicBool>,
+    /// Destination for the request's event stream.
+    pub sink: Box<dyn EventSink>,
 }
 
-/// The reply (tokens + timing; uncertainty from the belief state).
+impl EngineRequest {
+    /// A non-cancellable (flag never set) request streaming into `sink`.
+    pub fn new(prompt: Vec<i32>, max_new: usize, sampler: SamplerConfig,
+               sink: Box<dyn EventSink>) -> Self {
+        EngineRequest {
+            prompt,
+            max_new,
+            sampler,
+            submitted: Instant::now(),
+            cancel: Arc::new(AtomicBool::new(false)),
+            sink,
+        }
+    }
+}
+
+/// The terminal reply (tokens + timing; uncertainty from the belief
+/// state).  `cancelled` requests carry whatever was generated before the
+/// cancel took effect.
 #[derive(Clone, Debug)]
 pub struct EngineResponse {
     pub tokens: Vec<i32>,
     pub queue_ms: f64,
     pub total_ms: f64,
     pub uncertainty: f32,
+    pub cancelled: bool,
 }
 
 /// Engine statistics (read after shutdown; live counters are mirrored
@@ -56,7 +147,16 @@ pub struct EngineStats {
     /// (chunked `prefill()` calls are not steps — their time lands in
     /// `prefill_ms`).
     pub steps: usize,
+    /// Tokens of COMPLETED requests (delivered work).  Tokens decoded
+    /// for requests that were cancelled mid-flight land in
+    /// `wasted_tokens` instead.
     pub tokens_out: usize,
+    /// Requests retired by explicit cancel or sink disconnect before
+    /// completing.
+    pub cancelled: usize,
+    /// Tokens decoded for requests that never completed (cancelled /
+    /// disconnected) — abandoned work the batch lanes burned.
+    pub wasted_tokens: usize,
     /// Wall time of batched steps where at least one lane sampled.
     pub step_ms: Vec<f64>,
     /// Wall time of prefill work: chunked backend `prefill()` calls plus
@@ -110,6 +210,8 @@ pub struct LiveStats {
     pub steps: AtomicUsize,
     pub tokens_out: AtomicUsize,
     pub prefill_tokens: AtomicUsize,
+    pub cancelled: AtomicUsize,
+    pub wasted_tokens: AtomicUsize,
 }
 
 /// Engine tuning knobs beyond the backend itself (threaded through from
@@ -143,23 +245,30 @@ impl EngineOptions {
     }
 }
 
-/// Submit/admit/finish bookkeeping for in-flight requests.
+/// Submit/admit/finish bookkeeping for in-flight requests, now carrying
+/// each request's event sink and cancel flag.
 ///
 /// Queue time is the interval from submit until the scheduler actually
 /// admits the request into a batch slot — NOT submit-to-submit (the old
 /// code stamped `start_time` at submit and never updated it, so
 /// `queue_ms` was always ~0 even for requests that waited behind a full
 /// batch).  `admit()` is driven by the `(slot, id)` pairs
-/// `Scheduler::admit` reports.
+/// `Scheduler::admit` reports, and emits the `Started` event (queue time
+/// is final there).
 struct PendingTable {
     rows: Vec<PendingRow>,
 }
 
 struct PendingRow {
     id: u64,
-    resp: Sender<EngineResponse>,
+    sink: Box<dyn EventSink>,
+    cancel: Arc<AtomicBool>,
     submitted: Instant,
     admitted: Option<Instant>,
+    /// A sink send failed: the client is gone.  Latched so the sweep
+    /// retires the request (implicit cancel) and no further sends are
+    /// attempted.
+    sink_closed: bool,
 }
 
 impl PendingTable {
@@ -167,29 +276,64 @@ impl PendingTable {
         PendingTable { rows: Vec::new() }
     }
 
-    fn submit(&mut self, id: u64, resp: Sender<EngineResponse>,
-              now: Instant) {
+    fn submit(&mut self, id: u64, sink: Box<dyn EventSink>,
+              cancel: Arc<AtomicBool>, now: Instant) {
         self.rows.push(PendingRow {
             id,
-            resp,
+            sink,
+            cancel,
             submitted: now,
             admitted: None,
+            sink_closed: false,
         });
     }
 
-    /// Record the moment `id` entered a batch slot (idempotent).
+    /// Record the moment `id` entered a batch slot (idempotent) and
+    /// stream the `Started` event.
     fn admit(&mut self, id: u64, now: Instant) {
         if let Some(row) = self.rows.iter_mut().find(|r| r.id == id) {
             if row.admitted.is_none() {
                 row.admitted = Some(now);
+                let queue_ms = now
+                    .saturating_duration_since(row.submitted)
+                    .as_secs_f64()
+                    * 1e3;
+                if row.sink.send(EngineEvent::Started { queue_ms }).is_err() {
+                    row.sink_closed = true;
+                }
             }
         }
     }
 
-    /// Retire `id`: returns the response channel plus
-    /// `(queue_ms, total_ms)` measured at `now`.
+    /// Stream one sampled token; a failed send latches `sink_closed`
+    /// (the sweep turns it into an implicit cancel next iteration).
+    fn emit_token(&mut self, id: u64, index: usize, token: i32,
+                  uncertainty: f32) {
+        if let Some(row) = self.rows.iter_mut().find(|r| r.id == id) {
+            if row.sink_closed {
+                return;
+            }
+            let ev = EngineEvent::Token { index, token, uncertainty };
+            if row.sink.send(ev).is_err() {
+                row.sink_closed = true;
+            }
+        }
+    }
+
+    /// Requests to retire at the next sweep: cancel flag set by the
+    /// router, or sink observed closed (client gone — implicit cancel).
+    fn dead_ids(&self) -> Vec<u64> {
+        self.rows
+            .iter()
+            .filter(|r| r.sink_closed || r.cancel.load(Ordering::SeqCst))
+            .map(|r| r.id)
+            .collect()
+    }
+
+    /// Retire `id`: returns the sink plus `(queue_ms, total_ms)`
+    /// measured at `now`.
     fn finish(&mut self, id: u64, now: Instant)
-              -> Option<(Sender<EngineResponse>, f64, f64)> {
+              -> Option<(Box<dyn EventSink>, f64, f64)> {
         let pos = self.rows.iter().position(|r| r.id == id)?;
         let row = self.rows.swap_remove(pos);
         let admitted = row.admitted.unwrap_or(now);
@@ -198,14 +342,14 @@ impl PendingTable {
                 * 1e3;
         let total_ms =
             now.saturating_duration_since(row.submitted).as_secs_f64() * 1e3;
-        Some((row.resp, queue_ms, total_ms))
+        Some((row.sink, queue_ms, total_ms))
     }
 }
 
 /// Retire one finished request: account its tokens, read the slot's
-/// belief uncertainty, reset + release the slot, and answer the client.
-/// Shared by the decode path (`Scheduler::advance`) and the prefill-only
-/// path (`Scheduler::take_prefill_only_finished`).
+/// belief uncertainty, reset + release the slot, and stream the terminal
+/// `Done` event.  Shared by the decode path (`Scheduler::advance`) and
+/// the prefill-only path (`Scheduler::take_prefill_only_finished`).
 fn finish_request(f: &Finished, cache: &mut BeliefStateCache,
                   sched: &mut Scheduler, pending: &mut PendingTable,
                   stats: &mut EngineStats, live: &LiveStats) {
@@ -214,15 +358,16 @@ fn finish_request(f: &Finished, cache: &mut BeliefStateCache,
     let uncertainty = cache.slot_uncertainty(f.slot);
     cache.reset_slot(f.slot);
     sched.release(f.slot);
-    if let Some((resp, queue_ms, total_ms)) =
+    if let Some((sink, queue_ms, total_ms)) =
         pending.finish(f.id, Instant::now())
     {
-        let _ = resp.send(EngineResponse {
+        let _ = sink.send(EngineEvent::Done(EngineResponse {
             tokens: f.tokens.clone(),
             queue_ms,
             total_ms,
             uncertainty,
-        });
+            cancelled: false,
+        }));
     }
 }
 
@@ -318,7 +463,7 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
                 Some(req) => {
                     let id = next_id;
                     next_id += 1;
-                    pending.submit(id, req.resp, req.submitted);
+                    pending.submit(id, req.sink, req.cancel, req.submitted);
                     // RNG key stamped here: explicit client seeds make it
                     // independent of the engine-assigned id (and thus of
                     // arrival order / batch composition)
@@ -340,12 +485,46 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
                 break;
             }
         }
+
+        // cancellation sweep: explicit cancel flags set by the router
+        // ({"cmd":"cancel"} / client disconnect) plus sinks observed
+        // closed mid-stream (implicit cancel — a dead connection must
+        // not keep burning a batch lane).  Runs BEFORE admit(), so a
+        // slot freed here is re-filled from the queue within the SAME
+        // engine iteration.
+        for id in pending.dead_ids() {
+            let (tokens, uncertainty) = match sched.cancel(id) {
+                Some(Cancelled::Active(f)) => {
+                    let u = cache.slot_uncertainty(f.slot);
+                    cache.reset_slot(f.slot);
+                    sched.release(f.slot);
+                    (f.tokens, u)
+                }
+                // queued (or, defensively, already gone): no slot state
+                Some(Cancelled::Queued) | None => (Vec::new(), 0.0),
+            };
+            stats.cancelled += 1;
+            live.cancelled.fetch_add(1, Ordering::Relaxed);
+            stats.wasted_tokens += tokens.len();
+            live.wasted_tokens.fetch_add(tokens.len(), Ordering::Relaxed);
+            if let Some((sink, queue_ms, total_ms)) =
+                pending.finish(id, Instant::now())
+            {
+                let _ = sink.send(EngineEvent::Done(EngineResponse {
+                    tokens,
+                    queue_ms,
+                    total_ms,
+                    uncertainty,
+                    cancelled: true,
+                }));
+            }
+        }
         if !sched.has_work() {
             continue;
         }
 
         // admit into slots: reset belief state for new slots and stamp
-        // the admit time (queue time ends here)
+        // the admit time (queue time ends here; Started streams out)
         let admit_now = Instant::now();
         for (slot, id) in sched.admit() {
             cache.reset_slot(slot);
@@ -451,7 +630,8 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
         // sampled so far) — greedy configs reduce to the exact NaN-aware
         // argmax the old batched argmax_last path computed.  The state is
         // already post-step, so the uncertainty feeding the
-        // uncertainty-scaled temperature reflects the current token.
+        // uncertainty-scaled temperature (and streamed on the token
+        // event) reflects the current token.
         let vocab = backend.vocab();
         let mut sampled = vec![0i32; b];
         for (slot, f) in feeds.iter().enumerate() {
@@ -462,13 +642,19 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
             else {
                 continue;
             };
-            let unc = if cfg.uncertainty_temp != 0.0 {
-                cache.slot_uncertainty(slot)
-            } else {
-                0.0
-            };
+            // one posterior read per lane, shared by the uncertainty-
+            // scaled temperature (an exact no-op at uncertainty_temp ==
+            // 0, since tau_eff = tau * (1 + 0 * u)) and the token event
+            let unc = cache.slot_uncertainty(slot);
             let row = &logits.data()[slot * vocab..(slot + 1) * vocab];
             sampled[slot] = sampling::sample(row, cfg, key, counter, unc);
+            // stream the token the moment it exists, tagged with the
+            // slot's post-step posterior uncertainty; a failed send
+            // latches the implicit cancel for next iteration's sweep
+            if let Some(id) = sched.slot_id(slot) {
+                pending.emit_token(id, counter as usize, sampled[slot],
+                                   unc);
+            }
         }
         let finished = sched.advance(&sampled);
         for f in &finished {
@@ -484,22 +670,51 @@ mod tests {
     use super::*;
     use std::sync::mpsc::channel;
 
+    fn plain_flag() -> Arc<AtomicBool> {
+        Arc::new(AtomicBool::new(false))
+    }
+
     #[test]
     fn queue_time_measured_at_admit_not_submit() {
-        let (tx, _rx) = channel();
+        let (tx, _rx) = channel::<EngineResponse>();
         let mut table = PendingTable::new();
         let t0 = Instant::now();
-        table.submit(1, tx, t0);
+        table.submit(1, Box::new(tx), plain_flag(), t0);
         let admit = t0 + Duration::from_millis(25);
         table.admit(1, admit);
         // a later admit call must not move the stamp (idempotent)
         table.admit(1, admit + Duration::from_millis(50));
         let finish = admit + Duration::from_millis(10);
-        let (_resp, queue_ms, total_ms) = table.finish(1, finish).unwrap();
+        let (_sink, queue_ms, total_ms) = table.finish(1, finish).unwrap();
         assert!((queue_ms - 25.0).abs() < 1e-6, "queue_ms {queue_ms}");
         assert!((total_ms - 35.0).abs() < 1e-6, "total_ms {total_ms}");
         // finished rows are gone
         assert!(table.finish(1, finish).is_none());
+    }
+
+    #[test]
+    fn pending_table_latches_closed_sinks_as_dead() {
+        let (tx, rx) = channel::<EngineEvent>();
+        let mut table = PendingTable::new();
+        let t0 = Instant::now();
+        table.submit(3, Box::new(tx), plain_flag(), t0);
+        table.admit(3, t0);
+        assert!(matches!(rx.recv().unwrap(),
+                         EngineEvent::Started { .. }));
+        assert!(table.dead_ids().is_empty());
+        // receiver gone: the next emission latches sink_closed
+        drop(rx);
+        table.emit_token(3, 0, 7, 0.5);
+        assert_eq!(table.dead_ids(), vec![3]);
+        // the cancel flag alone also marks a row dead
+        let (tx2, _rx2) = channel::<EngineResponse>();
+        let flag = plain_flag();
+        table.submit(4, Box::new(tx2), flag.clone(), t0);
+        assert_eq!(table.dead_ids(), vec![3]);
+        flag.store(true, Ordering::SeqCst);
+        let mut dead = table.dead_ids();
+        dead.sort_unstable();
+        assert_eq!(dead, vec![3, 4]);
     }
 
     fn tiny_backend(batch: usize) -> crate::runtime::backend::NativeBackend {
@@ -526,15 +741,10 @@ mod tests {
                         -> (Receiver<EngineRequest>,
                             Receiver<EngineResponse>) {
         let (tx, rx) = channel::<EngineRequest>();
-        let (rtx, rrx) = channel();
-        tx.send(EngineRequest {
-            prompt,
-            max_new,
-            sampler,
-            submitted: Instant::now(),
-            resp: rtx,
-        })
-        .unwrap();
+        let (rtx, rrx) = channel::<EngineResponse>();
+        tx.send(EngineRequest::new(prompt, max_new, sampler,
+                                   Box::new(rtx)))
+            .unwrap();
         drop(tx);
         (rx, rrx)
     }
@@ -566,6 +776,8 @@ mod tests {
         assert_eq!(stats.steps, 4);
         assert_eq!(stats.step_ms.len(), 3);
         assert_eq!(stats.tokens_out, 3);
+        assert_eq!(stats.cancelled, 0);
+        assert_eq!(stats.wasted_tokens, 0);
         assert!(stats.tokens_per_sec() > 0.0);
         assert!(stats.prefill_tokens_per_sec() > 0.0);
         // one request on a 2-slot engine: every step at occupancy 1/2
@@ -579,6 +791,7 @@ mod tests {
         assert_eq!(live.steps.load(Ordering::SeqCst), 4);
         assert_eq!(live.tokens_out.load(Ordering::SeqCst), 3);
         assert_eq!(live.prefill_tokens.load(Ordering::SeqCst), 16);
+        assert_eq!(live.cancelled.load(Ordering::SeqCst), 0);
     }
 
     #[test]
@@ -645,6 +858,7 @@ mod tests {
         // no tokens generated, but the prompt WAS consumed and the
         // belief-state uncertainty is reported
         assert!(resp.tokens.is_empty());
+        assert!(!resp.cancelled);
         assert!(resp.uncertainty > 0.0);
         assert_eq!(stats.requests, 1);
         assert_eq!(stats.tokens_out, 0);
@@ -745,13 +959,153 @@ mod tests {
     }
 
     #[test]
+    fn streamed_token_events_match_the_done_reply() {
+        // full event-stream contract: Started, then one Token per
+        // sampled token (contiguous indices, post-step uncertainty),
+        // then Done whose tokens array equals the concatenated stream
+        let backend = tiny_backend(1);
+        let (tx, rx) = channel::<EngineRequest>();
+        let (etx, erx) = channel::<EngineEvent>();
+        tx.send(EngineRequest::new(vec![2, 5, 11], 5,
+                                   SamplerConfig::greedy(),
+                                   Box::new(etx)))
+            .unwrap();
+        drop(tx);
+        run_engine(&backend, rx, Duration::from_micros(100),
+                   Arc::new(AtomicBool::new(false)))
+            .unwrap();
+        let events: Vec<EngineEvent> = erx.iter().collect();
+        assert!(matches!(events[0], EngineEvent::Started { queue_ms }
+                         if queue_ms >= 0.0));
+        let mut streamed = Vec::new();
+        let mut last_unc = 0.0f32;
+        let mut done = None;
+        for ev in &events[1..] {
+            match ev {
+                EngineEvent::Token { index, token, uncertainty } => {
+                    assert_eq!(*index, streamed.len(),
+                               "token indices must be contiguous");
+                    assert!(*uncertainty > 0.0);
+                    streamed.push(*token);
+                    last_unc = *uncertainty;
+                }
+                EngineEvent::Done(resp) => {
+                    assert!(done.is_none(), "Done must be terminal");
+                    done = Some(resp.clone());
+                }
+                EngineEvent::Started { .. } => {
+                    panic!("Started must come exactly once, first");
+                }
+            }
+        }
+        let done = done.expect("stream must end in Done");
+        assert_eq!(streamed.len(), 5);
+        assert_eq!(done.tokens, streamed,
+                   "Done.tokens must equal the concatenated stream");
+        assert!(!done.cancelled);
+        // the final token's streamed uncertainty IS the reply's (same
+        // post-step state, read twice)
+        assert!((done.uncertainty - last_unc).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disconnected_event_sink_cancels_and_frees_the_slot() {
+        // request A streams into a channel whose receiver is ALREADY
+        // gone: the first failed send latches the implicit cancel, the
+        // sweep retires the slot, and queued request B takes it over —
+        // without the fix A would decode all 1_000_000 tokens into the
+        // void first
+        let backend = tiny_backend(1);
+        let (tx, rx) = channel::<EngineRequest>();
+        let (etx, erx) = channel::<EngineEvent>();
+        drop(erx); // the "client" vanished before the engine even ran
+        tx.send(EngineRequest::new(vec![1, 2], 1_000_000,
+                                   SamplerConfig::greedy(),
+                                   Box::new(etx)))
+            .unwrap();
+        let (rtx, rrx) = channel::<EngineResponse>();
+        tx.send(EngineRequest::new(vec![3, 4], 2,
+                                   SamplerConfig::greedy(),
+                                   Box::new(rtx)))
+            .unwrap();
+        drop(tx);
+        let live = Arc::new(LiveStats::default());
+        let opts = EngineOptions {
+            batch_window: Duration::from_micros(100),
+            pad: 0,
+            prefill_chunk: 64,
+            seed: 0,
+        };
+        let stats = run_engine_opts(&backend, rx, &opts,
+                                    Arc::new(AtomicBool::new(false)),
+                                    &live)
+            .unwrap();
+        // B completed normally on the slot A abandoned
+        let b = rrx.recv().unwrap();
+        assert_eq!(b.tokens.len(), 2);
+        assert!(!b.cancelled);
+        assert_eq!(stats.tokens_out, 2);
+        // A was retired after at most a couple of wasted tokens — the
+        // closed sink is observed at the first emission and the very
+        // next sweep frees the slot (one engine iteration of latency)
+        assert_eq!(stats.cancelled, 1);
+        assert!(stats.wasted_tokens >= 1 && stats.wasted_tokens <= 2,
+                "wasted {} tokens before the slot was freed",
+                stats.wasted_tokens);
+        assert_eq!(live.cancelled.load(Ordering::SeqCst), 1);
+        assert_eq!(live.wasted_tokens.load(Ordering::SeqCst),
+                   stats.wasted_tokens);
+        println!("cancel latency: slot freed after {} wasted tokens: ok",
+                 stats.wasted_tokens);
+    }
+
+    #[test]
+    fn cancel_flag_retires_a_queued_request_without_decoding() {
+        // the flag is set while the request is still queued behind a
+        // full batch: it must never reach a slot, and its Done reply is
+        // cancelled with empty tokens
+        let backend = tiny_backend(1);
+        let (tx, rx) = channel::<EngineRequest>();
+        let (rtx_a, rrx_a) = channel::<EngineResponse>();
+        tx.send(EngineRequest::new(vec![1, 2], 3,
+                                   SamplerConfig::greedy(),
+                                   Box::new(rtx_a)))
+            .unwrap();
+        let flag = plain_flag();
+        flag.store(true, Ordering::SeqCst); // cancelled before intake
+        let (rtx_b, rrx_b) = channel::<EngineResponse>();
+        tx.send(EngineRequest {
+            prompt: vec![5, 6],
+            max_new: 4,
+            sampler: SamplerConfig::greedy(),
+            submitted: Instant::now(),
+            cancel: flag,
+            sink: Box::new(rtx_b),
+        })
+        .unwrap();
+        drop(tx);
+        let stats = run_engine(&backend, rx, Duration::from_micros(100),
+                               Arc::new(AtomicBool::new(false)))
+            .unwrap();
+        let a = rrx_a.recv().unwrap();
+        assert_eq!(a.tokens.len(), 3);
+        assert!(!a.cancelled);
+        let b = rrx_b.recv().unwrap();
+        assert!(b.cancelled);
+        assert!(b.tokens.is_empty());
+        assert_eq!(stats.cancelled, 1);
+        assert_eq!(stats.wasted_tokens, 0, "a queued cancel decodes nothing");
+        assert_eq!(stats.tokens_out, 3);
+    }
+
+    #[test]
     fn unadmitted_request_counts_full_wait_as_queue_time() {
-        let (tx, _rx) = channel();
+        let (tx, _rx) = channel::<EngineResponse>();
         let mut table = PendingTable::new();
         let t0 = Instant::now();
-        table.submit(2, tx, t0);
+        table.submit(2, Box::new(tx), plain_flag(), t0);
         let finish = t0 + Duration::from_millis(7);
-        let (_resp, queue_ms, total_ms) = table.finish(2, finish).unwrap();
+        let (_sink, queue_ms, total_ms) = table.finish(2, finish).unwrap();
         assert!((queue_ms - 7.0).abs() < 1e-6, "queue_ms {queue_ms}");
         assert!((total_ms - 7.0).abs() < 1e-6, "total_ms {total_ms}");
     }

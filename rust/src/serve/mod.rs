@@ -30,6 +30,17 @@
 //! outputs are deterministic regardless of batch composition, slot
 //! assignment, or prefill chunking (greedy is the exact argmax special
 //! case).
+//!
+//! The wire protocol is v2 (server.rs): multiplexed streaming sessions.
+//! Every request carries a client-chosen `id`, replies are typed event
+//! lines (`start` | `token` | `done` | `err`) serialised by a
+//! per-connection writer thread, each `token` event carries the slot's
+//! post-step posterior uncertainty, and requests are cancellable
+//! mid-generation (`{"cmd":"cancel"}`, or implicitly by disconnecting —
+//! the engine retires the slot and a queued request takes it over
+//! within one iteration).  Streaming and cancellation are engine-side
+//! ([`EngineEvent`] / [`EventSink`]), so every `DecodeBackend` inherits
+//! them.
 
 pub mod batcher;
 pub mod engine;
@@ -37,10 +48,11 @@ pub mod sampling;
 pub mod server;
 pub mod state_cache;
 
-pub use batcher::{Feed, SchedRequest, Scheduler};
-pub use engine::{run_engine, run_engine_opts, EngineOptions,
-                 EngineRequest, EngineResponse, EngineStats, LiveStats};
+pub use batcher::{Cancelled, Feed, SchedRequest, Scheduler};
+pub use engine::{run_engine, run_engine_opts, EngineEvent, EngineOptions,
+                 EngineRequest, EngineResponse, EngineStats, EventSink,
+                 LiveStats, SinkClosed};
 pub use sampling::SamplerConfig;
-pub use server::{serve, serve_native, serve_with, Client, EngineSpec,
-                 RequestOpts, ServerHandle};
+pub use server::{serve, serve_native, serve_with, Client, ClientStream,
+                 EngineSpec, RequestOpts, ServerHandle, StreamEvent};
 pub use state_cache::BeliefStateCache;

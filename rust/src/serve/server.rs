@@ -1,12 +1,25 @@
 //! TCP front-end: newline-delimited JSON over a plain socket (std::net —
-//! no tokio offline).  One reader thread per connection; all generation
-//! funnels into the single engine thread (continuous batching).
+//! no tokio offline).  One reader thread + one writer thread per
+//! connection; all generation funnels into the single engine thread
+//! (continuous batching).  The writer thread serialises every line the
+//! connection emits, so any number of requests may be in flight per
+//! connection and their event streams interleave safely (protocol v2
+//! multiplexing).
 //!
-//! Protocol (one JSON object per line).  Generation request — everything
-//! after `prompt` is optional and overrides the server default from
-//! [`ServeConfig`]:
-//!   -> {"prompt": [1,2,3],
-//!       "max_new_tokens": 8,       0 = prefill only (empty tokens;
+//! # Protocol v2 (one JSON object per line)
+//!
+//! ## Generation requests
+//!
+//! Every generation request carries a client-chosen `id` — an integer in
+//! [0, 2^53] (the exact-integer f64 range), scoped to the connection.
+//! An id may not collide with a request still in flight on the same
+//! connection (`duplicate-id`); once the terminal event for it arrives
+//! it may be reused.  Everything after `prompt` is optional and
+//! overrides the server default from [`ServeConfig`]:
+//!
+//!   -> {"id": 3,
+//!       "prompt": [1,2,3],
+//!       "max_new_tokens": 8,       0 = prefill only (no token events;
 //!                                  uncertainty still reported); values
 //!                                  above the server's max_new_limit are
 //!                                  REJECTED, never clamped
@@ -21,62 +34,119 @@
 //!       "eos": 0,                  shorthand: one extra stop token
 //!       "uncertainty_temp": 0.5}   c in tau_eff = tau*(1 + c*u), u =
 //!                                  slot mean posterior variance
-//!   <- {"tokens": [...], "total_ms": 12.3, "queue_ms": 0.1,
-//!       "uncertainty": 0.42}
 //!
-//! Commands:
+//! The reply is a STREAM of typed event lines, all tagged with the
+//! request's `id`.  Events of one request arrive in order; events of
+//! different requests interleave arbitrarily:
+//!
+//!   <- {"id": 3, "event": "start", "queue_ms": 0.1}
+//!   <- {"id": 3, "event": "token", "index": 0, "token": 17,
+//!       "uncertainty": 0.42}        one per sampled token, the moment
+//!                                   it is sampled; `uncertainty` is the
+//!                                   slot's POST-STEP mean posterior
+//!                                   variance — the paper's per-step
+//!                                   belief trajectory
+//!   <- {"id": 3, "event": "done", "tokens": [...], "queue_ms": 0.1,
+//!       "total_ms": 12.3, "uncertainty": 0.42, "cancelled": false}
+//!
+//! `done` is the terminal event and carries the complete legacy reply
+//! shape: its `tokens` array is always exactly the concatenation of the
+//! `token` events (pinned by tests + the `stream-parity` CI step), so
+//! collecting only `done` reproduces the v1 one-shot behaviour.
+//!
+//! ## Cancellation
+//!
+//!   -> {"cmd": "cancel", "id": 3}   <- {"ok": true, "id": 3}
+//!
+//! Cancels an in-flight request on THIS connection: the engine retires
+//! its slot at the next iteration's sweep (before `admit()`, so a queued
+//! request takes the freed slot within the same engine iteration) and
+//! the request's stream ends with `"event": "done", "cancelled": true`
+//! carrying whatever was generated.  Cancelling an unknown or finished
+//! id is a no-op answered `{"ok": false, "id": N}`.  Closing the
+//! connection cancels every request still in flight on it implicitly —
+//! dead clients stop burning batch lanes.
+//!
+//! ## Commands
+//!
 //!   -> {"cmd": "ping"}     <- {"ok": true}
 //!   -> {"cmd": "stats"}    <- {"requests": N, "steps": N,
-//!       "tokens_out": N, "prefill_tokens": N}   (live counters)
+//!       "tokens_out": N, "prefill_tokens": N, "cancelled": N,
+//!       "wasted_tokens": N}        (live counters; `cancelled` counts
+//!       requests retired early, `wasted_tokens` counts tokens decoded
+//!       for requests that never completed)
 //!   -> {"cmd": "shutdown"} <- {"ok": true}    (stops the listener —
 //!       the handler pokes the accept loop itself, no external
 //!       connection needed for the server to quiesce)
 //!
-//! Errors.  Every malformed or rejected line gets a structured reply and
-//! the connection stays usable:
-//!   <- {"err": {"code": "<kebab-case-code>", "msg": "<human detail>"}}
-//! Codes: bad-json, unknown-cmd, bad-cmd, missing-prompt, bad-prompt,
+//! Command replies are single untagged lines; they may interleave with
+//! event lines of in-flight requests (the typed [`Client`] buffers
+//! events while waiting for a command reply).
+//!
+//! ## Errors
+//!
+//! Every malformed or rejected line gets a structured error EVENT and
+//! the connection stays usable; the request `id` is echoed when it was
+//! parseable:
+//!   <- {"event": "err", "id": 3, "err": {"code": "<kebab-case-code>",
+//!       "msg": "<human detail>"}}
+//! Codes: bad-json, unknown-cmd, bad-cmd, missing-id, bad-id,
+//! duplicate-id, too-many-inflight, missing-prompt, bad-prompt,
 //! bad-prompt-token (a prompt entry is not an integer in i32 range —
 //! previously truncated silently), bad-max-new, max-new-too-large (over
 //! the server's max_new_limit — previously clamped silently),
 //! bad-temperature, bad-top-k, bad-top-p, bad-seed, bad-stop-tokens,
-//! bad-eos, bad-uncertainty-temp, unavailable (engine shut down).
+//! bad-eos, bad-uncertainty-temp, unavailable (the engine is gone —
+//! also the terminal event of any ACCEPTED request the engine dropped
+//! without answering, e.g. when its thread errors out mid-serve, so a
+//! stream never just goes silent).
 //!
-//! Determinism contract: sampling draws are counter-based
-//! (`serve::sampling`) — token `t` of a request depends only on its RNG
-//! key and `t`.  With an explicit `seed`, the key is
-//! `(engine seed, seed)`, so the same request reproduces token-for-token
-//! across server restarts, batch widths, and slot assignments (for a
-//! fixed prefill-chunk setting; across different chunk sizes logits
-//! agree only to the 1e-5 scan tolerance — see `serve::sampling`);
-//! without one it falls back to `(engine seed, request id)`, stable for
-//! a fixed arrival order.  Greedy requests (temperature 0) are
-//! deterministic with no seed at all.
+//! ## Determinism contract (unchanged from v1)
+//!
+//! Sampling draws are counter-based (`serve::sampling`) — token `t` of a
+//! request depends only on its RNG key and `t`.  With an explicit
+//! `seed`, the key is `(engine seed, seed)`, so the same request
+//! reproduces token-for-token across server restarts, batch widths, and
+//! slot assignments (for a fixed prefill-chunk setting; across different
+//! chunk sizes logits agree only to the 1e-5 scan tolerance — see
+//! `serve::sampling`); without one it falls back to
+//! `(engine seed, request id)`, stable for a fixed arrival order.
+//! Greedy requests (temperature 0) are deterministic with no seed at
+//! all.  Streaming changes none of this: the `token` events and the
+//! `done.tokens` array are the same samples, emitted incrementally.
 
+use std::collections::hash_map::Entry;
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use std::path::PathBuf;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-use super::engine::{run_engine_opts, EngineOptions, EngineRequest,
-                    EngineStats, LiveStats};
+use super::engine::{run_engine_opts, EngineEvent, EngineOptions,
+                    EngineRequest, EngineStats, EventSink, LiveStats,
+                    SinkClosed};
 use super::sampling::SamplerConfig;
 use crate::config::ServeConfig;
 use crate::runtime::backend::NativeBackend;
 use crate::runtime::{Runtime, Value};
 use crate::util::Json;
 
+/// Largest integer JSON (f64) represents exactly — the bound for request
+/// ids and sampling seeds alike.
+const MAX_ID: f64 = (1u64 << 53) as f64;
+
 /// Server-side request defaults + limits, shared by the router threads.
 #[derive(Clone, Debug)]
 struct ProtocolDefaults {
     max_new: usize,
     max_new_limit: usize,
+    max_inflight: usize,
     sampler: SamplerConfig,
 }
 
@@ -85,18 +155,25 @@ impl ProtocolDefaults {
         ProtocolDefaults {
             max_new: cfg.max_new_tokens,
             max_new_limit: cfg.max_new_limit,
+            max_inflight: cfg.max_inflight,
             sampler: SamplerConfig::from_serve(cfg),
         }
     }
 }
 
-/// The documented structured error reply:
-/// `{"err": {"code": ..., "msg": ...}}`.
-fn err_reply(code: &str, msg: &str) -> Json {
-    Json::obj(vec![(
-        "err",
-        Json::obj(vec![("code", Json::str(code)), ("msg", Json::str(msg))]),
-    )])
+/// The documented structured error event:
+/// `{"event": "err", "id": N?, "err": {"code": ..., "msg": ...}}`.
+fn err_reply(id: Option<u64>, code: &str, msg: &str) -> Json {
+    let mut pairs = vec![
+        ("event", Json::str("err")),
+        ("err",
+         Json::obj(vec![("code", Json::str(code)),
+                        ("msg", Json::str(msg))])),
+    ];
+    if let Some(id) = id {
+        pairs.push(("id", Json::num(id as f64)));
+    }
+    Json::obj(pairs)
 }
 
 pub struct ServerHandle {
@@ -180,10 +257,14 @@ pub fn serve_with(spec: EngineSpec, cfg: &ServeConfig)
     // OMITS max_new_tokens with an error about a value the client never
     // sent — refuse to boot instead
     if cfg.max_new_tokens > cfg.max_new_limit {
-        anyhow::bail!(
+        bail!(
             "serve config: max_new_tokens default {} exceeds \
              max_new_limit {}",
             cfg.max_new_tokens, cfg.max_new_limit);
+    }
+    if cfg.max_inflight == 0 {
+        bail!("serve config: max_inflight must be >= 1 (a connection \
+               that can hold no requests in flight serves nothing)");
     }
     let listener = TcpListener::bind(&cfg.addr)
         .with_context(|| format!("binding {}", cfg.addr))?;
@@ -241,101 +322,300 @@ pub fn serve_with(spec: EngineSpec, cfg: &ServeConfig)
     })
 }
 
+/// In-flight requests of one connection: wire id -> engine cancel flag.
+/// Shared by the reader thread (registration, `{"cmd":"cancel"}`,
+/// disconnect sweep) and the per-request sinks (a `done` event retires
+/// its entry).
+type ActiveMap = Arc<Mutex<HashMap<u64, Arc<AtomicBool>>>>;
+
+/// The engine-side event sink for one request on one connection:
+/// serialises events to protocol lines tagged with the wire id and hands
+/// them to the connection's writer thread.  Reports [`SinkClosed`] once
+/// the connection is known dead (reader saw EOF or the writer hit a
+/// write error), which the engine treats as an implicit cancel.
+struct ConnSink {
+    id: u64,
+    writer: Sender<String>,
+    closed: Arc<AtomicBool>,
+    active: ActiveMap,
+    /// Latched when the terminal `done` event is produced.  If the sink
+    /// is dropped WITHOUT it — the engine thread errored out or drained
+    /// the request without answering — `Drop` emits a terminal
+    /// `unavailable` error event instead, so a blocking client's stream
+    /// always ends (v1 replied "engine dropped the request" from the
+    /// response channel's disconnect; a v2 stream must not just go
+    /// silent).
+    terminal_sent: AtomicBool,
+}
+
+impl Drop for ConnSink {
+    fn drop(&mut self) {
+        if self.terminal_sent.load(Ordering::SeqCst) {
+            return;
+        }
+        // no unwrap: never panic in drop on a poisoned map
+        if let Ok(mut map) = self.active.lock() {
+            map.remove(&self.id);
+        }
+        let reply = err_reply(Some(self.id), "unavailable",
+                              "engine dropped the request");
+        let _ = self.writer.send(reply.to_string());
+    }
+}
+
+impl EventSink for ConnSink {
+    fn send(&self, ev: EngineEvent) -> std::result::Result<(), SinkClosed> {
+        if self.closed.load(Ordering::SeqCst) {
+            return Err(SinkClosed);
+        }
+        let idp = ("id", Json::num(self.id as f64));
+        let (line, terminal) = match ev {
+            EngineEvent::Started { queue_ms } => (
+                Json::obj(vec![
+                    idp,
+                    ("event", Json::str("start")),
+                    ("queue_ms", Json::num(queue_ms)),
+                ]),
+                false,
+            ),
+            EngineEvent::Token { index, token, uncertainty } => (
+                Json::obj(vec![
+                    idp,
+                    ("event", Json::str("token")),
+                    ("index", Json::num(index as f64)),
+                    ("token", Json::num(token as f64)),
+                    ("uncertainty", Json::num(uncertainty as f64)),
+                ]),
+                false,
+            ),
+            EngineEvent::Done(r) => (
+                Json::obj(vec![
+                    idp,
+                    ("event", Json::str("done")),
+                    ("tokens",
+                     Json::Arr(r.tokens.iter()
+                         .map(|&t| Json::num(t as f64))
+                         .collect())),
+                    ("queue_ms", Json::num(r.queue_ms)),
+                    ("total_ms", Json::num(r.total_ms)),
+                    ("uncertainty", Json::num(r.uncertainty as f64)),
+                    ("cancelled", Json::Bool(r.cancelled)),
+                ]),
+                true,
+            ),
+        };
+        if terminal {
+            // the id becomes reusable the moment its terminal event is
+            // enqueued — BEFORE the send, so a reader that saw `done`
+            // can immediately resubmit the id without racing this map
+            self.terminal_sent.store(true, Ordering::SeqCst);
+            self.active.lock().unwrap().remove(&self.id);
+        }
+        self.writer.send(line.to_string()).map_err(|_| SinkClosed)
+    }
+}
+
 fn handle_conn(stream: TcpStream, tx: Sender<EngineRequest>,
                defaults: Arc<ProtocolDefaults>, shutdown: Arc<AtomicBool>,
                live: Arc<LiveStats>, self_addr: String)
                -> Result<()> {
     let peer = stream.peer_addr().ok();
-    let mut writer = stream.try_clone()?;
+    let writer_stream = stream.try_clone()?;
+    // the writer thread owns the write half: every line this connection
+    // emits (command replies AND event streams of any number of in-
+    // flight requests) funnels through one channel, so concurrent
+    // requests multiplex without interleaving bytes mid-line
+    let (wtx, wrx) = channel::<String>();
+    let closed = Arc::new(AtomicBool::new(false));
+    let closed_writer = closed.clone();
+    let writer_join = std::thread::spawn(move || {
+        let mut w = writer_stream;
+        for line in wrx {
+            if w.write_all(line.as_bytes())
+                .and_then(|_| w.write_all(b"\n"))
+                .and_then(|_| w.flush())
+                .is_err()
+            {
+                // peer gone: flag it so sinks stop producing, and stop
+                // consuming — remaining senders see a dropped receiver
+                closed_writer.store(true, Ordering::SeqCst);
+                break;
+            }
+        }
+    });
+    let active: ActiveMap = Arc::new(Mutex::new(HashMap::new()));
+    let ctx = ConnCtx {
+        tx: &tx,
+        defaults: &defaults,
+        shutdown: &shutdown,
+        live: &live,
+        self_addr: &self_addr,
+        wtx: &wtx,
+        closed: &closed,
+        active: &active,
+    };
     let reader = BufReader::new(stream);
     for line in reader.lines() {
-        let line = line?;
+        let Ok(line) = line else { break };
         if line.trim().is_empty() {
             continue;
         }
-        let reply = handle_line(&line, &tx, &defaults, &shutdown, &live,
-                                &self_addr);
-        writer.write_all(reply.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+        if let Some(reply) = handle_line(&line, &ctx) {
+            if wtx.send(reply.to_string()).is_err() {
+                break;
+            }
+        }
         if shutdown.load(Ordering::SeqCst) {
             break;
         }
     }
+    // reader gone (client closed, or server shutting down): the sink is
+    // marked closed and every request still in flight on this connection
+    // is implicitly cancelled, so the engine stops burning batch lanes
+    // on a dead connection instead of decoding to max_new into the void
+    closed.store(true, Ordering::SeqCst);
+    for (_, flag) in active.lock().unwrap().drain() {
+        flag.store(true, Ordering::SeqCst);
+    }
+    drop(wtx);
+    let _ = writer_join.join();
     crate::log_debug!("connection {peer:?} closed");
     Ok(())
 }
 
-/// One protocol line in, one reply out.  Every failure mode is a
-/// structured `{"err": {"code", "msg"}}` reply (documented atop this
-/// file) — the connection always stays usable.
-fn handle_line(line: &str, tx: &Sender<EngineRequest>,
-               defaults: &ProtocolDefaults, shutdown: &AtomicBool,
-               live: &LiveStats, self_addr: &str) -> Json {
+/// Everything a protocol line may need, bundled so `handle_line` stays
+/// testable and the reader loop readable.
+struct ConnCtx<'a> {
+    tx: &'a Sender<EngineRequest>,
+    defaults: &'a ProtocolDefaults,
+    shutdown: &'a AtomicBool,
+    live: &'a LiveStats,
+    self_addr: &'a str,
+    wtx: &'a Sender<String>,
+    closed: &'a Arc<AtomicBool>,
+    active: &'a ActiveMap,
+}
+
+/// One protocol line in; `Some(reply)` for commands and errors, `None`
+/// for an accepted generation request (its reply is the event stream the
+/// engine pushes through the writer thread).  Every failure mode is a
+/// structured `{"event": "err", ...}` reply (documented atop this file)
+/// — the connection always stays usable.
+fn handle_line(line: &str, ctx: &ConnCtx) -> Option<Json> {
     let req = match crate::util::json::parse(line) {
         Ok(v) => v,
-        Err(e) => return err_reply("bad-json", &e.to_string()),
+        Err(e) => return Some(err_reply(None, "bad-json", &e.to_string())),
     };
     if let Some(cmd) = req.get("cmd") {
         let Ok(cmd) = cmd.as_str() else {
-            return err_reply("bad-cmd", "cmd must be a string");
+            return Some(err_reply(None, "bad-cmd", "cmd must be a string"));
         };
         match cmd {
             "shutdown" => {
-                shutdown.store(true, Ordering::SeqCst);
+                ctx.shutdown.store(true, Ordering::SeqCst);
                 // poke our own accept() so the listener observes the
                 // flag and exits — without this, a client-issued
                 // shutdown left the listener thread blocked until some
                 // EXTERNAL connection happened to arrive
-                let _ = TcpStream::connect(self_addr);
-                return Json::obj(vec![("ok", Json::Bool(true))]);
+                let _ = TcpStream::connect(ctx.self_addr);
+                return Some(Json::obj(vec![("ok", Json::Bool(true))]));
             }
-            "ping" => return Json::obj(vec![("ok", Json::Bool(true))]),
+            "ping" => {
+                return Some(Json::obj(vec![("ok", Json::Bool(true))]));
+            }
             "stats" => {
+                let live = ctx.live;
                 let n = |v: usize| Json::num(v as f64);
-                return Json::obj(vec![
+                return Some(Json::obj(vec![
                     ("requests", n(live.requests.load(Ordering::Relaxed))),
                     ("steps", n(live.steps.load(Ordering::Relaxed))),
                     ("tokens_out",
                      n(live.tokens_out.load(Ordering::Relaxed))),
                     ("prefill_tokens",
                      n(live.prefill_tokens.load(Ordering::Relaxed))),
-                ]);
+                    ("cancelled",
+                     n(live.cancelled.load(Ordering::Relaxed))),
+                    ("wasted_tokens",
+                     n(live.wasted_tokens.load(Ordering::Relaxed))),
+                ]));
+            }
+            "cancel" => {
+                let id = match req.get("id").and_then(|x| {
+                    int_in_range(x, 0.0, MAX_ID)
+                }) {
+                    Some(n) => n as u64,
+                    None => {
+                        return Some(err_reply(None, "bad-id",
+                            "cancel needs an integer \"id\" in [0, 2^53]"));
+                    }
+                };
+                // set the engine cancel flag; the entry itself is
+                // removed when the request's terminal (cancelled) done
+                // event goes out, keeping double-cancel a clean no-op
+                let found = match ctx.active.lock().unwrap().get(&id) {
+                    Some(flag) => {
+                        flag.store(true, Ordering::SeqCst);
+                        true
+                    }
+                    None => false,
+                };
+                return Some(Json::obj(vec![
+                    ("ok", Json::Bool(found)),
+                    ("id", Json::num(id as f64)),
+                ]));
             }
             other => {
-                return err_reply("unknown-cmd",
-                                 &format!("unknown cmd {other:?}"));
+                return Some(err_reply(None, "unknown-cmd",
+                                      &format!("unknown cmd {other:?}")));
             }
         }
     }
-    let (prompt, max_new, sampler) = match parse_request(&req, defaults) {
-        Ok(parts) => parts,
-        Err(reply) => return reply,
-    };
-    let (rtx, rrx) = channel();
-    if tx
-        .send(EngineRequest {
-            prompt,
-            max_new,
-            sampler,
-            submitted: Instant::now(),
-            resp: rtx,
-        })
-        .is_err()
+    let (id, prompt, max_new, sampler) =
+        match parse_request(&req, ctx.defaults) {
+            Ok(parts) => parts,
+            Err(reply) => return Some(reply),
+        };
+    let cancel = Arc::new(AtomicBool::new(false));
     {
-        return err_reply("unavailable", "engine is shut down");
+        let mut map = ctx.active.lock().unwrap();
+        if map.len() >= ctx.defaults.max_inflight {
+            return Some(err_reply(Some(id), "too-many-inflight", &format!(
+                "connection already has {} requests in flight (limit {})",
+                map.len(), ctx.defaults.max_inflight)));
+        }
+        match map.entry(id) {
+            Entry::Occupied(_) => {
+                return Some(err_reply(Some(id), "duplicate-id", &format!(
+                    "request id {id} is already in flight on this \
+                     connection (ids are reusable after their done/err \
+                     event)")));
+            }
+            Entry::Vacant(v) => {
+                v.insert(cancel.clone());
+            }
+        }
     }
-    match rrx.recv() {
-        Ok(resp) => Json::obj(vec![
-            ("tokens",
-             Json::Arr(resp.tokens.iter().map(|&t| Json::num(t as f64))
-                 .collect())),
-            ("queue_ms", Json::num(resp.queue_ms)),
-            ("total_ms", Json::num(resp.total_ms)),
-            ("uncertainty", Json::num(resp.uncertainty as f64)),
-        ]),
-        Err(_) => err_reply("unavailable", "engine dropped the request"),
-    }
+    let sink = ConnSink {
+        id,
+        writer: ctx.wtx.clone(),
+        closed: ctx.closed.clone(),
+        active: ctx.active.clone(),
+        terminal_sent: AtomicBool::new(false),
+    };
+    // If the engine is gone this send fails and the SendError drops the
+    // request — including its sink, whose Drop emits the terminal
+    // `unavailable` error event and deregisters the id.  That is the
+    // same single-terminal-line contract as every other path, so no
+    // explicit reply here either way.
+    let _ = ctx.tx.send(EngineRequest {
+        prompt,
+        max_new,
+        sampler,
+        submitted: Instant::now(),
+        cancel,
+        sink: Box::new(sink),
+    });
+    None
 }
 
 /// A JSON number that is an exact integer within [lo, hi].
@@ -355,12 +635,28 @@ fn token_id(x: &Json) -> Option<i32> {
 }
 
 /// Validate a generation request against the server defaults; any
-/// violation is the structured error reply to send back.
+/// violation is the structured error reply to send back.  The `id` is
+/// parsed FIRST so every later error can echo it.
 #[allow(clippy::result_large_err)]
 fn parse_request(req: &Json, d: &ProtocolDefaults)
-                 -> std::result::Result<(Vec<i32>, usize, SamplerConfig),
+                 -> std::result::Result<(u64, Vec<i32>, usize,
+                                         SamplerConfig),
                                         Json> {
-    let fail = |code: &str, msg: String| Err(err_reply(code, &msg));
+    let Some(id_val) = req.get("id") else {
+        return Err(err_reply(None, "missing-id",
+            "generation requests carry a client-chosen integer \"id\" \
+             in [0, 2^53] (protocol v2); its event stream is tagged \
+             with it"));
+    };
+    let Some(id) = int_in_range(id_val, 0.0, MAX_ID) else {
+        return Err(err_reply(None, "bad-id", &format!(
+            "id = {} must be an integer in [0, 2^53] (JSON numbers are \
+             exact only up to 2^53)",
+            id_val.to_string())));
+    };
+    let id = id as u64;
+    let fail = |code: &str, msg: String| Err(err_reply(Some(id), code,
+                                                       &msg));
     let Some(prompt_val) = req.get("prompt") else {
         return fail("missing-prompt", "request has no \"prompt\"".into());
     };
@@ -450,7 +746,7 @@ fn parse_request(req: &Json, d: &ProtocolDefaults)
         // JSON) represents exactly — beyond it distinct seeds would
         // silently collapse to the same key, the very class of silent
         // coercion this protocol rejects elsewhere
-        match int_in_range(x, 0.0, (1u64 << 53) as f64) {
+        match int_in_range(x, 0.0, MAX_ID) {
             Some(n) => s.seed = Some(n as u64),
             None => {
                 return fail("bad-seed", format!(
@@ -487,12 +783,12 @@ fn parse_request(req: &Json, d: &ProtocolDefaults)
             }
         }
     }
-    Ok((prompt, max_new, s))
+    Ok((id, prompt, max_new, s))
 }
 
 /// Optional per-request sampling & termination fields for
-/// [`Client::request_opts`].  `None` fields are omitted from the wire
-/// request, so the server default applies.
+/// [`Client::request_opts`] / [`Client::stream`].  `None` fields are
+/// omitted from the wire request, so the server default applies.
 #[derive(Clone, Debug, Default)]
 pub struct RequestOpts {
     pub temperature: Option<f64>,
@@ -506,28 +802,160 @@ pub struct RequestOpts {
     pub uncertainty_temp: Option<f64>,
 }
 
-/// Minimal blocking client (used by tests, the serve_demo example and the
-/// throughput bench).
+/// One parsed protocol-v2 event line, as surfaced by
+/// [`Client::next_event`] / [`Client::stream`].
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    /// The request entered a batch slot; queue time is final.
+    Start { id: u64, queue_ms: f64 },
+    /// One sampled token with its post-step posterior uncertainty.
+    Token { id: u64, index: usize, token: i32, uncertainty: f64 },
+    /// Terminal: the full legacy reply shape.  `tokens` is always the
+    /// concatenation of the `Token` events.
+    Done {
+        id: u64,
+        tokens: Vec<i32>,
+        queue_ms: f64,
+        total_ms: f64,
+        uncertainty: f64,
+        cancelled: bool,
+    },
+    /// Terminal: the request (or, with `id: None`, the protocol line)
+    /// was rejected.
+    Err { id: Option<u64>, code: String, msg: String },
+}
+
+impl StreamEvent {
+    /// The request this event belongs to (None only for errors on lines
+    /// whose id was unparseable).
+    pub fn id(&self) -> Option<u64> {
+        match self {
+            StreamEvent::Start { id, .. }
+            | StreamEvent::Token { id, .. }
+            | StreamEvent::Done { id, .. } => Some(*id),
+            StreamEvent::Err { id, .. } => *id,
+        }
+    }
+
+    /// Terminal events end a request's stream.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, StreamEvent::Done { .. } | StreamEvent::Err { .. })
+    }
+
+    fn from_json(j: &Json) -> Result<StreamEvent> {
+        let id_of = |j: &Json| -> Result<u64> {
+            Ok(j.req("id")?.as_f64()? as u64)
+        };
+        match j.req("event")?.as_str()? {
+            "start" => Ok(StreamEvent::Start {
+                id: id_of(j)?,
+                queue_ms: j.req("queue_ms")?.as_f64()?,
+            }),
+            "token" => Ok(StreamEvent::Token {
+                id: id_of(j)?,
+                index: j.req("index")?.as_usize()?,
+                token: j.req("token")?.as_i64()? as i32,
+                uncertainty: j.req("uncertainty")?.as_f64()?,
+            }),
+            "done" => Ok(StreamEvent::Done {
+                id: id_of(j)?,
+                tokens: j
+                    .req("tokens")?
+                    .as_arr()?
+                    .iter()
+                    .map(|t| Ok(t.as_i64()? as i32))
+                    .collect::<Result<_>>()?,
+                queue_ms: j.req("queue_ms")?.as_f64()?,
+                total_ms: j.req("total_ms")?.as_f64()?,
+                uncertainty: j.req("uncertainty")?.as_f64()?,
+                cancelled: j.req("cancelled")?.as_bool()?,
+            }),
+            "err" => {
+                let e = j.req("err")?;
+                Ok(StreamEvent::Err {
+                    id: j.get("id").and_then(|x| x.as_f64().ok())
+                        .map(|n| n as u64),
+                    code: e.req("code")?.as_str()?.to_string(),
+                    msg: e.req("msg")?.as_str()?.to_string(),
+                })
+            }
+            other => bail!("unknown event kind {other:?}"),
+        }
+    }
+}
+
+/// Typed protocol-v2 client (used by tests, the serve_demo example and
+/// the throughput bench).  Supports any number of multiplexed in-flight
+/// requests on one connection: [`Client::submit`] fires one off,
+/// [`Client::next_event`] reads whatever arrives next,
+/// [`Client::stream`] iterates one request's events, and
+/// [`Client::cancel`] aborts one mid-generation.  The legacy blocking
+/// [`Client::request`] / [`Client::request_opts`] survive as thin
+/// stream-and-collect wrappers returning the v1 one-shot reply shape.
 pub struct Client {
     stream: BufReader<TcpStream>,
+    /// Events read while looking for something else (a command reply, or
+    /// another request's events) — drained before the socket is touched
+    /// again.
+    pending: VecDeque<StreamEvent>,
+    next_id: u64,
 }
 
 impl Client {
     pub fn connect(addr: &str) -> Result<Self> {
         let stream = TcpStream::connect(addr)?;
-        Ok(Client { stream: BufReader::new(stream) })
+        Ok(Client {
+            stream: BufReader::new(stream),
+            pending: VecDeque::new(),
+            next_id: 0,
+        })
     }
 
+    /// Blocking one-shot request (legacy v1 shape): stream-and-collect
+    /// over the v2 protocol, returning
+    /// `{"tokens", "queue_ms", "total_ms", "uncertainty"}` (or the
+    /// legacy `{"err": {...}}` object if the request was rejected).
     pub fn request(&mut self, prompt: &[i32], max_new: usize)
                    -> Result<Json> {
         self.request_opts(prompt, max_new, &RequestOpts::default())
     }
 
-    /// A generation request with explicit sampling & termination fields
-    /// (the protocol line documented atop this file).
+    /// [`Client::request`] with explicit sampling & termination fields.
     pub fn request_opts(&mut self, prompt: &[i32], max_new: usize,
                         opts: &RequestOpts) -> Result<Json> {
+        let id = self.submit(prompt, max_new, opts)?;
+        loop {
+            match self.next_event_for(id)? {
+                StreamEvent::Done {
+                    tokens, queue_ms, total_ms, uncertainty, ..
+                } => {
+                    return Ok(Json::obj(vec![
+                        ("tokens",
+                         Json::Arr(tokens.iter()
+                             .map(|&t| Json::num(t as f64))
+                             .collect())),
+                        ("queue_ms", Json::num(queue_ms)),
+                        ("total_ms", Json::num(total_ms)),
+                        ("uncertainty", Json::num(uncertainty)),
+                    ]));
+                }
+                StreamEvent::Err { code, msg, .. } => {
+                    return Ok(err_reply(None, &code, &msg));
+                }
+                StreamEvent::Start { .. } | StreamEvent::Token { .. } => {}
+            }
+        }
+    }
+
+    /// Fire off a generation request without waiting for anything;
+    /// returns its connection-scoped id.  Events arrive via
+    /// [`Client::next_event`] / [`Client::stream`].
+    pub fn submit(&mut self, prompt: &[i32], max_new: usize,
+                  opts: &RequestOpts) -> Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
         let mut pairs = vec![
+            ("id", Json::num(id as f64)),
             ("prompt",
              Json::Arr(prompt.iter().map(|&t| Json::num(t as f64))
                  .collect())),
@@ -557,31 +985,243 @@ impl Client {
         if let Some(c) = opts.uncertainty_temp {
             pairs.push(("uncertainty_temp", Json::num(c)));
         }
-        let req = Json::obj(pairs);
-        self.send_line(&req.to_string())
+        self.write_line(&Json::obj(pairs).to_string())?;
+        Ok(id)
+    }
+
+    /// Submit and iterate the request's event stream; the iterator ends
+    /// after the terminal `Done`/`Err` event.  Events of OTHER in-flight
+    /// requests encountered along the way are buffered, not lost.
+    pub fn stream(&mut self, prompt: &[i32], max_new: usize,
+                  opts: &RequestOpts) -> Result<ClientStream<'_>> {
+        let id = self.submit(prompt, max_new, opts)?;
+        Ok(ClientStream { client: self, id, finished: false })
+    }
+
+    /// The next event from ANY in-flight request (buffered events
+    /// first).
+    pub fn next_event(&mut self) -> Result<StreamEvent> {
+        if let Some(ev) = self.pending.pop_front() {
+            return Ok(ev);
+        }
+        self.read_event()
+    }
+
+    /// Cancel an in-flight request: `{"ok": true}` if it was still
+    /// active (its stream then ends with a `cancelled: true` done
+    /// event), `{"ok": false}` if the id was unknown or already
+    /// finished.
+    pub fn cancel(&mut self, id: u64) -> Result<Json> {
+        self.send_cmd(&format!("{{\"cmd\":\"cancel\",\"id\":{id}}}"))
     }
 
     pub fn ping(&mut self) -> Result<Json> {
-        self.send_line(r#"{"cmd":"ping"}"#)
+        self.send_cmd(r#"{"cmd":"ping"}"#)
     }
 
     /// Live engine counters: requests, steps, tokens_out,
-    /// prefill_tokens — answered mid-serve, not only after shutdown.
+    /// prefill_tokens, cancelled, wasted_tokens — answered mid-serve,
+    /// not only after shutdown.
     pub fn stats(&mut self) -> Result<Json> {
-        self.send_line(r#"{"cmd":"stats"}"#)
+        self.send_cmd(r#"{"cmd":"stats"}"#)
     }
 
     pub fn shutdown(&mut self) -> Result<Json> {
-        self.send_line(r#"{"cmd":"shutdown"}"#)
+        self.send_cmd(r#"{"cmd":"shutdown"}"#)
     }
 
-    fn send_line(&mut self, line: &str) -> Result<Json> {
+    // ------------------------------------------------------ plumbing --
+
+    fn write_line(&mut self, line: &str) -> Result<()> {
         let stream = self.stream.get_mut();
         stream.write_all(line.as_bytes())?;
         stream.write_all(b"\n")?;
         stream.flush()?;
+        Ok(())
+    }
+
+    fn read_json(&mut self) -> Result<Json> {
         let mut reply = String::new();
-        self.stream.read_line(&mut reply)?;
+        if self.stream.read_line(&mut reply)? == 0 {
+            bail!("connection closed by server");
+        }
         crate::util::json::parse(reply.trim())
+    }
+
+    fn read_event(&mut self) -> Result<StreamEvent> {
+        let j = self.read_json()?;
+        StreamEvent::from_json(&j)
+    }
+
+    /// The next event belonging to request `id` (or a global error with
+    /// no id — the reply to a line the server could not attribute);
+    /// events of other requests are buffered in arrival order.
+    fn next_event_for(&mut self, id: u64) -> Result<StreamEvent> {
+        if let Some(pos) = self
+            .pending
+            .iter()
+            .position(|e| e.id() == Some(id) || e.id().is_none())
+        {
+            return Ok(self.pending.remove(pos).expect("position exists"));
+        }
+        loop {
+            let ev = self.read_event()?;
+            if ev.id() == Some(id) || ev.id().is_none() {
+                return Ok(ev);
+            }
+            self.pending.push_back(ev);
+        }
+    }
+
+    /// Send a command line and return its (untagged) reply, buffering
+    /// any event lines that arrive first — in-flight streams interleave
+    /// freely with command replies.
+    fn send_cmd(&mut self, line: &str) -> Result<Json> {
+        self.write_line(line)?;
+        loop {
+            let j = self.read_json()?;
+            if j.get("event").is_none() {
+                return Ok(j);
+            }
+            let ev = StreamEvent::from_json(&j)?;
+            if matches!(ev, StreamEvent::Err { id: None, .. }) {
+                // an error the server could not attribute to a request
+                // is the reply to the line we just sent
+                return Ok(j);
+            }
+            self.pending.push_back(ev);
+        }
+    }
+}
+
+/// Iterator over one request's event stream (see [`Client::stream`]);
+/// ends after the terminal event.  A transport error also ends the
+/// stream (check [`ClientStream::finished`] semantics via the terminal
+/// event if you need to distinguish).
+pub struct ClientStream<'a> {
+    client: &'a mut Client,
+    id: u64,
+    finished: bool,
+}
+
+impl ClientStream<'_> {
+    /// The connection-scoped id of the request this stream follows.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Cancel this request mid-stream; its terminal event will be a
+    /// `cancelled: true` done (keep iterating to observe it).
+    pub fn cancel(&mut self) -> Result<Json> {
+        let id = self.id;
+        self.client.cancel(id)
+    }
+}
+
+impl Iterator for ClientStream<'_> {
+    type Item = StreamEvent;
+
+    fn next(&mut self) -> Option<StreamEvent> {
+        if self.finished {
+            return None;
+        }
+        match self.client.next_event_for(self.id) {
+            Ok(ev) => {
+                if ev.is_terminal() {
+                    self.finished = true;
+                }
+                Some(ev)
+            }
+            Err(_) => {
+                self.finished = true;
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn sink(id: u64, writer: Sender<String>, active: &ActiveMap)
+            -> ConnSink {
+        active.lock().unwrap()
+            .insert(id, Arc::new(AtomicBool::new(false)));
+        ConnSink {
+            id,
+            writer,
+            closed: Arc::new(AtomicBool::new(false)),
+            active: active.clone(),
+            terminal_sent: AtomicBool::new(false),
+        }
+    }
+
+    #[test]
+    fn conn_sink_drop_without_terminal_emits_unavailable() {
+        // the v1 "engine dropped the request" contract: an accepted
+        // request whose sink dies without a done event must still end
+        // its stream with a terminal error line, and free its id
+        let (wtx, wrx) = channel::<String>();
+        let active: ActiveMap = Arc::new(Mutex::new(HashMap::new()));
+        let s = sink(9, wtx, &active);
+        s.send(EngineEvent::Started { queue_ms: 0.5 }).unwrap();
+        drop(s); // engine discarded the request (error / shutdown drain)
+        let lines: Vec<String> = wrx.iter().collect();
+        assert_eq!(lines.len(), 2, "start + terminal err: {lines:?}");
+        let err = crate::util::json::parse(&lines[1]).unwrap();
+        assert_eq!(err.req("event").unwrap().as_str().unwrap(), "err");
+        assert_eq!(err.req("id").unwrap().as_i64().unwrap(), 9);
+        assert_eq!(
+            err.req("err").unwrap().req("code").unwrap()
+                .as_str().unwrap(),
+            "unavailable");
+        assert!(active.lock().unwrap().is_empty(),
+                "drop must deregister the id");
+    }
+
+    #[test]
+    fn conn_sink_done_is_terminal_and_suppresses_the_drop_event() {
+        let (wtx, wrx) = channel::<String>();
+        let active: ActiveMap = Arc::new(Mutex::new(HashMap::new()));
+        let s = sink(3, wtx, &active);
+        s.send(EngineEvent::Token { index: 0, token: 7,
+                                    uncertainty: 0.25 })
+            .unwrap();
+        s.send(EngineEvent::Done(crate::serve::EngineResponse {
+            tokens: vec![7],
+            queue_ms: 0.0,
+            total_ms: 1.0,
+            uncertainty: 0.25,
+            cancelled: false,
+        }))
+        .unwrap();
+        // done already freed the id for reuse
+        assert!(active.lock().unwrap().is_empty());
+        drop(s);
+        let lines: Vec<String> = wrx.iter().collect();
+        assert_eq!(lines.len(), 2, "token + done, NO drop event: {lines:?}");
+        let done = crate::util::json::parse(&lines[1]).unwrap();
+        assert_eq!(done.req("event").unwrap().as_str().unwrap(), "done");
+        assert!(!done.req("cancelled").unwrap().as_bool().unwrap());
+        let tok = crate::util::json::parse(&lines[0]).unwrap();
+        assert_eq!(tok.req("event").unwrap().as_str().unwrap(), "token");
+        assert_eq!(tok.req("token").unwrap().as_i64().unwrap(), 7);
+        assert_eq!(tok.req("index").unwrap().as_i64().unwrap(), 0);
+    }
+
+    #[test]
+    fn closed_conn_sink_refuses_events() {
+        let (wtx, wrx) = channel::<String>();
+        let active: ActiveMap = Arc::new(Mutex::new(HashMap::new()));
+        let s = sink(1, wtx, &active);
+        s.closed.store(true, Ordering::SeqCst);
+        assert!(s.send(EngineEvent::Started { queue_ms: 0.0 }).is_err(),
+                "a closed connection must report SinkClosed");
+        drop(s);
+        // the drop-event goes to the (dead) writer; nothing else did
+        let lines: Vec<String> = wrx.iter().collect();
+        assert_eq!(lines.len(), 1, "{lines:?}");
     }
 }

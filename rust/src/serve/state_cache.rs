@@ -207,8 +207,10 @@ impl BeliefStateCache {
     /// Mean posterior variance (1/lam) of a slot — the serving-side
     /// uncertainty signal (paper §7: epistemic uncertainty applications),
     /// computed with the same `api::mean_variance` formula the belief
-    /// type and the native variance trace use (over borrowed slices; no
-    /// per-request allocation).
+    /// type and the native variance trace use.  Since protocol v2 the
+    /// engine reads this once per sampled token (every streamed `token`
+    /// event carries the post-step value), so it stays allocation-free
+    /// over borrowed slices by design, not just thrift.
     pub fn slot_uncertainty(&self, slot: usize) -> f32 {
         if self.layers == 0 {
             return 0.0;

@@ -1,0 +1,47 @@
+//! Helpers shared by the serve-side integration suites
+//! (`integration_serve`, `integration_stream`).  Each [[test]] target
+//! compiles its own copy, so items unused by one target are expected —
+//! hence the allow.
+#![allow(dead_code)]
+
+use kla::config::ServeConfig;
+use kla::kla::NativeLmConfig;
+use kla::util::Json;
+
+/// The `tokens` array of a one-shot reply (or `done` event shape).
+pub fn tokens_of(r: &Json) -> Vec<i64> {
+    r.req("tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_i64().unwrap())
+        .collect()
+}
+
+/// The shared tiny native LM every serve-side e2e test runs on — keep
+/// the two suites on the SAME model geometry (vocab 32, conv window
+/// K-1 = 3) so their pinned token sequences stay comparable.
+pub fn small_lm() -> NativeLmConfig {
+    NativeLmConfig {
+        vocab: 32,
+        d_model: 16,
+        n_layers: 2,
+        n_state: 2,
+        conv_kernel: 4,
+        ..Default::default()
+    }
+}
+
+/// Server config for the native-backend e2e tests: ephemeral port, and
+/// a wide batch window — native steps are microseconds (vs ms on PJRT),
+/// so concurrent submitters need the window to land in the same batch.
+pub fn native_cfg() -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        backend: "native".into(),
+        batch_window_us: 2000,
+        max_new_tokens: 4,
+        ..Default::default()
+    }
+}

@@ -8,27 +8,19 @@
 //! and fails on any SKIP.  `serve_end_to_end` is the same flow on the
 //! XLA artifact backend and still skips gracefully without artifacts.
 
+mod common;
+
 use std::sync::atomic::AtomicBool;
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::Duration;
 
+use common::{native_cfg, small_lm, tokens_of};
 use kla::config::ServeConfig;
-use kla::kla::NativeLmConfig;
 use kla::runtime::{NativeBackend, Runtime};
 use kla::serve::{run_engine, serve, serve_native, Client, EngineRequest,
-                 RequestOpts, SamplerConfig};
+                 EngineResponse, RequestOpts, SamplerConfig};
 use kla::util::Json;
-
-fn tokens_of(r: &Json) -> Vec<i64> {
-    r.req("tokens")
-        .unwrap()
-        .as_arr()
-        .unwrap()
-        .iter()
-        .map(|t| t.as_i64().unwrap())
-        .collect()
-}
 
 /// Send a raw protocol line and parse the reply (for malformed requests
 /// the typed `Client` cannot express).
@@ -123,7 +115,10 @@ fn serve_end_to_end() {
              {queue_times:?})");
 
     // malformed request gets a structured error, connection stays usable
+    // (protocol v2: generation requests must carry a client-chosen id)
     let bad = send_raw(&addr, "{\"max_new_tokens\": 2}");
+    assert_eq!(err_code(&bad), "missing-id", "bad reply: {bad:?}");
+    let bad = send_raw(&addr, "{\"id\": 0, \"max_new_tokens\": 2}");
     assert_eq!(err_code(&bad), "missing-prompt", "bad reply: {bad:?}");
 
     let stats = handle.stop().unwrap();
@@ -142,29 +137,6 @@ fn serve_end_to_end() {
 // ===================================================== native backend ====
 // Everything below runs with zero artifacts: the serve stack end-to-end
 // on the pure-Rust backend (the first serve-side tests that cannot SKIP).
-
-fn small_lm() -> NativeLmConfig {
-    NativeLmConfig {
-        vocab: 32,
-        d_model: 16,
-        n_layers: 2,
-        n_state: 2,
-        conv_kernel: 4,
-        ..Default::default()
-    }
-}
-
-fn native_cfg() -> ServeConfig {
-    ServeConfig {
-        addr: "127.0.0.1:0".into(), // ephemeral port
-        backend: "native".into(),
-        // native steps are microseconds (vs ms on PJRT): a wide window
-        // gives concurrent submitters time to land in the same batch
-        batch_window_us: 2000,
-        max_new_tokens: 4,
-        ..Default::default()
-    }
-}
 
 #[test]
 fn native_serve_end_to_end() {
@@ -220,7 +192,10 @@ fn native_serve_end_to_end() {
             "no request waited behind the full batch: {queue_times:?}");
 
     // malformed request gets a structured error, server survives
+    // (protocol v2: generation requests must carry a client-chosen id)
     let bad = send_raw(&addr, "{\"max_new_tokens\": 2}");
+    assert_eq!(err_code(&bad), "missing-id", "bad reply: {bad:?}");
+    let bad = send_raw(&addr, "{\"id\": 0, \"max_new_tokens\": 2}");
     assert_eq!(err_code(&bad), "missing-prompt", "bad reply: {bad:?}");
 
     // clean shutdown: stats account for everything served
@@ -389,15 +364,17 @@ fn native_engine_fifo_completion_on_single_slot() {
     // values label the requests through the shared response channel.
     let backend = NativeBackend::seeded(&small_lm(), 3, 1);
     let (tx, rx) = channel::<EngineRequest>();
-    let (rtx, rrx) = channel();
+    let (rtx, rrx) = channel::<EngineResponse>();
     for i in 0..3usize {
-        tx.send(EngineRequest {
-            prompt: vec![i as i32 + 1, i as i32 + 2],
-            max_new: i + 1,
-            sampler: SamplerConfig::greedy(),
-            submitted: std::time::Instant::now(),
-            resp: rtx.clone(),
-        })
+        // Sender<EngineResponse> is the collect-only compatibility sink:
+        // Started/Token events are dropped, Done arrives as the one-shot
+        // EngineResponse the pre-streaming engine used to send
+        tx.send(EngineRequest::new(
+            vec![i as i32 + 1, i as i32 + 2],
+            i + 1,
+            SamplerConfig::greedy(),
+            Box::new(rtx.clone()),
+        ))
         .unwrap();
     }
     drop(tx);
@@ -589,33 +566,46 @@ fn native_sampling_request_validation_structured_errors() {
     let addr = handle.addr.clone();
     // out-of-i32-range prompt id: previously truncated silently by
     // `as_i64()? as i32`
-    let r = send_raw(&addr, r#"{"prompt": [3000000000], "max_new_tokens": 2}"#);
+    let r = send_raw(
+        &addr, r#"{"id": 1, "prompt": [3000000000], "max_new_tokens": 2}"#);
     assert_eq!(err_code(&r), "bad-prompt-token", "{r:?}");
+    // the error event echoes the request id (protocol v2)
+    assert_eq!(r.req("id").unwrap().as_i64().unwrap(), 1, "{r:?}");
     // fractional token ids are not ids
-    let r = send_raw(&addr, r#"{"prompt": [1.5]}"#);
+    let r = send_raw(&addr, r#"{"id": 1, "prompt": [1.5]}"#);
     assert_eq!(err_code(&r), "bad-prompt-token", "{r:?}");
     // oversized max_new_tokens: previously clamped silently, now rejected
-    let r = send_raw(&addr,
-                     r#"{"prompt": [1], "max_new_tokens": 999999}"#);
+    let r = send_raw(
+        &addr, r#"{"id": 1, "prompt": [1], "max_new_tokens": 999999}"#);
     assert_eq!(err_code(&r), "max-new-too-large", "{r:?}");
     // sampler field validation
-    let r = send_raw(&addr, r#"{"prompt": [1], "temperature": -1}"#);
+    let r = send_raw(&addr, r#"{"id": 1, "prompt": [1], "temperature": -1}"#);
     assert_eq!(err_code(&r), "bad-temperature", "{r:?}");
-    let r = send_raw(&addr, r#"{"prompt": [1], "top_p": 0}"#);
+    let r = send_raw(&addr, r#"{"id": 1, "prompt": [1], "top_p": 0}"#);
     assert_eq!(err_code(&r), "bad-top-p", "{r:?}");
-    let r = send_raw(&addr, r#"{"prompt": [1], "top_k": 2.5}"#);
+    let r = send_raw(&addr, r#"{"id": 1, "prompt": [1], "top_k": 2.5}"#);
     assert_eq!(err_code(&r), "bad-top-k", "{r:?}");
-    let r = send_raw(&addr, r#"{"prompt": [1], "seed": -4}"#);
+    let r = send_raw(&addr, r#"{"id": 1, "prompt": [1], "seed": -4}"#);
     assert_eq!(err_code(&r), "bad-seed", "{r:?}");
     // seeds beyond 2^53 would silently collapse in f64 — rejected
-    let r = send_raw(&addr, r#"{"prompt": [1], "seed": 1e17}"#);
+    let r = send_raw(&addr, r#"{"id": 1, "prompt": [1], "seed": 1e17}"#);
     assert_eq!(err_code(&r), "bad-seed", "{r:?}");
-    let r = send_raw(&addr, r#"{"prompt": [1], "stop_tokens": [1e12]}"#);
+    let r = send_raw(
+        &addr, r#"{"id": 1, "prompt": [1], "stop_tokens": [1e12]}"#);
     assert_eq!(err_code(&r), "bad-stop-tokens", "{r:?}");
+    // id validation itself (the v2 rules; rejected before anything else)
+    let r = send_raw(&addr, r#"{"prompt": [1]}"#);
+    assert_eq!(err_code(&r), "missing-id", "{r:?}");
+    let r = send_raw(&addr, r#"{"id": 1.5, "prompt": [1]}"#);
+    assert_eq!(err_code(&r), "bad-id", "{r:?}");
+    let r = send_raw(&addr, r#"{"id": -3, "prompt": [1]}"#);
+    assert_eq!(err_code(&r), "bad-id", "{r:?}");
     let r = send_raw(&addr, "not json at all");
     assert_eq!(err_code(&r), "bad-json", "{r:?}");
     let r = send_raw(&addr, r#"{"cmd": "frobnicate"}"#);
     assert_eq!(err_code(&r), "unknown-cmd", "{r:?}");
+    let r = send_raw(&addr, r#"{"cmd": "cancel"}"#);
+    assert_eq!(err_code(&r), "bad-id", "{r:?}");
     // after all that abuse the server still serves
     let mut c = Client::connect(&addr).unwrap();
     let ok = c.request(&[1, 2], 2).unwrap();

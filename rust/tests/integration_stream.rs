@@ -1,0 +1,397 @@
+//! Protocol-v2 streaming integration: multiplexed sessions, per-token
+//! events, and cancellation over the real TCP server on the pure-Rust
+//! native backend (no artifacts — nothing here may SKIP; CI's
+//! `stream-parity` step greps the result lines printed below).
+//!
+//! The acceptance invariants of the streaming redesign:
+//!   - for any fixed seed, the concatenated `token` events of a
+//!     streamed request are byte-identical to the legacy one-shot
+//!     `tokens` array (and to the stream's own `done.tokens`);
+//!   - two multiplexed requests on one connection receive correctly
+//!     tagged, interleaved event streams;
+//!   - cancelling an active request frees its slot for a queued request
+//!     (the engine sweep runs before admit, so within one iteration);
+//!   - a client that disconnects mid-generation is implicitly
+//!     cancelled — the slot is reusable and the abandoned work shows up
+//!     in the `cancelled` / `wasted_tokens` stats;
+//!   - stop tokens and `max_new_tokens: 0` behave identically through
+//!     the streaming path.
+
+mod common;
+
+use std::collections::HashMap;
+
+use common::{native_cfg, small_lm, tokens_of};
+use kla::runtime::NativeBackend;
+use kla::serve::{serve_native, Client, RequestOpts, StreamEvent};
+
+#[test]
+fn native_stream_tokens_identical_to_one_shot() {
+    // the headline parity invariant, for greedy AND seeded sampling,
+    // across prompt shapes (empty / single / long)
+    let backend = NativeBackend::seeded(&small_lm(), 17, 2);
+    let handle = serve_native(backend, &native_cfg()).unwrap();
+    let mut c = Client::connect(&handle.addr).unwrap();
+    let prompts: Vec<Vec<i32>> = vec![
+        vec![],
+        vec![3],
+        (0..40).map(|i| (i * 7) % 32).collect(),
+    ];
+    let cases: Vec<(&str, RequestOpts)> = vec![
+        ("greedy", RequestOpts::default()),
+        ("sampled", RequestOpts {
+            temperature: Some(0.9),
+            top_p: Some(0.9),
+            seed: Some(42),
+            ..Default::default()
+        }),
+    ];
+    for (pi, p) in prompts.iter().enumerate() {
+        for (name, opts) in &cases {
+            // legacy one-shot wrapper (stream-and-collect): its tokens
+            // array is the engine-accumulated full reply
+            let one = tokens_of(&c.request_opts(p, 6, opts).unwrap());
+            assert_eq!(one.len(), 6);
+            // explicit streaming: a fresh request under the same seed
+            let mut streamed: Vec<i64> = Vec::new();
+            let mut done: Option<Vec<i64>> = None;
+            let mut started = false;
+            let mut last_unc = -1.0;
+            let mut done_unc = 0.0;
+            for ev in c.stream(p, 6, opts).unwrap() {
+                match ev {
+                    StreamEvent::Start { queue_ms, .. } => {
+                        assert!(!started, "start must come exactly once");
+                        assert!(queue_ms >= 0.0);
+                        started = true;
+                    }
+                    StreamEvent::Token { index, token, uncertainty, .. } => {
+                        assert_eq!(index, streamed.len(),
+                                   "token indices must be contiguous");
+                        assert!(uncertainty > 0.0,
+                                "every token carries its posterior");
+                        last_unc = uncertainty;
+                        streamed.push(token as i64);
+                    }
+                    StreamEvent::Done {
+                        tokens, uncertainty, cancelled, ..
+                    } => {
+                        assert!(!cancelled);
+                        done_unc = uncertainty;
+                        done = Some(tokens.iter().map(|&t| t as i64)
+                            .collect());
+                    }
+                    StreamEvent::Err { code, msg, .. } => {
+                        panic!("unexpected err {code}: {msg}");
+                    }
+                }
+            }
+            assert!(started, "prompt {pi} ({name}): no start event");
+            let done = done.expect("stream must end in done");
+            // the acceptance bar: concatenated token events are byte-
+            // identical to the one-shot tokens array (and to done.tokens)
+            assert_eq!(streamed, done,
+                       "prompt {pi} ({name}): token events != done.tokens");
+            assert_eq!(streamed, one,
+                       "prompt {pi} ({name}): streamed != one-shot");
+            // the last token event's uncertainty IS the final reply's
+            // (same post-step belief, read twice)
+            assert!((last_unc - done_unc).abs() < 1e-9,
+                    "prompt {pi} ({name}): uncertainty trajectory end \
+                     {last_unc} != done {done_unc}");
+        }
+        println!("stream parity prompt {pi}: ok");
+    }
+    handle.stop().unwrap();
+}
+
+#[test]
+fn native_stream_multiplex_two_requests_one_connection() {
+    let backend = NativeBackend::seeded(&small_lm(), 23, 2);
+    let handle = serve_native(backend, &native_cfg()).unwrap();
+    let mut c = Client::connect(&handle.addr).unwrap();
+    let pa: Vec<i32> = (0..8).map(|i| (i * 3) % 32).collect();
+    let pb: Vec<i32> = (0..5).map(|i| (i * 11) % 32).collect();
+    // solo greedy references (deterministic per-lane on the native model)
+    let ref_a = tokens_of(&c.request(&pa, 16).unwrap());
+    let ref_b = tokens_of(&c.request(&pb, 16).unwrap());
+    // both in flight at once on ONE connection
+    let a = c.submit(&pa, 16, &RequestOpts::default()).unwrap();
+    let b = c.submit(&pb, 16, &RequestOpts::default()).unwrap();
+    assert_ne!(a, b);
+    let mut toks: HashMap<u64, Vec<i64>> = HashMap::new();
+    let mut dones: HashMap<u64, Vec<i64>> = HashMap::new();
+    let mut token_order: Vec<u64> = Vec::new();
+    while dones.len() < 2 {
+        match c.next_event().unwrap() {
+            StreamEvent::Token { id, index, token, .. } => {
+                let v = toks.entry(id).or_default();
+                assert_eq!(index, v.len(),
+                           "indices are contiguous PER REQUEST");
+                v.push(token as i64);
+                token_order.push(id);
+            }
+            StreamEvent::Done { id, tokens, cancelled, .. } => {
+                assert!(!cancelled);
+                dones.insert(id,
+                             tokens.iter().map(|&t| t as i64).collect());
+            }
+            StreamEvent::Start { .. } => {}
+            StreamEvent::Err { code, msg, .. } => {
+                panic!("unexpected err {code}: {msg}");
+            }
+        }
+    }
+    // correctly tagged: each id's events reproduce its own solo run,
+    // unpolluted by the other stream sharing the connection
+    assert_eq!(toks[&a], ref_a, "request a picked up foreign tokens");
+    assert_eq!(toks[&b], ref_b, "request b picked up foreign tokens");
+    assert_eq!(dones[&a], ref_a);
+    assert_eq!(dones[&b], ref_b);
+    // and the two streams really interleaved on the wire (both were in
+    // the same batch, so b's first token lands before a's last)
+    let first_b = token_order.iter().position(|&i| i == b).unwrap();
+    let last_a = token_order.iter().rposition(|&i| i == a).unwrap();
+    assert!(first_b < last_a,
+            "event streams never interleaved: {token_order:?}");
+    let stats = handle.stop().unwrap();
+    assert_eq!(stats.requests, 4);
+    println!("stream multiplex tagging: ok");
+}
+
+#[test]
+fn native_stream_cancel_frees_slot_for_queued_request() {
+    // ONE slot: request a would decode 10M tokens for minutes; b is
+    // queued behind it.  Cancelling a must free the slot (the engine
+    // sweep runs before admit, so b is admitted within one iteration) —
+    // b completing AT ALL is the proof, no timing assumptions needed.
+    let backend = NativeBackend::seeded(&small_lm(), 31, 1);
+    let mut cfg = native_cfg();
+    cfg.max_new_limit = 100_000_000;
+    let handle = serve_native(backend, &cfg).unwrap();
+    let mut c = Client::connect(&handle.addr).unwrap();
+    let a = c.submit(&[1, 2, 3], 10_000_000,
+                     &RequestOpts::default()).unwrap();
+    // wait until a is actively generating
+    loop {
+        match c.next_event().unwrap() {
+            StreamEvent::Token { id, .. } if id == a => break,
+            StreamEvent::Err { code, msg, .. } => {
+                panic!("unexpected err {code}: {msg}");
+            }
+            _ => {}
+        }
+    }
+    let b = c.submit(&[4, 5], 3, &RequestOpts::default()).unwrap();
+    let ack = c.cancel(a).unwrap();
+    assert!(ack.req("ok").unwrap().as_bool().unwrap(),
+            "cancel must find the active request: {ack:?}");
+    // drain both streams to their terminal events
+    let mut a_done: Option<(Vec<i64>, bool)> = None;
+    let mut b_done: Option<(Vec<i64>, bool)> = None;
+    let mut b_streamed: Vec<i64> = Vec::new();
+    while a_done.is_none() || b_done.is_none() {
+        match c.next_event().unwrap() {
+            StreamEvent::Done { id, tokens, cancelled, .. } => {
+                let toks = tokens.iter().map(|&t| t as i64).collect();
+                if id == a {
+                    a_done = Some((toks, cancelled));
+                } else if id == b {
+                    b_done = Some((toks, cancelled));
+                }
+            }
+            StreamEvent::Token { id, token, .. } if id == b => {
+                b_streamed.push(token as i64);
+            }
+            StreamEvent::Err { code, msg, .. } => {
+                panic!("unexpected err {code}: {msg}");
+            }
+            _ => {}
+        }
+    }
+    let (a_tokens, a_cancelled) = a_done.unwrap();
+    assert!(a_cancelled, "a's terminal done must be cancelled: true");
+    assert!(!a_tokens.is_empty(), "a was generating when cancelled");
+    assert!(a_tokens.len() < 10_000_000, "a must not run to max_new");
+    let (b_tokens, b_cancelled) = b_done.unwrap();
+    assert!(!b_cancelled);
+    assert_eq!(b_tokens.len(), 3, "queued b must complete on a's slot");
+    assert_eq!(b_streamed, b_tokens);
+    // double-cancel of a finished id is a clean no-op
+    let ack2 = c.cancel(a).unwrap();
+    assert!(!ack2.req("ok").unwrap().as_bool().unwrap());
+    // the abandoned work is accounted: a's decoded tokens are wasted,
+    // only b's are delivered output
+    let live = c.stats().unwrap();
+    assert_eq!(live.req("cancelled").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(live.req("wasted_tokens").unwrap().as_usize().unwrap(),
+               a_tokens.len());
+    let stats = handle.stop().unwrap();
+    assert_eq!(stats.cancelled, 1);
+    assert_eq!(stats.wasted_tokens, a_tokens.len());
+    assert_eq!(stats.tokens_out, 3);
+    println!("stream cancel frees slot: ok");
+}
+
+#[test]
+fn native_stream_disconnect_mid_generation_frees_slot() {
+    // regression for the dead-reply-channel leak: a client that
+    // disconnects mid-generation used to leave the engine decoding to
+    // max_new into the void.  ONE slot + a 10M-token request: the
+    // second connection's request can only complete if the disconnect
+    // implicitly cancelled the first and freed its slot.
+    let backend = NativeBackend::seeded(&small_lm(), 37, 1);
+    let mut cfg = native_cfg();
+    cfg.max_new_limit = 100_000_000;
+    let handle = serve_native(backend, &cfg).unwrap();
+    {
+        let mut c1 = Client::connect(&handle.addr).unwrap();
+        let a = c1.submit(&[5, 6], 10_000_000,
+                          &RequestOpts::default()).unwrap();
+        loop {
+            match c1.next_event().unwrap() {
+                StreamEvent::Token { id, .. } if id == a => break,
+                StreamEvent::Err { code, msg, .. } => {
+                    panic!("unexpected err {code}: {msg}");
+                }
+                _ => {}
+            }
+        }
+        // c1 drops here: the connection closes mid-generation
+    }
+    let mut c2 = Client::connect(&handle.addr).unwrap();
+    let r = c2.request(&[1, 2, 3], 3).unwrap();
+    assert_eq!(tokens_of(&r).len(), 3,
+               "slot was not reused after client disconnect");
+    // the abandoned request is visible in the stats counters
+    let live = c2.stats().unwrap();
+    assert_eq!(live.req("cancelled").unwrap().as_usize().unwrap(), 1);
+    assert!(live.req("wasted_tokens").unwrap().as_usize().unwrap() >= 1,
+            "the disconnected request decoded at least one token");
+    let stats = handle.stop().unwrap();
+    assert_eq!(stats.cancelled, 1);
+    assert!(stats.wasted_tokens >= 1);
+    assert_eq!(stats.tokens_out, 3,
+               "only the delivered request counts as output");
+    println!("stream disconnect slot reuse: ok");
+}
+
+#[test]
+fn native_stream_stop_token_and_prefill_only() {
+    let backend = NativeBackend::seeded(&small_lm(), 13, 2);
+    let handle = serve_native(backend, &native_cfg()).unwrap();
+    let mut c = Client::connect(&handle.addr).unwrap();
+    let prompt = vec![2, 4, 6];
+    let full = tokens_of(&c.request(&prompt, 8).unwrap());
+    assert_eq!(full.len(), 8);
+    // stop on a token the greedy continuation is known to produce
+    let stop = full[3] as i32;
+    let first = full.iter().position(|&t| t == stop as i64).unwrap();
+    let opts = RequestOpts {
+        stop_tokens: Some(vec![stop]),
+        ..Default::default()
+    };
+    let mut streamed: Vec<i64> = Vec::new();
+    let mut done: Option<Vec<i64>> = None;
+    for ev in c.stream(&prompt, 8, &opts).unwrap() {
+        match ev {
+            StreamEvent::Token { token, .. } => {
+                streamed.push(token as i64);
+            }
+            StreamEvent::Done { tokens, .. } => {
+                done = Some(tokens.iter().map(|&t| t as i64).collect());
+            }
+            StreamEvent::Start { .. } => {}
+            StreamEvent::Err { code, msg, .. } => {
+                panic!("unexpected err {code}: {msg}");
+            }
+        }
+    }
+    // the stream ends AT the stop token (included) — no trailing events
+    assert_eq!(streamed, full[..=first].to_vec());
+    assert_eq!(done.unwrap(), streamed);
+    // max_new 0 through the streaming path: start + done only, empty
+    // tokens, the prompt's belief uncertainty still reported
+    let prefill_prompt: Vec<i32> = (0..20).map(|i| i % 32).collect();
+    let events: Vec<StreamEvent> = c
+        .stream(&prefill_prompt, 0, &RequestOpts::default())
+        .unwrap()
+        .collect();
+    assert_eq!(events.len(), 2,
+               "expected start + done only: {events:?}");
+    assert!(matches!(events[0], StreamEvent::Start { .. }));
+    let StreamEvent::Done { ref tokens, uncertainty, cancelled, .. } =
+        events[1]
+    else {
+        panic!("terminal event must be done: {:?}", events[1]);
+    };
+    assert!(tokens.is_empty());
+    assert!(!cancelled);
+    assert!(uncertainty > 0.0);
+    handle.stop().unwrap();
+    println!("stream stop/max_new=0: ok");
+}
+
+#[test]
+fn native_stream_duplicate_id_and_inflight_cap() {
+    use std::io::{BufRead, Write};
+
+    fn send_line(w: &mut std::net::TcpStream, line: &str) {
+        w.write_all(line.as_bytes()).unwrap();
+        w.write_all(b"\n").unwrap();
+        w.flush().unwrap();
+    }
+
+    let backend = NativeBackend::seeded(&small_lm(), 3, 2);
+    let mut cfg = native_cfg();
+    cfg.max_inflight = 2;
+    let handle = serve_native(backend, &cfg).unwrap();
+    // raw socket so the wire ids are under test control
+    let stream = std::net::TcpStream::connect(&handle.addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = std::io::BufReader::new(stream);
+    // ids 7 and 8 run long enough (1000 tokens) to still be in flight
+    // while the two rejected lines are parsed microseconds later
+    send_line(&mut w,
+              r#"{"id": 7, "prompt": [1, 2, 3], "max_new_tokens": 1000}"#);
+    send_line(&mut w, r#"{"id": 7, "prompt": [4], "max_new_tokens": 1}"#);
+    send_line(&mut w,
+              r#"{"id": 8, "prompt": [5], "max_new_tokens": 1000}"#);
+    send_line(&mut w, r#"{"id": 9, "prompt": [6], "max_new_tokens": 1}"#);
+    // scan the multiplexed reply stream: amid id-7/id-8 events we must
+    // find the duplicate-id error (echoing id 7) and the
+    // too-many-inflight error (echoing id 9)
+    let mut saw_dup = false;
+    let mut saw_cap = false;
+    let mut done = 0;
+    while done < 2 {
+        let mut line = String::new();
+        assert!(r.read_line(&mut line).unwrap() > 0, "server hung up");
+        let j = kla::util::json::parse(line.trim()).unwrap();
+        if let Some(e) = j.get("err") {
+            let code = e.req("code").unwrap().as_str().unwrap();
+            let id = j.req("id").unwrap().as_i64().unwrap();
+            match code {
+                "duplicate-id" => {
+                    assert_eq!(id, 7);
+                    saw_dup = true;
+                }
+                "too-many-inflight" => {
+                    assert_eq!(id, 9);
+                    saw_cap = true;
+                }
+                other => panic!("unexpected err code {other}: {j:?}"),
+            }
+        } else if let Some(ev) = j.get("event") {
+            if ev.as_str().unwrap_or("") == "done" {
+                done += 1;
+            }
+        }
+    }
+    assert!(saw_dup, "duplicate id 7 was not rejected");
+    assert!(saw_cap, "in-flight cap was not enforced");
+    let stats = handle.stop().unwrap();
+    // only the two accepted requests ever reached the engine
+    assert_eq!(stats.requests, 2);
+    println!("stream id rules (duplicate / in-flight cap): ok");
+}
