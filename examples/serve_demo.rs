@@ -23,6 +23,9 @@ fn main() -> Result<()> {
         artifact: "serve_kla_b8".into(),
         max_new_tokens: 8,
         batch_window_us: 300,
+        // belief-state prefix cache: shared system prompts prefill once
+        // (native chunked-prefill path; a no-op on the XLA fallback)
+        prefix_cache_bytes: 8 << 20,
         ..Default::default()
     };
     // try the full XLA setup; ANY failure (missing dir, missing
@@ -124,6 +127,42 @@ fn main() -> Result<()> {
         }
     }
 
+    // belief-state prefix cache: two greedy requests sharing a system
+    // prompt.  The second restores the first's end-of-prefill snapshot
+    // (cached_tokens > 0) and — the identity guarantee — generates the
+    // same tokens with the same uncertainty trajectory from the restore
+    // point: the snapshot IS the cold end-of-prefill belief state.
+    println!("\nshared system prompt (belief-state prefix cache):");
+    let shared: Vec<i32> = (0..96).map(|j| ((j * 11) % 200) as i32)
+        .collect();
+    let mut trajectories: Vec<Vec<(i32, f64)>> = Vec::new();
+    for pass in ["cold", "warm"] {
+        let mut traj = Vec::new();
+        let mut cached = 0usize;
+        let mut ms = 0.0;
+        for ev in c.stream(&shared, 6, &RequestOpts::default())? {
+            match ev {
+                StreamEvent::Token { token, uncertainty, .. } => {
+                    traj.push((token, uncertainty));
+                }
+                StreamEvent::Done { cached_tokens, total_ms, .. } => {
+                    cached = cached_tokens;
+                    ms = total_ms;
+                }
+                _ => {}
+            }
+        }
+        let toks: Vec<String> =
+            traj.iter().map(|(t, _)| t.to_string()).collect();
+        println!("  {pass}: cached_tokens {cached:>2}, {ms:>6.1} ms, \
+                  tokens [{}]", toks.join(", "));
+        trajectories.push(traj);
+    }
+    if trajectories[0] == trajectories[1] {
+        println!("  warm pass: identical tokens AND uncertainty \
+                  trajectory from the restore point");
+    }
+
     let stats = handle.stop()?;
     println!("\nengine: {} requests, {} steps, {} tokens out",
              stats.requests, stats.steps, stats.tokens_out);
@@ -136,5 +175,10 @@ fn main() -> Result<()> {
     // interleaves token-by-token, so the line stays backend-agnostic
     println!("prefill: {} prompt tokens at {:.1} tok/s",
              stats.prefill_tokens, stats.prefill_tokens_per_sec());
+    println!("prefix cache: {} hits ({} partial), {} misses, {} prompt \
+              tokens restored, {} bytes in {} entries",
+             stats.prefix_hits, stats.prefix_partial_hits,
+             stats.prefix_misses, stats.prefix_cached_tokens,
+             stats.prefix_bytes, stats.prefix_entries);
     Ok(())
 }

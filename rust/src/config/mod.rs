@@ -203,6 +203,15 @@ pub struct ServeConfig {
     /// much of the engine queue a single connection can claim).
     /// Requests beyond it are rejected with `too-many-inflight`.
     pub max_inflight: usize,
+    /// Belief-state prefix cache byte budget (0 = disabled, the
+    /// default).  The CLI exposes it as `--prefix-cache-mb`; the value
+    /// here is in BYTES.  Only effective on the chunked-prefill path
+    /// (`prefill_chunk > 1` on a backend with a parallel prefill).
+    pub prefix_cache_bytes: usize,
+    /// Prefix-cache snapshot granularity in prompt tokens (0 = use
+    /// `prefill_chunk`, which keeps cached offsets chunk-aligned — the
+    /// generation-identity condition, DESIGN.md §S15).
+    pub prefix_cache_block: usize,
 }
 
 impl Default for ServeConfig {
@@ -225,6 +234,8 @@ impl Default for ServeConfig {
             pad: 0,
             prefill_chunk: 64,
             max_inflight: 64,
+            prefix_cache_bytes: 0,
+            prefix_cache_block: 0,
         }
     }
 }

@@ -60,6 +60,12 @@ fn app() -> App {
                 .opt("max-inflight", "64",
                      "max multiplexed in-flight requests per connection \
                       (protocol v2 streaming sessions)")
+                .opt("prefix-cache-mb", "0",
+                     "belief-state prefix cache budget in MiB (0 = off; \
+                      chunked-prefill native backend only)")
+                .opt("prefix-cache-block", "0",
+                     "prefix-cache snapshot granularity in prompt \
+                      tokens (0 = use prefill-chunk)")
                 .opt("seed", "0", "engine seed: keys the sampling RNG, \
                       and the weight init (native, no checkpoint)")
                 .opt("vocab", "64", "vocab size (native, no checkpoint)")
@@ -204,6 +210,8 @@ fn cmd_serve(m: &Matches) -> Result<()> {
         uncertainty_temp: m.get_f64("uncertainty-temp")?,
         stop_tokens,
         prefill_chunk: m.get_usize("prefill-chunk")?,
+        prefix_cache_bytes: m.get_usize("prefix-cache-mb")? * (1 << 20),
+        prefix_cache_block: m.get_usize("prefix-cache-block")?,
         pad: m.get("pad")?
             .parse::<i32>()
             .map_err(|e| anyhow!("--pad: not an i32: {e}"))?,

@@ -25,6 +25,10 @@ pub struct SchedRequest {
     /// Counter-based RNG key (`sampling::request_key`), stamped by the
     /// engine at submit from `(engine seed, request id, client seed)`.
     pub key: u64,
+    /// Prefix-cache participation (protocol `"cache": false` opts out):
+    /// false bypasses both lookup at admit AND snapshot insertion during
+    /// prefill, so an opted-out prompt never touches the shared cache.
+    pub cache: bool,
 }
 
 impl SchedRequest {
@@ -36,6 +40,7 @@ impl SchedRequest {
             max_new,
             sampler: SamplerConfig::greedy(),
             key: 0,
+            cache: true,
         }
     }
 }
@@ -53,6 +58,8 @@ pub enum Slot {
         max_new: usize,
         sampler: SamplerConfig,
         key: u64,
+        /// See [`SchedRequest::cache`].
+        cache: bool,
     },
 }
 
@@ -72,6 +79,30 @@ pub enum Feed {
     Decode(i32),
     /// Slot idle: feed PAD, ignore output.
     Idle,
+}
+
+/// Snapshot of one slot's prefill progress (see
+/// [`Scheduler::prefill_view`]).
+#[derive(Clone, Copy, Debug)]
+pub struct PrefillView<'a> {
+    pub prompt: &'a [i32],
+    /// Next prompt index prefill will feed.
+    pub cursor: usize,
+    /// Trailing prompt tokens prefill never consumes (1 when the request
+    /// samples: its last prompt token becomes a `Feed::Decode`; 0 for
+    /// prefill-only requests).
+    pub keep: usize,
+    /// Prefix-cache participation ([`SchedRequest::cache`]).
+    pub cache: bool,
+}
+
+impl PrefillView<'_> {
+    /// Prompt tokens prefill will ever consume — the upper bound for
+    /// prefix-cache matching (a cached offset beyond this could cover
+    /// the token the sampled `Feed::Decode` step must still feed).
+    pub fn usable(&self) -> usize {
+        self.prompt.len() - self.keep
+    }
 }
 
 /// One finished generation.
@@ -148,6 +179,7 @@ impl Scheduler {
                 max_new: req.max_new,
                 sampler: req.sampler,
                 key: req.key,
+                cache: req.cache,
             };
             admitted.push((i, id));
         }
@@ -178,6 +210,46 @@ impl Scheduler {
         let out = prompt[*cursor..hi].to_vec();
         *cursor = hi;
         out
+    }
+
+    /// Jump a slot's prefill cursor to `offset`: the engine restored a
+    /// cached belief snapshot covering the first `offset` prompt tokens,
+    /// so they must not be fed again.  Clamped so the cursor never moves
+    /// backwards and the last prompt token of a sampling request stays
+    /// behind for its `Feed::Decode` step (the same `keep` rule as
+    /// [`Self::take_prefill`] — a full-prompt hit on a `max_new > 0`
+    /// request therefore skips to `len - 1` and still samples from the
+    /// restored state).  Returns how many tokens were actually skipped.
+    pub fn skip_prefill(&mut self, slot: usize, offset: usize) -> usize {
+        let Slot::Active { prompt, cursor, max_new, .. } =
+            &mut self.slots[slot]
+        else {
+            return 0;
+        };
+        let keep = usize::from(*max_new > 0);
+        let hi = offset.min(prompt.len() - keep).max(*cursor);
+        let skipped = hi - *cursor;
+        *cursor = hi;
+        skipped
+    }
+
+    /// Read-only view of a slot's prefill progress — what the engine's
+    /// prefix cache needs for lookup (at admit) and snapshot insertion
+    /// (after each chunk): the prompt, the cursor, how many trailing
+    /// tokens are held back for the sampled `Feed::Decode` step, and
+    /// whether the request opted into caching.  `None` for free slots.
+    pub fn prefill_view(&self, slot: usize) -> Option<PrefillView<'_>> {
+        match &self.slots[slot] {
+            Slot::Active { prompt, cursor, max_new, cache, .. } => {
+                Some(PrefillView {
+                    prompt,
+                    cursor: *cursor,
+                    keep: usize::from(*max_new > 0),
+                    cache: *cache,
+                })
+            }
+            Slot::Free => None,
+        }
     }
 
     /// Retire `max_new == 0` requests whose prompt has been fully
@@ -611,6 +683,58 @@ mod tests {
         s.admit();
         assert!(s.take_prefill(0, 0).is_empty());
         assert_eq!(s.feeds(), vec![Feed::Prefill(1)]);
+    }
+
+    #[test]
+    fn skip_prefill_jumps_cursor_within_the_keep_rule() {
+        let mut s = Scheduler::new(2, 0);
+        s.submit(SchedRequest::greedy(1, (1..=10).collect(), 2));
+        s.admit();
+        // free slot: nothing to skip
+        assert_eq!(s.skip_prefill(1, 4), 0);
+        // jump to a restored offset; the remainder chunks from there
+        assert_eq!(s.skip_prefill(0, 4), 4);
+        assert_eq!(s.take_prefill(0, 100), vec![5, 6, 7, 8, 9]);
+        assert_eq!(s.feeds()[0], Feed::Decode(10));
+        // the cursor never moves backwards
+        assert_eq!(s.skip_prefill(0, 2), 0);
+        assert_eq!(s.feeds()[0], Feed::Decode(10));
+        // a sampling request keeps its last prompt token even for a
+        // full-prompt hit: offset 10 clamps to 9
+        s.release(0);
+        s.submit(SchedRequest::greedy(2, (1..=10).collect(), 1));
+        s.admit();
+        assert_eq!(s.skip_prefill(0, 10), 9);
+        assert!(s.take_prefill(0, 100).is_empty());
+        assert_eq!(s.feeds()[0], Feed::Decode(10));
+        // a prefill-only request (max_new 0) may skip the WHOLE prompt;
+        // take_prefill_only_finished then retires it without a step
+        s.release(0);
+        s.submit(SchedRequest::greedy(3, vec![1, 2, 3], 0));
+        s.admit();
+        assert_eq!(s.skip_prefill(0, 3), 3);
+        assert_eq!(s.take_prefill_only_finished().len(), 1);
+    }
+
+    #[test]
+    fn prefill_view_exposes_progress_and_cache_opt_out() {
+        let mut s = Scheduler::new(2, 0);
+        assert!(s.prefill_view(0).is_none());
+        let mut req = SchedRequest::greedy(1, vec![5, 6, 7, 8], 2);
+        req.cache = false;
+        s.submit(req);
+        s.admit();
+        let v = s.prefill_view(0).unwrap();
+        assert_eq!(v.prompt, &[5, 6, 7, 8]);
+        assert_eq!((v.cursor, v.keep, v.usable()), (0, 1, 3));
+        assert!(!v.cache, "opt-out must be visible to the engine");
+        s.take_prefill(0, 2);
+        assert_eq!(s.prefill_view(0).unwrap().cursor, 2);
+        // prefill-only request: keep 0, whole prompt usable
+        s.submit(SchedRequest::greedy(2, vec![9, 9], 0));
+        s.admit();
+        let v = s.prefill_view(1).unwrap();
+        assert_eq!((v.keep, v.usable(), v.cache), (0, 2, true));
     }
 
     #[test]

@@ -25,6 +25,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::batcher::{Cancelled, Feed, Finished, SchedRequest, Scheduler};
+use super::prefix_cache::{ModelFingerprint, PrefixCache};
 use super::sampling::{self, SamplerConfig};
 use super::state_cache::BeliefStateCache;
 use crate::config::ServeConfig;
@@ -109,6 +110,9 @@ pub struct EngineRequest {
     pub cancel: Arc<AtomicBool>,
     /// Destination for the request's event stream.
     pub sink: Box<dyn EventSink>,
+    /// Prefix-cache participation (protocol `"cache": false` opts out);
+    /// ignored (no-op) when the server runs without a prefix cache.
+    pub cache: bool,
 }
 
 impl EngineRequest {
@@ -122,6 +126,7 @@ impl EngineRequest {
             submitted: Instant::now(),
             cancel: Arc::new(AtomicBool::new(false)),
             sink,
+            cache: true,
         }
     }
 }
@@ -136,6 +141,10 @@ pub struct EngineResponse {
     pub total_ms: f64,
     pub uncertainty: f32,
     pub cancelled: bool,
+    /// Prompt tokens this request skipped by restoring a prefix-cache
+    /// snapshot at admit (0 when the cache is off, missed, or the
+    /// request opted out).
+    pub cached_tokens: usize,
 }
 
 /// Engine statistics (read after shutdown; live counters are mirrored
@@ -166,6 +175,18 @@ pub struct EngineStats {
     /// `Feed::Prefill` lanes).
     pub prefill_tokens: usize,
     pub batch_occupancy: Vec<f64>,
+    /// Prefix-cache counters (all zero when the cache is disabled).
+    /// Full hits cover a request's whole usable prefix; partial hits
+    /// matched a shorter block-aligned shared prefix.
+    pub prefix_hits: usize,
+    pub prefix_partial_hits: usize,
+    pub prefix_misses: usize,
+    pub prefix_evictions: usize,
+    /// Prompt tokens skipped by restored snapshots (prefill work saved).
+    pub prefix_cached_tokens: usize,
+    /// Final cache residency at engine exit.
+    pub prefix_bytes: usize,
+    pub prefix_entries: usize,
 }
 
 impl EngineStats {
@@ -212,6 +233,15 @@ pub struct LiveStats {
     pub prefill_tokens: AtomicUsize,
     pub cancelled: AtomicUsize,
     pub wasted_tokens: AtomicUsize,
+    /// Prefix-cache mirrors (engine-thread writes via `store`, so they
+    /// are point-in-time copies of the single-owner cache's counters).
+    pub prefix_hits: AtomicUsize,
+    pub prefix_partial_hits: AtomicUsize,
+    pub prefix_misses: AtomicUsize,
+    pub prefix_evictions: AtomicUsize,
+    pub prefix_cached_tokens: AtomicUsize,
+    pub prefix_bytes: AtomicUsize,
+    pub prefix_entries: AtomicUsize,
 }
 
 /// Engine tuning knobs beyond the backend itself (threaded through from
@@ -230,8 +260,19 @@ pub struct EngineOptions {
     /// `prefill_is_parallel()` is false.
     pub prefill_chunk: usize,
     /// Engine seed: keys the counter-based sampling RNG
-    /// (`sampling::request_key(seed, request id, client seed)`).
+    /// (`sampling::request_key(seed, request id, client seed)`) and
+    /// participates in the prefix-cache model fingerprint.
     pub seed: u64,
+    /// Prefix-cache byte budget; 0 disables the cache.  Only effective
+    /// on the chunked-prefill path (`prefill_chunk > 1` on a backend
+    /// with a parallel prefill) — snapshot insertion points exist only
+    /// there.
+    pub prefix_cache_bytes: usize,
+    /// Prefix-cache offset granularity in prompt tokens; 0 means "use
+    /// `prefill_chunk`", which keeps every block-aligned cached offset
+    /// chunk-aligned — the generation-identity condition (DESIGN.md
+    /// §S15).
+    pub prefix_cache_block: usize,
 }
 
 impl EngineOptions {
@@ -241,6 +282,8 @@ impl EngineOptions {
             pad: cfg.pad,
             prefill_chunk: cfg.prefill_chunk,
             seed: cfg.seed,
+            prefix_cache_bytes: cfg.prefix_cache_bytes,
+            prefix_cache_block: cfg.prefix_cache_block,
         }
     }
 }
@@ -269,6 +312,9 @@ struct PendingRow {
     /// retires the request (implicit cancel) and no further sends are
     /// attempted.
     sink_closed: bool,
+    /// Prompt tokens skipped via a restored prefix-cache snapshot,
+    /// recorded at admit and reported on the `Done` event.
+    cached_tokens: usize,
 }
 
 impl PendingTable {
@@ -285,15 +331,18 @@ impl PendingTable {
             submitted: now,
             admitted: None,
             sink_closed: false,
+            cached_tokens: 0,
         });
     }
 
     /// Record the moment `id` entered a batch slot (idempotent) and
-    /// stream the `Started` event.
-    fn admit(&mut self, id: u64, now: Instant) {
+    /// stream the `Started` event.  `cached_tokens` is the prefix-cache
+    /// restore credit granted at this admit.
+    fn admit(&mut self, id: u64, now: Instant, cached_tokens: usize) {
         if let Some(row) = self.rows.iter_mut().find(|r| r.id == id) {
             if row.admitted.is_none() {
                 row.admitted = Some(now);
+                row.cached_tokens = cached_tokens;
                 let queue_ms = now
                     .saturating_duration_since(row.submitted)
                     .as_secs_f64()
@@ -330,10 +379,10 @@ impl PendingTable {
             .collect()
     }
 
-    /// Retire `id`: returns the sink plus `(queue_ms, total_ms)`
-    /// measured at `now`.
+    /// Retire `id`: returns the sink plus `(queue_ms, total_ms,
+    /// cached_tokens)` measured at `now`.
     fn finish(&mut self, id: u64, now: Instant)
-              -> Option<(Box<dyn EventSink>, f64, f64)> {
+              -> Option<(Box<dyn EventSink>, f64, f64, usize)> {
         let pos = self.rows.iter().position(|r| r.id == id)?;
         let row = self.rows.swap_remove(pos);
         let admitted = row.admitted.unwrap_or(now);
@@ -342,7 +391,7 @@ impl PendingTable {
                 * 1e3;
         let total_ms =
             now.saturating_duration_since(row.submitted).as_secs_f64() * 1e3;
-        Some((row.sink, queue_ms, total_ms))
+        Some((row.sink, queue_ms, total_ms, row.cached_tokens))
     }
 }
 
@@ -358,7 +407,7 @@ fn finish_request(f: &Finished, cache: &mut BeliefStateCache,
     let uncertainty = cache.slot_uncertainty(f.slot);
     cache.reset_slot(f.slot);
     sched.release(f.slot);
-    if let Some((sink, queue_ms, total_ms)) =
+    if let Some((sink, queue_ms, total_ms, cached_tokens)) =
         pending.finish(f.id, Instant::now())
     {
         let _ = sink.send(EngineEvent::Done(EngineResponse {
@@ -367,8 +416,22 @@ fn finish_request(f: &Finished, cache: &mut BeliefStateCache,
             total_ms,
             uncertainty,
             cancelled: false,
+            cached_tokens,
         }));
     }
+}
+
+/// Mirror the prefix cache's counters into the shared [`LiveStats`] so
+/// the `{"cmd":"stats"}` protocol line answers during serving.
+fn sync_prefix_live(pc: &PrefixCache, live: &LiveStats) {
+    let s = pc.stats();
+    live.prefix_hits.store(s.hits, Ordering::Relaxed);
+    live.prefix_partial_hits.store(s.partial_hits, Ordering::Relaxed);
+    live.prefix_misses.store(s.misses, Ordering::Relaxed);
+    live.prefix_evictions.store(s.evictions, Ordering::Relaxed);
+    live.prefix_cached_tokens.store(s.cached_tokens, Ordering::Relaxed);
+    live.prefix_bytes.store(s.bytes, Ordering::Relaxed);
+    live.prefix_entries.store(s.entries, Ordering::Relaxed);
 }
 
 /// Run the engine loop until `rx` disconnects (or `shutdown` is set) and
@@ -404,6 +467,23 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
     let b = backend.batch();
     let batch_window = opts.batch_window;
     let mut cache = BeliefStateCache::for_backend(backend)?;
+    // prefix cache: chunked-prefill only — snapshot insertion points
+    // (block-aligned prefill cursors) exist only on that path, and the
+    // legacy token-per-iteration path has no per-slot state extraction
+    // moment.  Fingerprinted so a snapshot can never restore into a
+    // mismatched model (DESIGN.md §S15).
+    let chunked = opts.prefill_chunk > 1 && backend.prefill_is_parallel();
+    let mut pcache = if opts.prefix_cache_bytes > 0 && chunked {
+        let block = if opts.prefix_cache_block > 0 {
+            opts.prefix_cache_block
+        } else {
+            opts.prefill_chunk
+        };
+        Some((ModelFingerprint::for_backend(backend, opts.seed)?,
+              PrefixCache::new(block, opts.prefix_cache_bytes)))
+    } else {
+        None
+    };
     let mut sched = Scheduler::new(b, opts.pad);
     let mut pending = PendingTable::new();
     let mut next_id = 0u64;
@@ -475,6 +555,7 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
                         max_new: req.max_new,
                         sampler: req.sampler,
                         key,
+                        cache: req.cache,
                     });
                     stats.requests += 1;
                     live.requests.fetch_add(1, Ordering::Relaxed);
@@ -507,7 +588,7 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
             live.cancelled.fetch_add(1, Ordering::Relaxed);
             stats.wasted_tokens += tokens.len();
             live.wasted_tokens.fetch_add(tokens.len(), Ordering::Relaxed);
-            if let Some((sink, queue_ms, total_ms)) =
+            if let Some((sink, queue_ms, total_ms, cached_tokens)) =
                 pending.finish(id, Instant::now())
             {
                 let _ = sink.send(EngineEvent::Done(EngineResponse {
@@ -516,6 +597,7 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
                     total_ms,
                     uncertainty,
                     cancelled: true,
+                    cached_tokens,
                 }));
             }
         }
@@ -524,11 +606,35 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
         }
 
         // admit into slots: reset belief state for new slots and stamp
-        // the admit time (queue time ends here; Started streams out)
+        // the admit time (queue time ends here; Started streams out).
+        // With a prefix cache, the longest cached snapshot matching the
+        // new prompt is restored into the slot and the prefill cursor
+        // jumps past the covered tokens — the cold prefill for a shared
+        // system prompt happens exactly once.
         let admit_now = Instant::now();
         for (slot, id) in sched.admit() {
             cache.reset_slot(slot);
-            pending.admit(id, admit_now);
+            let mut cached = 0usize;
+            if let Some((fp, pc)) = pcache.as_mut() {
+                let hit = match sched.prefill_view(slot) {
+                    Some(v) if v.cache && v.usable() > 0 => {
+                        pc.lookup(fp, v.prompt, v.usable())
+                    }
+                    _ => None,
+                };
+                if let Some((off, snap)) = hit {
+                    // the fingerprint guarantees geometric compatibility;
+                    // a restore failure here would be a cache-corruption
+                    // bug, so fall back to a cold prefill defensively
+                    if cache.restore(slot, snap).is_ok() {
+                        cached = sched.skip_prefill(slot, off);
+                    }
+                }
+            }
+            pending.admit(id, admit_now, cached);
+        }
+        if let Some((_, pc)) = &pcache {
+            sync_prefix_live(pc, live);
         }
 
         // chunked prefill: ONE chunk round per engine iteration — each
@@ -544,7 +650,7 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
         // at prefill_chunk <= 1, and for backends whose prefill() is the
         // sequential fallback (XLA) — for those, chunked prefill would
         // cost dedicated batch-wide steps the interleaved path shares.
-        if opts.prefill_chunk > 1 && backend.prefill_is_parallel() {
+        if chunked {
             for slot in 0..b {
                 let toks = sched.take_prefill(slot, opts.prefill_chunk);
                 if toks.is_empty() {
@@ -561,6 +667,27 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
                 stats.prefill_ms.push(t0.elapsed().as_secs_f64() * 1e3);
                 stats.prefill_tokens += n_toks;
                 live.prefill_tokens.fetch_add(n_toks, Ordering::Relaxed);
+                // prefix cache: snapshot the slot at block-aligned
+                // cursors and at the end of prefill, keyed by the exact
+                // tokens consumed so far.  The end-of-prefill snapshot
+                // is what exact-prompt resubmissions full-hit; block-
+                // aligned ones serve shared-prefix partial hits.  Warm
+                // requests re-walk the same offsets — the duplicate
+                // insert is a recency refresh, not a second copy.
+                if let Some((fp, pc)) = pcache.as_mut() {
+                    if let Some(v) = sched.prefill_view(slot) {
+                        let done = v.cursor + v.keep == v.prompt.len();
+                        if v.cache
+                            && (v.cursor % pc.block() == 0 || done)
+                        {
+                            pc.insert(fp, &v.prompt[..v.cursor],
+                                      cache.snapshot(slot));
+                        }
+                    }
+                }
+            }
+            if let Some((_, pc)) = &pcache {
+                sync_prefix_live(pc, live);
             }
         }
 
@@ -662,6 +789,17 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
                            &mut stats, live);
         }
     }
+    if let Some((_, pc)) = &pcache {
+        let s = pc.stats();
+        stats.prefix_hits = s.hits;
+        stats.prefix_partial_hits = s.partial_hits;
+        stats.prefix_misses = s.misses;
+        stats.prefix_evictions = s.evictions;
+        stats.prefix_cached_tokens = s.cached_tokens;
+        stats.prefix_bytes = s.bytes;
+        stats.prefix_entries = s.entries;
+        sync_prefix_live(pc, live);
+    }
     Ok(stats)
 }
 
@@ -674,6 +812,19 @@ mod tests {
         Arc::new(AtomicBool::new(false))
     }
 
+    /// Baseline options for engine tests: prefix cache OFF (tests that
+    /// exercise it override `prefix_cache_bytes` via struct update).
+    fn test_opts(prefill_chunk: usize, seed: u64) -> EngineOptions {
+        EngineOptions {
+            batch_window: Duration::from_micros(100),
+            pad: 0,
+            prefill_chunk,
+            seed,
+            prefix_cache_bytes: 0,
+            prefix_cache_block: 0,
+        }
+    }
+
     #[test]
     fn queue_time_measured_at_admit_not_submit() {
         let (tx, _rx) = channel::<EngineResponse>();
@@ -681,11 +832,12 @@ mod tests {
         let t0 = Instant::now();
         table.submit(1, Box::new(tx), plain_flag(), t0);
         let admit = t0 + Duration::from_millis(25);
-        table.admit(1, admit);
+        table.admit(1, admit, 0);
         // a later admit call must not move the stamp (idempotent)
-        table.admit(1, admit + Duration::from_millis(50));
+        table.admit(1, admit + Duration::from_millis(50), 0);
         let finish = admit + Duration::from_millis(10);
-        let (_sink, queue_ms, total_ms) = table.finish(1, finish).unwrap();
+        let (_sink, queue_ms, total_ms, _cached) =
+            table.finish(1, finish).unwrap();
         assert!((queue_ms - 25.0).abs() < 1e-6, "queue_ms {queue_ms}");
         assert!((total_ms - 35.0).abs() < 1e-6, "total_ms {total_ms}");
         // finished rows are gone
@@ -698,7 +850,7 @@ mod tests {
         let mut table = PendingTable::new();
         let t0 = Instant::now();
         table.submit(3, Box::new(tx), plain_flag(), t0);
-        table.admit(3, t0);
+        table.admit(3, t0, 0);
         assert!(matches!(rx.recv().unwrap(),
                          EngineEvent::Started { .. }));
         assert!(table.dead_ids().is_empty());
@@ -755,12 +907,7 @@ mod tests {
         let prompt: Vec<i32> = (0..17).map(|i| i % 16).collect();
         let (rx, rrx) = one_request(prompt, 3);
         let live = Arc::new(LiveStats::default());
-        let opts = EngineOptions {
-            batch_window: Duration::from_micros(100),
-            pad: 0,
-            prefill_chunk: 8,
-            seed: 0,
-        };
+        let opts = test_opts(8, 0);
         let stats = run_engine_opts(&backend, rx, &opts,
                                     Arc::new(AtomicBool::new(false)),
                                     &live)
@@ -799,12 +946,7 @@ mod tests {
         let backend = tiny_backend(1);
         let (rx, rrx) = one_request(vec![1, 2, 3, 4, 5], 1);
         let live = Arc::new(LiveStats::default());
-        let opts = EngineOptions {
-            batch_window: Duration::from_micros(100),
-            pad: 0,
-            prefill_chunk: 1, // legacy token-per-iteration path
-            seed: 0,
-        };
+        let opts = test_opts(1, 0); // legacy token-per-iteration path
         let stats = run_engine_opts(&backend, rx, &opts,
                                     Arc::new(AtomicBool::new(false)),
                                     &live)
@@ -826,12 +968,7 @@ mod tests {
         // empty prompt: the scheduler substitutes the configured pad
         // token, and generation still works (pad 9 is a live vocab id)
         let (rx, rrx) = one_request(vec![], 2);
-        let opts = EngineOptions {
-            batch_window: Duration::from_micros(100),
-            pad: 9,
-            prefill_chunk: 64,
-            seed: 0,
-        };
+        let opts = EngineOptions { pad: 9, ..test_opts(64, 0) };
         let stats = run_engine_opts(&backend, rx, &opts,
                                     Arc::new(AtomicBool::new(false)),
                                     &Arc::new(LiveStats::default()))
@@ -844,12 +981,7 @@ mod tests {
     fn zero_max_new_is_prefill_only_on_the_chunked_path() {
         let backend = tiny_backend(2);
         let (rx, rrx) = one_request((0..12).map(|i| i % 16).collect(), 0);
-        let opts = EngineOptions {
-            batch_window: Duration::from_micros(100),
-            pad: 0,
-            prefill_chunk: 8,
-            seed: 0,
-        };
+        let opts = test_opts(8, 0);
         let stats = run_engine_opts(&backend, rx, &opts,
                                     Arc::new(AtomicBool::new(false)),
                                     &Arc::new(LiveStats::default()))
@@ -870,12 +1002,7 @@ mod tests {
     fn zero_max_new_is_prefill_only_on_the_legacy_path() {
         let backend = tiny_backend(1);
         let (rx, rrx) = one_request(vec![1, 2, 3], 0);
-        let opts = EngineOptions {
-            batch_window: Duration::from_micros(100),
-            pad: 0,
-            prefill_chunk: 1,
-            seed: 0,
-        };
+        let opts = test_opts(1, 0);
         let stats = run_engine_opts(&backend, rx, &opts,
                                     Arc::new(AtomicBool::new(false)),
                                     &Arc::new(LiveStats::default()))
@@ -907,12 +1034,7 @@ mod tests {
             };
             let (rx, rrx) =
                 one_request_with(vec![1, 2, 3], 8, sampler);
-            let opts = EngineOptions {
-                batch_window: Duration::from_micros(100),
-                pad: 0,
-                prefill_chunk: 64,
-                seed: 7,
-            };
+            let opts = test_opts(64, 7);
             run_engine_opts(&backend, rx, &opts,
                             Arc::new(AtomicBool::new(false)),
                             &Arc::new(LiveStats::default()))
@@ -1030,12 +1152,7 @@ mod tests {
             .unwrap();
         drop(tx);
         let live = Arc::new(LiveStats::default());
-        let opts = EngineOptions {
-            batch_window: Duration::from_micros(100),
-            pad: 0,
-            prefill_chunk: 64,
-            seed: 0,
-        };
+        let opts = test_opts(64, 0);
         let stats = run_engine_opts(&backend, rx, &opts,
                                     Arc::new(AtomicBool::new(false)),
                                     &live)
@@ -1081,6 +1198,7 @@ mod tests {
             submitted: Instant::now(),
             cancel: flag,
             sink: Box::new(rtx_b),
+            cache: true,
         })
         .unwrap();
         drop(tx);
@@ -1099,13 +1217,62 @@ mod tests {
     }
 
     #[test]
+    fn prefix_cache_hit_reproduces_cold_tokens_and_reports_cached() {
+        // two identical greedy requests, run back to back on the same
+        // engine: the first prefills cold and seeds the cache, the
+        // second full-hits the end-of-prefill snapshot, skips its whole
+        // usable prefix, and MUST produce byte-identical tokens (the
+        // restored snapshot IS the cold end-of-prefill state)
+        let backend = tiny_backend(1);
+        let prompt: Vec<i32> = (0..13).map(|i| (i * 3) % 16).collect();
+        let (tx, rx) = channel::<EngineRequest>();
+        let (rtx_a, rrx_a) = channel::<EngineResponse>();
+        tx.send(EngineRequest::new(prompt.clone(), 4,
+                                   SamplerConfig::greedy(),
+                                   Box::new(rtx_a)))
+            .unwrap();
+        let (rtx_b, rrx_b) = channel::<EngineResponse>();
+        tx.send(EngineRequest::new(prompt, 4, SamplerConfig::greedy(),
+                                   Box::new(rtx_b)))
+            .unwrap();
+        drop(tx);
+        let live = Arc::new(LiveStats::default());
+        let opts = EngineOptions {
+            prefix_cache_bytes: 1 << 20,
+            ..test_opts(4, 0)
+        };
+        let stats = run_engine_opts(&backend, rx, &opts,
+                                    Arc::new(AtomicBool::new(false)),
+                                    &live)
+            .unwrap();
+        let a = rrx_a.recv().unwrap();
+        let b = rrx_b.recv().unwrap();
+        assert_eq!(a.tokens, b.tokens,
+                   "cache-hit output must equal cold output");
+        assert_eq!(a.tokens.len(), 4);
+        assert_eq!(a.cached_tokens, 0, "first request prefills cold");
+        assert!(b.cached_tokens > 0, "second request must hit");
+        assert_eq!(stats.prefix_hits + stats.prefix_partial_hits, 1);
+        assert_eq!(stats.prefix_misses, 1);
+        assert_eq!(stats.prefix_cached_tokens, b.cached_tokens);
+        assert!(stats.prefix_entries > 0);
+        assert!(stats.prefix_bytes > 0);
+        assert_eq!(live.prefix_misses.load(Ordering::SeqCst), 1);
+        assert_eq!(live.prefix_cached_tokens.load(Ordering::SeqCst),
+                   b.cached_tokens);
+        println!("engine prefix-cache hit: {} tokens restored, \
+                  tokens identical: ok", b.cached_tokens);
+    }
+
+    #[test]
     fn unadmitted_request_counts_full_wait_as_queue_time() {
         let (tx, _rx) = channel::<EngineResponse>();
         let mut table = PendingTable::new();
         let t0 = Instant::now();
         table.submit(2, Box::new(tx), plain_flag(), t0);
         let finish = t0 + Duration::from_millis(7);
-        let (_sink, queue_ms, total_ms) = table.finish(2, finish).unwrap();
+        let (_sink, queue_ms, total_ms, _cached) =
+            table.finish(2, finish).unwrap();
         assert!((queue_ms - 7.0).abs() < 1e-6, "queue_ms {queue_ms}");
         assert!((total_ms - 7.0).abs() < 1e-6, "total_ms {total_ms}");
     }

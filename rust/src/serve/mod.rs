@@ -41,18 +41,30 @@
 //! within one iteration).  Streaming and cancellation are engine-side
 //! ([`EngineEvent`] / [`EventSink`]), so every `DecodeBackend` inherits
 //! them.
+//!
+//! Because the belief state is constant-size, prompt caching is nearly
+//! free: `prefix_cache` keeps a content-addressed, LRU-evicted map from
+//! token prefixes to per-slot snapshots (a few KB each — per-layer
+//! `KlaBelief` + conv windows), keyed by a model fingerprint so a
+//! snapshot can never restore into a mismatched model.  At admit, the
+//! engine restores the longest cached prefix of the new prompt and
+//! jumps the prefill cursor past it; a fleet of requests sharing a
+//! system prompt prefills it exactly once (`--prefix-cache-mb`,
+//! DESIGN.md §S15).
 
 pub mod batcher;
 pub mod engine;
+pub mod prefix_cache;
 pub mod sampling;
 pub mod server;
 pub mod state_cache;
 
-pub use batcher::{Cancelled, Feed, SchedRequest, Scheduler};
+pub use batcher::{Cancelled, Feed, PrefillView, SchedRequest, Scheduler};
 pub use engine::{run_engine, run_engine_opts, EngineEvent, EngineOptions,
                  EngineRequest, EngineResponse, EngineStats, EventSink,
                  LiveStats, SinkClosed};
+pub use prefix_cache::{ModelFingerprint, PrefixCache, PrefixCacheStats};
 pub use sampling::SamplerConfig;
 pub use server::{serve, serve_native, serve_with, Client, ClientStream,
                  EngineSpec, RequestOpts, ServerHandle, StreamEvent};
-pub use state_cache::BeliefStateCache;
+pub use state_cache::{BeliefStateCache, RestoreError, SlotSnapshot};

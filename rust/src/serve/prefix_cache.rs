@@ -1,0 +1,500 @@
+//! Content-addressed belief-state prefix cache (DESIGN.md §S15).
+//!
+//! KLA's constant-size belief state makes prompt caching trivially
+//! cheap: reusing a shared prefix is a per-layer posterior snapshot
+//! restore ([`SlotSnapshot`], a few KB), not a sequence-length KV copy.
+//! This module is the content-addressed map behind that: token prefix →
+//! the exact [`BeliefStateCache`](super::BeliefStateCache) snapshot the
+//! cold chunked prefill produced at that offset.
+//!
+//! Keying.  Every entry is addressed by an FNV-1a hash folded over the
+//! prefix's token bytes, SEEDED by a [`ModelFingerprint`] hash (vocab,
+//! backend kind, layer geometry, engine seed) — and both the fingerprint
+//! and the exact tokens are compared on lookup, so hash collisions and
+//! model mismatches can never restore a wrong snapshot into a slot.
+//!
+//! Granularity.  Snapshots are inserted at `block`-aligned prefill
+//! cursors plus the end of prefill, and lookup tries the longest
+//! candidate first: the request's full usable prefix (exact-prompt
+//! full hit), then descending `block` multiples (shared-prefix partial
+//! hit).  With `block == prefill_chunk` (the default) every cached
+//! offset is chunk-aligned, which is the generation-identity condition
+//! the e2e `native_prefix_cache_*` tests pin.
+//!
+//! Eviction.  Byte-accounted LRU under a fixed budget: each entry's cost
+//! is its snapshot payload ([`SlotSnapshot::bytes`]) plus its key tokens
+//! plus a fixed overhead, and inserts evict least-recently-used entries
+//! (global min insert/hit tick) until the total fits.  The budget is an
+//! invariant, not a target: `bytes() <= budget` after every operation,
+//! and an entry that alone exceeds the budget is refused outright.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use super::state_cache::SlotSnapshot;
+use crate::runtime::backend::DecodeBackend;
+
+/// Identity of the model a snapshot was taken under.  Snapshots restore
+/// raw per-layer state, so every geometric degree of freedom (and the
+/// engine seed, which selects the weights for seeded native backends)
+/// participates: a cache can never hand a snapshot to a mismatched
+/// model, even across server restarts with a different config.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelFingerprint {
+    pub vocab: usize,
+    /// Backend kind string (`DecodeBackend::kind`): "native" / "xla".
+    pub backend: &'static str,
+    pub layers: usize,
+    /// Causal-conv window length, K-1.
+    pub conv_window: usize,
+    pub d_model: usize,
+    pub n_state: usize,
+    /// Engine seed ([`super::engine::EngineOptions::seed`]) — for seeded
+    /// native backends this selects the weights themselves.
+    pub seed: u64,
+}
+
+impl ModelFingerprint {
+    /// Derive the fingerprint from a backend's prior state shapes:
+    /// conv is (L, B, K-1, D) and lam is (L, B, N, D).
+    pub fn for_backend<B: DecodeBackend + ?Sized>(backend: &B, seed: u64)
+                                                  -> Result<Self> {
+        let init = backend.init_state()?;
+        let cs = init.conv.shape();
+        let ps = init.lam.shape();
+        Ok(ModelFingerprint {
+            vocab: backend.vocab(),
+            backend: backend.kind(),
+            layers: cs[0],
+            conv_window: cs[2],
+            d_model: cs[3],
+            n_state: ps[2],
+            seed,
+        })
+    }
+
+    /// Seed value for this fingerprint's prefix keys.
+    fn hash(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        for part in [self.vocab as u64, self.layers as u64,
+                     self.conv_window as u64, self.d_model as u64,
+                     self.n_state as u64, self.seed]
+        {
+            h = fnv_fold(h, &part.to_le_bytes());
+        }
+        fnv_fold(h, self.backend.as_bytes())
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_fold(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Content address of a token prefix under a fingerprint: FNV-1a over
+/// the little-endian token bytes, seeded by the fingerprint hash.
+fn prefix_key(fp_hash: u64, tokens: &[i32]) -> u64 {
+    let mut h = fp_hash;
+    for &t in tokens {
+        h = fnv_fold(h, &t.to_le_bytes());
+    }
+    h
+}
+
+/// Cache counters, mirrored into the engine's stats and the
+/// `{"cmd":"stats"}` protocol reply.  `bytes`/`entries` are the CURRENT
+/// residency; everything else is cumulative.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixCacheStats {
+    /// Lookups whose match covered the full usable prefix.
+    pub hits: usize,
+    /// Lookups matched at a shorter block-aligned offset.
+    pub partial_hits: usize,
+    pub misses: usize,
+    pub evictions: usize,
+    pub insertions: usize,
+    /// Prompt tokens covered by restored snapshots (prefill work saved).
+    pub cached_tokens: usize,
+    pub bytes: usize,
+    pub entries: usize,
+}
+
+struct Entry {
+    fp: ModelFingerprint,
+    tokens: Vec<i32>,
+    snap: SlotSnapshot,
+    /// Byte cost charged against the budget.
+    cost: usize,
+    /// Last insert-or-hit tick — the LRU ordering key.
+    tick: u64,
+}
+
+/// Fixed per-entry overhead charged on top of the snapshot payload and
+/// key tokens (Entry bookkeeping + map slot, order-of-magnitude).
+const ENTRY_OVERHEAD: usize = 96;
+
+/// The cache proper.  Single-owner (lives on the engine thread next to
+/// the slot pool); the router sees only its counters via `LiveStats`.
+pub struct PrefixCache {
+    buckets: HashMap<u64, Vec<Entry>>,
+    block: usize,
+    budget: usize,
+    bytes: usize,
+    tick: u64,
+    stats: PrefixCacheStats,
+}
+
+impl PrefixCache {
+    /// `block`: lookup/insert offset granularity in prompt tokens
+    /// (clamped to >= 1).  `budget`: LRU byte budget; 0 disables inserts
+    /// entirely (every lookup misses on the empty cache).
+    pub fn new(block: usize, budget: usize) -> Self {
+        PrefixCache {
+            buckets: HashMap::new(),
+            block: block.max(1),
+            budget,
+            bytes: 0,
+            tick: 0,
+            stats: PrefixCacheStats::default(),
+        }
+    }
+
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Current byte residency (always <= budget).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.buckets.values().map(|v| v.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
+
+    /// Counters with the current residency filled in.
+    pub fn stats(&self) -> PrefixCacheStats {
+        let mut s = self.stats;
+        s.bytes = self.bytes;
+        s.entries = self.len();
+        s
+    }
+
+    /// Candidate match offsets for a prompt whose prefill will consume
+    /// `usable` tokens, longest first: `usable` itself (exact-prompt
+    /// full hit — end-of-prefill snapshots land at arbitrary offsets,
+    /// so this candidate is not restricted to block multiples), then
+    /// every block multiple strictly below it, descending.
+    fn candidates(&self, usable: usize) -> Vec<usize> {
+        let mut offs = Vec::new();
+        if usable == 0 {
+            return offs;
+        }
+        offs.push(usable);
+        let mut m = (usable / self.block) * self.block;
+        if m == usable {
+            m = m.saturating_sub(self.block);
+        }
+        while m > 0 {
+            offs.push(m);
+            m = m.saturating_sub(self.block);
+        }
+        offs
+    }
+
+    /// Longest-prefix lookup: the longest candidate offset whose exact
+    /// tokens (and fingerprint) are cached.  A hit bumps the entry's LRU
+    /// tick and returns `(offset, snapshot)`; the snapshot covers
+    /// exactly `tokens[..offset]`.  The returned borrow is tied to the
+    /// cache only, never to `tokens`.
+    pub fn lookup<'a>(&'a mut self, fp: &ModelFingerprint, tokens: &[i32],
+                      usable: usize)
+                      -> Option<(usize, &'a SlotSnapshot)> {
+        self.tick += 1;
+        let usable = usable.min(tokens.len());
+        let fp_hash = fp.hash();
+        // phase 1: locate the longest match without holding a mutable
+        // borrow across candidate probes
+        let mut found: Option<(usize, u64, usize)> = None;
+        'outer: for off in self.candidates(usable) {
+            let key = prefix_key(fp_hash, &tokens[..off]);
+            if let Some(bucket) = self.buckets.get(&key) {
+                for (i, e) in bucket.iter().enumerate() {
+                    if e.fp == *fp && e.tokens[..] == tokens[..off] {
+                        found = Some((off, key, i));
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        let Some((off, key, i)) = found else {
+            self.stats.misses += 1;
+            return None;
+        };
+        if off == usable {
+            self.stats.hits += 1;
+        } else {
+            self.stats.partial_hits += 1;
+        }
+        self.stats.cached_tokens += off;
+        // phase 2: bump recency and hand out the snapshot
+        let e = &mut self.buckets.get_mut(&key).expect("bucket exists")[i];
+        e.tick = self.tick;
+        Some((off, &e.snap))
+    }
+
+    /// Insert `snap` as the state after consuming exactly `tokens`.
+    /// Returns whether a NEW entry was stored — false for a disabled
+    /// cache, an empty prefix, a duplicate (recency refreshed, existing
+    /// snapshot kept: both cover the same cold-path state), or an entry
+    /// that alone exceeds the budget (evicting everything else could
+    /// never make it fit).
+    pub fn insert(&mut self, fp: &ModelFingerprint, tokens: &[i32],
+                  snap: SlotSnapshot) -> bool {
+        if self.budget == 0 || tokens.is_empty() {
+            return false;
+        }
+        self.tick += 1;
+        let key = prefix_key(fp.hash(), tokens);
+        if let Some(bucket) = self.buckets.get_mut(&key) {
+            if let Some(e) = bucket
+                .iter_mut()
+                .find(|e| e.fp == *fp && e.tokens[..] == *tokens)
+            {
+                e.tick = self.tick;
+                return false;
+            }
+        }
+        let cost = snap.bytes()
+            + tokens.len() * std::mem::size_of::<i32>()
+            + ENTRY_OVERHEAD;
+        if cost > self.budget {
+            return false;
+        }
+        self.buckets.entry(key).or_default().push(Entry {
+            fp: fp.clone(),
+            tokens: tokens.to_vec(),
+            snap,
+            cost,
+            tick: self.tick,
+        });
+        self.bytes += cost;
+        self.stats.insertions += 1;
+        self.evict_to_budget();
+        true
+    }
+
+    /// Evict least-recently-used entries (global min tick) until the
+    /// byte budget holds again.  The entry just inserted carries the
+    /// maximal tick, so it survives unless it is the only one left —
+    /// and `insert` already refused anything that alone exceeds the
+    /// budget.
+    fn evict_to_budget(&mut self) {
+        while self.bytes > self.budget {
+            let mut victim: Option<(u64, usize, u64)> = None;
+            for (&key, bucket) in &self.buckets {
+                for (i, e) in bucket.iter().enumerate() {
+                    let older = match victim {
+                        None => true,
+                        Some((_, _, t)) => e.tick < t,
+                    };
+                    if older {
+                        victim = Some((key, i, e.tick));
+                    }
+                }
+            }
+            let Some((key, i, _)) = victim else { break };
+            let bucket = self.buckets.get_mut(&key).expect("victim bucket");
+            let e = bucket.swap_remove(i);
+            if bucket.is_empty() {
+                self.buckets.remove(&key);
+            }
+            self.bytes -= e.cost;
+            self.stats.evictions += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::KlaBelief;
+
+    fn fp() -> ModelFingerprint {
+        ModelFingerprint {
+            vocab: 32,
+            backend: "native",
+            layers: 2,
+            conv_window: 3,
+            d_model: 4,
+            n_state: 2,
+            seed: 7,
+        }
+    }
+
+    /// A 2-layer snapshot tagged with a recognisable fill value:
+    /// 24 conv floats + 2 * (8 + 8) posterior floats = 224 bytes.
+    fn snap(tag: f32) -> SlotSnapshot {
+        SlotSnapshot {
+            conv: vec![tag; 2 * 3 * 4],
+            beliefs: (0..2)
+                .map(|_| KlaBelief::from_parts(vec![tag; 8], vec![tag; 8]))
+                .collect(),
+        }
+    }
+
+    /// Entry cost for a `snap()` keyed by `n` tokens.
+    fn cost(n: usize) -> usize {
+        224 + 4 * n + ENTRY_OVERHEAD
+    }
+
+    #[test]
+    fn full_hit_returns_the_inserted_snapshot() {
+        let mut pc = PrefixCache::new(4, 1 << 20);
+        let toks = vec![1, 2, 3, 4];
+        assert!(pc.insert(&fp(), &toks, snap(0.5)));
+        let (off, s) = pc.lookup(&fp(), &toks, 4).expect("full hit");
+        assert_eq!(off, 4);
+        assert_eq!(s.conv[0], 0.5);
+        let st = pc.stats();
+        assert_eq!((st.hits, st.partial_hits, st.misses), (1, 0, 0));
+        assert_eq!(st.cached_tokens, 4);
+        assert_eq!(st.entries, 1);
+        assert_eq!(st.bytes, cost(4));
+    }
+
+    #[test]
+    fn longest_prefix_wins_and_shorter_prefixes_partial_hit() {
+        let mut pc = PrefixCache::new(2, 1 << 20);
+        pc.insert(&fp(), &[1, 2], snap(0.2));
+        pc.insert(&fp(), &[1, 2, 3, 4], snap(0.4));
+        // longer entry wins even though the shorter also matches
+        let (off, s) = pc.lookup(&fp(), &[1, 2, 3, 4, 9, 9], 6).unwrap();
+        assert_eq!(off, 4);
+        assert_eq!(s.conv[0], 0.4);
+        assert_eq!(pc.stats().partial_hits, 1);
+        // diverging suffix falls back to the shared 2-token prefix
+        let (off, s) = pc.lookup(&fp(), &[1, 2, 7, 8], 4).unwrap();
+        assert_eq!(off, 2);
+        assert_eq!(s.conv[0], 0.2);
+        assert_eq!(pc.stats().partial_hits, 2);
+        // nothing shared at any block offset: miss
+        assert!(pc.lookup(&fp(), &[9, 9, 9, 9], 4).is_none());
+        assert_eq!(pc.stats().misses, 1);
+    }
+
+    #[test]
+    fn lookup_probes_block_multiples_plus_usable_only() {
+        let mut pc = PrefixCache::new(4, 1 << 20);
+        let toks: Vec<i32> = (0..10).collect();
+        // an end-of-prefill entry at the NON-block offset 6
+        pc.insert(&fp(), &toks[..6], snap(0.6));
+        // usable 10 probes 10, 8, 4 — never 6
+        assert!(pc.lookup(&fp(), &toks, 10).is_none());
+        // but a request whose usable IS 6 full-hits it
+        let (off, _) = pc.lookup(&fp(), &toks[..7], 6).unwrap();
+        assert_eq!(off, 6);
+        assert_eq!(pc.stats().hits, 1);
+    }
+
+    #[test]
+    fn fingerprint_mismatch_never_hits() {
+        let mut pc = PrefixCache::new(4, 1 << 20);
+        let toks = vec![1, 2, 3, 4];
+        pc.insert(&fp(), &toks, snap(1.0));
+        for wrong in [
+            ModelFingerprint { seed: 8, ..fp() },
+            ModelFingerprint { layers: 3, ..fp() },
+            ModelFingerprint { vocab: 64, ..fp() },
+            ModelFingerprint { backend: "xla", ..fp() },
+        ] {
+            assert!(pc.lookup(&wrong, &toks, 4).is_none(),
+                    "{wrong:?} must not match");
+        }
+        assert_eq!(pc.stats().misses, 4);
+        // the right fingerprint still hits
+        assert!(pc.lookup(&fp(), &toks, 4).is_some());
+    }
+
+    #[test]
+    fn duplicate_insert_refreshes_recency_without_growing() {
+        let mut pc = PrefixCache::new(4, 1 << 20);
+        let toks = vec![1, 2, 3, 4];
+        assert!(pc.insert(&fp(), &toks, snap(0.1)));
+        assert!(!pc.insert(&fp(), &toks, snap(0.9)));
+        let st = pc.stats();
+        assert_eq!(st.insertions, 1);
+        assert_eq!(st.entries, 1);
+        assert_eq!(st.bytes, cost(4));
+        // the ORIGINAL snapshot is kept (same cold-path state either way)
+        assert_eq!(pc.lookup(&fp(), &toks, 4).unwrap().1.conv[0], 0.1);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_under_budget() {
+        // budget fits exactly two 4-token entries
+        let mut pc = PrefixCache::new(4, 2 * cost(4));
+        pc.insert(&fp(), &[1, 1, 1, 1], snap(0.1));
+        pc.insert(&fp(), &[2, 2, 2, 2], snap(0.2));
+        assert_eq!(pc.len(), 2);
+        // touch the first so the SECOND becomes LRU
+        assert!(pc.lookup(&fp(), &[1, 1, 1, 1], 4).is_some());
+        pc.insert(&fp(), &[3, 3, 3, 3], snap(0.3));
+        assert_eq!(pc.stats().evictions, 1);
+        assert_eq!(pc.len(), 2);
+        assert!(pc.bytes() <= pc.budget());
+        assert!(pc.lookup(&fp(), &[2, 2, 2, 2], 4).is_none(),
+                "LRU entry must be gone");
+        assert!(pc.lookup(&fp(), &[1, 1, 1, 1], 4).is_some());
+        assert!(pc.lookup(&fp(), &[3, 3, 3, 3], 4).is_some());
+    }
+
+    #[test]
+    fn oversized_entry_is_refused_not_thrashed() {
+        let mut pc = PrefixCache::new(4, cost(4) - 1);
+        assert!(!pc.insert(&fp(), &[1, 2, 3, 4], snap(0.5)));
+        assert_eq!(pc.bytes(), 0);
+        assert_eq!(pc.stats().evictions, 0);
+        assert!(pc.is_empty());
+    }
+
+    #[test]
+    fn zero_budget_disables_and_empty_prefix_is_never_cached() {
+        let mut pc = PrefixCache::new(4, 0);
+        assert!(!pc.insert(&fp(), &[1, 2, 3, 4], snap(0.5)));
+        assert!(pc.lookup(&fp(), &[1, 2, 3, 4], 4).is_none());
+        let mut pc = PrefixCache::new(4, 1 << 20);
+        assert!(!pc.insert(&fp(), &[], snap(0.5)));
+        assert!(pc.is_empty());
+    }
+
+    #[test]
+    fn candidates_are_longest_first_block_aligned() {
+        let pc = PrefixCache::new(4, 1);
+        assert_eq!(pc.candidates(10), vec![10, 8, 4]);
+        assert_eq!(pc.candidates(8), vec![8, 4]);
+        assert_eq!(pc.candidates(4), vec![4]);
+        assert_eq!(pc.candidates(3), vec![3]);
+        assert!(pc.candidates(0).is_empty());
+        // block 1: every offset, descending
+        let pc = PrefixCache::new(1, 1);
+        assert_eq!(pc.candidates(3), vec![3, 2, 1]);
+        // block 0 clamps to 1
+        assert_eq!(PrefixCache::new(0, 1).block(), 1);
+    }
+}

@@ -32,8 +32,12 @@
 //!                                  request (stop token included in the
 //!                                  output; prompt occurrences ignored)
 //!       "eos": 0,                  shorthand: one extra stop token
-//!       "uncertainty_temp": 0.5}   c in tau_eff = tau*(1 + c*u), u =
+//!       "uncertainty_temp": 0.5,   c in tau_eff = tau*(1 + c*u), u =
 //!                                  slot mean posterior variance
+//!       "cache": false}            opt out of the belief-state prefix
+//!                                  cache for this request (no snapshot
+//!                                  lookup OR insertion); a no-op when
+//!                                  the server runs without a cache
 //!
 //! The reply is a STREAM of typed event lines, all tagged with the
 //! request's `id`.  Events of one request arrive in order; events of
@@ -47,12 +51,19 @@
 //!                                   variance — the paper's per-step
 //!                                   belief trajectory
 //!   <- {"id": 3, "event": "done", "tokens": [...], "queue_ms": 0.1,
-//!       "total_ms": 12.3, "uncertainty": 0.42, "cancelled": false}
+//!       "total_ms": 12.3, "uncertainty": 0.42, "cancelled": false,
+//!       "cached_tokens": 0}
 //!
 //! `done` is the terminal event and carries the complete legacy reply
 //! shape: its `tokens` array is always exactly the concatenation of the
 //! `token` events (pinned by tests + the `stream-parity` CI step), so
 //! collecting only `done` reproduces the v1 one-shot behaviour.
+//! `cached_tokens` is how many prompt tokens the request skipped by
+//! restoring a belief-state prefix-cache snapshot at admit (0 when the
+//! cache is off, missed, or the request opted out with
+//! `"cache": false`).  Cache hits change timings only — the generated
+//! tokens are identical to a cold prefill (pinned by the
+//! `prefix-cache-parity` CI step; see DESIGN.md §S15).
 //!
 //! ## Cancellation
 //!
@@ -72,9 +83,14 @@
 //!   -> {"cmd": "ping"}     <- {"ok": true}
 //!   -> {"cmd": "stats"}    <- {"requests": N, "steps": N,
 //!       "tokens_out": N, "prefill_tokens": N, "cancelled": N,
-//!       "wasted_tokens": N}        (live counters; `cancelled` counts
+//!       "wasted_tokens": N, "prefix_hits": N, "prefix_partial_hits": N,
+//!       "prefix_misses": N, "prefix_evictions": N,
+//!       "prefix_cached_tokens": N, "prefix_bytes": N,
+//!       "prefix_entries": N}       (live counters; `cancelled` counts
 //!       requests retired early, `wasted_tokens` counts tokens decoded
-//!       for requests that never completed)
+//!       for requests that never completed; the `prefix_*` counters
+//!       mirror the belief-state prefix cache and stay 0 when it is
+//!       disabled)
 //!   -> {"cmd": "shutdown"} <- {"ok": true}    (stops the listener —
 //!       the handler pokes the accept loop itself, no external
 //!       connection needed for the server to quiesce)
@@ -96,7 +112,7 @@
 //! previously truncated silently), bad-max-new, max-new-too-large (over
 //! the server's max_new_limit — previously clamped silently),
 //! bad-temperature, bad-top-k, bad-top-p, bad-seed, bad-stop-tokens,
-//! bad-eos, bad-uncertainty-temp, unavailable (the engine is gone —
+//! bad-eos, bad-uncertainty-temp, bad-cache, unavailable (the engine is gone —
 //! also the terminal event of any ACCEPTED request the engine dropped
 //! without answering, e.g. when its thread errors out mid-serve, so a
 //! stream never just goes silent).
@@ -400,6 +416,7 @@ impl EventSink for ConnSink {
                     ("total_ms", Json::num(r.total_ms)),
                     ("uncertainty", Json::num(r.uncertainty as f64)),
                     ("cancelled", Json::Bool(r.cancelled)),
+                    ("cached_tokens", Json::num(r.cached_tokens as f64)),
                 ]),
                 true,
             ),
@@ -537,6 +554,21 @@ fn handle_line(line: &str, ctx: &ConnCtx) -> Option<Json> {
                      n(live.cancelled.load(Ordering::Relaxed))),
                     ("wasted_tokens",
                      n(live.wasted_tokens.load(Ordering::Relaxed))),
+                    ("prefix_hits",
+                     n(live.prefix_hits.load(Ordering::Relaxed))),
+                    ("prefix_partial_hits",
+                     n(live.prefix_partial_hits.load(Ordering::Relaxed))),
+                    ("prefix_misses",
+                     n(live.prefix_misses.load(Ordering::Relaxed))),
+                    ("prefix_evictions",
+                     n(live.prefix_evictions.load(Ordering::Relaxed))),
+                    ("prefix_cached_tokens",
+                     n(live.prefix_cached_tokens
+                         .load(Ordering::Relaxed))),
+                    ("prefix_bytes",
+                     n(live.prefix_bytes.load(Ordering::Relaxed))),
+                    ("prefix_entries",
+                     n(live.prefix_entries.load(Ordering::Relaxed))),
                 ]));
             }
             "cancel" => {
@@ -570,7 +602,7 @@ fn handle_line(line: &str, ctx: &ConnCtx) -> Option<Json> {
             }
         }
     }
-    let (id, prompt, max_new, sampler) =
+    let (id, prompt, max_new, sampler, cache) =
         match parse_request(&req, ctx.defaults) {
             Ok(parts) => parts,
             Err(reply) => return Some(reply),
@@ -614,6 +646,7 @@ fn handle_line(line: &str, ctx: &ConnCtx) -> Option<Json> {
         submitted: Instant::now(),
         cancel,
         sink: Box::new(sink),
+        cache,
     });
     None
 }
@@ -640,7 +673,7 @@ fn token_id(x: &Json) -> Option<i32> {
 #[allow(clippy::result_large_err)]
 fn parse_request(req: &Json, d: &ProtocolDefaults)
                  -> std::result::Result<(u64, Vec<i32>, usize,
-                                         SamplerConfig),
+                                         SamplerConfig, bool),
                                         Json> {
     let Some(id_val) = req.get("id") else {
         return Err(err_reply(None, "missing-id",
@@ -783,7 +816,17 @@ fn parse_request(req: &Json, d: &ProtocolDefaults)
             }
         }
     }
-    Ok((id, prompt, max_new, s))
+    let cache = match req.get("cache") {
+        None => true,
+        Some(x) => match x.as_bool() {
+            Ok(b) => b,
+            Err(_) => {
+                return fail("bad-cache", format!(
+                    "cache = {} must be a boolean", x.to_string()));
+            }
+        },
+    };
+    Ok((id, prompt, max_new, s, cache))
 }
 
 /// Optional per-request sampling & termination fields for
@@ -800,6 +843,10 @@ pub struct RequestOpts {
     pub stop_tokens: Option<Vec<i32>>,
     pub eos: Option<i32>,
     pub uncertainty_temp: Option<f64>,
+    /// `Some(false)` opts this request out of the belief-state prefix
+    /// cache (no snapshot lookup or insertion); `None`/`Some(true)`
+    /// participate (the default).
+    pub cache: Option<bool>,
 }
 
 /// One parsed protocol-v2 event line, as surfaced by
@@ -819,6 +866,8 @@ pub enum StreamEvent {
         total_ms: f64,
         uncertainty: f64,
         cancelled: bool,
+        /// Prompt tokens skipped via a restored prefix-cache snapshot.
+        cached_tokens: usize,
     },
     /// Terminal: the request (or, with `id: None`, the protocol line)
     /// was rejected.
@@ -869,6 +918,7 @@ impl StreamEvent {
                 total_ms: j.req("total_ms")?.as_f64()?,
                 uncertainty: j.req("uncertainty")?.as_f64()?,
                 cancelled: j.req("cancelled")?.as_bool()?,
+                cached_tokens: j.req("cached_tokens")?.as_usize()?,
             }),
             "err" => {
                 let e = j.req("err")?;
@@ -927,7 +977,8 @@ impl Client {
         loop {
             match self.next_event_for(id)? {
                 StreamEvent::Done {
-                    tokens, queue_ms, total_ms, uncertainty, ..
+                    tokens, queue_ms, total_ms, uncertainty,
+                    cached_tokens, ..
                 } => {
                     return Ok(Json::obj(vec![
                         ("tokens",
@@ -937,6 +988,8 @@ impl Client {
                         ("queue_ms", Json::num(queue_ms)),
                         ("total_ms", Json::num(total_ms)),
                         ("uncertainty", Json::num(uncertainty)),
+                        ("cached_tokens",
+                         Json::num(cached_tokens as f64)),
                     ]));
                 }
                 StreamEvent::Err { code, msg, .. } => {
@@ -985,6 +1038,9 @@ impl Client {
         if let Some(c) = opts.uncertainty_temp {
             pairs.push(("uncertainty_temp", Json::num(c)));
         }
+        if let Some(c) = opts.cache {
+            pairs.push(("cache", Json::Bool(c)));
+        }
         self.write_line(&Json::obj(pairs).to_string())?;
         Ok(id)
     }
@@ -1020,8 +1076,10 @@ impl Client {
     }
 
     /// Live engine counters: requests, steps, tokens_out,
-    /// prefill_tokens, cancelled, wasted_tokens — answered mid-serve,
-    /// not only after shutdown.
+    /// prefill_tokens, cancelled, wasted_tokens, plus the prefix-cache
+    /// mirrors (prefix_hits, prefix_partial_hits, prefix_misses,
+    /// prefix_evictions, prefix_cached_tokens, prefix_bytes,
+    /// prefix_entries) — answered mid-serve, not only after shutdown.
     pub fn stats(&mut self) -> Result<Json> {
         self.send_cmd(r#"{"cmd":"stats"}"#)
     }
@@ -1195,6 +1253,7 @@ mod tests {
             total_ms: 1.0,
             uncertainty: 0.25,
             cancelled: false,
+            cached_tokens: 0,
         }))
         .unwrap();
         // done already freed the id for reuse

@@ -25,6 +25,52 @@ pub struct SlotSnapshot {
     pub beliefs: Vec<KlaBelief>,
 }
 
+impl SlotSnapshot {
+    /// Payload size in bytes (conv window + per-layer lam and eta) — the
+    /// unit the prefix cache's LRU budget accounts in.  Constant per
+    /// model geometry: this is the whole point of a belief-state cache
+    /// versus a sequence-length KV cache.
+    pub fn bytes(&self) -> usize {
+        let floats = self.conv.len()
+            + self.beliefs.iter().map(|b| 2 * b.state()).sum::<usize>();
+        floats * std::mem::size_of::<f32>()
+    }
+}
+
+/// Why [`BeliefStateCache::restore`] refused a snapshot.  Structured (not
+/// a rendered string) so callers can react to the exact geometry
+/// mismatch; converts into `anyhow::Error` through `?` like any
+/// `std::error::Error`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RestoreError {
+    /// The snapshot was taken under a different layer count.
+    LayerCount { snapshot: usize, cache: usize },
+    /// The conv window length differs (e.g. a different conv_kernel).
+    ConvLen { snapshot: usize, cache: usize },
+    /// A per-layer belief has the wrong N*D width.
+    BeliefWidth { layer: usize, snapshot: usize, cache: usize },
+}
+
+impl std::fmt::Display for RestoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RestoreError::LayerCount { snapshot, cache } => write!(
+                f,
+                "snapshot has {snapshot} layers, cache expects {cache}"),
+            RestoreError::ConvLen { snapshot, cache } => write!(
+                f,
+                "snapshot conv window holds {snapshot} floats, cache \
+                 expects {cache}"),
+            RestoreError::BeliefWidth { layer, snapshot, cache } => write!(
+                f,
+                "snapshot belief for layer {layer} is {snapshot} wide, \
+                 cache expects {cache}"),
+        }
+    }
+}
+
+impl std::error::Error for RestoreError {}
+
 pub struct BeliefStateCache {
     /// live batched state, shapes (L,B,K-1,D) / (L,B,N,D) / (L,B,N,D)
     state: DecodeState,
@@ -130,16 +176,33 @@ impl BeliefStateCache {
         snap
     }
 
-    /// Restore a previously snapshotted belief state into a slot.
-    pub fn restore(&mut self, slot: usize, snap: &SlotSnapshot) -> Result<()> {
-        // the conv window length must be validated too: a snapshot taken
-        // under a different conv_kernel would otherwise panic inside
-        // copy_from_slice instead of erroring
-        if snap.beliefs.len() != self.layers
-            || snap.conv.len() != self.layers * self.conv_row
-            || snap.beliefs.iter().any(|b| b.state() != self.post_row)
-        {
-            bail!("snapshot shape mismatch");
+    /// Restore a previously snapshotted belief state into a slot.  Every
+    /// geometry mismatch is a structured [`RestoreError`] — a snapshot
+    /// taken under a different layer count, conv_kernel or state width
+    /// must error (with the exact mismatch), never panic inside
+    /// `copy_from_slice`.
+    pub fn restore(&mut self, slot: usize, snap: &SlotSnapshot)
+                   -> std::result::Result<(), RestoreError> {
+        if snap.beliefs.len() != self.layers {
+            return Err(RestoreError::LayerCount {
+                snapshot: snap.beliefs.len(),
+                cache: self.layers,
+            });
+        }
+        if snap.conv.len() != self.layers * self.conv_row {
+            return Err(RestoreError::ConvLen {
+                snapshot: snap.conv.len(),
+                cache: self.layers * self.conv_row,
+            });
+        }
+        for (l, b) in snap.beliefs.iter().enumerate() {
+            if b.state() != self.post_row {
+                return Err(RestoreError::BeliefWidth {
+                    layer: l,
+                    snapshot: b.state(),
+                    cache: self.post_row,
+                });
+            }
         }
         for (l, belief) in snap.beliefs.iter().enumerate() {
             let c0 = (l * self.batch + slot) * self.conv_row;
@@ -357,9 +420,52 @@ mod tests {
         // a snapshot from a model with a different conv_kernel: beliefs
         // match but the conv window does not — must error, not panic
         snap.conv.truncate(snap.conv.len() - 1);
-        assert!(cache.restore(0, &snap).is_err());
+        assert_eq!(cache.restore(0, &snap),
+                   Err(RestoreError::ConvLen { snapshot: 23, cache: 24 }));
         snap.conv.clear();
-        assert!(cache.restore(0, &snap).is_err());
+        assert_eq!(cache.restore(0, &snap),
+                   Err(RestoreError::ConvLen { snapshot: 0, cache: 24 }));
+    }
+
+    #[test]
+    fn restore_rejects_layer_count_mismatch_with_structured_error() {
+        // regression: a snapshot taken under a DIFFERENT layer count
+        // (e.g. a cache file from an older model config) — drop layer
+        // 1's belief and conv rows so only the layer count disagrees
+        let mut cache = BeliefStateCache::new(tiny_state());
+        let mut snap = cache.snapshot(0);
+        snap.beliefs.truncate(1);
+        snap.conv.truncate(snap.conv.len() / 2);
+        assert_eq!(cache.restore(0, &snap),
+                   Err(RestoreError::LayerCount { snapshot: 1, cache: 2 }));
+        // a belief of the wrong width reports the offending layer
+        let mut snap = cache.snapshot(0);
+        snap.beliefs[1] =
+            KlaBelief::from_parts(vec![1.0; 4], vec![0.0; 4]);
+        assert_eq!(cache.restore(0, &snap),
+                   Err(RestoreError::BeliefWidth {
+                       layer: 1,
+                       snapshot: 4,
+                       cache: 8,
+                   }));
+        // structured errors still render and convert into anyhow
+        let e: anyhow::Error =
+            cache.restore(0, &snap).unwrap_err().into();
+        assert!(e.to_string().contains("layer 1"));
+    }
+
+    #[test]
+    fn snapshot_bytes_accounts_conv_and_posteriors() {
+        // tiny_state: L=2, K-1=3, D=4, N=2 — conv 2*12 floats plus
+        // 2 layers * (8 lam + 8 eta) floats = 56 floats
+        let cache = BeliefStateCache::new(tiny_state());
+        let snap = cache.snapshot(0);
+        assert_eq!(snap.bytes(), 56 * 4);
+        // constant in sequence length by construction: a restored-and-
+        // re-snapshotted slot costs exactly the same
+        let mut cache = BeliefStateCache::new(tiny_state());
+        cache.restore(1, &snap).unwrap();
+        assert_eq!(cache.snapshot(1).bytes(), snap.bytes());
     }
 
     #[test]

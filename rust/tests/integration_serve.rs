@@ -614,3 +614,260 @@ fn native_sampling_request_validation_structured_errors() {
     assert_eq!(stats.requests, 1, "rejected requests never reach the engine");
     println!("sampling request validation: ok");
 }
+
+// ============================================ belief-state prefix cache ====
+// Content-addressed prompt reuse (serve::prefix_cache) through the real
+// TCP server.  The correctness crux: a cache hit must reproduce the cold
+// prefill's generation — full hits bit-exactly (the snapshot IS the cold
+// end-of-prefill state), partial hits within the scan-conformance
+// tolerance.  CI's `prefix-cache-parity` step runs every
+// `native_prefix_cache_*` test with --nocapture and greps the result
+// lines below, failing on any SKIP.
+
+/// `native_cfg` with the prefix cache on: chunked prefill (the only path
+/// with snapshot insertion points) plus a byte budget.
+fn cache_cfg(chunk: usize, budget: usize) -> ServeConfig {
+    ServeConfig {
+        prefill_chunk: chunk,
+        prefix_cache_bytes: budget,
+        ..native_cfg()
+    }
+}
+
+#[test]
+fn native_prefix_cache_identity_greedy() {
+    // cold request, then the exact same prompt warm: the warm request
+    // restores the cold end-of-prefill snapshot (cached_tokens > 0) and
+    // generates IDENTICAL tokens with IDENTICAL uncertainty — and both
+    // agree across chunk sizes and across a full server restart, so a
+    // restarted server's cold output matches what the cache reproduced.
+    let prompt: Vec<i32> = (0..24).map(|i| (i * 5) % 32).collect();
+    let run = |chunk: usize| -> (Vec<i64>, f64, usize, usize) {
+        let backend = NativeBackend::seeded(&small_lm(), 31, 2);
+        let handle =
+            serve_native(backend, &cache_cfg(chunk, 1 << 20)).unwrap();
+        let mut c = Client::connect(&handle.addr).unwrap();
+        let cold = c.request(&prompt, 6).unwrap();
+        assert_eq!(
+            cold.req("cached_tokens").unwrap().as_usize().unwrap(), 0,
+            "chunk={chunk}: first request cannot hit an empty cache");
+        let warm = c.request(&prompt, 6).unwrap();
+        let cached =
+            warm.req("cached_tokens").unwrap().as_usize().unwrap();
+        assert_eq!(tokens_of(&cold), tokens_of(&warm),
+                   "chunk={chunk}: warm tokens differ from cold");
+        // full hit: the restored snapshot IS the cold end-of-prefill
+        // state, so even the uncertainty trajectory is bit-identical
+        assert_eq!(cold.req("uncertainty").unwrap().as_f64().unwrap(),
+                   warm.req("uncertainty").unwrap().as_f64().unwrap(),
+                   "chunk={chunk}: full hit must be bit-exact");
+        let stats = handle.stop().unwrap();
+        assert_eq!(stats.prefix_misses, 1);
+        assert_eq!(stats.prefix_hits + stats.prefix_partial_hits, 1);
+        (tokens_of(&cold),
+         cold.req("uncertainty").unwrap().as_f64().unwrap(),
+         cached, stats.prefix_cached_tokens)
+    };
+    let (toks8, unc8, cached8, stat8) = run(8);
+    // a 24-token prompt with max_new > 0 prefills 23 tokens; the warm
+    // request's full hit restores exactly that end-of-prefill snapshot
+    assert_eq!(cached8, 23, "full hit must cover the usable prefix");
+    assert_eq!(stat8, 23, "engine stats must mirror cached_tokens");
+    // restart + different chunk size: exact token equality is the
+    // acceptance bar; it follows from the 1e-5 state parity only when no
+    // greedy top-2 margin is that thin, which holds for this pinned seed
+    // (same caveat as native_prefill_chunk_parity_with_token_by_token)
+    let (toks4, unc4, cached4, _) = run(4);
+    assert_eq!(toks8, toks4,
+               "restarted server with chunk=4 generated different tokens");
+    assert!(kla::testing::rel_close64(unc8, unc4, 1e-5));
+    assert_eq!(cached4, 23);
+    println!("prefix cache identity greedy: ok");
+}
+
+#[test]
+fn native_prefix_cache_identity_sampled() {
+    // seeded sampling: the counter-based RNG draws depend only on the
+    // request key and token index, so a full hit reproduces a sampled
+    // generation exactly, not just a greedy one
+    let backend = NativeBackend::seeded(&small_lm(), 37, 2);
+    let handle = serve_native(backend, &cache_cfg(8, 1 << 20)).unwrap();
+    let mut c = Client::connect(&handle.addr).unwrap();
+    let prompt: Vec<i32> = (0..24).map(|i| (i * 7) % 32).collect();
+    let opts = RequestOpts {
+        temperature: Some(0.9),
+        top_p: Some(0.9),
+        seed: Some(77),
+        ..Default::default()
+    };
+    let cold = c.request_opts(&prompt, 6, &opts).unwrap();
+    let warm = c.request_opts(&prompt, 6, &opts).unwrap();
+    assert_eq!(
+        warm.req("cached_tokens").unwrap().as_usize().unwrap(), 23,
+        "warm sampled request must restore the full usable prefix");
+    assert_eq!(tokens_of(&cold), tokens_of(&warm),
+               "seeded-sampled warm tokens differ from cold");
+    assert_eq!(cold.req("uncertainty").unwrap().as_f64().unwrap(),
+               warm.req("uncertainty").unwrap().as_f64().unwrap());
+    handle.stop().unwrap();
+    println!("prefix cache identity sampled: ok");
+}
+
+#[test]
+fn native_prefix_cache_partial_hit_resumes_prefill() {
+    // two prompts sharing a 16-token prefix but diverging after it: the
+    // second request partial-hits a block-aligned snapshot of the first
+    // and resumes chunked prefill from there.  Its output must match a
+    // cache-DISABLED server's cold output for the same prompt (same
+    // backend seed => same weights => deterministic greedy reference).
+    let prefix: Vec<i32> = (0..16).map(|i| (i * 3) % 32).collect();
+    let mut a = prefix.clone();
+    a.extend_from_slice(&[1, 2, 3, 4]);
+    let mut b = prefix.clone();
+    b.extend_from_slice(&[9, 8, 7, 6, 5]);
+
+    // reference: prompt b, cold, cache off
+    let backend = NativeBackend::seeded(&small_lm(), 41, 2);
+    let handle = serve_native(backend, &cache_cfg(8, 0)).unwrap();
+    let mut c = Client::connect(&handle.addr).unwrap();
+    let cold = c.request(&b, 5).unwrap();
+    handle.stop().unwrap();
+
+    // cache on: prompt a populates shared-prefix snapshots, prompt b
+    // partial-hits one (it can never full-hit: its exact end-of-prefill
+    // snapshot was never produced)
+    let backend = NativeBackend::seeded(&small_lm(), 41, 2);
+    let handle = serve_native(backend, &cache_cfg(8, 1 << 20)).unwrap();
+    let mut c = Client::connect(&handle.addr).unwrap();
+    let _ = c.request(&a, 5).unwrap();
+    let warm = c.request(&b, 5).unwrap();
+    let cached = warm.req("cached_tokens").unwrap().as_usize().unwrap();
+    assert!(cached > 0 && cached < b.len() - 1,
+            "expected a partial hit, got cached_tokens = {cached}");
+    // exact token equality per the chunk-parity precedent (the resumed
+    // prefill re-chunks the suffix, so the state agrees to 1e-5, and no
+    // greedy margin is that thin for this pinned seed)
+    assert_eq!(tokens_of(&cold), tokens_of(&warm),
+               "partial-hit resume generated different tokens than a \
+                cold cache-disabled prefill");
+    assert!(kla::testing::rel_close64(
+        cold.req("uncertainty").unwrap().as_f64().unwrap(),
+        warm.req("uncertainty").unwrap().as_f64().unwrap(),
+        1e-5));
+    let stats = handle.stop().unwrap();
+    assert_eq!(stats.prefix_partial_hits, 1);
+    assert_eq!(stats.prefix_cached_tokens, cached);
+    println!("prefix cache partial hit resume: ok");
+}
+
+#[test]
+fn native_prefix_cache_opt_out_per_request() {
+    let backend = NativeBackend::seeded(&small_lm(), 43, 2);
+    let handle = serve_native(backend, &cache_cfg(8, 1 << 20)).unwrap();
+    let addr = handle.addr.clone();
+    let mut c = Client::connect(&addr).unwrap();
+    let prompt: Vec<i32> = (0..20).map(|i| (i * 11) % 32).collect();
+    let opt_out = RequestOpts { cache: Some(false), ..Default::default() };
+    // two identical opted-out requests: neither looks up NOR inserts
+    for pass in 0..2 {
+        let r = c.request_opts(&prompt, 4, &opt_out).unwrap();
+        assert_eq!(
+            r.req("cached_tokens").unwrap().as_usize().unwrap(), 0,
+            "pass {pass}: opted-out request must never restore");
+    }
+    let s = c.stats().unwrap();
+    for key in ["prefix_hits", "prefix_partial_hits", "prefix_misses",
+                "prefix_entries"]
+    {
+        assert_eq!(s.req(key).unwrap().as_usize().unwrap(), 0,
+                   "{key} counted for an opted-out request");
+    }
+    // default requests on the same server still use the cache
+    let cold = c.request(&prompt, 4).unwrap();
+    assert_eq!(cold.req("cached_tokens").unwrap().as_usize().unwrap(), 0);
+    let warm = c.request(&prompt, 4).unwrap();
+    assert!(warm.req("cached_tokens").unwrap().as_usize().unwrap() > 0,
+            "default request did not warm-hit after the cold one");
+    assert_eq!(tokens_of(&cold), tokens_of(&warm));
+    // a non-boolean cache field is a structured protocol error
+    let bad = send_raw(&addr, r#"{"id": 9, "prompt": [1], "cache": "yes"}"#);
+    assert_eq!(err_code(&bad), "bad-cache", "{bad:?}");
+    handle.stop().unwrap();
+    println!("prefix cache opt-out: ok");
+}
+
+#[test]
+fn native_prefix_cache_stats_counters_end_to_end() {
+    // the live {"cmd":"stats"} counters and the shutdown EngineStats
+    // tell the same story, at every stage: empty, after a miss, after a
+    // full hit
+    let backend = NativeBackend::seeded(&small_lm(), 47, 2);
+    let handle = serve_native(backend, &cache_cfg(8, 1 << 20)).unwrap();
+    let mut c = Client::connect(&handle.addr).unwrap();
+    let s0 = c.stats().unwrap();
+    for key in ["prefix_hits", "prefix_partial_hits", "prefix_misses",
+                "prefix_evictions", "prefix_cached_tokens", "prefix_bytes",
+                "prefix_entries"]
+    {
+        assert_eq!(s0.req(key).unwrap().as_usize().unwrap(), 0,
+                   "{key} nonzero before any request");
+    }
+    let prompt: Vec<i32> = (0..24).map(|i| (i * 13) % 32).collect();
+    let _ = c.request(&prompt, 4).unwrap();
+    let s1 = c.stats().unwrap();
+    assert_eq!(s1.req("prefix_misses").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(s1.req("prefix_hits").unwrap().as_usize().unwrap(), 0);
+    // chunk 8 over a 23-token usable prefix snapshots at the cursor 8
+    // block boundary and at the end of prefill
+    assert_eq!(s1.req("prefix_entries").unwrap().as_usize().unwrap(), 2);
+    let bytes = s1.req("prefix_bytes").unwrap().as_usize().unwrap();
+    assert!(bytes > 0);
+    let _ = c.request(&prompt, 4).unwrap();
+    let s2 = c.stats().unwrap();
+    assert_eq!(s2.req("prefix_hits").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(
+        s2.req("prefix_cached_tokens").unwrap().as_usize().unwrap(), 23);
+    // the warm walk re-visits the same offsets: recency refresh, no growth
+    assert_eq!(s2.req("prefix_entries").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(s2.req("prefix_bytes").unwrap().as_usize().unwrap(), bytes);
+    let stats = handle.stop().unwrap();
+    assert_eq!(stats.prefix_hits, 1);
+    assert_eq!(stats.prefix_misses, 1);
+    assert_eq!(stats.prefix_cached_tokens, 23);
+    assert_eq!(stats.prefix_bytes, bytes);
+    assert_eq!(stats.prefix_entries, 2);
+    println!("prefix cache stats counters: ok");
+}
+
+#[test]
+fn native_prefix_cache_eviction_under_tiny_budget() {
+    // a budget that fits roughly one prompt's snapshots: distinct
+    // prompts churn the cache, evictions fire, the byte budget holds,
+    // and the most recent prompt is still warm (LRU evicts oldest first)
+    let backend = NativeBackend::seeded(&small_lm(), 53, 2);
+    let budget = 2200usize;
+    let handle = serve_native(backend, &cache_cfg(8, budget)).unwrap();
+    let mut c = Client::connect(&handle.addr).unwrap();
+    let prompts: Vec<Vec<i32>> = (0..4usize)
+        .map(|p| (0..16usize).map(|j| ((p * 7 + j * 3 + 1) % 32) as i32)
+            .collect())
+        .collect();
+    for p in &prompts {
+        let r = c.request(p, 2).unwrap();
+        assert_eq!(r.req("cached_tokens").unwrap().as_usize().unwrap(), 0,
+                   "distinct prompts must all miss");
+    }
+    let s = c.stats().unwrap();
+    assert!(s.req("prefix_evictions").unwrap().as_usize().unwrap() > 0,
+            "four distinct prompts under a ~2 KB budget must evict");
+    assert!(s.req("prefix_bytes").unwrap().as_usize().unwrap() <= budget,
+            "byte budget violated");
+    // the newest prompt survived the churn
+    let warm = c.request(&prompts[3], 2).unwrap();
+    assert!(warm.req("cached_tokens").unwrap().as_usize().unwrap() > 0,
+            "most recently inserted prompt was evicted");
+    let stats = handle.stop().unwrap();
+    assert!(stats.prefix_evictions > 0);
+    assert!(stats.prefix_bytes <= budget);
+    println!("prefix cache eviction under budget: ok");
+}

@@ -1,0 +1,238 @@
+//! Property tests (via `testing::property`) for the content-addressed
+//! belief-state prefix cache (`serve::prefix_cache`):
+//!
+//! 1. under random insert/lookup interleavings, `lookup` agrees with a
+//!    brute-force longest-prefix reference over the accepted entries
+//!    (offset AND which snapshot comes back) — checking the FNV keying,
+//!    exact-token compare, and candidate-offset walk end to end;
+//! 2. the byte budget is an invariant, never a target: after every
+//!    operation `bytes() <= budget()`, the counters reconcile
+//!    (`insertions - evictions == entries`), and an accepted insert is
+//!    immediately findable (LRU never evicts the newest entry);
+//! 3. a fingerprint differing in ANY single field never returns a hit,
+//!    whatever the token overlap.
+
+use kla::api::KlaBelief;
+use kla::serve::state_cache::SlotSnapshot;
+use kla::serve::{ModelFingerprint, PrefixCache};
+use kla::testing::{property, Gen};
+
+fn fp() -> ModelFingerprint {
+    ModelFingerprint {
+        vocab: 32,
+        backend: "native",
+        layers: 2,
+        conv_window: 3,
+        d_model: 4,
+        n_state: 2,
+        seed: 7,
+    }
+}
+
+/// A 2-layer snapshot whose fill value identifies the entry: 24 conv
+/// floats + 2 * (8 + 8) posterior floats = 224 payload bytes.
+fn snap(tag: f32) -> SlotSnapshot {
+    SlotSnapshot {
+        conv: vec![tag; 2 * 3 * 4],
+        beliefs: (0..2)
+            .map(|_| KlaBelief::from_parts(vec![tag; 8], vec![tag; 8]))
+            .collect(),
+    }
+}
+
+/// The documented candidate-offset contract: the full usable prefix
+/// first, then every block multiple strictly below it, descending.
+fn ref_candidates(usable: usize, block: usize) -> Vec<usize> {
+    let mut offs = Vec::new();
+    if usable == 0 {
+        return offs;
+    }
+    offs.push(usable);
+    let mut m = (usable / block) * block;
+    if m == usable {
+        m = m.saturating_sub(block);
+    }
+    while m > 0 {
+        offs.push(m);
+        m = m.saturating_sub(block);
+    }
+    offs
+}
+
+/// Brute-force longest-prefix reference: the longest candidate offset
+/// for which `model` holds an entry with exactly those tokens.
+fn ref_lookup(model: &[(Vec<i32>, f32)], query: &[i32], usable: usize,
+              block: usize) -> Option<(usize, f32)> {
+    let usable = usable.min(query.len());
+    for off in ref_candidates(usable, block) {
+        if let Some((_, tag)) =
+            model.iter().find(|(t, _)| t[..] == query[..off])
+        {
+            return Some((off, *tag));
+        }
+    }
+    None
+}
+
+/// A query stream related to `base`: share a random-length prefix, then
+/// diverge — the shape that exercises partial hits, not just full ones.
+fn related_stream(g: &mut Gen, base: &[i32]) -> Vec<i32> {
+    let keep = g.usize_in(0, base.len());
+    let extra = g.usize_in(0, 8);
+    let mut s: Vec<i32> = base[..keep].to_vec();
+    for _ in 0..extra {
+        s.push(g.usize_in(0, 5) as i32);
+    }
+    s
+}
+
+#[test]
+fn prefix_cache_lookup_matches_longest_prefix_reference() {
+    property("prefix_cache_reference", 40, |g: &mut Gen| {
+        let block = g.usize_in(1, 5);
+        // budget far above anything 30 ops can insert: no eviction, so
+        // the reference model and the cache hold the same entry set
+        let mut pc = PrefixCache::new(block, 1 << 20);
+        let base: Vec<i32> = (0..g.usize_in(8, 24))
+            .map(|_| g.usize_in(0, 5) as i32)
+            .collect();
+        let mut model: Vec<(Vec<i32>, f32)> = Vec::new();
+        let mut next_tag = 1.0f32;
+        let mut lookups = 0usize;
+
+        for op in 0..30 {
+            let stream = related_stream(g, &base);
+            if g.usize_in(0, 2) < 2 {
+                // insert a random-length prefix of the stream
+                let cut = g.usize_in(0, stream.len());
+                let toks = &stream[..cut];
+                let dup = model.iter().any(|(t, _)| t[..] == *toks);
+                let stored = pc.insert(&fp(), toks, snap(next_tag));
+                kla::prop_assert!(
+                    stored == (!toks.is_empty() && !dup),
+                    "op {op}: insert of {} tokens (dup {dup}) returned \
+                     {stored}", toks.len()
+                );
+                if stored {
+                    model.push((toks.to_vec(), next_tag));
+                    next_tag += 1.0;
+                }
+            } else {
+                // lookup with a random usable bound (occasionally past
+                // the end: the cache clamps, and so does the reference)
+                let usable = g.usize_in(0, stream.len() + 2);
+                lookups += 1;
+                let got = pc
+                    .lookup(&fp(), &stream, usable)
+                    .map(|(off, s)| (off, s.conv[0]));
+                let want = ref_lookup(&model, &stream, usable, block);
+                kla::prop_assert!(
+                    got == want,
+                    "op {op}: lookup(usable {usable}) on {} entries got \
+                     {got:?}, reference says {want:?}", model.len()
+                );
+            }
+        }
+
+        let st = pc.stats();
+        kla::prop_assert!(
+            st.hits + st.partial_hits + st.misses == lookups,
+            "{} + {} + {} lookups accounted != {lookups} performed",
+            st.hits, st.partial_hits, st.misses
+        );
+        kla::prop_assert!(st.insertions == model.len(),
+                          "{} insertions != {} model entries",
+                          st.insertions, model.len());
+        kla::prop_assert!(st.evictions == 0 && pc.len() == model.len(),
+                          "eviction under an unreachable budget");
+        Ok(())
+    });
+}
+
+#[test]
+fn prefix_cache_lru_never_exceeds_byte_budget() {
+    property("prefix_cache_budget", 40, |g: &mut Gen| {
+        let block = g.usize_in(1, 4);
+        // tight budget: a snap() entry costs 320 + 4 * tokens bytes, so
+        // this fits only a handful of entries and forces real evictions
+        let budget = g.usize_in(1, 5) * 350;
+        let mut pc = PrefixCache::new(block, budget);
+        let base: Vec<i32> = (0..16).map(|_| g.usize_in(0, 5) as i32)
+            .collect();
+        let mut accepted = 0usize;
+
+        for op in 0..25 {
+            let stream = related_stream(g, &base);
+            if g.usize_in(0, 2) < 2 {
+                let cut = g.usize_in(1, stream.len().max(1));
+                let toks = stream[..cut.min(stream.len())].to_vec();
+                if pc.insert(&fp(), &toks, snap(op as f32)) {
+                    accepted += 1;
+                    // the newest entry is never the eviction victim:
+                    // it must full-hit right away
+                    let hit = pc.lookup(&fp(), &toks, toks.len());
+                    kla::prop_assert!(
+                        matches!(hit, Some((off, _)) if off == toks.len()),
+                        "op {op}: freshly inserted {}-token entry not \
+                         findable", toks.len()
+                    );
+                }
+            } else {
+                let usable = g.usize_in(0, stream.len());
+                let _ = pc.lookup(&fp(), &stream, usable);
+            }
+            let st = pc.stats();
+            kla::prop_assert!(pc.bytes() <= pc.budget(),
+                              "op {op}: {} bytes over the {} budget",
+                              pc.bytes(), pc.budget());
+            kla::prop_assert!(st.bytes == pc.bytes()
+                              && st.entries == pc.len(),
+                              "op {op}: stats residency out of sync");
+            kla::prop_assert!(
+                st.insertions - st.evictions == st.entries,
+                "op {op}: {} inserted - {} evicted != {} resident",
+                st.insertions, st.evictions, st.entries
+            );
+        }
+        kla::prop_assert!(pc.stats().insertions == accepted,
+                          "insertion counter disagrees with accepted \
+                           inserts");
+        Ok(())
+    });
+}
+
+#[test]
+fn prefix_cache_fingerprint_mismatch_never_hits() {
+    property("prefix_cache_fingerprint", 40, |g: &mut Gen| {
+        let mut pc = PrefixCache::new(g.usize_in(1, 4), 1 << 20);
+        let toks: Vec<i32> = (0..g.usize_in(1, 12))
+            .map(|_| g.usize_in(0, 5) as i32)
+            .collect();
+        kla::prop_assert!(pc.insert(&fp(), &toks, snap(1.0)),
+                          "seed insert refused");
+        // perturb exactly one fingerprint field
+        let wrong = match g.usize_in(0, 6) {
+            0 => ModelFingerprint { vocab: 33, ..fp() },
+            1 => ModelFingerprint { backend: "xla", ..fp() },
+            2 => ModelFingerprint { layers: 3, ..fp() },
+            3 => ModelFingerprint { conv_window: 4, ..fp() },
+            4 => ModelFingerprint { d_model: 8, ..fp() },
+            5 => ModelFingerprint { n_state: 4, ..fp() },
+            _ => ModelFingerprint { seed: 8, ..fp() },
+        };
+        let misses_before = pc.stats().misses;
+        kla::prop_assert!(
+            pc.lookup(&wrong, &toks, toks.len()).is_none(),
+            "{wrong:?} matched an entry from {:?}", fp()
+        );
+        kla::prop_assert!(pc.stats().misses == misses_before + 1,
+                          "fingerprint miss not counted");
+        // the true fingerprint still full-hits the same tokens
+        let hit = pc.lookup(&fp(), &toks, toks.len());
+        kla::prop_assert!(
+            matches!(hit, Some((off, _)) if off == toks.len()),
+            "true fingerprint lost its entry"
+        );
+        Ok(())
+    });
+}
