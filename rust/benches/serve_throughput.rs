@@ -199,6 +199,74 @@ fn main() {
         );
     }
 
+    // machine-readable rows for BENCH_serve.json (burst + Zipf
+    // scenarios below both feed it; one write at the end of the native
+    // section, uploaded as a CI artifact)
+    let mut bench_rows: Vec<Json> = Vec::new();
+
+    // ---- burst: many concurrent long prompts in one admission wave ----
+    // 24 clients fire 256-token prompts at 8 slots simultaneously, tiny
+    // decode tail — the shape the fused (slots x time) prefill round is
+    // for: every admitted slot's chunk rides ONE multi-dimensional scan
+    // per engine iteration instead of B serial per-slot scans.  chunk=1
+    // is the legacy token-per-iteration baseline on identical load; the
+    // aggregate row is total burst prefill tokens over wall time, the
+    // fleet-level number a serving deployment actually sees.
+    {
+        const BURST_REQUESTS: usize = 24;
+        const BURST_PROMPT: usize = 256;
+        const BURST_NEW: usize = 2;
+        for (chunk, label) in
+            [(64usize, "fused_chunk64"), (1, "legacy_chunk1")]
+        {
+            let cfg = ServeConfig {
+                addr: "127.0.0.1:0".into(),
+                backend: "native".into(),
+                batch_window_us: 1000,
+                max_new_tokens: BURST_NEW,
+                prefill_chunk: chunk,
+                ..Default::default()
+            };
+            let backend =
+                NativeBackend::seeded(&NativeLmConfig::default(), 0, 8);
+            let handle = serve_native(backend, &cfg).unwrap();
+            let addr = handle.addr.clone();
+            let _ = load_once(&addr, 2, 16, 1); // warm
+            let t0 = std::time::Instant::now();
+            let (_, lat) =
+                load_once(&addr, BURST_REQUESTS, BURST_PROMPT, BURST_NEW);
+            let wall_s = t0.elapsed().as_secs_f64();
+            let stats = handle.stop().unwrap();
+            // wall-clock aggregate over the burst's own prefill work
+            // (each request prefills prompt-1 tokens; the 2-request
+            // warm pass is excluded from the numerator)
+            let burst_tokens =
+                (BURST_REQUESTS * (BURST_PROMPT - 1)) as f64;
+            let aggregate_tok_s = burst_tokens / wall_s;
+            suite.metric_row(
+                &format!("burst_long_prompts/{label}"),
+                vec![
+                    ("aggregate_prefill_tok_s".into(), aggregate_tok_s),
+                    ("prefill_tok_s".into(),
+                     stats.prefill_tokens_per_sec()),
+                    ("p50_ms".into(), lat.percentile(50.0)),
+                    ("p99_ms".into(), lat.percentile(99.0)),
+                    ("wall_s".into(), wall_s),
+                ],
+            );
+            bench_rows.push(Json::obj(vec![
+                ("scenario",
+                 Json::str(&format!("burst_long_prompts/{label}"))),
+                ("aggregate_prefill_tok_s", Json::num(aggregate_tok_s)),
+                ("prefill_tok_s",
+                 Json::num(stats.prefill_tokens_per_sec())),
+                ("p50_ms", Json::num(lat.percentile(50.0))),
+                ("p99_ms", Json::num(lat.percentile(99.0))),
+                ("wall_s", Json::num(wall_s)),
+            ]));
+        }
+    }
+
     // ---- belief-state prefix cache: Zipf shared-prefix scenario ----
     // 16 system prompts drawn Zipf(s = 1.1) — the head prefixes recur
     // constantly, like a fleet of agents sharing a handful of system
@@ -235,7 +303,6 @@ fn main() {
             })
             .collect();
 
-        let mut bench_rows: Vec<Json> = Vec::new();
         for (cache_mb, label) in [(0usize, "cold"), (64, "warm")] {
             let cfg = ServeConfig {
                 addr: "127.0.0.1:0".into(),

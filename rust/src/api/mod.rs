@@ -12,9 +12,12 @@
 //!   belief) reproduces the full scan — the carry-split property the
 //!   conformance suite (`rust/tests/conformance_api.rs`) pins down.
 //! - [`ScanPlan`] — a builder selecting the execution [`Strategy`]
-//!   (`Sequential` | `Blelloch` | `Chunked { threads }` | `Auto`) and the
-//!   batch dimension `B`, over the time-major layout every implementation
-//!   shares.
+//!   (`Sequential` | `Blelloch` | `Chunked { threads }` |
+//!   `Chained { threads }` | `Auto`) and the batch dimension `B`, over
+//!   the time-major layout every implementation shares.  `Auto` resolves
+//!   by (B, T, cores): multi-lane work goes lane-chained across the
+//!   shared pool, long single sequences go time-chunked, short ones stay
+//!   sequential.
 //! - [`prefix_batch`] — the batched `(B, T, …)` entry point: B independent
 //!   sequences scanned under one plan, trading time-parallelism for
 //!   batch-parallelism when B is large.
@@ -57,6 +60,14 @@ pub enum Strategy {
     /// Two-level chunked scan across `threads` cores (compose chunk
     /// summaries in parallel, carry serially, replay in parallel).
     Chunked { threads: usize },
+    /// Lane-chained multi-dimensional layout (slots × time): B lanes are
+    /// distributed over `threads` pool workers and each lane is scanned
+    /// sequentially, its carry chained through time in one pass.  For
+    /// B >= threads this is the work-optimal shape (no cross-thread
+    /// carry traffic), and each lane is bit-exact against `Sequential`.
+    /// On a single sequence the chain degenerates to one sequential
+    /// lane.
+    Chained { threads: usize },
     /// Pick a strategy from (T, B) at run time; never reaches the
     /// implementations (resolved by [`ScanPlan::resolve`]).
     Auto,
@@ -106,6 +117,11 @@ impl ScanPlan {
         Self::new().with_strategy(Strategy::Chunked { threads })
     }
 
+    /// Shorthand: a lane-chained (slots × time) plan.
+    pub fn chained(threads: usize) -> Self {
+        Self::new().with_strategy(Strategy::Chained { threads })
+    }
+
     /// Shorthand: let the plan pick per sequence length.
     pub fn auto() -> Self {
         Self::new()
@@ -136,10 +152,17 @@ impl ScanPlan {
     pub fn resolve(&self, t_len: usize) -> Strategy {
         match self.strategy {
             Strategy::Auto => {
-                if self.batch > 1 || t_len <= AUTO_SEQUENTIAL_MAX_T {
-                    // batched work parallelises across rows instead
-                    // (see prefix_batch); short sequences aren't worth
-                    // the thread launch.
+                if self.batch > 1 {
+                    // batched work parallelises across rows, each row
+                    // sequential — the lane-chained layout (see
+                    // prefix_batch / NativeLm::prefill_ragged).
+                    Strategy::Chained {
+                        threads: self
+                            .batch
+                            .min(crate::util::pool::default_threads()),
+                    }
+                } else if t_len <= AUTO_SEQUENTIAL_MAX_T {
+                    // short sequences aren't worth the thread launch.
                     Strategy::Sequential
                 } else {
                     Strategy::Chunked {
@@ -150,7 +173,25 @@ impl ScanPlan {
             Strategy::Chunked { threads } => {
                 Strategy::Chunked { threads: threads.max(1) }
             }
+            Strategy::Chained { threads } => {
+                Strategy::Chained { threads: threads.max(1) }
+            }
             s => s,
+        }
+    }
+
+    /// Resolve for a multi-lane round: `lanes` ragged sequences, longest
+    /// `max_t`, scanned together (the serving engine's fused prefill).
+    /// `Auto` picks by (B, T, cores): two or more lanes go lane-chained
+    /// across the pool; a single lane falls back to [`Self::resolve`]'s
+    /// time-axis choice.  Never returns [`Strategy::Auto`].
+    pub fn resolve_lanes(&self, lanes: usize, max_t: usize) -> Strategy {
+        match self.strategy {
+            Strategy::Auto if lanes > 1 => Strategy::Chained {
+                threads: lanes
+                    .min(crate::util::pool::default_threads()),
+            },
+            _ => self.resolve(max_t),
         }
     }
 }
@@ -240,8 +281,10 @@ where
         return Vec::new();
     }
     let max_t = rows.iter().map(|r| F::len(r)).max().unwrap_or(0);
-    let workers = match plan.resolve(max_t) {
-        Strategy::Chunked { threads } => threads.min(b),
+    let workers = match plan.resolve_lanes(b, max_t) {
+        Strategy::Chunked { threads } | Strategy::Chained { threads } => {
+            threads.min(b)
+        }
         _ => 1,
     };
     if b == 1 || workers <= 1 {
@@ -251,14 +294,14 @@ where
             .map(|(row, bel)| F::prefix(params, row, bel, plan))
             .collect();
     }
-    // Parallelise across rows; per-row work stays sequential so the
-    // machine is not oversubscribed (B-parallelism replaces
-    // T-parallelism).
+    // Parallelise across rows on the shared persistent pool; per-row
+    // work stays sequential so the machine is not oversubscribed
+    // (B-parallelism replaces T-parallelism).
     let row_plan = ScanPlan::sequential().with_batch(plan.batch());
     let mut out: Vec<Option<(F::Output, F::Belief)>> = Vec::new();
     out.resize_with(b, || None);
     let chunk = b.div_ceil(workers);
-    std::thread::scope(|scope| {
+    crate::util::thread_pool::ThreadPool::global().scope(|scope| {
         let mut rest = &mut out[..];
         let mut base = 0usize;
         while !rest.is_empty() {
@@ -352,8 +395,13 @@ impl Filter for KlaFilter {
               belief: &KlaBelief, plan: &ScanPlan)
               -> (FilterOutputs, KlaBelief) {
         let out = match plan.resolve(inputs.t) {
-            Strategy::Sequential => scan::filter_sequential_from(
-                params, inputs, &belief.lam, &belief.eta),
+            // a single sequence is one lane of the chain: sequential,
+            // bit-exact (lane-parallelism lives in prefix_batch /
+            // NativeLm::prefill_ragged)
+            Strategy::Sequential | Strategy::Chained { .. } => {
+                scan::filter_sequential_from(
+                    params, inputs, &belief.lam, &belief.eta)
+            }
             Strategy::Blelloch => scan::filter_blelloch_from(
                 params, inputs, &belief.lam, &belief.eta),
             Strategy::Chunked { threads } => scan::filter_chunked_from(
@@ -453,8 +501,10 @@ impl Filter for GlaFilter {
               plan: &ScanPlan) -> (Vec<f32>, GlaBelief) {
         let (t, s) = (inputs.t, params.s);
         let out = match plan.resolve(t) {
-            Strategy::Sequential => linear_scan_sequential(
-                t, s, &inputs.f, &inputs.b, &belief.h),
+            Strategy::Sequential | Strategy::Chained { .. } => {
+                linear_scan_sequential(
+                    t, s, &inputs.f, &inputs.b, &belief.h)
+            }
             Strategy::Blelloch => linear_scan_blelloch(
                 t, s, &inputs.f, &inputs.b, &belief.h),
             Strategy::Chunked { threads } => linear_scan_chunked(
@@ -508,14 +558,60 @@ mod tests {
             Strategy::Chunked { threads } => assert!(threads >= 1),
             other => panic!("expected chunked, got {other:?}"),
         }
-        // batched plans keep rows sequential (prefix_batch parallelises
-        // across rows instead)
-        assert_eq!(ScanPlan::auto().with_batch(8).resolve(1 << 16),
-                   Strategy::Sequential);
+        // batched plans go lane-chained: rows distributed across the
+        // pool, each row sequential
+        match ScanPlan::auto().with_batch(8).resolve(1 << 16) {
+            Strategy::Chained { threads } => {
+                assert!(threads >= 1 && threads <= 8)
+            }
+            other => panic!("expected chained, got {other:?}"),
+        }
         // explicit strategies resolve to themselves
         assert_eq!(ScanPlan::blelloch().resolve(10), Strategy::Blelloch);
         assert_eq!(ScanPlan::chunked(0).resolve(10),
                    Strategy::Chunked { threads: 1 });
+        assert_eq!(ScanPlan::chained(0).resolve(10),
+                   Strategy::Chained { threads: 1 });
+    }
+
+    #[test]
+    fn resolve_lanes_picks_by_lane_count() {
+        // multi-lane Auto goes lane-chained regardless of T
+        match ScanPlan::auto().resolve_lanes(4, 8) {
+            Strategy::Chained { threads } => {
+                assert!(threads >= 1 && threads <= 4)
+            }
+            other => panic!("expected chained, got {other:?}"),
+        }
+        // one lane falls back to the time-axis choice
+        assert_eq!(ScanPlan::auto().resolve_lanes(1, 64),
+                   Strategy::Sequential);
+        match ScanPlan::auto().resolve_lanes(1, 1 << 16) {
+            Strategy::Chunked { threads } => assert!(threads >= 1),
+            other => panic!("expected chunked, got {other:?}"),
+        }
+        // explicit strategies pass through (sanitised)
+        assert_eq!(ScanPlan::blelloch().resolve_lanes(4, 8),
+                   Strategy::Blelloch);
+        assert_eq!(ScanPlan::chained(0).resolve_lanes(4, 8),
+                   Strategy::Chained { threads: 1 });
+    }
+
+    #[test]
+    fn chained_prefix_is_bit_exact_vs_sequential() {
+        let mut rng = Pcg64::seeded(14);
+        let (t, n, d) = (23, 2, 3);
+        let p = random_params(&mut rng, n, d);
+        let inp = random_inputs(&mut rng, t, n, d);
+        let prior = KlaFilter::init(&p);
+        let (seq, seq_b) =
+            KlaFilter::prefix(&p, &inp, &prior, &ScanPlan::sequential());
+        let (cha, cha_b) =
+            KlaFilter::prefix(&p, &inp, &prior, &ScanPlan::chained(4));
+        assert_eq!(seq.y, cha.y);
+        assert_eq!(seq.lam, cha.lam);
+        assert_eq!(seq.eta, cha.eta);
+        assert_eq!(seq_b, cha_b);
     }
 
     #[test]

@@ -210,8 +210,18 @@ pub struct ServeConfig {
     pub prefix_cache_bytes: usize,
     /// Prefix-cache snapshot granularity in prompt tokens (0 = use
     /// `prefill_chunk`, which keeps cached offsets chunk-aligned — the
-    /// generation-identity condition, DESIGN.md §S15).
+    /// generation-identity condition, DESIGN.md §S15).  A non-zero value
+    /// that is not a multiple of `prefill_chunk` is rounded UP to the
+    /// next chunk multiple at engine boot (with a logged warning):
+    /// fused prefill rounds only land cursors on chunk multiples, so an
+    /// unaligned block would never produce a snapshot.
     pub prefix_cache_block: usize,
+    /// Worker threads for the native backend's fused (slots x time)
+    /// prefill rounds (0 = auto: resolve per round from batch width,
+    /// total prompt tokens, and the core count — `api::Strategy::Auto`).
+    /// A fixed value pins `Strategy::Chained { threads }`.  Ignored by
+    /// the XLA backend, which prefills per slot inside its artifact.
+    pub prefill_threads: usize,
 }
 
 impl Default for ServeConfig {
@@ -236,6 +246,7 @@ impl Default for ServeConfig {
             max_inflight: 64,
             prefix_cache_bytes: 0,
             prefix_cache_block: 0,
+            prefill_threads: 0,
         }
     }
 }

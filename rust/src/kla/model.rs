@@ -19,7 +19,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::api::{Filter, KlaBelief, KlaFilter, ScanPlan};
+use crate::api::{Filter, KlaBelief, KlaFilter, ScanPlan, Strategy};
 use crate::kla::ou::{discretise_raw, sigmoid, softplus};
 use crate::kla::scan::{FilterInputs, FilterParams};
 use crate::runtime::backend::DecodeState;
@@ -488,6 +488,88 @@ impl NativeLm {
         Ok((Tensor::new(&[v], lrow)?, next))
     }
 
+    /// Fused multi-dimensional (slots × time) prefill: one ragged token
+    /// chunk per lane — `lanes[i] = (slot, tokens)`, slots distinct,
+    /// every chunk non-empty — scanned together from the carried
+    /// batched `state`.  Returns, per lane, `(slot, last-position
+    /// logits (V,), advanced single-lane state)` in submission order.
+    /// No lane outside `lanes` is read or advanced.
+    ///
+    /// Execution resolves through [`ScanPlan::resolve_lanes`]: under
+    /// `Strategy::Chained { threads }` (what `Auto` picks for two or
+    /// more lanes) the lanes are distributed across the shared
+    /// persistent pool (`util::thread_pool`) — the row-chained layout
+    /// of a multi-dimensional scan, each lane's time axis one
+    /// sequential chain, so every lane is bit-exact against
+    /// [`Self::prefill_slot`] under the sequential plan.  Any other
+    /// resolved strategy runs the lanes in submission order with that
+    /// per-lane time strategy, making an explicit Blelloch/Chunked
+    /// plan behave exactly like per-slot prefill.
+    pub fn prefill_ragged(&self, lanes: &[(usize, &[i32])],
+                          state: &DecodeState, plan: &ScanPlan)
+                          -> Result<Vec<(usize, Tensor, DecodeState)>> {
+        if lanes.is_empty() {
+            return Ok(Vec::new());
+        }
+        let b = state.batch();
+        let mut used = vec![false; b];
+        let mut max_t = 0usize;
+        for &(slot, toks) in lanes {
+            if toks.is_empty() {
+                bail!("prefill_ragged: empty token lane for slot {slot}");
+            }
+            if slot >= b {
+                bail!("prefill_ragged: slot {slot} out of range for \
+                       batch {b}");
+            }
+            if used[slot] {
+                bail!("prefill_ragged: slot {slot} appears twice");
+            }
+            used[slot] = true;
+            max_t = max_t.max(toks.len());
+        }
+        let (workers, lane_plan) =
+            match plan.resolve_lanes(lanes.len(), max_t) {
+                Strategy::Chained { threads } => {
+                    (threads.min(lanes.len()), ScanPlan::sequential())
+                }
+                s => (1, ScanPlan::new().with_strategy(s)),
+            };
+        let run = |&(slot, toks): &(usize, &[i32])|
+                   -> Result<(usize, Tensor, DecodeState)> {
+            let tok_t = IntTensor::new(&[toks.len()], toks.to_vec())?;
+            let (logits, lane) =
+                self.prefill_slot(&tok_t, slot, state, &lane_plan)?;
+            Ok((slot, logits, lane))
+        };
+        if workers <= 1 {
+            return lanes.iter().map(run).collect();
+        }
+        let mut out: Vec<Option<Result<(usize, Tensor, DecodeState)>>> =
+            Vec::new();
+        out.resize_with(lanes.len(), || None);
+        let chunk = lanes.len().div_ceil(workers);
+        crate::util::thread_pool::ThreadPool::global().scope(|scope| {
+            let mut rest = &mut out[..];
+            let mut base = 0usize;
+            while !rest.is_empty() {
+                let take = chunk.min(rest.len());
+                let (head, tail) = rest.split_at_mut(take);
+                rest = tail;
+                let run = &run;
+                scope.spawn(move || {
+                    for (off, cell) in head.iter_mut().enumerate() {
+                        *cell = Some(run(&lanes[base + off]));
+                    }
+                });
+                base += take;
+            }
+        });
+        out.into_iter()
+            .map(|cell| cell.expect("every lane ran"))
+            .collect()
+    }
+
     /// Shared forward core of [`Self::prefix_from`] / [`Self::prefill_slot`]:
     /// residual stream h (B, T, D) plus the advanced state, head not yet
     /// applied.  The conv window in `state` seeds each lane's projection
@@ -860,6 +942,100 @@ mod tests {
                 assert!(close(*a, *e), "plan={plan:?} eta {a} vs {e}");
             }
         }
+    }
+
+    #[test]
+    fn prefill_ragged_matches_per_slot_bit_exact() {
+        // the fused (slots × time) round is the row-chained layout:
+        // each lane sequential, so per-lane results are bit-identical
+        // to prefill_slot under the sequential plan
+        let lm = NativeLm::seeded(&tiny(), 31);
+        let b = 4usize;
+        // dirty the carry so lanes differ
+        let mut state = lm.init_state(b);
+        for warm in [3i32, 7] {
+            let col: Vec<i32> = (0..b).map(|bi| warm + bi as i32).collect();
+            let (_, next) = lm
+                .step(&IntTensor::new(&[b], col).unwrap(), &state)
+                .unwrap();
+            state = next;
+        }
+        let chunks: Vec<Vec<i32>> = vec![
+            (0..9).map(|i| (i * 5 % 16) as i32).collect(),
+            vec![2],
+            (0..17).map(|i| (i * 3 % 16) as i32).collect(),
+        ];
+        // ragged lanes on slots {0, 2, 3}; slot 1 untouched
+        let lanes: Vec<(usize, &[i32])> = vec![
+            (0, &chunks[0][..]),
+            (2, &chunks[1][..]),
+            (3, &chunks[2][..]),
+        ];
+        for plan in [ScanPlan::auto(), ScanPlan::chained(3),
+                     ScanPlan::chained(1)] {
+            let fused = lm.prefill_ragged(&lanes, &state, &plan).unwrap();
+            assert_eq!(fused.len(), lanes.len(), "plan={plan:?}");
+            for ((slot, toks), (fslot, flg, flane)) in
+                lanes.iter().zip(&fused)
+            {
+                assert_eq!(slot, fslot);
+                let tok_t =
+                    IntTensor::new(&[toks.len()], toks.to_vec()).unwrap();
+                let (lg, lane) = lm
+                    .prefill_slot(&tok_t, *slot, &state,
+                                  &ScanPlan::sequential())
+                    .unwrap();
+                assert_eq!(flg.data(), lg.data(),
+                           "plan={plan:?} slot={slot}");
+                assert_eq!(flane.lam.data(), lane.lam.data());
+                assert_eq!(flane.eta.data(), lane.eta.data());
+                assert_eq!(flane.conv.data(), lane.conv.data());
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_ragged_explicit_plan_behaves_like_per_slot() {
+        // an explicit Blelloch plan runs each lane with that time
+        // strategy — identical to prefill_slot under the same plan
+        let lm = NativeLm::seeded(&tiny(), 32);
+        let state = lm.init_state(2);
+        let a: Vec<i32> = (0..11).map(|i| (i % 16) as i32).collect();
+        let lanes: Vec<(usize, &[i32])> = vec![(1, &a[..])];
+        let fused = lm
+            .prefill_ragged(&lanes, &state, &ScanPlan::blelloch())
+            .unwrap();
+        let tok_t = IntTensor::new(&[a.len()], a.clone()).unwrap();
+        let (lg, lane) = lm
+            .prefill_slot(&tok_t, 1, &state, &ScanPlan::blelloch())
+            .unwrap();
+        assert_eq!(fused[0].1.data(), lg.data());
+        assert_eq!(fused[0].2.lam.data(), lane.lam.data());
+    }
+
+    #[test]
+    fn prefill_ragged_validates_lanes() {
+        let lm = NativeLm::seeded(&tiny(), 33);
+        let state = lm.init_state(2);
+        let a = [1i32, 2, 3];
+        // empty lane set is fine
+        assert!(lm
+            .prefill_ragged(&[], &state, &ScanPlan::auto())
+            .unwrap()
+            .is_empty());
+        // empty chunk
+        assert!(lm
+            .prefill_ragged(&[(0, &[][..])], &state, &ScanPlan::auto())
+            .is_err());
+        // slot out of range
+        assert!(lm
+            .prefill_ragged(&[(2, &a[..])], &state, &ScanPlan::auto())
+            .is_err());
+        // duplicate slot
+        assert!(lm
+            .prefill_ragged(&[(0, &a[..]), (0, &a[..])], &state,
+                            &ScanPlan::auto())
+            .is_err());
     }
 
     #[test]

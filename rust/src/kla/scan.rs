@@ -1,5 +1,11 @@
 //! Native KLA information filter: sequential, Blelloch-parallel, and
-//! chunked multi-threaded scans over a (T, N, D) state grid.
+//! chunked multi-threaded scans over a (T, N, D) state grid.  The time
+//! axis is the only one chunked here; the lane (slot) axis of a batched
+//! round is parallelised one level up — `api::prefix_batch` /
+//! `NativeLm::prefill_ragged` chain whole lanes across the shared
+//! `util::thread_pool`, each lane running these sequential kernels
+//! unchanged (which is what keeps multi-lane rounds bit-exact against
+//! single-lane scans).
 //!
 //! This is the L3-side mirror of the L1 kernels — used by the Fig. 4
 //! compute-scaling study (recurrent vs scan on CPU cores), by the property

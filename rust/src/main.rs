@@ -43,6 +43,10 @@ fn app() -> App {
                      "prompt tokens per scan-prefill call, native \
                       backend (1 = token-by-token prefill; xla always \
                       interleaves token-by-token)")
+                .opt("prefill-threads", "0",
+                     "worker threads for the fused (slots x time) \
+                      prefill round, native backend (0 = auto from \
+                      batch width and core count)")
                 .opt("pad", "0", "pad token id for idle lanes and empty \
                       prompts")
                 .opt("temperature", "0",
@@ -210,6 +214,7 @@ fn cmd_serve(m: &Matches) -> Result<()> {
         uncertainty_temp: m.get_f64("uncertainty-temp")?,
         stop_tokens,
         prefill_chunk: m.get_usize("prefill-chunk")?,
+        prefill_threads: m.get_usize("prefill-threads")?,
         prefix_cache_bytes: m.get_usize("prefix-cache-mb")? * (1 << 20),
         prefix_cache_block: m.get_usize("prefix-cache-block")?,
         pad: m.get("pad")?
@@ -244,6 +249,13 @@ fn cmd_serve(m: &Matches) -> Result<()> {
                     std::path::Path::new(&ckpt), batch, process_noise,
                     ou_exact)?
             };
+            // fused-prefill plan: 0 = auto (resolved per round from
+            // batch width, prompt lengths, and the core count)
+            let plan = match cfg.prefill_threads {
+                0 => kla::api::ScanPlan::auto(),
+                n => kla::api::ScanPlan::chained(n),
+            };
+            let backend = backend.with_prefill_plan(plan);
             kla::serve::serve_native(backend, &cfg)?
         }
         "xla" => {

@@ -145,23 +145,61 @@ pub trait DecodeBackend {
         let row = logits.data()[slot * v..(slot + 1) * v].to_vec();
         Ok((Tensor::new(&[v], row)?, cur.slot(slot)?))
     }
+
+    /// Fused multi-dimensional (slots × time) prefill round: one ragged
+    /// token chunk per lane, all consumed in one call.  Returns exactly
+    /// one entry per input lane, in submission order, each carrying
+    /// that lane's own `Result` — a failing lane never poisons its
+    /// neighbours, which is what lets the serving engine fail a single
+    /// request instead of the whole round (per-slot fault isolation).
+    ///
+    /// The default implementation loops `prefill()` per lane (the XLA
+    /// path, whose execution graph is fixed per call, keeps exactly its
+    /// old per-slot cost).  Backends with a native multi-lane scan
+    /// override it: `NativeBackend` hands the whole ragged batch to
+    /// `NativeLm::prefill_ragged`, which chains lanes across the shared
+    /// work-stealing pool, so one burst of admissions costs one fused
+    /// scan round instead of B serial ones.
+    fn prefill_batch(&self, lanes: &[(usize, &[i32])],
+                     state: &DecodeState)
+                     -> Vec<(usize, Result<(Tensor, DecodeState)>)> {
+        per_slot_prefill(self, lanes, state)
+    }
+}
+
+/// The per-slot `prefill_batch` fallback: one `prefill()` call per lane,
+/// each lane's error captured on its own entry.
+fn per_slot_prefill<B: DecodeBackend + ?Sized>(
+    be: &B, lanes: &[(usize, &[i32])], state: &DecodeState)
+    -> Vec<(usize, Result<(Tensor, DecodeState)>)> {
+    lanes
+        .iter()
+        .map(|&(slot, toks)| {
+            let res = IntTensor::new(&[toks.len()], toks.to_vec())
+                .and_then(|t| be.prefill(&t, slot, state));
+            (slot, res)
+        })
+        .collect()
 }
 
 /// The pure-Rust backend: a `NativeLm` pinned to a fixed batch width.
 pub struct NativeBackend {
     lm: NativeLm,
     batch: usize,
-    /// Scan strategy for `prefill()` chunks.  Blelloch by default: the
-    /// O(log T)-depth tree over `util::prefix::blelloch_inclusive`, with
-    /// no thread-launch overhead at serving chunk sizes; swap in
-    /// `ScanPlan::chunked(threads)` for multi-core prompts.
+    /// Scan strategy for `prefill()` / `prefill_batch()` chunks.  `Auto`
+    /// by default, which resolves by (lanes, T, cores): multi-lane
+    /// rounds go lane-chained across the shared `util::thread_pool`
+    /// (each lane sequential, bit-exact), single short chunks stay
+    /// sequential, and long single chunks go time-chunked.  Override
+    /// with `ScanPlan::chained(threads)` to pin the lane worker count,
+    /// or `ScanPlan::blelloch()` for the O(log T) tree shape.
     prefill_plan: ScanPlan,
 }
 
 impl NativeBackend {
     pub fn new(lm: NativeLm, batch: usize) -> Self {
         assert!(batch >= 1, "backend batch must be >= 1");
-        NativeBackend { lm, batch, prefill_plan: ScanPlan::blelloch() }
+        NativeBackend { lm, batch, prefill_plan: ScanPlan::auto() }
     }
 
     /// Override the scan plan `prefill()` uses per layer.
@@ -226,6 +264,21 @@ impl DecodeBackend for NativeBackend {
     fn prefill(&self, tokens: &IntTensor, slot: usize,
                state: &DecodeState) -> Result<(Tensor, DecodeState)> {
         self.lm.prefill_slot(tokens, slot, state, &self.prefill_plan)
+    }
+
+    fn prefill_batch(&self, lanes: &[(usize, &[i32])],
+                     state: &DecodeState)
+                     -> Vec<(usize, Result<(Tensor, DecodeState)>)> {
+        match self.lm.prefill_ragged(lanes, state, &self.prefill_plan) {
+            Ok(rows) => rows
+                .into_iter()
+                .map(|(slot, logits, lane)| (slot, Ok((logits, lane))))
+                .collect(),
+            // A structural error (empty chunk, bad/duplicate slot)
+            // failed the fused call before any scan ran; degrade to the
+            // per-slot loop so only the offending lanes carry errors.
+            Err(_) => per_slot_prefill(self, lanes, state),
+        }
     }
 }
 
@@ -336,6 +389,123 @@ mod tests {
         {
             assert!(close(*a, *e), "conv {a} vs {e}");
         }
+    }
+
+    #[test]
+    fn prefill_batch_fused_and_fallback_agree() {
+        // one fused (slots × time) round vs the trait's per-slot
+        // fallback: same lanes, same results within the scan tolerance
+        let be = backend();
+        let st = be.init_state().unwrap();
+        let a: Vec<i32> = (0..9).map(|i| i % 16).collect();
+        let b: Vec<i32> = vec![7];
+        let c: Vec<i32> = (0..13).map(|i| (i * 3) % 16).collect();
+        let lanes: Vec<(usize, &[i32])> =
+            vec![(0, &a[..]), (1, &b[..]), (2, &c[..])];
+        let fused = be.prefill_batch(&lanes, &st);
+        let fallback = per_slot_prefill(&SeqOnly(backend()), &lanes, &st);
+        assert_eq!(fused.len(), 3);
+        let close =
+            |a: f32, e: f32| crate::testing::rel_close(a, e, 1e-5);
+        for ((fs, fr), (ss, sr)) in fused.iter().zip(&fallback) {
+            assert_eq!(fs, ss);
+            let (flg, flane) = fr.as_ref().unwrap();
+            let (slg, slane) = sr.as_ref().unwrap();
+            for (x, e) in flg.data().iter().zip(slg.data()) {
+                assert!(close(*x, *e), "slot {fs} logits {x} vs {e}");
+            }
+            for (x, e) in flane.lam.data().iter().zip(slane.lam.data()) {
+                assert!(close(*x, *e), "slot {fs} lam {x} vs {e}");
+            }
+            for (x, e) in flane.eta.data().iter().zip(slane.eta.data()) {
+                assert!(close(*x, *e), "slot {fs} eta {x} vs {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_batch_fused_matches_per_slot_override_bit_exact() {
+        // the fused round chains each lane sequentially, and the native
+        // per-slot prefill under the Auto plan resolves sequential at
+        // chunk sizes — so the two native paths agree bit-for-bit
+        let be = backend();
+        let st = be.init_state().unwrap();
+        let a: Vec<i32> = (0..9).map(|i| i % 16).collect();
+        let c: Vec<i32> = (0..13).map(|i| (i * 3) % 16).collect();
+        let lanes: Vec<(usize, &[i32])> = vec![(1, &a[..]), (2, &c[..])];
+        let fused = be.prefill_batch(&lanes, &st);
+        for (slot, res) in fused {
+            let toks = if slot == 1 { &a } else { &c };
+            let tok_t =
+                IntTensor::new(&[toks.len()], toks.clone()).unwrap();
+            let (lg, lane) = be.prefill(&tok_t, slot, &st).unwrap();
+            let (flg, flane) = res.unwrap();
+            assert_eq!(flg.data(), lg.data(), "slot {slot}");
+            assert_eq!(flane.lam.data(), lane.lam.data());
+            assert_eq!(flane.eta.data(), lane.eta.data());
+            assert_eq!(flane.conv.data(), lane.conv.data());
+        }
+    }
+
+    /// Fails `prefill` on one designated slot — the fault-injection
+    /// shape the engine's per-request isolation test uses.
+    struct FaultySlot(NativeBackend, usize);
+
+    impl DecodeBackend for FaultySlot {
+        fn batch(&self) -> usize {
+            self.0.batch()
+        }
+        fn vocab(&self) -> usize {
+            self.0.vocab()
+        }
+        fn kind(&self) -> &'static str {
+            "faulty"
+        }
+        fn init_state(&self) -> Result<DecodeState> {
+            self.0.init_state()
+        }
+        fn step(&self, tokens: &IntTensor, state: &DecodeState)
+                -> Result<(Tensor, DecodeState)> {
+            self.0.step(tokens, state)
+        }
+        fn prefill_is_parallel(&self) -> bool {
+            true
+        }
+        fn prefill(&self, tokens: &IntTensor, slot: usize,
+                   state: &DecodeState) -> Result<(Tensor, DecodeState)> {
+            if slot == self.1 {
+                bail!("injected prefill fault on slot {slot}");
+            }
+            self.0.prefill(tokens, slot, state)
+        }
+    }
+
+    #[test]
+    fn prefill_batch_isolates_a_failing_lane() {
+        let be = FaultySlot(backend(), 1);
+        let st = be.init_state().unwrap();
+        let a: Vec<i32> = vec![1, 2, 3];
+        let lanes: Vec<(usize, &[i32])> =
+            vec![(0, &a[..]), (1, &a[..]), (2, &a[..])];
+        let out = be.prefill_batch(&lanes, &st);
+        assert_eq!(out.len(), 3);
+        assert!(out[0].1.is_ok());
+        assert!(out[1].1.is_err(), "slot 1 must carry its own error");
+        assert!(out[2].1.is_ok(), "slot 2 must survive slot 1's fault");
+    }
+
+    #[test]
+    fn prefill_batch_degrades_structural_errors_per_lane() {
+        // an out-of-range slot fails only its own lane on the native
+        // override too (the fused call degrades to the per-slot loop)
+        let be = backend();
+        let st = be.init_state().unwrap();
+        let a: Vec<i32> = vec![4, 5];
+        let lanes: Vec<(usize, &[i32])> = vec![(0, &a[..]), (9, &a[..])];
+        let out = be.prefill_batch(&lanes, &st);
+        assert_eq!(out.len(), 2);
+        assert!(out[0].1.is_ok());
+        assert!(out[1].1.is_err());
     }
 
     #[test]

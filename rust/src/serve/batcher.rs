@@ -129,6 +129,14 @@ pub struct Scheduler {
     pub queue: VecDeque<SchedRequest>,
     pub slots: Vec<Slot>,
     pad: i32,
+    /// Engine-owned (chunked) prefill mode: the engine drains prompts via
+    /// [`Self::take_prefill`], so [`Self::feeds`] reports mid-prefill
+    /// slots as `Feed::Idle` and [`Self::advance`] leaves their cursors
+    /// alone.  Without this, the batched step between two chunked rounds
+    /// would feed such a slot one stray `Feed::Prefill` token, drifting
+    /// its cursor off the `k * chunk` grid the prefix cache aligns
+    /// snapshots to.
+    chunked: bool,
 }
 
 impl Scheduler {
@@ -137,7 +145,14 @@ impl Scheduler {
             queue: VecDeque::new(),
             slots: vec![Slot::Free; n_slots],
             pad,
+            chunked: false,
         }
+    }
+
+    /// Switch the scheduler into engine-owned (chunked) prefill mode.
+    /// The engine sets this once, iff it runs chunked prefill rounds.
+    pub fn set_chunked_prefill(&mut self, chunked: bool) {
+        self.chunked = chunked;
     }
 
     pub fn submit(&mut self, req: SchedRequest) {
@@ -280,7 +295,13 @@ impl Scheduler {
             .map(|slot| match slot {
                 Slot::Free => Feed::Idle,
                 Slot::Active { prompt, cursor, generated, max_new, .. } => {
-                    if *cursor < prompt.len() {
+                    let keep = usize::from(*max_new > 0);
+                    if self.chunked && *cursor + keep < prompt.len() {
+                        // engine-owned prefill: the next chunked round
+                        // consumes these tokens; feeding one here would
+                        // drift the cursor off the chunk grid
+                        Feed::Idle
+                    } else if *cursor < prompt.len() {
                         let tok = prompt[*cursor];
                         if *cursor + 1 == prompt.len() && *max_new > 0 {
                             Feed::Decode(tok) // last prompt token: sample
@@ -325,6 +346,7 @@ impl Scheduler {
     /// token is one of its stop tokens (stop ids inside the prompt never
     /// terminate — only sampled tokens are checked).
     pub fn advance(&mut self, sampled: &[i32]) -> Vec<Finished> {
+        let chunked = self.chunked;
         let mut done = Vec::new();
         for (i, slot) in self.slots.iter_mut().enumerate() {
             let Slot::Active {
@@ -333,6 +355,13 @@ impl Scheduler {
             else {
                 continue;
             };
+            // mirror of feeds(): a mid-prefill slot in engine-owned
+            // (chunked) mode was fed nothing this step, so its cursor
+            // must not move
+            let keep = usize::from(*max_new > 0);
+            if chunked && *cursor + keep < prompt.len() {
+                continue;
+            }
             let mut pushed = None;
             if *cursor < prompt.len() {
                 let sampled_now =
@@ -807,5 +836,125 @@ mod tests {
         s.release(done[0].slot);
         assert_eq!(s.active_count(), 0);
         assert!(!s.has_work());
+    }
+
+    // ---------------------------- engine-owned (chunked) prefill -----
+
+    #[test]
+    fn chunked_mode_idles_mid_prefill_slots_and_freezes_cursors() {
+        // regression for the alignment-drift bug: between two chunked
+        // rounds, feeds() used to hand the engine one Feed::Prefill token
+        // for a mid-prefill slot and advance() bumped its cursor, so
+        // cursors landed at k*(chunk+1) and block-aligned snapshot
+        // insertion never fired after the first chunk
+        let mut s = Scheduler::new(2, 0);
+        s.set_chunked_prefill(true);
+        s.submit(SchedRequest::greedy(1, (1..=10).collect(), 2));
+        s.submit(SchedRequest::greedy(2, vec![7], 2)); // already at Decode
+        s.admit();
+        assert_eq!(s.take_prefill(0, 4), vec![1, 2, 3, 4]);
+        // slot 0 is mid-prefill: Idle, NOT Prefill(5)
+        assert_eq!(s.feeds(), vec![Feed::Idle, Feed::Decode(7)]);
+        let done = s.advance(&[99, 42]);
+        assert!(done.is_empty());
+        // slot 0's cursor did not move; the next chunk starts at 5
+        assert_eq!(s.prefill_view(0).unwrap().cursor, 4);
+        assert_eq!(s.take_prefill(0, 4), vec![5, 6, 7, 8]);
+        assert_eq!(s.take_prefill(0, 4), vec![9]);
+        // prefill done: the held-back token is a sampled Decode feed
+        assert_eq!(s.feeds()[0], Feed::Decode(10));
+        // slot 1 kept decoding normally throughout
+        assert_eq!(s.feeds()[1], Feed::Decode(42));
+    }
+
+    #[test]
+    fn chunked_mode_idles_prefill_only_requests_until_consumed() {
+        // max_new == 0 in chunked mode: never fed by the batched step,
+        // retired by take_prefill_only_finished once fully consumed
+        let mut s = Scheduler::new(1, 0);
+        s.set_chunked_prefill(true);
+        s.submit(SchedRequest::greedy(1, vec![1, 2, 3], 0));
+        s.admit();
+        assert_eq!(s.feeds(), vec![Feed::Idle]);
+        s.advance(&[9]);
+        assert_eq!(s.prefill_view(0).unwrap().cursor, 0);
+        assert_eq!(s.take_prefill(0, 2), vec![1, 2]);
+        assert_eq!(s.feeds(), vec![Feed::Idle]);
+        assert!(s.take_prefill_only_finished().is_empty());
+        assert_eq!(s.take_prefill(0, 2), vec![3]);
+        assert_eq!(s.take_prefill_only_finished().len(), 1);
+    }
+
+    #[test]
+    fn legacy_mode_still_feeds_prefill_tokens() {
+        // without the flag, behaviour is unchanged (XLA fallback path)
+        let mut s = Scheduler::new(1, 0);
+        s.submit(SchedRequest::greedy(1, vec![5, 6, 7], 1));
+        s.admit();
+        assert_eq!(s.feeds(), vec![Feed::Prefill(5)]);
+        s.advance(&[9]);
+        assert_eq!(s.prefill_view(0).unwrap().cursor, 1);
+    }
+
+    // --------------------------------- cursor invariants (property) --
+
+    #[test]
+    fn prefill_cursor_invariants_hold_under_random_take_and_skip() {
+        // Property test over take_prefill / skip_prefill: across random
+        // prompt lengths, chunk sizes, and skip offsets the cursor
+        //   (a) never passes len - keep,
+        //   (b) never moves backwards,
+        //   (c) every take returns exactly prompt[before..after] — so
+        //       with no skips the concatenated takes are a prompt prefix.
+        let mut rng = crate::util::Pcg64::seeded(0x5eed_cafe);
+        for trial in 0..500u64 {
+            let len = 1 + (rng.next_u64() % 64) as usize;
+            let max_new = [0usize, 1, 4][(rng.next_u64() % 3) as usize];
+            let keep = usize::from(max_new > 0);
+            let prompt: Vec<i32> = (0..len as i32).map(|t| t * 3 + 1).collect();
+            let mut s = Scheduler::new(1, -1);
+            s.set_chunked_prefill(true);
+            s.submit(SchedRequest::greedy(trial, prompt.clone(), max_new));
+            s.admit();
+            let mut cursor = 0usize;
+            let mut taken: Vec<i32> = Vec::new();
+            let mut skipped_any = false;
+            for _ in 0..12 {
+                let view = s.prefill_view(0).unwrap();
+                assert_eq!(view.cursor, cursor, "trial {trial}");
+                if rng.next_u64() % 4 == 0 {
+                    let offset = (rng.next_u64() % (len as u64 + 5)) as usize;
+                    let skipped = s.skip_prefill(0, offset);
+                    let expect =
+                        offset.min(len - keep).max(cursor) - cursor;
+                    assert_eq!(skipped, expect, "trial {trial}");
+                    if skipped > 0 {
+                        skipped_any = true;
+                    }
+                    cursor += skipped;
+                } else {
+                    let chunk = (rng.next_u64() % 17) as usize;
+                    let toks = s.take_prefill(0, chunk);
+                    // (c) each take is exactly the next prompt slice
+                    assert_eq!(toks, &prompt[cursor..cursor + toks.len()],
+                               "trial {trial}");
+                    assert!(toks.len() <= chunk, "trial {trial}");
+                    cursor += toks.len();
+                    taken.extend_from_slice(&toks);
+                }
+                // (a) the held-back token is never consumed or skipped
+                assert!(cursor <= len - keep, "trial {trial}");
+                // (b) monotone: prefill_view re-checked at loop top
+            }
+            if !skipped_any {
+                // no skips: the takes concatenate to a prompt prefix
+                assert_eq!(taken, &prompt[..cursor], "trial {trial}");
+            }
+            // drained: nothing further to take, cursor parked at len-keep
+            // after a big final take
+            s.take_prefill(0, len);
+            assert_eq!(s.prefill_view(0).unwrap().cursor, len - keep);
+            assert!(s.take_prefill(0, len).is_empty());
+        }
     }
 }

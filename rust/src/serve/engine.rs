@@ -49,6 +49,11 @@ pub enum EngineEvent {
     /// Terminal: the full reply (`tokens` holds every sampled token, so
     /// collecting only this event reproduces the legacy one-shot reply).
     Done(EngineResponse),
+    /// Terminal: the request failed server-side — its lane of the fused
+    /// prefill round returned an error.  Only the offending request is
+    /// retired (its slot reset and released); the engine keeps serving
+    /// every other lane.
+    Failed { message: String },
 }
 
 /// Returned by [`EventSink::send`] when the receiving side is gone; the
@@ -83,7 +88,12 @@ impl EventSink for Sender<EngineResponse> {
             EngineEvent::Done(resp) => {
                 Sender::send(self, resp).map_err(|_| SinkClosed)
             }
-            EngineEvent::Started { .. } | EngineEvent::Token { .. } => Ok(()),
+            // a failed request has no reply: dropping the sender at
+            // retire surfaces to the caller as a channel disconnect,
+            // matching the pre-streaming behaviour for engine errors
+            EngineEvent::Started { .. }
+            | EngineEvent::Token { .. }
+            | EngineEvent::Failed { .. } => Ok(()),
         }
     }
 }
@@ -163,6 +173,10 @@ pub struct EngineStats {
     /// Requests retired by explicit cancel or sink disconnect before
     /// completing.
     pub cancelled: usize,
+    /// Requests retired because their lane of a fused prefill round
+    /// returned an error (per-slot fault isolation: the engine keeps
+    /// serving, only the offending request fails).
+    pub failed: usize,
     /// Tokens decoded for requests that never completed (cancelled /
     /// disconnected) — abandoned work the batch lanes burned.
     pub wasted_tokens: usize,
@@ -232,6 +246,7 @@ pub struct LiveStats {
     pub tokens_out: AtomicUsize,
     pub prefill_tokens: AtomicUsize,
     pub cancelled: AtomicUsize,
+    pub failed: AtomicUsize,
     pub wasted_tokens: AtomicUsize,
     /// Prefix-cache mirrors (engine-thread writes via `store`, so they
     /// are point-in-time copies of the single-owner cache's counters).
@@ -277,13 +292,31 @@ pub struct EngineOptions {
 
 impl EngineOptions {
     pub fn from_serve(cfg: &ServeConfig) -> Self {
+        // bad-config guard: chunked prefill parks cursors on multiples
+        // of prefill_chunk, so a cache block that is NOT a chunk
+        // multiple would never see a block-aligned cursor — the cache
+        // silently degrades to end-of-prefill snapshots only.  Round UP
+        // to the next chunk multiple and say so (0 keeps its "use
+        // prefill_chunk" meaning; chunk <= 1 is the legacy path, where
+        // the block is never consulted).
+        let mut block = cfg.prefix_cache_block;
+        if block > 0 && cfg.prefill_chunk > 1 && block % cfg.prefill_chunk != 0
+        {
+            let rounded =
+                block.div_ceil(cfg.prefill_chunk) * cfg.prefill_chunk;
+            crate::log_warn!(
+                "prefix-cache-block {block} is not a multiple of \
+                 prefill-chunk {}; rounding up to {rounded}",
+                cfg.prefill_chunk);
+            block = rounded;
+        }
         EngineOptions {
             batch_window: Duration::from_micros(cfg.batch_window_us),
             pad: cfg.pad,
             prefill_chunk: cfg.prefill_chunk,
             seed: cfg.seed,
             prefix_cache_bytes: cfg.prefix_cache_bytes,
-            prefix_cache_block: cfg.prefix_cache_block,
+            prefix_cache_block: block,
         }
     }
 }
@@ -485,6 +518,10 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
         None
     };
     let mut sched = Scheduler::new(b, opts.pad);
+    // engine-owned prefill: mid-prefill slots are Idle in the batched
+    // step and their cursors only move through take_prefill, so they
+    // stay on the k * chunk grid block-aligned snapshots need
+    sched.set_chunked_prefill(chunked);
     let mut pending = PendingTable::new();
     let mut next_id = 0u64;
     let mut stats = EngineStats::default();
@@ -637,51 +674,101 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
             sync_prefix_live(pc, live);
         }
 
-        // chunked prefill: ONE chunk round per engine iteration — each
-        // prefilling slot advances its prompt cursor by up to
-        // prefill_chunk tokens through a per-slot backend prefill()
-        // call, then the shared batched step below still runs, so
-        // in-flight decode lanes stall by at most one chunk scan per
-        // PREFILLING SLOT per iteration (a single long prompt never
-        // monopolises the engine; concurrent admissions each contribute
-        // one bounded chunk).
-        // Remaining prompt tokens flow through Feed::Prefill in the
-        // batched step exactly like the legacy path.  Skipped entirely
-        // at prefill_chunk <= 1, and for backends whose prefill() is the
-        // sequential fallback (XLA) — for those, chunked prefill would
-        // cost dedicated batch-wide steps the interleaved path shares.
+        // fused (slots × time) chunked prefill: ONE multi-dimensional
+        // round per engine iteration — every prefilling slot contributes
+        // up to prefill_chunk prompt tokens, and the whole ragged batch
+        // goes through a single backend prefill_batch() call (lane-
+        // chained across the shared thread pool on the native backend;
+        // the trait's per-slot fallback keeps the XLA path at exactly
+        // its old cost).  In-flight decode lanes stall by at most one
+        // round per iteration, and every lane carries its OWN Result: a
+        // failing lane fails only its request, never its neighbours or
+        // the engine.  Mid-prefill slots stay Idle in the batched step
+        // below (Scheduler::set_chunked_prefill), so cursors remain on
+        // the k * chunk grid block-aligned snapshot insertion needs.
+        // Skipped entirely at prefill_chunk <= 1, and for backends whose
+        // prefill() is the sequential fallback (XLA) — for those,
+        // chunked prefill would cost dedicated batch-wide steps the
+        // interleaved path shares.
         if chunked {
+            let mut lanes: Vec<(usize, Vec<i32>)> = Vec::new();
             for slot in 0..b {
                 let toks = sched.take_prefill(slot, opts.prefill_chunk);
                 if toks.is_empty() {
                     continue;
                 }
-                let n_toks = toks.len();
-                let clamped: Vec<i32> =
-                    toks.iter().map(|&t| t.clamp(0, vmax)).collect();
+                lanes.push((slot,
+                            toks.iter()
+                                .map(|&t| t.clamp(0, vmax))
+                                .collect()));
+            }
+            if !lanes.is_empty() {
+                let ragged: Vec<(usize, &[i32])> = lanes
+                    .iter()
+                    .map(|(s, t)| (*s, t.as_slice()))
+                    .collect();
                 let t0 = Instant::now();
-                let (_, lane) = backend.prefill(
-                    &IntTensor::new(&[n_toks], clamped)?, slot,
-                    cache.state())?;
-                cache.write_slot(slot, &lane)?;
+                let rows = backend.prefill_batch(&ragged, cache.state());
+                // one timing entry per fused round, not per lane
                 stats.prefill_ms.push(t0.elapsed().as_secs_f64() * 1e3);
-                stats.prefill_tokens += n_toks;
-                live.prefill_tokens.fetch_add(n_toks, Ordering::Relaxed);
-                // prefix cache: snapshot the slot at block-aligned
-                // cursors and at the end of prefill, keyed by the exact
-                // tokens consumed so far.  The end-of-prefill snapshot
-                // is what exact-prompt resubmissions full-hit; block-
-                // aligned ones serve shared-prefix partial hits.  Warm
-                // requests re-walk the same offsets — the duplicate
-                // insert is a recency refresh, not a second copy.
-                if let Some((fp, pc)) = pcache.as_mut() {
-                    if let Some(v) = sched.prefill_view(slot) {
-                        let done = v.cursor + v.keep == v.prompt.len();
-                        if v.cache
-                            && (v.cursor % pc.block() == 0 || done)
-                        {
-                            pc.insert(fp, &v.prompt[..v.cursor],
-                                      cache.snapshot(slot));
+                for (slot, row) in rows {
+                    let n_toks = ragged
+                        .iter()
+                        .find(|(s, _)| *s == slot)
+                        .map_or(0, |(_, t)| t.len());
+                    match row {
+                        Ok((_, lane)) => {
+                            cache.write_slot(slot, &lane)?;
+                            stats.prefill_tokens += n_toks;
+                            live.prefill_tokens
+                                .fetch_add(n_toks, Ordering::Relaxed);
+                            // prefix cache: snapshot the slot at block-
+                            // aligned cursors and at the end of prefill,
+                            // keyed by the exact tokens consumed so far.
+                            // The end-of-prefill snapshot is what exact-
+                            // prompt resubmissions full-hit; block-
+                            // aligned ones serve shared-prefix partial
+                            // hits.  Warm requests re-walk the same
+                            // offsets — the duplicate insert is a
+                            // recency refresh, not a second copy.
+                            if let Some((fp, pc)) = pcache.as_mut() {
+                                if let Some(v) = sched.prefill_view(slot)
+                                {
+                                    let done = v.cursor + v.keep
+                                        == v.prompt.len();
+                                    if v.cache
+                                        && (v.cursor % pc.block() == 0
+                                            || done)
+                                    {
+                                        pc.insert(
+                                            fp, &v.prompt[..v.cursor],
+                                            cache.snapshot(slot));
+                                    }
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            // per-request fault isolation: the lane's
+                            // belief state may be mid-write — reset it,
+                            // retire ONLY this request with a terminal
+                            // Failed event, and keep serving
+                            cache.reset_slot(slot);
+                            if let Some(id) = sched.slot_id(slot) {
+                                let _ = sched.cancel(id);
+                                sched.release(slot);
+                                stats.failed += 1;
+                                live.failed
+                                    .fetch_add(1, Ordering::Relaxed);
+                                if let Some((sink, ..)) =
+                                    pending.finish(id, Instant::now())
+                                {
+                                    let _ = sink.send(
+                                        EngineEvent::Failed {
+                                            message: format!(
+                                                "prefill failed: {e}"),
+                                        });
+                                }
+                            }
                         }
                     }
                 }
@@ -719,15 +806,39 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
         // finished-but-unreleased slots can never inflate it
         let live_lanes =
             feeds.iter().filter(|f| !matches!(f, Feed::Idle)).count();
+        // every active lane still mid-prefill (chunked mode reports them
+        // Idle): there is nothing to step — a batch-wide pad step would
+        // only burn compute and pollute the step/occupancy meters
+        if live_lanes == 0 {
+            continue;
+        }
         let any_decode =
             feeds.iter().any(|f| matches!(f, Feed::Decode(_)));
         let legacy_prefill_lanes =
             feeds.iter().filter(|f| matches!(f, Feed::Prefill(_))).count();
 
+        // shield mid-prefill lanes through the mixed batched step: they
+        // are fed pad (Feed::Idle), and without restoring afterwards the
+        // pad step would advance — i.e. corrupt — the belief state their
+        // next chunked round continues from
+        let mut shielded: Vec<(usize, _)> = Vec::new();
+        if chunked {
+            for slot in 0..b {
+                if let Some(v) = sched.prefill_view(slot) {
+                    if v.cursor + v.keep < v.prompt.len() {
+                        shielded.push((slot, cache.snapshot(slot)));
+                    }
+                }
+            }
+        }
+
         let t0 = Instant::now();
         let (logits, new_state) =
             backend.step(&IntTensor::new(&[b], tokens)?, cache.state())?;
         cache.set_state(new_state);
+        for (slot, snap) in &shielded {
+            cache.restore(*slot, snap)?;
+        }
         let elapsed_ms = t0.elapsed().as_secs_f64() * 1e3;
         // apportion the step's wall time between the prefill and decode
         // meters by lane fraction, so a mixed step (some lanes still
@@ -913,14 +1024,15 @@ mod tests {
                                     &live)
             .unwrap();
         assert_eq!(rrx.recv().unwrap().tokens.len(), 3);
-        // 16 prefill tokens: one chunk round per iteration (8, then the
-        // remaining 7 after a legacy token interleaves), so 2 chunked
-        // calls + 1 all-prefill batched step on the prefill meter
+        // 16 prefill tokens through two fused rounds (8 + 8): one
+        // prefill_ms entry per ROUND, and no stray Feed::Prefill token
+        // between them (the mid-prefill slot is Idle in the batched
+        // step, so the cursor stays on the chunk grid)
         assert_eq!(stats.prefill_tokens, 16);
-        assert_eq!(stats.prefill_ms.len(), 3);
-        // batched steps: 1 interleaved prefill + 3 sampled decode steps
-        // (last prompt token + 2 generated)
-        assert_eq!(stats.steps, 4);
+        assert_eq!(stats.prefill_ms.len(), 2);
+        // batched steps: 3 sampled decode steps (last prompt token + 2
+        // generated); the all-mid-prefill iteration steps nothing
+        assert_eq!(stats.steps, 3);
         assert_eq!(stats.step_ms.len(), 3);
         assert_eq!(stats.tokens_out, 3);
         assert_eq!(stats.cancelled, 0);
@@ -935,7 +1047,7 @@ mod tests {
                 "occupancy {:?}", stats.batch_occupancy);
         // live mirror saw the same counters
         assert_eq!(live.requests.load(Ordering::SeqCst), 1);
-        assert_eq!(live.steps.load(Ordering::SeqCst), 4);
+        assert_eq!(live.steps.load(Ordering::SeqCst), 3);
         assert_eq!(live.tokens_out.load(Ordering::SeqCst), 3);
         assert_eq!(live.prefill_tokens.load(Ordering::SeqCst), 16);
         assert_eq!(live.cancelled.load(Ordering::SeqCst), 0);
@@ -994,8 +1106,12 @@ mod tests {
         assert!(resp.uncertainty > 0.0);
         assert_eq!(stats.requests, 1);
         assert_eq!(stats.tokens_out, 0);
-        // chunk of 8, one interleaved legacy token, final chunk of 3
+        // two fused rounds (8 + 4) consume the whole prompt; no batched
+        // step ever runs for a prefill-only request
         assert_eq!(stats.prefill_tokens, 12);
+        assert_eq!(stats.prefill_ms.len(), 2);
+        assert_eq!(stats.steps, 0);
+        assert!(stats.step_ms.is_empty());
     }
 
     #[test]
@@ -1262,6 +1378,198 @@ mod tests {
                    b.cached_tokens);
         println!("engine prefix-cache hit: {} tokens restored, \
                   tokens identical: ok", b.cached_tokens);
+    }
+
+    #[test]
+    fn engine_options_round_cache_block_up_to_chunk_multiple() {
+        let base = ServeConfig::default();
+        // non-multiple block rounds UP to the next chunk multiple
+        let cfg = ServeConfig {
+            prefill_chunk: 8,
+            prefix_cache_block: 12,
+            ..base.clone()
+        };
+        assert_eq!(EngineOptions::from_serve(&cfg).prefix_cache_block, 16);
+        // exact multiples pass through untouched
+        let cfg = ServeConfig {
+            prefill_chunk: 8,
+            prefix_cache_block: 24,
+            ..base.clone()
+        };
+        assert_eq!(EngineOptions::from_serve(&cfg).prefix_cache_block, 24);
+        // 0 keeps its "use prefill_chunk" meaning
+        let cfg = ServeConfig {
+            prefill_chunk: 8,
+            prefix_cache_block: 0,
+            ..base.clone()
+        };
+        assert_eq!(EngineOptions::from_serve(&cfg).prefix_cache_block, 0);
+        // legacy path (chunk <= 1): the block is never consulted, so it
+        // passes through as-is
+        let cfg = ServeConfig {
+            prefill_chunk: 1,
+            prefix_cache_block: 12,
+            ..base
+        };
+        assert_eq!(EngineOptions::from_serve(&cfg).prefix_cache_block, 12);
+    }
+
+    #[test]
+    fn fused_rounds_insert_one_snapshot_per_block_boundary() {
+        // regression for the alignment-drift bug: a 4-block prompt
+        // (chunk 4, usable prefix 15) must land one cache insert per
+        // block boundary — cursors 4, 8, 12, then 15 at end of prefill.
+        // Before the fix, the batched step between rounds bumped the
+        // cursor once per iteration (5, 10, 15, ...), `cursor % block`
+        // never fired after the first chunk, and only the end-of-prefill
+        // snapshot survived.
+        let backend = tiny_backend(1);
+        let prompt: Vec<i32> = (0..16).map(|i| i % 16).collect();
+        let (rx, rrx) = one_request(prompt, 1);
+        let opts = EngineOptions {
+            prefix_cache_bytes: 1 << 20,
+            ..test_opts(4, 0)
+        };
+        let stats = run_engine_opts(&backend, rx, &opts,
+                                    Arc::new(AtomicBool::new(false)),
+                                    &Arc::new(LiveStats::default()))
+            .unwrap();
+        assert_eq!(rrx.recv().unwrap().tokens.len(), 1);
+        // four fused rounds (4 + 4 + 4 + 3), one timing entry each
+        assert_eq!(stats.prefill_tokens, 15);
+        assert_eq!(stats.prefill_ms.len(), 4);
+        // one entry per block boundary: prefixes 4, 8, 12 and the
+        // end-of-prefill snapshot at 15
+        assert_eq!(stats.prefix_entries, 4,
+                   "expected one snapshot per block crossing");
+        assert_eq!(stats.prefix_misses, 1);
+    }
+
+    /// Fails `prefill` on one designated slot — the engine-level fault
+    /// isolation shape (the backend-level twin lives in backend.rs).
+    struct FaultyPrefill(crate::runtime::backend::NativeBackend, usize);
+
+    impl DecodeBackend for FaultyPrefill {
+        fn batch(&self) -> usize {
+            self.0.batch()
+        }
+        fn vocab(&self) -> usize {
+            self.0.vocab()
+        }
+        fn kind(&self) -> &'static str {
+            "faulty"
+        }
+        fn init_state(&self)
+                      -> Result<crate::runtime::backend::DecodeState> {
+            self.0.init_state()
+        }
+        fn step(&self, tokens: &IntTensor,
+                state: &crate::runtime::backend::DecodeState)
+                -> Result<(crate::tensor::Tensor,
+                           crate::runtime::backend::DecodeState)> {
+            self.0.step(tokens, state)
+        }
+        fn prefill_is_parallel(&self) -> bool {
+            true
+        }
+        fn prefill(&self, tokens: &IntTensor, slot: usize,
+                   state: &crate::runtime::backend::DecodeState)
+                   -> Result<(crate::tensor::Tensor,
+                              crate::runtime::backend::DecodeState)> {
+            if slot == self.1 {
+                anyhow::bail!("injected prefill fault on slot {slot}");
+            }
+            self.0.prefill(tokens, slot, state)
+        }
+    }
+
+    #[test]
+    fn failed_prefill_retires_only_the_offending_request() {
+        // request A lands on the faulty slot: its prefill round errors,
+        // it gets a terminal Failed event, and the engine KEEPS SERVING
+        // — request B on the neighbouring lane completes normally.
+        // Before the fix, `backend.prefill(...)?` killed the engine
+        // thread and every in-flight request with it.
+        let backend = FaultyPrefill(tiny_backend(2), 0);
+        let (tx, rx) = channel::<EngineRequest>();
+        let (etx, erx) = channel::<EngineEvent>();
+        tx.send(EngineRequest::new((0..10).collect(), 2,
+                                   SamplerConfig::greedy(),
+                                   Box::new(etx)))
+            .unwrap();
+        let (rtx, rrx) = channel::<EngineResponse>();
+        tx.send(EngineRequest::new(vec![1, 2, 3], 2,
+                                   SamplerConfig::greedy(),
+                                   Box::new(rtx)))
+            .unwrap();
+        drop(tx);
+        let live = Arc::new(LiveStats::default());
+        let opts = test_opts(8, 0);
+        let stats = run_engine_opts(&backend, rx, &opts,
+                                    Arc::new(AtomicBool::new(false)),
+                                    &live)
+            .unwrap();
+        // B survived A's fault and completed on its own lane
+        let b = rrx.recv().unwrap();
+        assert_eq!(b.tokens.len(), 2);
+        assert!(!b.cancelled);
+        // A's stream: Started, then the terminal Failed — never Done
+        let events: Vec<EngineEvent> = erx.iter().collect();
+        assert!(matches!(events[0], EngineEvent::Started { .. }));
+        let Some(EngineEvent::Failed { message }) = events.last() else {
+            panic!("expected terminal Failed, got {:?}", events.last());
+        };
+        assert!(message.contains("injected prefill fault"),
+                "message: {message}");
+        assert_eq!(events.len(), 2);
+        assert_eq!(stats.failed, 1);
+        assert_eq!(stats.cancelled, 0);
+        assert_eq!(stats.requests, 2);
+        assert_eq!(stats.tokens_out, 2);
+        assert_eq!(live.failed.load(Ordering::SeqCst), 1);
+        println!("prefill fault isolation: engine survived, \
+                  1 failed / 1 completed: ok");
+    }
+
+    #[test]
+    fn mid_prefill_lanes_are_shielded_from_batched_steps() {
+        // a long request's lane sits mid-prefill for several iterations
+        // while a short request decodes: the pad its Idle lane is fed in
+        // those mixed steps must not perturb its belief state (the
+        // engine snapshots and restores shielded lanes around the step),
+        // so its greedy tokens equal a solo run's exactly
+        let long: Vec<i32> = (0..20).map(|i| (i * 5) % 16).collect();
+        let solo = {
+            let backend = tiny_backend(2);
+            let (rx, rrx) = one_request(long.clone(), 4);
+            let opts = test_opts(4, 0);
+            run_engine_opts(&backend, rx, &opts,
+                            Arc::new(AtomicBool::new(false)),
+                            &Arc::new(LiveStats::default()))
+                .unwrap();
+            rrx.recv().unwrap().tokens
+        };
+        assert_eq!(solo.len(), 4);
+        let backend = tiny_backend(2);
+        let (tx, rx) = channel::<EngineRequest>();
+        let (rtx_long, rrx_long) = channel::<EngineResponse>();
+        tx.send(EngineRequest::new(long, 4, SamplerConfig::greedy(),
+                                   Box::new(rtx_long)))
+            .unwrap();
+        let (rtx_short, rrx_short) = channel::<EngineResponse>();
+        tx.send(EngineRequest::new(vec![1, 2], 6,
+                                   SamplerConfig::greedy(),
+                                   Box::new(rtx_short)))
+            .unwrap();
+        drop(tx);
+        let opts = test_opts(4, 0);
+        run_engine_opts(&backend, rx, &opts,
+                        Arc::new(AtomicBool::new(false)),
+                        &Arc::new(LiveStats::default()))
+            .unwrap();
+        assert_eq!(rrx_short.recv().unwrap().tokens.len(), 6);
+        assert_eq!(rrx_long.recv().unwrap().tokens, solo,
+                   "mid-prefill lane perturbed by interleaved decode");
     }
 
     #[test]

@@ -14,14 +14,24 @@
 //! artifacts at all, while the XLA artifact session plugs into the same
 //! seam in production.  Because a KLA sequence's state never grows,
 //! scheduling has no memory watermark: admission is purely slot-bound.
-//! Prompt prefill is scan-based and chunked: one chunk round per engine
-//! iteration, up to `ServeConfig::prefill_chunk` tokens per slot per
-//! `DecodeBackend::prefill` call (the paper's time-parallel associative
-//! scan doing the work on the native backend), bounded so in-flight
-//! decodes never stall longer than one chunk scan per prefilling slot
-//! per iteration.  At `prefill_chunk <= 1`,
-//! or on backends without a parallel prefill (XLA), prompts fall back
-//! to one recurrent step per token interleaved with decode (batcher.rs).
+//! Prompt prefill is scan-based, chunked, and FUSED across slots: each
+//! engine iteration gathers up to `ServeConfig::prefill_chunk` tokens
+//! from EVERY mid-prefill slot and hands the whole ragged (slots ×
+//! time) round to one `DecodeBackend::prefill_batch` call — on the
+//! native backend a single multi-dimensional scan that chains lanes
+//! across the shared `util::thread_pool` (each lane sequential, so
+//! fused ≡ per-slot ≡ token-by-token, bit-exact), bounded so in-flight
+//! decodes never stall longer than one chunk round per iteration.  The
+//! round returns one `Result` per lane: a failing lane retires only its
+//! own request (terminal `prefill-failed` event, slot reset and
+//! released) while every other lane proceeds — per-slot fault
+//! isolation, never an engine-fatal error.  Mid-prefill cursors stay on
+//! the `prefill_chunk` grid (the scheduler idles those slots in the
+//! shared batched step rather than drip-feeding them tokens), which is
+//! what keeps block-aligned prefix-cache snapshot points reachable
+//! after the first chunk.  At `prefill_chunk <= 1`, or on backends
+//! without a parallel prefill (XLA), prompts fall back to one recurrent
+//! step per token interleaved with decode (batcher.rs).
 
 //! Per-request sampling & termination live in `sampling`: a composable
 //! [`SamplerConfig`] (greedy | temperature | top-k | top-p, optional

@@ -83,14 +83,15 @@
 //!   -> {"cmd": "ping"}     <- {"ok": true}
 //!   -> {"cmd": "stats"}    <- {"requests": N, "steps": N,
 //!       "tokens_out": N, "prefill_tokens": N, "cancelled": N,
-//!       "wasted_tokens": N, "prefix_hits": N, "prefix_partial_hits": N,
-//!       "prefix_misses": N, "prefix_evictions": N,
-//!       "prefix_cached_tokens": N, "prefix_bytes": N,
-//!       "prefix_entries": N}       (live counters; `cancelled` counts
-//!       requests retired early, `wasted_tokens` counts tokens decoded
-//!       for requests that never completed; the `prefix_*` counters
-//!       mirror the belief-state prefix cache and stay 0 when it is
-//!       disabled)
+//!       "failed": N, "wasted_tokens": N, "prefix_hits": N,
+//!       "prefix_partial_hits": N, "prefix_misses": N,
+//!       "prefix_evictions": N, "prefix_cached_tokens": N,
+//!       "prefix_bytes": N, "prefix_entries": N}
+//!       (live counters; `cancelled` counts requests retired early,
+//!       `failed` counts requests whose prefill round errored
+//!       server-side, `wasted_tokens` counts tokens decoded for
+//!       requests that never completed; the `prefix_*` counters mirror
+//!       the belief-state prefix cache and stay 0 when it is disabled)
 //!   -> {"cmd": "shutdown"} <- {"ok": true}    (stops the listener —
 //!       the handler pokes the accept loop itself, no external
 //!       connection needed for the server to quiesce)
@@ -112,10 +113,21 @@
 //! previously truncated silently), bad-max-new, max-new-too-large (over
 //! the server's max_new_limit — previously clamped silently),
 //! bad-temperature, bad-top-k, bad-top-p, bad-seed, bad-stop-tokens,
-//! bad-eos, bad-uncertainty-temp, bad-cache, unavailable (the engine is gone —
-//! also the terminal event of any ACCEPTED request the engine dropped
-//! without answering, e.g. when its thread errors out mid-serve, so a
-//! stream never just goes silent).
+//! bad-eos, bad-uncertainty-temp, bad-cache, prefill-failed (this
+//! request's lane of a fused prefill round errored — terminal for the
+//! request only; the engine releases the slot and keeps serving every
+//! other lane), unavailable (the engine is gone — also the terminal
+//! event of any ACCEPTED request the engine dropped without answering,
+//! e.g. when its thread errors out mid-serve, so a stream never just
+//! goes silent).
+//!
+//! ## Configuration notes
+//!
+//! A `--prefix-cache-block` that is not a multiple of
+//! `--prefill-chunk` would make snapshot boundaries unreachable by the
+//! fused prefill rounds (cursors only ever land on chunk multiples),
+//! so the server rounds the block UP to the next chunk multiple at
+//! boot and logs a warning instead of silently caching nothing.
 //!
 //! ## Determinism contract (unchanged from v1)
 //!
@@ -420,6 +432,14 @@ impl EventSink for ConnSink {
                 ]),
                 true,
             ),
+            // the request's lane of a fused prefill round errored; the
+            // engine has already released the slot — terminal for THIS
+            // request only, the connection and every other stream stay
+            // usable
+            EngineEvent::Failed { message } => (
+                err_reply(Some(self.id), "prefill-failed", &message),
+                true,
+            ),
         };
         if terminal {
             // the id becomes reusable the moment its terminal event is
@@ -552,6 +572,8 @@ fn handle_line(line: &str, ctx: &ConnCtx) -> Option<Json> {
                      n(live.prefill_tokens.load(Ordering::Relaxed))),
                     ("cancelled",
                      n(live.cancelled.load(Ordering::Relaxed))),
+                    ("failed",
+                     n(live.failed.load(Ordering::Relaxed))),
                     ("wasted_tokens",
                      n(live.wasted_tokens.load(Ordering::Relaxed))),
                     ("prefix_hits",
@@ -1076,7 +1098,7 @@ impl Client {
     }
 
     /// Live engine counters: requests, steps, tokens_out,
-    /// prefill_tokens, cancelled, wasted_tokens, plus the prefix-cache
+    /// prefill_tokens, cancelled, failed, wasted_tokens, plus the prefix-cache
     /// mirrors (prefix_hits, prefix_partial_hits, prefix_misses,
     /// prefix_evictions, prefix_cached_tokens, prefix_bytes,
     /// prefix_entries) — answered mid-serve, not only after shutdown.
@@ -1268,6 +1290,35 @@ mod tests {
         assert_eq!(tok.req("event").unwrap().as_str().unwrap(), "token");
         assert_eq!(tok.req("token").unwrap().as_i64().unwrap(), 7);
         assert_eq!(tok.req("index").unwrap().as_i64().unwrap(), 0);
+    }
+
+    #[test]
+    fn conn_sink_failed_is_a_terminal_prefill_failed_err() {
+        // a fused-prefill fault retires ONE request: the sink turns
+        // EngineEvent::Failed into a terminal err line, frees the id,
+        // and suppresses the drop-time unavailable event
+        let (wtx, wrx) = channel::<String>();
+        let active: ActiveMap = Arc::new(Mutex::new(HashMap::new()));
+        let s = sink(5, wtx, &active);
+        s.send(EngineEvent::Started { queue_ms: 0.0 }).unwrap();
+        s.send(EngineEvent::Failed {
+            message: "prefill failed: injected".into(),
+        })
+        .unwrap();
+        assert!(active.lock().unwrap().is_empty(),
+                "failed must free the id like done does");
+        drop(s);
+        let lines: Vec<String> = wrx.iter().collect();
+        assert_eq!(lines.len(), 2,
+                   "start + terminal err, NO drop event: {lines:?}");
+        let err = crate::util::json::parse(&lines[1]).unwrap();
+        assert_eq!(err.req("event").unwrap().as_str().unwrap(), "err");
+        assert_eq!(err.req("id").unwrap().as_i64().unwrap(), 5);
+        let body = err.req("err").unwrap();
+        assert_eq!(body.req("code").unwrap().as_str().unwrap(),
+                   "prefill-failed");
+        assert!(body.req("msg").unwrap().as_str().unwrap()
+                    .contains("injected"));
     }
 
     #[test]

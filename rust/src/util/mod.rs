@@ -9,6 +9,7 @@ pub mod logging;
 pub mod pool;
 pub mod prefix;
 pub mod rng;
+pub mod thread_pool;
 pub mod timer;
 
 pub use json::Json;

@@ -1,0 +1,367 @@
+//! Persistent work-stealing thread pool (DESIGN.md §S8).
+//!
+//! The scoped helpers in `util::pool` spawn fresh OS threads per call,
+//! which is fine for one long scan but wasteful for the serving engine's
+//! per-iteration fused prefill round (many small lane scans, every few
+//! milliseconds).  This pool keeps `n` workers alive for the process
+//! lifetime: jobs are pushed round-robin onto per-worker deques, a worker
+//! pops its own deque from the front and steals from the back of its
+//! peers when idle, and a blocked `scope()` caller assists by executing
+//! queued jobs itself (work-assisting, so a 1-thread pool can never
+//! deadlock a nested scope).
+//!
+//! Borrowed data is supported through [`ThreadPool::scope`], which does
+//! not return until every job spawned inside it has finished — the same
+//! structured-concurrency argument `std::thread::scope` makes, applied
+//! to persistent workers.
+
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Gate {
+    /// Bumped on every submission; workers sleep until it moves.
+    generation: u64,
+    shutdown: bool,
+}
+
+struct Shared {
+    /// One deque per worker.  Owners pop the front; thieves pop the back.
+    queues: Vec<Mutex<VecDeque<Job>>>,
+    gate: Mutex<Gate>,
+    wake: Condvar,
+    /// Round-robin submission cursor.
+    next: AtomicUsize,
+}
+
+impl Shared {
+    /// Pop a job: own deque first (front), then steal from peers (back).
+    fn find_job(&self, me: usize) -> Option<Job> {
+        if let Some(job) = self.queues[me].lock().unwrap().pop_front() {
+            return Some(job);
+        }
+        let n = self.queues.len();
+        for off in 1..n {
+            let victim = (me + off) % n;
+            if let Some(job) =
+                self.queues[victim].lock().unwrap().pop_back()
+            {
+                return Some(job);
+            }
+        }
+        None
+    }
+
+    /// Pop a job from any deque (used by assisting scope callers, which
+    /// own no deque of their own).
+    fn steal_any(&self) -> Option<Job> {
+        for q in &self.queues {
+            if let Some(job) = q.lock().unwrap().pop_back() {
+                return Some(job);
+            }
+        }
+        None
+    }
+
+    fn submit(&self, job: Job) {
+        let slot = self.next.fetch_add(1, Ordering::Relaxed)
+            % self.queues.len();
+        self.queues[slot].lock().unwrap().push_back(job);
+        {
+            let mut g = self.gate.lock().unwrap();
+            g.generation = g.generation.wrapping_add(1);
+        }
+        self.wake.notify_one();
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, me: usize) {
+    let mut seen = 0u64;
+    loop {
+        while let Some(job) = shared.find_job(me) {
+            job();
+        }
+        let mut g = shared.gate.lock().unwrap();
+        if g.shutdown {
+            return;
+        }
+        if g.generation == seen {
+            // Nothing has been submitted since our last sweep; sleep
+            // until the gate moves.  (Jobs are pushed BEFORE the
+            // generation bump, so generation == seen proves the sweep
+            // above saw every job.)
+            g = shared.wake.wait(g).unwrap();
+        }
+        if g.shutdown {
+            return;
+        }
+        seen = g.generation;
+    }
+}
+
+/// A fixed-size pool of persistent worker threads with per-worker
+/// work-stealing deques.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn a pool of `threads.max(1)` persistent workers.
+    pub fn new(threads: usize) -> Self {
+        let n = threads.max(1);
+        let shared = Arc::new(Shared {
+            queues: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
+            gate: Mutex::new(Gate { generation: 0, shutdown: false }),
+            wake: Condvar::new(),
+            next: AtomicUsize::new(0),
+        });
+        let handles = (0..n)
+            .map(|me| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("kla-pool-{me}"))
+                    .spawn(move || worker_loop(shared, me))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { shared, handles }
+    }
+
+    /// The process-wide shared pool, sized to the machine
+    /// (`util::pool::default_threads()`), created on first use.
+    pub fn global() -> &'static ThreadPool {
+        static POOL: OnceLock<ThreadPool> = OnceLock::new();
+        POOL.get_or_init(|| ThreadPool::new(super::pool::default_threads()))
+    }
+
+    pub fn num_threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `f` with a [`Scope`] whose spawned jobs may borrow from the
+    /// caller's stack.  Does not return until every spawned job has
+    /// finished; while waiting, the caller executes queued jobs itself.
+    /// Panics (after all jobs settle) if any job panicked.
+    pub fn scope<'s, R>(&self, f: impl FnOnce(&Scope<'_, 's>) -> R) -> R {
+        let state = Arc::new(ScopeState {
+            pending: Mutex::new(0usize),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        let scope = Scope {
+            pool: self,
+            state: Arc::clone(&state),
+            _borrow: PhantomData,
+        };
+        let out = catch_unwind(AssertUnwindSafe(|| f(&scope)));
+        // Wait for every spawned job, assisting with queued work so a
+        // scope entered FROM a pool worker (or a 1-thread pool) cannot
+        // deadlock on its own backlog.
+        loop {
+            if *state.pending.lock().unwrap() == 0 {
+                break;
+            }
+            if let Some(job) = self.shared.steal_any() {
+                job();
+                continue;
+            }
+            let pending = state.pending.lock().unwrap();
+            if *pending == 0 {
+                break;
+            }
+            // All remaining jobs are mid-execution on workers; sleep
+            // until one completes (timeout guards the pop/wait race).
+            let _ = state
+                .done
+                .wait_timeout(pending, Duration::from_millis(1))
+                .unwrap();
+        }
+        match out {
+            Ok(r) => {
+                assert!(
+                    !state.panicked.load(Ordering::Acquire),
+                    "thread_pool: a scoped job panicked"
+                );
+                r
+            }
+            Err(e) => resume_unwind(e),
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut g = self.shared.gate.lock().unwrap();
+            g.shutdown = true;
+        }
+        self.shared.wake.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+struct ScopeState {
+    pending: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+/// Handle for spawning borrowed jobs inside [`ThreadPool::scope`].
+pub struct Scope<'pool, 'scope> {
+    pool: &'pool ThreadPool,
+    state: Arc<ScopeState>,
+    /// Invariant over 'scope, like `std::thread::Scope`.
+    _borrow: PhantomData<&'scope mut &'scope ()>,
+}
+
+impl<'pool, 'scope> Scope<'pool, 'scope> {
+    /// Queue `f` on the pool.  `f` may borrow anything that outlives the
+    /// enclosing `scope()` call.
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'scope,
+    {
+        *self.state.pending.lock().unwrap() += 1;
+        let state = Arc::clone(&self.state);
+        let job: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+            if catch_unwind(AssertUnwindSafe(f)).is_err() {
+                state.panicked.store(true, Ordering::Release);
+            }
+            let mut pending = state.pending.lock().unwrap();
+            *pending -= 1;
+            if *pending == 0 {
+                state.done.notify_all();
+            }
+        });
+        // SAFETY: scope() blocks until `pending` drains to zero, so this
+        // job — and every borrow it captures — completes before 'scope
+        // ends.  Same argument as crossbeam/std scoped threads, with the
+        // wait moved from thread join to the pending counter.
+        let job: Job = unsafe {
+            std::mem::transmute::<
+                Box<dyn FnOnce() + Send + 'scope>,
+                Box<dyn FnOnce() + Send + 'static>,
+            >(job)
+        };
+        self.pool.shared.submit(job);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn scope_runs_every_job_and_waits() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> =
+            (0..64).map(|_| AtomicUsize::new(0)).collect();
+        pool.scope(|s| {
+            for h in &hits {
+                s.spawn(move || {
+                    h.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn borrowed_mutation_via_split_at_mut() {
+        let pool = ThreadPool::new(3);
+        let mut xs = vec![0usize; 30];
+        pool.scope(|s| {
+            let mut rest = &mut xs[..];
+            let mut tag = 1usize;
+            while !rest.is_empty() {
+                let take = 7.min(rest.len());
+                let (head, tail) = rest.split_at_mut(take);
+                rest = tail;
+                let t = tag;
+                s.spawn(move || {
+                    for x in head.iter_mut() {
+                        *x = t;
+                    }
+                });
+                tag += 1;
+            }
+        });
+        assert!(xs.iter().all(|&x| x > 0));
+    }
+
+    #[test]
+    fn single_thread_pool_cannot_deadlock_nested_scopes() {
+        let pool = ThreadPool::new(1);
+        let outer = AtomicUsize::new(0);
+        let pool_ref = &pool;
+        pool.scope(|s| {
+            for _ in 0..4 {
+                let outer = &outer;
+                s.spawn(move || {
+                    // a nested scope from inside a worker job: the
+                    // worker assists on its own backlog
+                    pool_ref.scope(|inner| {
+                        inner.spawn(|| {
+                            outer.fetch_add(1, Ordering::Relaxed);
+                        });
+                    });
+                });
+            }
+        });
+        assert_eq!(outer.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn scope_propagates_job_panics() {
+        let pool = ThreadPool::new(2);
+        let hit = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(|s| {
+                s.spawn(|| panic!("boom"));
+            });
+        }));
+        assert!(hit.is_err());
+        // the pool survives a panicked job
+        let ok = AtomicUsize::new(0);
+        pool.scope(|s| {
+            s.spawn(|| {
+                ok.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_sized() {
+        let a = ThreadPool::global() as *const _;
+        let b = ThreadPool::global() as *const _;
+        assert_eq!(a, b);
+        assert!(ThreadPool::global().num_threads() >= 1);
+    }
+
+    #[test]
+    fn sequential_results_on_reused_pool() {
+        // many scopes back to back reuse the same workers
+        let pool = ThreadPool::new(2);
+        for round in 0..16 {
+            let sum = AtomicUsize::new(0);
+            pool.scope(|s| {
+                for i in 0..8 {
+                    let sum = &sum;
+                    s.spawn(move || {
+                        sum.fetch_add(i, Ordering::Relaxed);
+                    });
+                }
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 28, "round {round}");
+        }
+    }
+}

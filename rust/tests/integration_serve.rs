@@ -17,7 +17,7 @@ use std::time::Duration;
 
 use common::{native_cfg, small_lm, tokens_of};
 use kla::config::ServeConfig;
-use kla::runtime::{NativeBackend, Runtime};
+use kla::runtime::{DecodeBackend, NativeBackend, Runtime};
 use kla::serve::{run_engine, serve, serve_native, Client, EngineRequest,
                  EngineResponse, RequestOpts, SamplerConfig};
 use kla::util::Json;
@@ -817,9 +817,11 @@ fn native_prefix_cache_stats_counters_end_to_end() {
     let s1 = c.stats().unwrap();
     assert_eq!(s1.req("prefix_misses").unwrap().as_usize().unwrap(), 1);
     assert_eq!(s1.req("prefix_hits").unwrap().as_usize().unwrap(), 0);
-    // chunk 8 over a 23-token usable prefix snapshots at the cursor 8
-    // block boundary and at the end of prefill
-    assert_eq!(s1.req("prefix_entries").unwrap().as_usize().unwrap(), 2);
+    // fused rounds keep the cursor on the chunk grid: chunk 8 over a
+    // 23-token usable prefix snapshots at BOTH block boundaries (8, 16)
+    // and at the end of prefill (23) — the legacy path drifted off the
+    // grid after the first chunk and only ever produced two entries
+    assert_eq!(s1.req("prefix_entries").unwrap().as_usize().unwrap(), 3);
     let bytes = s1.req("prefix_bytes").unwrap().as_usize().unwrap();
     assert!(bytes > 0);
     let _ = c.request(&prompt, 4).unwrap();
@@ -828,15 +830,189 @@ fn native_prefix_cache_stats_counters_end_to_end() {
     assert_eq!(
         s2.req("prefix_cached_tokens").unwrap().as_usize().unwrap(), 23);
     // the warm walk re-visits the same offsets: recency refresh, no growth
-    assert_eq!(s2.req("prefix_entries").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(s2.req("prefix_entries").unwrap().as_usize().unwrap(), 3);
     assert_eq!(s2.req("prefix_bytes").unwrap().as_usize().unwrap(), bytes);
     let stats = handle.stop().unwrap();
     assert_eq!(stats.prefix_hits, 1);
     assert_eq!(stats.prefix_misses, 1);
     assert_eq!(stats.prefix_cached_tokens, 23);
     assert_eq!(stats.prefix_bytes, bytes);
-    assert_eq!(stats.prefix_entries, 2);
+    assert_eq!(stats.prefix_entries, 3);
     println!("prefix cache stats counters: ok");
+}
+
+// ============================== fused (slots x time) prefill round ====
+// The engine gathers one chunk per mid-prefill slot and hands the whole
+// ragged batch to a single `DecodeBackend::prefill_batch` call.  The
+// acceptance invariant is a three-way identity: fused round == per-slot
+// fallback == token-by-token prefill, across chunk sizes and batch
+// widths, greedy and seeded-sampled.  CI's `multidim-prefill-parity`
+// step runs every `native_multidim_*` test with --nocapture and greps
+// the result lines below, failing on any SKIP.
+
+#[test]
+fn native_multidim_prefill_parity_across_chunk_and_batch() {
+    // token-by-token reference (chunk=1, one slot) vs every fused
+    // configuration, through the real server.  Batched runs submit all
+    // prompts concurrently behind a barrier so admissions genuinely
+    // share fused rounds; determinism of the outputs regardless of
+    // batch composition is exactly the invariant under test.
+    let prompts: Vec<Vec<i32>> = vec![
+        vec![],
+        vec![7],
+        (0..3).map(|i| i * 5 % 32).collect(),
+        (0..100).map(|i| (i * 13) % 32).collect(),
+    ];
+    let run = |chunk: usize, batch: usize| -> Vec<(Vec<i64>, Vec<i64>)> {
+        let backend = NativeBackend::seeded(&small_lm(), 101, batch);
+        let mut cfg = native_cfg();
+        cfg.prefill_chunk = chunk;
+        let handle = serve_native(backend, &cfg).unwrap();
+        let addr = handle.addr.clone();
+        let barrier = Arc::new(std::sync::Barrier::new(prompts.len()));
+        let joins: Vec<_> = prompts
+            .iter()
+            .cloned()
+            .map(|prompt| {
+                let addr = addr.clone();
+                let barrier = barrier.clone();
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(&addr).unwrap();
+                    let sampled = RequestOpts {
+                        temperature: Some(0.9),
+                        top_p: Some(0.9),
+                        seed: Some(4242),
+                        ..Default::default()
+                    };
+                    barrier.wait();
+                    let g = tokens_of(&c.request(&prompt, 6).unwrap());
+                    let s = tokens_of(
+                        &c.request_opts(&prompt, 6, &sampled).unwrap());
+                    (g, s)
+                })
+            })
+            .collect();
+        let out: Vec<_> =
+            joins.into_iter().map(|j| j.join().unwrap()).collect();
+        handle.stop().unwrap();
+        out
+    };
+    let reference = run(1, 1);
+    assert!(reference.iter().all(|(g, s)| g.len() == 6 && s.len() == 6));
+    println!("multidim prefill parity chunk=1 batch=1 baseline: ok");
+    for (chunk, batch) in [(1usize, 4usize), (8, 1), (8, 4), (64, 1),
+                           (64, 4)]
+    {
+        let got = run(chunk, batch);
+        assert_eq!(reference, got,
+                   "chunk={chunk} batch={batch}: fused prefill generated \
+                    different tokens than token-by-token on one slot");
+        println!("multidim prefill parity chunk={chunk} batch={batch}: ok");
+    }
+}
+
+/// `NativeBackend` with `prefill_batch` pinned to the trait's default
+/// per-slot loop (each lane still runs the native single-lane scan) —
+/// the reference the fused multi-lane round must match bit-exactly.
+struct PerSlotPrefill(NativeBackend);
+
+impl DecodeBackend for PerSlotPrefill {
+    fn batch(&self) -> usize {
+        self.0.batch()
+    }
+    fn vocab(&self) -> usize {
+        self.0.vocab()
+    }
+    fn kind(&self) -> &'static str {
+        self.0.kind()
+    }
+    fn init_state(&self) -> anyhow::Result<kla::runtime::DecodeState> {
+        self.0.init_state()
+    }
+    fn step(&self, tokens: &kla::tensor::IntTensor,
+            state: &kla::runtime::DecodeState)
+            -> anyhow::Result<(kla::tensor::Tensor,
+                               kla::runtime::DecodeState)> {
+        self.0.step(tokens, state)
+    }
+    fn prefill_is_parallel(&self) -> bool {
+        true
+    }
+    fn prefill(&self, tokens: &kla::tensor::IntTensor, slot: usize,
+               state: &kla::runtime::DecodeState)
+               -> anyhow::Result<(kla::tensor::Tensor,
+                                  kla::runtime::DecodeState)> {
+        self.0.prefill(tokens, slot, state)
+    }
+    // prefill_batch: default — the per-slot fallback under test
+}
+
+#[test]
+fn native_multidim_prefill_fused_matches_per_slot_fallback() {
+    // engine-level leg of the three-way identity: the same request mix
+    // through `run_engine_opts` on the fused NativeBackend and on the
+    // per-slot fallback wrapper must produce identical tokens AND
+    // identical uncertainties (lane-chained scans are sequential per
+    // lane, so the agreement is bit-exact, not tolerance-based)
+    let prompts: Vec<Vec<i32>> = vec![
+        (0..30).map(|i| (i * 3) % 32).collect(),
+        vec![4, 2],
+        (0..75).map(|i| (i * 11) % 32).collect(),
+        (0..12).map(|i| (i * 7) % 32).collect(),
+    ];
+    let run = |per_slot: bool| -> Vec<(Vec<i32>, f32)> {
+        let native = NativeBackend::seeded(&small_lm(), 61, 4);
+        let cfg = ServeConfig {
+            prefill_chunk: 8,
+            batch_window_us: 100,
+            ..native_cfg()
+        };
+        let opts = kla::serve::EngineOptions::from_serve(&cfg);
+        let (tx, rx) = channel::<EngineRequest>();
+        let mut rxs = Vec::new();
+        for (i, p) in prompts.iter().enumerate() {
+            let (rtx, rrx) = channel::<EngineResponse>();
+            // request 0 is seeded-sampled, the rest greedy
+            let sampler = if i == 0 {
+                SamplerConfig {
+                    temperature: 0.9,
+                    top_p: 0.9,
+                    seed: Some(7),
+                    ..SamplerConfig::greedy()
+                }
+            } else {
+                SamplerConfig::greedy()
+            };
+            tx.send(EngineRequest::new(p.clone(), 5, sampler,
+                                       Box::new(rtx)))
+                .unwrap();
+            rxs.push(rrx);
+        }
+        drop(tx);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let live = Arc::new(kla::serve::LiveStats::default());
+        if per_slot {
+            let be = PerSlotPrefill(native);
+            kla::serve::run_engine_opts(&be, rx, &opts, shutdown, &live)
+                .unwrap();
+        } else {
+            kla::serve::run_engine_opts(&native, rx, &opts, shutdown,
+                                        &live)
+                .unwrap();
+        }
+        rxs.iter()
+            .map(|r| {
+                let resp = r.recv().unwrap();
+                (resp.tokens.clone(), resp.uncertainty)
+            })
+            .collect()
+    };
+    let fused = run(false);
+    let fallback = run(true);
+    assert_eq!(fused, fallback,
+               "fused prefill_batch diverged from the per-slot fallback");
+    assert!(fused.iter().all(|(t, _)| t.len() == 5));
+    println!("multidim prefill parity fused vs per-slot fallback: ok");
 }
 
 #[test]
