@@ -1,0 +1,43 @@
+//! `repro-lint` front-end: run the repo's static-analysis passes over
+//! the tree and exit non-zero on any finding (stale waivers included).
+//!
+//! Usage:
+//!
+//! ```text
+//! cargo run --bin repro_lint --            # lint the repo this binary
+//!                                          # was built from
+//! cargo run --bin repro_lint -- <root>     # lint a checkout at <root>
+//! ```
+//!
+//! Output is the per-pass result lines CI grep-pins
+//! (`repro-lint[<pass>]: N findings, M waivers used`), each surviving
+//! finding as `path:line: [pass] message`, and a final
+//! `repro-lint: clean (N files scanned)` / `repro-lint: DIRTY (..)`
+//! verdict.  See `rust/src/lint/mod.rs` and DESIGN.md §S18 for the
+//! pass and waiver semantics.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let root = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+    let report = match kla::lint::run_repo(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!(
+                "repro-lint: cannot scan {}: {e}",
+                root.display()
+            );
+            return ExitCode::from(2);
+        }
+    };
+    print!("{}", report.render());
+    if report.is_clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

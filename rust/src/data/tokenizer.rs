@@ -63,7 +63,7 @@ impl Tokenizer {
             let mut best: Option<(u32, usize)> = None; // (merged_id, pos)
             for (i, w) in ids.windows(2).enumerate() {
                 if let Some(&id) = self.ranks.get(&(w[0], w[1])) {
-                    if best.map_or(true, |(b, _)| id < b) {
+                    if best.is_none_or(|(b, _)| id < b) {
                         best = Some((id, i));
                     }
                 }

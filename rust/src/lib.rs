@@ -43,6 +43,8 @@
 //! seam.  See `DESIGN.md` §S17 for the backend matrix and per-backend
 //! test coverage.
 
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod api;
 pub mod baselines;
 pub mod bench;
@@ -51,6 +53,7 @@ pub mod config;
 pub mod data;
 pub mod eval;
 pub mod kla;
+pub mod lint;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;

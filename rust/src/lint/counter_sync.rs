@@ -1,0 +1,293 @@
+//! Pass `counter-sync`: the stats counters cannot drift.
+//!
+//! Every *counter* field of `serve::engine::EngineStats` (the `usize`
+//! fields — the `Vec<f64>` timing series are aggregates with no live
+//! mirror) must appear in all four places that promise it:
+//!
+//! 1. as a `LiveStats` field (the lock-free mirror the server reads);
+//! 2. as a string key in `serve/server.rs` (the `{"cmd":"stats"}`
+//!    reply);
+//! 3. in the protocol doc atop `serve/server.rs`;
+//! 4. in DESIGN.md.
+//!
+//! The reverse direction is checked for `LiveStats`: a mirror field
+//! with no `EngineStats` counter behind it is dead weight and is
+//! flagged too.  This is exactly the drift class PRs 5–7 kept fixing
+//! by hand (a counter added to `EngineStats` but forgotten in the
+//! reply or the docs).
+
+use super::{Finding, LintInput, SourceFile};
+use crate::lint::lexer::Token;
+
+/// A struct field: name, 1-based line, first identifier of its type.
+pub(crate) struct Field {
+    pub name: String,
+    pub line: usize,
+    pub ty: String,
+}
+
+/// Parse the named struct's fields from a comment-free token stream.
+/// Returns `None` when the struct is not defined in `code`.
+pub(crate) fn struct_fields(code: &[Token], name: &str) -> Option<Vec<Field>> {
+    let mut i = 0usize;
+    loop {
+        let t = code.get(i)?;
+        if t.ident() == Some("struct")
+            && code.get(i + 1).and_then(|t| t.ident()) == Some(name)
+        {
+            break;
+        }
+        i += 1;
+    }
+    // Find the opening brace (skip generics — none in this repo, but
+    // walking to `{` costs nothing); a `;` first means a unit/tuple
+    // struct with no named fields.
+    let mut j = i + 2;
+    loop {
+        let t = code.get(j)?;
+        if t.is_punct('{') {
+            break;
+        }
+        if t.is_punct(';') {
+            return Some(Vec::new());
+        }
+        j += 1;
+    }
+    let mut fields = Vec::new();
+    let mut depth = 1usize;
+    let mut k = j + 1;
+    while depth > 0 {
+        let t = code.get(k)?;
+        if t.is_punct('{') || t.is_punct('(') || t.is_punct('<') {
+            depth += 1;
+        } else if t.is_punct('}') || t.is_punct(')') || t.is_punct('>') {
+            depth -= 1;
+        } else if depth == 1
+            && t.ident().is_some()
+            && t.ident() != Some("pub")
+            && code.get(k + 1).is_some_and(|n| n.is_punct(':'))
+            && !code.get(k + 2).is_some_and(|n| n.is_punct(':'))
+        {
+            let ty = code
+                .get(k + 2)
+                .and_then(|t| t.ident())
+                .unwrap_or("")
+                .to_string();
+            fields.push(Field {
+                name: t.ident().unwrap_or("").to_string(),
+                line: t.line,
+                ty,
+            });
+        }
+        k += 1;
+    }
+    Some(fields)
+}
+
+pub fn run(input: &LintInput) -> Vec<Finding> {
+    let mut out = Vec::new();
+    // The file defining EngineStats (engine.rs on the real tree; the
+    // fixtures use a stand-in path).  No definition => pass is vacuous.
+    let Some((engine, engine_fields)) =
+        input.files.iter().find_map(|f| {
+            struct_fields(&f.code, "EngineStats").map(|fs| (f, fs))
+        })
+    else {
+        return out;
+    };
+    let live_fields = input
+        .files
+        .iter()
+        .find_map(|f| struct_fields(&f.code, "LiveStats"))
+        .unwrap_or_default();
+    let server = input
+        .files
+        .iter()
+        .find(|f| f.path_ends_with("serve/server.rs"));
+
+    let counters: Vec<&Field> =
+        engine_fields.iter().filter(|f| f.ty == "usize").collect();
+
+    if !counters.is_empty() && input.design_md.is_empty() {
+        out.push(finding(
+            engine,
+            counters[0].line,
+            "DESIGN.md is missing or empty, so no counter can be \
+             documented"
+                .to_string(),
+        ));
+    }
+
+    for c in &counters {
+        if !live_fields.iter().any(|l| l.name == c.name) {
+            out.push(finding(
+                engine,
+                c.line,
+                format!(
+                    "EngineStats counter `{}` has no LiveStats mirror",
+                    c.name
+                ),
+            ));
+        }
+        if let Some(server) = server {
+            if !has_str(server, &c.name) {
+                out.push(finding(
+                    engine,
+                    c.line,
+                    format!(
+                        "EngineStats counter `{}` is not a key in the \
+                         {{\"cmd\":\"stats\"}} reply in {}",
+                        c.name, server.path
+                    ),
+                ));
+            }
+            if !server.module_doc().contains(&c.name) {
+                out.push(finding(
+                    engine,
+                    c.line,
+                    format!(
+                        "EngineStats counter `{}` is not documented in \
+                         the protocol doc atop {}",
+                        c.name, server.path
+                    ),
+                ));
+            }
+        }
+        if !input.design_md.is_empty()
+            && !input.design_md.contains(&c.name)
+        {
+            out.push(finding(
+                engine,
+                c.line,
+                format!(
+                    "EngineStats counter `{}` is not documented in \
+                     DESIGN.md",
+                    c.name
+                ),
+            ));
+        }
+    }
+
+    for l in &live_fields {
+        if !counters.iter().any(|c| c.name == l.name) {
+            out.push(finding(
+                engine,
+                l.line,
+                format!(
+                    "LiveStats field `{}` mirrors no EngineStats \
+                     counter",
+                    l.name
+                ),
+            ));
+        }
+    }
+    out
+}
+
+fn has_str(file: &SourceFile, name: &str) -> bool {
+    file.code.iter().any(|t| {
+        matches!(&t.tok, crate::lint::lexer::Tok::Str(s) if s == name)
+    })
+}
+
+fn finding(file: &SourceFile, line: usize, message: String) -> Finding {
+    Finding {
+        pass: "counter-sync",
+        file: file.path.clone(),
+        line,
+        message,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::{run as run_all, LintInput, SourceFile};
+
+    fn input_from_fixture(engine_src: &str) -> LintInput {
+        let server_src = include_str!("fixtures/counter_server.rs");
+        LintInput {
+            files: vec![
+                SourceFile::from_source(
+                    "rust/src/serve/engine.rs",
+                    engine_src,
+                ),
+                SourceFile::from_source(
+                    "rust/src/serve/server.rs",
+                    server_src,
+                ),
+            ],
+            // documents every counter except `dropped_frames`
+            design_md: "the `requests` and `steps` counters".to_string(),
+        }
+    }
+
+    #[test]
+    fn fixture_fires_on_every_drift_direction() {
+        let engine_src = include_str!("fixtures/counter_engine_bad.rs");
+        let fs = run(&input_from_fixture(engine_src));
+        let msgs: Vec<&str> =
+            fs.iter().map(|f| f.message.as_str()).collect();
+        // `dropped_frames` is missing everywhere downstream
+        assert!(
+            msgs.iter().any(|m| m.contains("dropped_frames")
+                && m.contains("LiveStats")),
+            "{msgs:?}"
+        );
+        assert!(
+            msgs.iter().any(|m| m.contains("dropped_frames")
+                && m.contains("stats")),
+            "{msgs:?}"
+        );
+        assert!(
+            msgs.iter().any(|m| m.contains("dropped_frames")
+                && m.contains("DESIGN.md")),
+            "{msgs:?}"
+        );
+        // `ghost` is a LiveStats field with no EngineStats counter
+        assert!(
+            msgs.iter()
+                .any(|m| m.contains("ghost") && m.contains("mirrors no")),
+            "{msgs:?}"
+        );
+        // timing series are not counters: never reported
+        assert!(!msgs.iter().any(|m| m.contains("step_ms")), "{msgs:?}");
+    }
+
+    #[test]
+    fn fixture_waiver_suppresses_the_drift() {
+        let engine_src = include_str!("fixtures/counter_engine_waived.rs");
+        let report = run_all(&input_from_fixture(engine_src));
+        let counter_findings: Vec<_> = report
+            .findings
+            .iter()
+            .filter(|f| f.pass == "counter-sync")
+            .collect();
+        assert!(
+            counter_findings.is_empty(),
+            "waived fixture should be clean: {counter_findings:?}"
+        );
+        let s = report
+            .summaries
+            .iter()
+            .find(|s| s.pass == "counter-sync")
+            .unwrap_or_else(|| panic!("no counter-sync summary"));
+        assert!(s.waivers_used >= 1);
+    }
+
+    #[test]
+    fn coherent_structs_are_clean() {
+        let engine_src = "\
+pub struct EngineStats {\n\
+    pub requests: usize,\n\
+    pub steps: usize,\n\
+    pub step_ms: Vec<f64>,\n\
+}\n\
+pub struct LiveStats {\n\
+    pub requests: AtomicUsize,\n\
+    pub steps: AtomicUsize,\n\
+}\n";
+        let fs = run(&input_from_fixture(engine_src));
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+}

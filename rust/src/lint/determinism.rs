@@ -1,0 +1,214 @@
+//! Pass `determinism`: wall clocks, thread spawns, and narrowing
+//! casts only where the architecture says they belong.
+//!
+//! The repo's determinism contract (counter-based sampling, bit-exact
+//! cache-hit ≡ cold-prefill parity, seeded parity across batch
+//! widths) survives only if nondeterminism stays quarantined:
+//!
+//! - **wall clocks** — `Instant::now()` / `SystemTime` are metering
+//!   concerns; they are allowed only in the metering modules listed
+//!   in [`CLOCK_ALLOW`].  Anywhere else (e.g. a kernel timing itself
+//!   to pick a strategy) needs a per-line waiver naming why the clock
+//!   cannot leak into results;
+//! - **thread spawns** — free-running `std::thread::spawn` threads
+//!   belong to `util::thread_pool` and the server's connection
+//!   plumbing ([`SPAWN_ALLOW`]); everything else must use the scoped
+//!   helpers (`util::pool`, `std::thread::scope`) so no thread
+//!   outlives the data it touches;
+//! - **narrowing casts** — bare `as` casts to a narrower integer type
+//!   silently truncate token/vocab ids (the PR 4 bug class).  In the
+//!   serve modules ([`CAST_SCOPE`]) they are banned outright: use
+//!   `i32::try_from(..)` or the clamping helpers in `util::cast`.
+
+use super::{Finding, LintInput, SourceFile};
+
+/// Modules whose *job* is wall-clock metering.
+const CLOCK_ALLOW: [(&str, &str); 5] = [
+    ("util/timer.rs", "the metering abstraction itself"),
+    ("util/logging.rs", "log-line timestamps"),
+    ("bench/mod.rs", "benchmark harness wall time"),
+    ("serve/engine.rs", "queue/step/prefill meters + batch window"),
+    ("serve/server.rs", "request submit stamp for queue metering"),
+];
+
+/// Modules allowed to start free-running threads.
+const SPAWN_ALLOW: [(&str, &str); 2] = [
+    ("util/thread_pool.rs", "the pool owns its workers"),
+    ("serve/server.rs", "listener/reader/writer/engine threads"),
+];
+
+/// Serve modules where narrowing `as` casts are banned outright.
+const CAST_SCOPE: [&str; 4] = [
+    "serve/engine.rs",
+    "serve/server.rs",
+    "serve/batcher.rs",
+    "serve/sampling.rs",
+];
+
+/// Integer types an `as` cast may narrow token/vocab values into.
+const NARROW_INTS: [&str; 6] = ["i8", "i16", "i32", "u8", "u16", "u32"];
+
+pub fn run(input: &LintInput) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for file in &input.files {
+        check_file(file, &mut out);
+    }
+    out
+}
+
+fn check_file(file: &SourceFile, out: &mut Vec<Finding>) {
+    let clock_ok =
+        CLOCK_ALLOW.iter().any(|(p, _)| file.path_ends_with(p));
+    let spawn_ok =
+        SPAWN_ALLOW.iter().any(|(p, _)| file.path_ends_with(p));
+    let cast_scoped =
+        CAST_SCOPE.iter().any(|p| file.path_ends_with(p));
+    if clock_ok && spawn_ok && !cast_scoped {
+        return;
+    }
+
+    let code = &file.code;
+    for (i, t) in code.iter().enumerate() {
+        if file.is_test_line(t.line) {
+            continue;
+        }
+        if !clock_ok {
+            let instant_now = t.ident() == Some("Instant")
+                && code.get(i + 1).is_some_and(|n| n.is_punct(':'))
+                && code.get(i + 2).is_some_and(|n| n.is_punct(':'))
+                && code.get(i + 3).and_then(|n| n.ident()) == Some("now");
+            if instant_now || t.ident() == Some("SystemTime") {
+                out.push(finding(
+                    file,
+                    t.line,
+                    "wall clock outside the metering allowlist \
+                     (util::timer / util::logging / bench / the serve \
+                     meters); waive with the reason the reading cannot \
+                     influence results"
+                        .to_string(),
+                ));
+            }
+        }
+        if !spawn_ok
+            && t.ident() == Some("thread")
+            && code.get(i + 1).is_some_and(|n| n.is_punct(':'))
+            && code.get(i + 2).is_some_and(|n| n.is_punct(':'))
+            && matches!(
+                code.get(i + 3).and_then(|n| n.ident()),
+                Some("spawn" | "Builder")
+            )
+        {
+            out.push(finding(
+                file,
+                t.line,
+                "free-running thread spawn outside util::thread_pool / \
+                 serve::server; use the scoped helpers in util::pool"
+                    .to_string(),
+            ));
+        }
+        if cast_scoped && t.ident() == Some("as") {
+            if let Some(ty) = code.get(i + 1).and_then(|n| n.ident()) {
+                if NARROW_INTS.contains(&ty) {
+                    out.push(finding(
+                        file,
+                        t.line,
+                        format!(
+                            "narrowing `as {ty}` cast in a serve module \
+                             can silently truncate token/vocab ids; use \
+                             `{ty}::try_from(..)` or util::cast"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+fn finding(file: &SourceFile, line: usize, message: String) -> Finding {
+    Finding {
+        pass: "determinism",
+        file: file.path.clone(),
+        line,
+        message,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::{run as run_all, LintInput, SourceFile};
+
+    fn input(path: &str, src: &str) -> LintInput {
+        LintInput {
+            files: vec![SourceFile::from_source(path, src)],
+            design_md: String::new(),
+        }
+    }
+
+    #[test]
+    fn fixture_fires_on_clock_spawn_and_cast() {
+        let src = include_str!("fixtures/determinism_bad.rs");
+        // a serve file outside the clock/spawn allowlists, inside the
+        // cast scope
+        let fs = run(&input("rust/src/serve/batcher.rs", src));
+        let msgs: Vec<&str> =
+            fs.iter().map(|f| f.message.as_str()).collect();
+        assert!(msgs.iter().any(|m| m.contains("wall clock")), "{msgs:?}");
+        assert!(
+            msgs.iter().any(|m| m.contains("thread spawn")),
+            "{msgs:?}"
+        );
+        assert!(
+            msgs.iter().any(|m| m.contains("narrowing `as i32`")),
+            "{msgs:?}"
+        );
+    }
+
+    #[test]
+    fn fixture_waivers_suppress_each_category() {
+        let src = include_str!("fixtures/determinism_waived.rs");
+        let report =
+            run_all(&input("rust/src/serve/batcher.rs", src));
+        let left: Vec<_> = report
+            .findings
+            .iter()
+            .filter(|f| f.pass == "determinism")
+            .collect();
+        assert!(left.is_empty(), "waived fixture not clean: {left:?}");
+        let s = report
+            .summaries
+            .iter()
+            .find(|s| s.pass == "determinism")
+            .unwrap_or_else(|| panic!("no determinism summary"));
+        assert!(s.waivers_used >= 3, "waivers used: {}", s.waivers_used);
+    }
+
+    #[test]
+    fn allowlisted_modules_and_test_code_are_exempt() {
+        let clocky = "fn meter() -> Instant { Instant::now() }\n";
+        assert!(run(&input("rust/src/util/timer.rs", clocky)).is_empty());
+        assert!(run(&input("rust/src/bench/mod.rs", clocky)).is_empty());
+        let spawny =
+            "fn go() { std::thread::spawn(|| {}); }\n";
+        assert!(run(&input("rust/src/util/thread_pool.rs", spawny))
+            .is_empty());
+        let test_gated = format!(
+            "#[cfg(test)]\nmod tests {{\n{clocky}{spawny}}}\n"
+        );
+        assert!(
+            run(&input("rust/src/kla/scan.rs", &test_gated)).is_empty()
+        );
+    }
+
+    #[test]
+    fn widening_and_float_casts_are_fine() {
+        let src = "\
+fn ok(x: i32, n: usize) -> f64 {\n\
+    let a = x as i64;\n\
+    let b = n as u64;\n\
+    let c = x as f32;\n\
+    a as f64 + b as f64 + c as f64\n\
+}\n";
+        assert!(run(&input("rust/src/serve/engine.rs", src)).is_empty());
+    }
+}

@@ -1,0 +1,17 @@
+// Known-bad fixture for the `counter-sync` pass: `dropped_frames` is
+// an EngineStats counter with no LiveStats mirror, no stats-reply key,
+// and no doc mention; `ghost` is a LiveStats field mirroring nothing.
+// Never compiled — only `include_str!`-ed by counter_sync.rs tests.
+
+pub struct EngineStats {
+    pub requests: usize,
+    pub steps: usize,
+    pub dropped_frames: usize,
+    pub step_ms: Vec<f64>,
+}
+
+pub struct LiveStats {
+    pub requests: AtomicUsize,
+    pub steps: AtomicUsize,
+    pub ghost: AtomicUsize,
+}

@@ -1,0 +1,18 @@
+// Waived variant of counter_engine_bad.rs: the same drift, suppressed
+// by waiver comments.  Never compiled —
+// only `include_str!`-ed by counter_sync.rs tests.
+
+pub struct EngineStats {
+    pub requests: usize,
+    pub steps: usize,
+    // lint: allow(counter-sync, fixture: counter lands in the next PR)
+    pub dropped_frames: usize,
+    pub step_ms: Vec<f64>,
+}
+
+pub struct LiveStats {
+    pub requests: AtomicUsize,
+    pub steps: AtomicUsize,
+    // lint: allow(counter-sync, fixture: mirror lands in the next PR)
+    pub ghost: AtomicUsize,
+}

@@ -1,0 +1,13 @@
+//! Stand-in `serve/server.rs` for the counter-sync fixtures: the
+//! protocol doc and stats reply know `requests` and `steps` only.
+//!
+//! Codes:
+//!
+//! Event kinds:
+
+fn stats_reply(live: &LiveStats) -> Vec<(&'static str, usize)> {
+    vec![
+        ("requests", live.requests.load()),
+        ("steps", live.steps.load()),
+    ]
+}

@@ -1,0 +1,10 @@
+// Known-bad fixture for the `determinism` pass: a wall-clock read, a
+// free-running thread spawn, and a narrowing token cast, all in what
+// the tests present as a serve module.  Never compiled — only
+// `include_str!`-ed by rust/src/lint/determinism.rs tests.
+
+fn drifty(vocab: usize) -> i32 {
+    let t0 = std::time::Instant::now();
+    std::thread::spawn(move || t0.elapsed());
+    vocab as i32
+}

@@ -1,0 +1,12 @@
+// Waived fixture for the `determinism` pass: the same clock / spawn /
+// cast shapes as determinism_bad.rs, each suppressed by a
+// waiver comment.  Never compiled —
+// only `include_str!`-ed by rust/src/lint/determinism.rs tests.
+
+fn drifty(vocab: usize) -> i32 {
+    // lint: allow(determinism, fixture: debug meter, result unused)
+    let t0 = std::time::Instant::now();
+    // lint: allow(determinism, fixture: joined before data is dropped)
+    std::thread::spawn(move || t0.elapsed());
+    vocab as i32 // lint: allow(determinism, fixture: vocab < 2^31)
+}

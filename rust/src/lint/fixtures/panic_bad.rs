@@ -1,0 +1,16 @@
+// Known-bad fixture for the `panic` pass.  Never compiled — only
+// `include_str!`-ed by rust/src/lint/panic_free.rs tests.
+
+fn hot_path(v: &[i32], m: &std::sync::Mutex<i32>) -> i32 {
+    let first = v.first().unwrap();
+    let guard = m.lock().expect("poisoned");
+    if v.is_empty() {
+        panic!("empty batch");
+    }
+    if *guard < 0 {
+        todo!();
+    }
+    let x = v[0];
+    let tail = &v[1..];
+    first + x + tail.len() as i32
+}

@@ -1,0 +1,11 @@
+// Waived fixture for the `panic` pass: the same panicking shapes as
+// panic_bad.rs, each carrying a waiver comment on its own line or the
+// line above.  Never compiled — only `include_str!`-ed by
+// rust/src/lint/panic_free.rs tests.
+
+fn hot_path(v: &[i32]) -> i32 {
+    // lint: allow(panic, fixture: caller guarantees non-empty batch)
+    let first = v.first().unwrap();
+    let x = v[0]; // lint: allow(panic, fixture: bounds checked above)
+    first + x
+}

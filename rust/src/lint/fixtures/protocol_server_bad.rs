@@ -1,0 +1,20 @@
+//! Known-bad stand-in `serve/server.rs` for the `protocol-sync` pass:
+//! the doc lists `bad-phantom` / `heartbeat`, which the code never
+//! emits, while the code emits `bad-json` / `token`, which the doc
+//! never lists.  Never compiled — only `include_str!`-ed by
+//! protocol_sync.rs tests.
+//!
+//! Codes: `bad-phantom` (documented, never emitted).
+//!
+//! Event kinds: `start`, `heartbeat`.
+
+fn reject(line: &str) -> Json {
+    err_reply(None, "bad-json", line)
+}
+
+fn events() -> Vec<Json> {
+    vec![
+        Json::obj(vec![("event", Json::str("start"))]),
+        Json::obj(vec![("event", Json::str("token"))]),
+    ]
+}

@@ -1,0 +1,17 @@
+//! Waived stand-in `serve/server.rs` for the `protocol-sync` pass:
+//! one undocumented error code, suppressed by a waiver on its
+//! emission line.  Never compiled — only `include_str!`-ed by
+//! protocol_sync.rs tests.
+//!
+//! Codes:
+//!
+//! Event kinds: `err`.
+
+fn reject(line: &str) -> Json {
+    // lint: allow(protocol-sync, fixture: code documented in next PR)
+    err_reply(None, "bad-json", line)
+}
+
+fn events() -> Vec<Json> {
+    vec![Json::obj(vec![("event", Json::str("err"))])]
+}

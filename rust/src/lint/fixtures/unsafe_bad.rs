@@ -1,0 +1,12 @@
+// Known-bad fixture for the `unsafe` pass: three `unsafe` sites
+// (a block, and Send/Sync impls) with no SAFETY comment anywhere.
+// Never compiled — only `include_str!`-ed by unsafe_audit.rs tests.
+
+struct RawPtr(*mut f32);
+
+unsafe impl Send for RawPtr {}
+unsafe impl Sync for RawPtr {}
+
+fn write(p: &RawPtr, i: usize, x: f32) {
+    unsafe { *p.0.add(i) = x };
+}

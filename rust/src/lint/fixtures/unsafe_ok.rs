@@ -1,0 +1,18 @@
+// Clean fixture for the `unsafe` pass: the same three `unsafe` sites
+// as unsafe_bad.rs, each covered by a SAFETY comment within the
+// attachment window.  Never compiled — only `include_str!`-ed by
+// unsafe_audit.rs tests.
+
+struct RawPtr(*mut f32);
+
+// SAFETY: fixture — the pointer targets disjoint indices per thread,
+// so sharing the wrapper across threads cannot race.
+unsafe impl Send for RawPtr {}
+// SAFETY: fixture — see the Send argument above; reads are disjoint
+// from writes by construction.
+unsafe impl Sync for RawPtr {}
+
+fn write(p: &RawPtr, i: usize, x: f32) {
+    // SAFETY: fixture — `i` is bounds-checked by the caller.
+    unsafe { *p.0.add(i) = x };
+}

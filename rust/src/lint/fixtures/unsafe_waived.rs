@@ -1,0 +1,9 @@
+// Waived fixture for the `unsafe` pass: an undocumented `unsafe`
+// suppressed by a waiver comment instead of a
+// SAFETY comment.  Never compiled — only `include_str!`-ed by
+// unsafe_audit.rs tests.
+
+fn read(p: *const i32) -> i32 {
+    // lint: allow(unsafe, fixture: audited in the module doc instead)
+    unsafe { *p }
+}

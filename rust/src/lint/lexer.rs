@@ -1,0 +1,462 @@
+//! A minimal, dependency-free Rust lexer for `repro-lint`.
+//!
+//! This is NOT a full Rust lexer — it is exactly enough to make the
+//! repo's own lint passes reliable on token streams instead of raw
+//! text, which is what kills grep-based linting: string literals that
+//! contain `unwrap(`, comments that mention `panic!`, lifetimes that
+//! look like char literals, and raw strings holding JSON protocol
+//! examples.  Every token carries the 1-based source line it starts
+//! on so findings and waivers can be anchored precisely.
+//!
+//! Handled: line comments (`//`, `///`, `//!`), nesting block
+//! comments, string / raw-string / byte-string / char literals,
+//! lifetime-vs-char-literal disambiguation, identifiers, numeric
+//! literals (including float vs `..` range ambiguity), and
+//! single-char punctuation.  Multi-char operators are emitted as
+//! consecutive single-char `Punct` tokens — the passes match on
+//! short token sequences, so this keeps the lexer trivially
+//! verifiable.
+
+/// One lexed token kind.  `Str` carries the literal's decoded-enough
+/// content (escapes left as-is) so passes can inspect protocol
+/// strings; comments carry their text so waiver and SAFETY parsing
+/// work on the token stream alone.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    /// Identifier or keyword (`unwrap`, `unsafe`, `as`, ...).
+    Ident(String),
+    /// A single punctuation character (`.`, `[`, `!`, ...).
+    Punct(char),
+    /// String literal content (without quotes / raw-string hashes).
+    Str(String),
+    /// Char or byte literal (content irrelevant to the passes).
+    Char,
+    /// Lifetime such as `'a` or `'static`.
+    Lifetime,
+    /// Numeric literal (raw text, suffix included).
+    Num(String),
+    /// `//`-style comment; content excludes the leading `//`.
+    LineComment(String),
+    /// `/* ... */` comment (nesting); content excludes delimiters.
+    BlockComment(String),
+}
+
+/// A token plus the 1-based line it starts on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    pub line: usize,
+    pub tok: Tok,
+}
+
+impl Token {
+    /// The identifier text, if this token is an `Ident`.
+    pub fn ident(&self) -> Option<&str> {
+        match &self.tok {
+            Tok::Ident(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    /// True if this token is the given punctuation character.
+    pub fn is_punct(&self, c: char) -> bool {
+        self.tok == Tok::Punct(c)
+    }
+
+    /// True if this token is a line or block comment.
+    pub fn is_comment(&self) -> bool {
+        matches!(self.tok, Tok::LineComment(_) | Tok::BlockComment(_))
+    }
+
+    /// Comment text (line or block), if this token is a comment.
+    pub fn comment_text(&self) -> Option<&str> {
+        match &self.tok {
+            Tok::LineComment(s) | Tok::BlockComment(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+}
+
+struct Cursor<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.src.get(self.pos).copied()
+    }
+
+    fn peek_at(&self, off: usize) -> Option<u8> {
+        self.src.get(self.pos + off).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek()?;
+        self.pos += 1;
+        if c == b'\n' {
+            self.line += 1;
+        }
+        Some(c)
+    }
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_continue(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Lex `src` into a token stream.  Unknown bytes (non-ASCII in code
+/// position, stray quotes at EOF, ...) are skipped rather than
+/// reported: the lint must never panic or error on the tree it
+/// audits, and the passes only need the tokens they match on.
+pub fn lex(src: &str) -> Vec<Token> {
+    let mut cur = Cursor { src: src.as_bytes(), pos: 0, line: 1 };
+    let mut out = Vec::new();
+    while let Some(c) = cur.peek() {
+        let line = cur.line;
+        match c {
+            b' ' | b'\t' | b'\r' | b'\n' => {
+                cur.bump();
+            }
+            b'/' if cur.peek_at(1) == Some(b'/') => {
+                out.push(Token { line, tok: lex_line_comment(&mut cur) });
+            }
+            b'/' if cur.peek_at(1) == Some(b'*') => {
+                out.push(Token { line, tok: lex_block_comment(&mut cur) });
+            }
+            b'"' => {
+                out.push(Token { line, tok: lex_string(&mut cur) });
+            }
+            b'\'' => {
+                out.push(Token { line, tok: lex_quote(&mut cur) });
+            }
+            _ if c.is_ascii_digit() => {
+                out.push(Token { line, tok: lex_number(&mut cur) });
+            }
+            _ if is_ident_start(c) => {
+                out.push(Token { line, tok: lex_word(&mut cur) });
+            }
+            _ => {
+                cur.bump();
+                if c.is_ascii_graphic() {
+                    out.push(Token { line, tok: Tok::Punct(c as char) });
+                }
+            }
+        }
+    }
+    out
+}
+
+fn lex_line_comment(cur: &mut Cursor) -> Tok {
+    cur.bump(); // '/'
+    cur.bump(); // '/'
+    let start = cur.pos;
+    while let Some(c) = cur.peek() {
+        if c == b'\n' {
+            break;
+        }
+        cur.bump();
+    }
+    let text = String::from_utf8_lossy(&cur.src[start..cur.pos]).into_owned();
+    Tok::LineComment(text)
+}
+
+fn lex_block_comment(cur: &mut Cursor) -> Tok {
+    cur.bump(); // '/'
+    cur.bump(); // '*'
+    let start = cur.pos;
+    let mut depth = 1usize;
+    let mut end = cur.pos;
+    while let Some(c) = cur.peek() {
+        if c == b'/' && cur.peek_at(1) == Some(b'*') {
+            depth += 1;
+            cur.bump();
+            cur.bump();
+        } else if c == b'*' && cur.peek_at(1) == Some(b'/') {
+            depth -= 1;
+            end = cur.pos;
+            cur.bump();
+            cur.bump();
+            if depth == 0 {
+                break;
+            }
+        } else {
+            cur.bump();
+        }
+    }
+    if depth != 0 {
+        end = cur.pos; // unterminated: treat rest of file as comment
+    }
+    let text = String::from_utf8_lossy(&cur.src[start..end]).into_owned();
+    Tok::BlockComment(text)
+}
+
+/// Lex a `"..."` literal; `cur` sits on the opening quote.
+fn lex_string(cur: &mut Cursor) -> Tok {
+    cur.bump(); // '"'
+    let start = cur.pos;
+    let mut end = cur.pos;
+    loop {
+        match cur.peek() {
+            None => {
+                end = cur.pos;
+                break;
+            }
+            Some(b'\\') => {
+                cur.bump();
+                cur.bump();
+            }
+            Some(b'"') => {
+                end = cur.pos;
+                cur.bump();
+                break;
+            }
+            Some(_) => {
+                cur.bump();
+            }
+        }
+    }
+    let text = String::from_utf8_lossy(&cur.src[start..end]).into_owned();
+    Tok::Str(text)
+}
+
+/// Lex `r"..."` / `r#"..."#` (any hash depth); `cur` sits on the
+/// first `#` or the opening quote, just after the `r`/`br` prefix
+/// was consumed as part of `lex_word`.
+fn lex_raw_string(cur: &mut Cursor) -> Tok {
+    let mut hashes = 0usize;
+    while cur.peek() == Some(b'#') {
+        hashes += 1;
+        cur.bump();
+    }
+    cur.bump(); // opening '"'
+    let start = cur.pos;
+    let mut end = cur.pos;
+    'scan: while let Some(c) = cur.peek() {
+        if c == b'"' {
+            // Check for `"` followed by `hashes` many `#`.
+            for i in 0..hashes {
+                if cur.peek_at(1 + i) != Some(b'#') {
+                    end = cur.pos;
+                    cur.bump();
+                    continue 'scan;
+                }
+            }
+            end = cur.pos;
+            cur.bump(); // closing '"'
+            for _ in 0..hashes {
+                cur.bump();
+            }
+            break;
+        }
+        cur.bump();
+        end = cur.pos;
+    }
+    let text = String::from_utf8_lossy(&cur.src[start..end]).into_owned();
+    Tok::Str(text)
+}
+
+/// Lex after a `'`: either a lifetime (`'a`, `'static`) or a char
+/// literal (`'x'`, `'\n'`, `'\''`).
+fn lex_quote(cur: &mut Cursor) -> Tok {
+    cur.bump(); // '\''
+    match cur.peek() {
+        Some(b'\\') => {
+            // Escaped char literal: consume escape then to closing quote.
+            cur.bump();
+            cur.bump();
+            while let Some(c) = cur.peek() {
+                cur.bump();
+                if c == b'\'' {
+                    break;
+                }
+            }
+            Tok::Char
+        }
+        Some(c) if is_ident_start(c) || c.is_ascii_digit() => {
+            // Could be 'a' (char) or 'a / 'static (lifetime).
+            let mut off = 0usize;
+            while let Some(n) = cur.peek_at(off) {
+                if !is_ident_continue(n) {
+                    break;
+                }
+                off += 1;
+            }
+            let is_char = cur.peek_at(off) == Some(b'\'');
+            for _ in 0..off {
+                cur.bump();
+            }
+            if is_char {
+                cur.bump(); // closing '\''
+                Tok::Char
+            } else {
+                Tok::Lifetime
+            }
+        }
+        Some(_) => {
+            // Non-identifier char literal like '(' or '"'.
+            cur.bump();
+            if cur.peek() == Some(b'\'') {
+                cur.bump();
+            }
+            Tok::Char
+        }
+        None => Tok::Char,
+    }
+}
+
+fn lex_number(cur: &mut Cursor) -> Tok {
+    let start = cur.pos;
+    while let Some(c) = cur.peek() {
+        if is_ident_continue(c) {
+            cur.bump();
+        } else if c == b'.' {
+            // Float continues only if the next byte is a digit; this
+            // keeps `0..n` as Num(0) Punct(.) Punct(.) Ident(n).
+            match cur.peek_at(1) {
+                Some(d) if d.is_ascii_digit() => {
+                    cur.bump();
+                }
+                _ => break,
+            }
+        } else {
+            break;
+        }
+    }
+    let text = String::from_utf8_lossy(&cur.src[start..cur.pos]).into_owned();
+    Tok::Num(text)
+}
+
+fn lex_word(cur: &mut Cursor) -> Tok {
+    let start = cur.pos;
+    while let Some(c) = cur.peek() {
+        if !is_ident_continue(c) {
+            break;
+        }
+        cur.bump();
+    }
+    let word = String::from_utf8_lossy(&cur.src[start..cur.pos]).into_owned();
+    // Raw / byte string prefixes: r"..", r#"..."#, b"..", br#"..."#.
+    if matches!(word.as_str(), "r" | "b" | "br" | "rb") {
+        match cur.peek() {
+            Some(b'"') => return lex_raw_or_plain(cur, &word),
+            Some(b'#') if word != "b" => {
+                // `r#ident` raw identifiers don't occur in this repo;
+                // `r#"`-style raw strings do.
+                if looks_like_raw_string(cur) {
+                    return lex_raw_string(cur);
+                }
+            }
+            _ => {}
+        }
+    }
+    Tok::Ident(word)
+}
+
+/// After an `r`/`b`/`br` prefix sitting on a `"`: byte strings (`b"`)
+/// have escapes like plain strings; raw strings (`r"`, `br"`) do not.
+fn lex_raw_or_plain(cur: &mut Cursor, prefix: &str) -> Tok {
+    if prefix == "b" {
+        lex_string(cur)
+    } else {
+        lex_raw_string(cur)
+    }
+}
+
+/// True when the `#`-run after an `r` prefix ends in a `"` — i.e.
+/// this really is `r#"..."#` and not the raw identifier `r#foo`.
+fn looks_like_raw_string(cur: &Cursor) -> bool {
+    let mut off = 0usize;
+    while cur.peek_at(off) == Some(b'#') {
+        off += 1;
+    }
+    cur.peek_at(off) == Some(b'"')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .into_iter()
+            .filter_map(|t| t.ident().map(str::to_string))
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_do_not_leak_idents() {
+        let src = r##"
+            let x = "call unwrap() here"; // unwrap() in comment
+            /* panic! in /* nested */ block */
+            let y = r#"json "unwrap" body"#;
+        "##;
+        let ids = idents(src);
+        assert_eq!(ids, vec!["let", "x", "let", "y"]);
+    }
+
+    #[test]
+    fn lifetime_vs_char_literal() {
+        let toks = lex("fn f<'a>(x: &'a str) { let c = 'x'; let n = '\\n'; }");
+        let lifetimes =
+            toks.iter().filter(|t| t.tok == Tok::Lifetime).count();
+        let chars = toks.iter().filter(|t| t.tok == Tok::Char).count();
+        assert_eq!(lifetimes, 2);
+        assert_eq!(chars, 2);
+    }
+
+    #[test]
+    fn range_is_not_a_float() {
+        let toks = lex("for i in 0..10 {}");
+        let nums: Vec<_> = toks
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Num(n) => Some(n.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(nums, vec!["0", "10"]);
+    }
+
+    #[test]
+    fn float_literals_survive() {
+        let toks = lex("let x = 1.5e-3f64;");
+        assert!(toks
+            .iter()
+            .any(|t| matches!(&t.tok, Tok::Num(n) if n.starts_with("1.5"))));
+    }
+
+    #[test]
+    fn line_numbers_are_one_based_and_advance() {
+        let toks = lex("a\nb\n\nc");
+        let lines: Vec<_> = toks.iter().map(|t| t.line).collect();
+        assert_eq!(lines, vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn string_content_is_captured() {
+        let toks = lex(r#"err_reply(id, "bad-json", "parse error")"#);
+        let strs: Vec<_> = toks
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Str(s) => Some(s.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(strs, vec!["bad-json", "parse error"]);
+    }
+
+    #[test]
+    fn comment_text_is_captured() {
+        let toks = lex("x; // lint: allow(panic, fixture)\n");
+        let c = toks
+            .iter()
+            .find_map(|t| t.comment_text())
+            .unwrap_or_default();
+        assert!(c.contains("lint: allow(panic, fixture)"));
+    }
+}

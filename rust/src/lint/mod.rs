@@ -1,0 +1,614 @@
+//! `repro-lint`: the repo's own static-analysis pass.
+//!
+//! Every invariant this repo trades on — the scan ≡ sequential-filter
+//! identity, counter-based RNG determinism, bit-exact cache-hit ≡
+//! cold-prefill parity, and the serve engine's fault-isolation rule —
+//! is only as strong as the bug classes that keep re-breaking it:
+//! silent `as`-cast token truncation, panics in the engine loop,
+//! stats counters drifting between `EngineStats` / `LiveStats` / the
+//! protocol reply / DESIGN.md, and undocumented `unsafe`.  `repro-lint`
+//! tokenizes the repo's own Rust sources (see [`lexer`]) and enforces
+//! those invariants as named, individually-testable passes:
+//!
+//! | pass            | invariant                                        |
+//! |-----------------|--------------------------------------------------|
+//! | `panic`         | no `unwrap`/`expect`/`panic!`-family macros or   |
+//! |                 | unguarded indexing in serve hot paths            |
+//! | `counter-sync`  | `EngineStats` ≡ `LiveStats` ≡ `{"cmd":"stats"}`  |
+//! |                 | reply ≡ server.rs doc ≡ DESIGN.md                |
+//! | `protocol-sync` | emitted err codes / event types ≡ protocol doc   |
+//! | `determinism`   | wall clocks, thread spawns, and narrowing `as`   |
+//! |                 | casts only where allowlisted                     |
+//! | `unsafe`        | every `unsafe` carries a `// SAFETY:` comment    |
+//!
+//! ## Waivers
+//!
+//! A finding is suppressed by a comment on the same line or the line
+//! above, with a mandatory reason:
+//!
+//! ```text
+//! // lint: allow(<pass>, <reason>)
+//! ```
+//!
+//! Waivers are themselves audited: an empty reason, an unknown pass
+//! name, or a *stale* waiver (one that suppresses nothing) is a
+//! finding, so waivers cannot rot silently.
+//!
+//! Fixture files with known-bad snippets live under
+//! `rust/src/lint/fixtures/` — they are `include_str!`-ed by each
+//! pass's unit tests (never compiled as modules) and excluded from
+//! the real-tree scan.  The binary front-end is
+//! `rust/src/bin/repro_lint.rs`; CI runs it blocking and grep-pins
+//! the per-pass result lines.
+
+pub mod counter_sync;
+pub mod determinism;
+pub mod lexer;
+pub mod panic_free;
+pub mod protocol_sync;
+pub mod unsafe_audit;
+
+use lexer::{lex, Tok, Token};
+use std::fmt;
+use std::path::Path;
+
+/// Names of every pass, in report order.  Waiver comments must name
+/// one of these.
+pub const PASS_NAMES: [&str; 5] =
+    ["panic", "counter-sync", "protocol-sync", "determinism", "unsafe"];
+
+/// One lint finding, anchored to a repo-relative path and 1-based line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    pub pass: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file, self.line, self.pass, self.message
+        )
+    }
+}
+
+/// A `// lint: allow(pass, reason)` waiver parsed from a comment.
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    pub pass: String,
+    pub reason: String,
+    pub line: usize,
+}
+
+/// One lexed source file, with `#[cfg(test)]` / `#[test]` regions
+/// pre-computed so passes can restrict themselves to non-test code.
+pub struct SourceFile {
+    /// Repo-relative, '/'-separated path (e.g. `rust/src/serve/engine.rs`).
+    pub path: String,
+    /// Full token stream, comments included.
+    pub toks: Vec<Token>,
+    /// Code tokens only (comments stripped), for sequence matching.
+    pub code: Vec<Token>,
+    /// Raw source text (docs passes scan prose in module docs).
+    pub src: String,
+    test_ranges: Vec<(usize, usize)>,
+}
+
+impl SourceFile {
+    /// Lex `src` as the file at `path` (repo-relative).
+    pub fn from_source(path: &str, src: &str) -> SourceFile {
+        let toks = lex(src);
+        let code: Vec<Token> =
+            toks.iter().filter(|t| !t.is_comment()).cloned().collect();
+        let test_ranges = test_line_ranges(&code);
+        SourceFile {
+            path: path.to_string(),
+            toks,
+            code,
+            src: src.to_string(),
+            test_ranges,
+        }
+    }
+
+    /// True if `line` falls inside a `#[cfg(test)]` / `#[test]` item.
+    pub fn is_test_line(&self, line: usize) -> bool {
+        self.test_ranges
+            .iter()
+            .any(|&(lo, hi)| line >= lo && line <= hi)
+    }
+
+    /// True if the path ends with the given '/'-separated suffix.
+    pub fn path_ends_with(&self, suffix: &str) -> bool {
+        self.path == suffix
+            || self
+                .path
+                .strip_suffix(suffix)
+                .is_some_and(|head| head.ends_with('/'))
+    }
+
+    /// The module doc (`//!` lines) joined with newlines.
+    pub fn module_doc(&self) -> String {
+        let mut doc = String::new();
+        for t in &self.toks {
+            if let Tok::LineComment(text) = &t.tok {
+                if let Some(rest) = text.strip_prefix('!') {
+                    doc.push_str(rest.strip_prefix(' ').unwrap_or(rest));
+                    doc.push('\n');
+                }
+            }
+        }
+        doc
+    }
+}
+
+/// Compute line ranges covered by `#[cfg(test)]`- or `#[test]`-gated
+/// items, by scanning the comment-free token stream: on a test
+/// attribute, skip any further attributes, then extend to the end of
+/// the braced body (or to the terminating `;` for brace-less items).
+fn test_line_ranges(code: &[Token]) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::new();
+    let mut i = 0usize;
+    while i < code.len() {
+        if code[i].is_punct('#')
+            && code.get(i + 1).is_some_and(|t| t.is_punct('['))
+        {
+            let (attr_end, is_test) = scan_attribute(code, i + 1);
+            if is_test {
+                let start_line = code[i].line;
+                let end_line = item_end_line(code, attr_end);
+                ranges.push((start_line, end_line));
+                i = attr_end;
+                continue;
+            }
+            i = attr_end;
+            continue;
+        }
+        i += 1;
+    }
+    ranges
+}
+
+/// From the `[` at `open`, return (index one past the matching `]`,
+/// whether the attribute gates test code).  `#[cfg(not(test))]` is
+/// *not* a test gate.
+fn scan_attribute(code: &[Token], open: usize) -> (usize, bool) {
+    let mut depth = 0usize;
+    let mut has_test = false;
+    let mut has_not = false;
+    let mut i = open;
+    while i < code.len() {
+        match &code[i].tok {
+            Tok::Punct('[') => depth += 1,
+            Tok::Punct(']') => {
+                depth -= 1;
+                if depth == 0 {
+                    return (i + 1, has_test && !has_not);
+                }
+            }
+            Tok::Ident(w) if w == "test" => has_test = true,
+            Tok::Ident(w) if w == "not" => has_not = true,
+            _ => {}
+        }
+        i += 1;
+    }
+    (code.len(), false)
+}
+
+/// Last line of the item starting after an attribute at `from`:
+/// skip further attributes, then either brace-match the first `{`
+/// or stop at a top-level `;`.
+fn item_end_line(code: &[Token], mut from: usize) -> usize {
+    // Skip stacked attributes.
+    while from < code.len()
+        && code[from].is_punct('#')
+        && code.get(from + 1).is_some_and(|t| t.is_punct('['))
+    {
+        let (next, _) = scan_attribute(code, from + 1);
+        from = next;
+    }
+    let mut depth = 0usize;
+    let mut i = from;
+    while i < code.len() {
+        match &code[i].tok {
+            Tok::Punct('{') => depth += 1,
+            Tok::Punct('}') => {
+                if depth <= 1 {
+                    return code[i].line;
+                }
+                depth -= 1;
+            }
+            Tok::Punct(';') if depth == 0 => return code[i].line,
+            _ => {}
+        }
+        i += 1;
+    }
+    code.last().map_or(0, |t| t.line)
+}
+
+/// Parse every `// lint: allow(pass, reason)` waiver in a file.
+/// Waivers live in plain `//` comments only: doc comments (`///`,
+/// `//!`) are prose *about* the waiver syntax, never a waiver.
+pub fn parse_waivers(file: &SourceFile) -> Vec<Waiver> {
+    let mut out = Vec::new();
+    for t in &file.toks {
+        let Some(text) = t.comment_text() else { continue };
+        if text.starts_with('/') || text.starts_with('!') {
+            continue; // doc comment
+        }
+        let Some(at) = text.find("lint:") else { continue };
+        let rest = text[at + "lint:".len()..].trim_start();
+        let Some(body) = rest.strip_prefix("allow(") else { continue };
+        let Some(close) = body.rfind(')') else { continue };
+        let inner = &body[..close];
+        let (pass, reason) = match inner.find(',') {
+            Some(comma) => (&inner[..comma], inner[comma + 1..].trim()),
+            None => (inner, ""),
+        };
+        out.push(Waiver {
+            pass: pass.trim().to_string(),
+            reason: reason.to_string(),
+            line: t.line,
+        });
+    }
+    out
+}
+
+/// Everything a pass can look at.
+pub struct LintInput {
+    pub files: Vec<SourceFile>,
+    /// DESIGN.md text ("" when absent — counter-sync then reports it).
+    pub design_md: String,
+}
+
+/// Per-pass result line data.
+#[derive(Debug, Clone)]
+pub struct PassSummary {
+    pub pass: &'static str,
+    pub findings: usize,
+    pub waivers_used: usize,
+}
+
+/// Full lint run result.
+pub struct Report {
+    /// Findings that survived waiver resolution (includes waiver-audit
+    /// findings, which can never be waived).
+    pub findings: Vec<Finding>,
+    pub summaries: Vec<PassSummary>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Render the per-pass result lines CI grep-pins, then findings.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for s in &self.summaries {
+            out.push_str(&format!(
+                "repro-lint[{}]: {} findings, {} waivers used\n",
+                s.pass, s.findings, s.waivers_used
+            ));
+        }
+        for f in &self.findings {
+            out.push_str(&format!("{f}\n"));
+        }
+        out.push_str(&format!(
+            "repro-lint: {} ({} files scanned)\n",
+            if self.is_clean() { "clean" } else { "DIRTY" },
+            self.files_scanned
+        ));
+        out
+    }
+}
+
+/// Run every pass over `input`, resolve waivers, and audit the
+/// waivers themselves.
+pub fn run(input: &LintInput) -> Report {
+    let raw: Vec<(usize, Vec<Finding>)> = vec![
+        (0, panic_free::run(input)),
+        (1, counter_sync::run(input)),
+        (2, protocol_sync::run(input)),
+        (3, determinism::run(input)),
+        (4, unsafe_audit::run(input)),
+    ];
+
+    // Waivers per file, each with a used flag.
+    let mut waivers: Vec<(usize, Waiver, bool)> = Vec::new();
+    for (fi, file) in input.files.iter().enumerate() {
+        for w in parse_waivers(file) {
+            waivers.push((fi, w, false));
+        }
+    }
+
+    let mut findings = Vec::new();
+    let mut summaries = Vec::new();
+    for (pass_idx, pass_findings) in raw {
+        let pass = PASS_NAMES[pass_idx];
+        let mut kept = 0usize;
+        let mut used = 0usize;
+        for f in pass_findings {
+            let fi = input.files.iter().position(|sf| sf.path == f.file);
+            let waived = fi.is_some_and(|fi| {
+                waivers.iter_mut().any(|(wfi, w, w_used)| {
+                    let covers =
+                        w.line == f.line || w.line + 1 == f.line;
+                    if *wfi == fi && w.pass == pass && covers {
+                        *w_used = true;
+                        true
+                    } else {
+                        false
+                    }
+                })
+            });
+            if waived {
+                used += 1;
+            } else {
+                kept += 1;
+                findings.push(f);
+            }
+        }
+        summaries.push(PassSummary { pass, findings: kept, waivers_used: used });
+    }
+
+    // Waiver audit: unknown pass, empty reason, or stale (unused).
+    for (fi, w, used) in &waivers {
+        let file = &input.files[*fi].path;
+        if !PASS_NAMES.contains(&w.pass.as_str()) {
+            findings.push(Finding {
+                pass: "waiver",
+                file: file.clone(),
+                line: w.line,
+                message: format!(
+                    "waiver names unknown pass `{}` (known: {})",
+                    w.pass,
+                    PASS_NAMES.join(", ")
+                ),
+            });
+        } else if w.reason.is_empty() {
+            findings.push(Finding {
+                pass: "waiver",
+                file: file.clone(),
+                line: w.line,
+                message: format!(
+                    "waiver for `{}` has no reason; use \
+                     `// lint: allow({}, <why>)`",
+                    w.pass, w.pass
+                ),
+            });
+        } else if !*used {
+            findings.push(Finding {
+                pass: "waiver",
+                file: file.clone(),
+                line: w.line,
+                message: format!(
+                    "stale waiver: no `{}` finding on this or the next \
+                     line — remove it",
+                    w.pass
+                ),
+            });
+        }
+    }
+
+    Report { findings, summaries, files_scanned: input.files.len() }
+}
+
+/// Load the repo tree rooted at `root` (the directory holding
+/// `Cargo.toml`) and run the lint: every `.rs` under `rust/src`
+/// except the lint fixtures, plus `DESIGN.md` for the doc-sync
+/// checks.
+pub fn run_repo(root: &Path) -> std::io::Result<Report> {
+    let mut paths = Vec::new();
+    collect_rs(&root.join("rust").join("src"), &mut paths)?;
+    paths.sort();
+    let mut files = Vec::new();
+    for p in paths {
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(&p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        if rel.contains("lint/fixtures/") {
+            continue;
+        }
+        let src = std::fs::read_to_string(&p)?;
+        files.push(SourceFile::from_source(&rel, &src));
+    }
+    let design_md = std::fs::read_to_string(root.join("DESIGN.md"))
+        .unwrap_or_default();
+    Ok(run(&LintInput { files, design_md }))
+}
+
+fn collect_rs(
+    dir: &Path,
+    out: &mut Vec<std::path::PathBuf>,
+) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn file(path: &str, src: &str) -> SourceFile {
+        SourceFile::from_source(path, src)
+    }
+
+    #[test]
+    fn cfg_test_regions_cover_test_mod_only() {
+        let src = "\
+fn hot() {}\n\
+#[cfg(test)]\n\
+mod tests {\n\
+    #[test]\n\
+    fn t() { assert!(true); }\n\
+}\n\
+fn also_hot() {}\n";
+        let f = file("rust/src/serve/engine.rs", src);
+        assert!(!f.is_test_line(1));
+        assert!(f.is_test_line(2));
+        assert!(f.is_test_line(5));
+        assert!(f.is_test_line(6));
+        assert!(!f.is_test_line(7));
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_region() {
+        let src = "#[cfg(not(test))]\nfn prod() { body(); }\n";
+        let f = file("rust/src/serve/engine.rs", src);
+        assert!(!f.is_test_line(2));
+    }
+
+    #[test]
+    fn braceless_cfg_test_item_covers_one_statement() {
+        let src = "#[cfg(test)]\nuse crate::testing::Helper;\nfn f() {}\n";
+        let f = file("rust/src/serve/engine.rs", src);
+        assert!(f.is_test_line(2));
+        assert!(!f.is_test_line(3));
+    }
+
+    #[test]
+    fn waiver_parse_extracts_pass_and_reason() {
+        let f = file(
+            "rust/src/serve/engine.rs",
+            "// lint: allow(panic, cursor <= prompt.len() by admit)\n\
+             let x = v[0];\n",
+        );
+        let ws = parse_waivers(&f);
+        assert_eq!(ws.len(), 1);
+        assert_eq!(ws[0].pass, "panic");
+        assert_eq!(ws[0].reason, "cursor <= prompt.len() by admit");
+        assert_eq!(ws[0].line, 1);
+    }
+
+    #[test]
+    fn waiver_reason_may_contain_parens() {
+        let f = file(
+            "rust/src/serve/engine.rs",
+            "x(); // lint: allow(determinism, debug meter (env-gated))\n",
+        );
+        let ws = parse_waivers(&f);
+        assert_eq!(ws[0].reason, "debug meter (env-gated)");
+    }
+
+    #[test]
+    fn stale_waiver_is_reported() {
+        let input = LintInput {
+            files: vec![file(
+                "rust/src/serve/engine.rs",
+                "// lint: allow(panic, nothing here panics)\nfn ok() {}\n",
+            )],
+            design_md: String::new(),
+        };
+        let report = run(&input);
+        assert_eq!(report.findings.len(), 1);
+        assert_eq!(report.findings[0].pass, "waiver");
+        assert!(report.findings[0].message.contains("stale"));
+    }
+
+    #[test]
+    fn waiver_without_reason_is_reported() {
+        let input = LintInput {
+            files: vec![file(
+                "rust/src/serve/engine.rs",
+                "let x = v[0]; // lint: allow(panic)\n",
+            )],
+            design_md: String::new(),
+        };
+        let report = run(&input);
+        assert!(report
+            .findings
+            .iter()
+            .any(|f| f.pass == "waiver" && f.message.contains("no reason")));
+    }
+
+    #[test]
+    fn waiver_with_unknown_pass_is_reported() {
+        let input = LintInput {
+            files: vec![file(
+                "rust/src/serve/engine.rs",
+                "fn f() {} // lint: allow(panics, typo in pass name)\n",
+            )],
+            design_md: String::new(),
+        };
+        let report = run(&input);
+        assert!(report
+            .findings
+            .iter()
+            .any(|f| f.pass == "waiver" && f.message.contains("unknown pass")));
+    }
+
+    #[test]
+    fn waiver_on_preceding_line_suppresses_and_counts_used() {
+        let src = "\
+fn hot(v: &[i32]) -> i32 {\n\
+    // lint: allow(panic, fixture: index is bounds-checked by caller)\n\
+    v[0]\n\
+}\n";
+        let input = LintInput {
+            files: vec![file("rust/src/serve/engine.rs", src)],
+            design_md: String::new(),
+        };
+        let report = run(&input);
+        assert!(
+            report.findings.is_empty(),
+            "unexpected findings: {:?}",
+            report.findings
+        );
+        let panic_summary = report
+            .summaries
+            .iter()
+            .find(|s| s.pass == "panic")
+            .expect("panic pass summary");
+        assert_eq!(panic_summary.waivers_used, 1);
+    }
+
+    #[test]
+    fn doc_comments_are_never_parsed_as_waivers() {
+        // DESIGN.md §S18 and the lint module docs QUOTE the waiver
+        // syntax in `///` / `//!` comments; quoting it must not mint a
+        // waiver (nor trip the unknown-pass/stale audits).
+        let f = file(
+            "rust/src/serve/engine.rs",
+            "//! lint: allow(panic, module doc quoting the syntax)\n\
+             /// lint: allow(<pass>, <reason>)\n\
+             fn documented() {}\n",
+        );
+        assert!(parse_waivers(&f).is_empty());
+        let input = LintInput { files: vec![f], design_md: String::new() };
+        let report = run(&input);
+        assert!(
+            report.findings.is_empty(),
+            "doc comments audited as waivers: {:?}",
+            report.findings
+        );
+    }
+
+    // The teeth of the whole PR: `cargo test` re-runs the lint over
+    // the real tree, so a finding introduced by any future change
+    // fails tier-1 even before the CI repro-lint step runs.
+    #[test]
+    fn real_tree_is_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let report = run_repo(root).expect("lint walk failed");
+        assert!(
+            report.is_clean(),
+            "repro-lint findings on the real tree:\n{}",
+            report.render()
+        );
+    }
+}

@@ -1,0 +1,178 @@
+//! Pass `panic`: no panicking constructs in the serve hot paths.
+//!
+//! The engine loop's fault-isolation rule (DESIGN.md §S15: one lane's
+//! failure must never kill the engine) dies the moment a stray
+//! `unwrap()` or out-of-bounds index lands in `serve::engine`,
+//! `serve::server`, or `serve::batcher`.  This pass flags, in the
+//! non-test code of those three files:
+//!
+//! - `.unwrap()` / `.expect(...)` method calls (the `unwrap_or*`
+//!   family is fine — it cannot panic);
+//! - the panicking macros `panic!`, `todo!`, `unimplemented!`,
+//!   `unreachable!`;
+//! - unguarded index/slice expressions `x[...]`, recognised as a `[`
+//!   that directly follows an identifier, `)`, or `]` (so array
+//!   literals, types, attributes `#[...]`, and `vec![...]` never
+//!   match).
+//!
+//! Sites whose bounds are established by construction keep a
+//! `// lint: allow(panic, <invariant>)` waiver naming that invariant;
+//! everything else gets rewritten onto a non-panicking path.
+
+use super::{Finding, LintInput, SourceFile};
+
+/// The serve hot-path files this pass audits.
+const SCOPE: [&str; 3] = [
+    "serve/engine.rs",
+    "serve/server.rs",
+    "serve/batcher.rs",
+];
+
+const PANIC_MACROS: [&str; 4] =
+    ["panic", "todo", "unimplemented", "unreachable"];
+
+pub fn run(input: &LintInput) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for file in &input.files {
+        if !SCOPE.iter().any(|s| file.path_ends_with(s)) {
+            continue;
+        }
+        check_file(file, &mut out);
+    }
+    out
+}
+
+fn check_file(file: &SourceFile, out: &mut Vec<Finding>) {
+    let code = &file.code;
+    for (i, t) in code.iter().enumerate() {
+        if file.is_test_line(t.line) {
+            continue;
+        }
+        match t.ident() {
+            Some(name @ ("unwrap" | "expect"))
+                if i > 0
+                    && code[i - 1].is_punct('.')
+                    && code.get(i + 1).is_some_and(|n| n.is_punct('(')) =>
+            {
+                out.push(finding(
+                    file,
+                    t.line,
+                    format!("`.{name}()` in a serve hot path can panic; \
+                             handle the None/Err arm or waive with the \
+                             invariant that rules it out"),
+                ));
+            }
+            Some(name) if PANIC_MACROS.contains(&name)
+                && code.get(i + 1).is_some_and(|n| n.is_punct('!')) =>
+            {
+                out.push(finding(
+                    file,
+                    t.line,
+                    format!("`{name}!` in a serve hot path kills the \
+                             engine thread; return an error event \
+                             instead"),
+                ));
+            }
+            _ => {}
+        }
+        // Unguarded indexing: `[` directly after an ident, `)`, or `]`.
+        if t.is_punct('[') && i > 0 {
+            let prev = &code[i - 1];
+            let indexes = prev.ident().is_some()
+                || prev.is_punct(')')
+                || prev.is_punct(']');
+            // `name![...]` is a macro invocation (vec![..]), handled by
+            // the `!` check on the token between name and bracket — the
+            // token before `[` is `!`, not an ident, so it never gets
+            // here; this extra guard documents the intent.
+            let macro_bang = i > 1 && code[i - 1].is_punct('!');
+            if indexes && !macro_bang {
+                out.push(finding(
+                    file,
+                    t.line,
+                    "unguarded index/slice expression can panic in a \
+                     serve hot path; use `.get(..)` or waive with the \
+                     bounds invariant"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+}
+
+fn finding(file: &SourceFile, line: usize, message: String) -> Finding {
+    Finding { pass: "panic", file: file.path.clone(), line, message }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::{run as run_all, LintInput, SourceFile};
+
+    fn input(path: &str, src: &str) -> LintInput {
+        LintInput {
+            files: vec![SourceFile::from_source(path, src)],
+            design_md: String::new(),
+        }
+    }
+
+    #[test]
+    fn fixture_fires_on_every_bad_construct() {
+        let src = include_str!("fixtures/panic_bad.rs");
+        let inp = input("rust/src/serve/engine.rs", src);
+        let fs = run(&inp);
+        let msgs: Vec<&str> =
+            fs.iter().map(|f| f.message.as_str()).collect();
+        assert!(msgs.iter().any(|m| m.contains("`.unwrap()`")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("`.expect()`")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("`panic!`")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("`todo!`")), "{msgs:?}");
+        assert!(
+            msgs.iter().any(|m| m.contains("unguarded index")),
+            "{msgs:?}"
+        );
+    }
+
+    #[test]
+    fn fixture_waivers_suppress_and_are_counted() {
+        let src = include_str!("fixtures/panic_waived.rs");
+        let inp = input("rust/src/serve/engine.rs", src);
+        let report = run_all(&inp);
+        assert!(
+            report.findings.is_empty(),
+            "waived fixture should be clean:\n{}",
+            report.render()
+        );
+        let s = report
+            .summaries
+            .iter()
+            .find(|s| s.pass == "panic")
+            .unwrap_or_else(|| panic!("no panic summary"));
+        assert!(s.waivers_used >= 2, "waivers used: {}", s.waivers_used);
+    }
+
+    #[test]
+    fn out_of_scope_files_and_test_code_are_ignored() {
+        let src = include_str!("fixtures/panic_bad.rs");
+        // same content, but a file outside the serve hot paths
+        assert!(run(&input("rust/src/kla/scan.rs", src)).is_empty());
+        // and inside a #[cfg(test)] module in a scoped file
+        let test_only = format!("#[cfg(test)]\nmod tests {{\n{src}\n}}\n");
+        assert!(run(&input("rust/src/serve/engine.rs", &test_only))
+            .is_empty());
+    }
+
+    #[test]
+    fn unwrap_or_family_and_macro_brackets_do_not_fire() {
+        let src = "\
+fn ok(v: &[i32]) -> i32 {\n\
+    let x = v.first().copied().unwrap_or(0);\n\
+    let w = v.first().copied().unwrap_or_else(|| 1);\n\
+    let ys = vec![x, w];\n\
+    let zs: [i32; 2] = [0; 2];\n\
+    ys.first().copied().unwrap_or_default() + zs.len() as i32\n\
+}\n";
+        let inp = input("rust/src/serve/engine.rs", src);
+        assert!(run(&inp).is_empty(), "{:?}", run(&inp));
+    }
+}

@@ -1,0 +1,335 @@
+//! Pass `protocol-sync`: the wire protocol and its doc cannot drift.
+//!
+//! `serve/server.rs` carries the protocol spec as its module doc; the
+//! sets it promises are checked against what the code actually emits,
+//! in both directions:
+//!
+//! - **error codes** — every string passed to `err_reply(..)` (or the
+//!   request-validation `fail(..)` closure) must be listed in the
+//!   doc's `Codes:` paragraph, and every code listed there must be
+//!   emitted somewhere;
+//! - **event types** — every `("event", Json::str("<kind>"))` the
+//!   server constructs must be listed in the doc's `Event kinds:`
+//!   paragraph, and vice versa.
+//!
+//! The doc lists are machine-readable on purpose: a code or kind
+//! counts as documented only when it appears **backticked** inside
+//! the paragraph that starts at the marker and ends at the first
+//! blank doc line — surrounding prose is ignored, so explanatory
+//! parentheticals never register as phantom codes.
+
+use super::{Finding, LintInput, SourceFile};
+use crate::lint::lexer::Tok;
+
+pub fn run(input: &LintInput) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for file in &input.files {
+        if file.path_ends_with("serve/server.rs") {
+            check_server(file, &mut out);
+        }
+    }
+    out
+}
+
+/// An emitted name with the line of its emission site.
+struct Emission {
+    name: String,
+    line: usize,
+}
+
+fn check_server(file: &SourceFile, out: &mut Vec<Finding>) {
+    let doc = file.module_doc();
+    let codes_doc = backticked_after(&doc, "Codes:");
+    let events_doc = backticked_after(&doc, "Event kinds:");
+    let codes_line = marker_line(file, "Codes:");
+    let events_line = marker_line(file, "Event kinds:");
+
+    let emitted_codes = emitted_error_codes(file);
+    let emitted_events = emitted_event_kinds(file);
+
+    match &codes_doc {
+        None => out.push(finding(
+            file,
+            1,
+            "protocol doc has no `Codes:` paragraph listing the \
+             backticked error codes"
+                .to_string(),
+        )),
+        Some(listed) => {
+            for e in &emitted_codes {
+                if !listed.contains(&e.name) {
+                    out.push(finding(
+                        file,
+                        e.line,
+                        format!(
+                            "error code `{}` is emitted but not listed \
+                             in the protocol doc's `Codes:` paragraph",
+                            e.name
+                        ),
+                    ));
+                }
+            }
+            for c in listed {
+                if !emitted_codes.iter().any(|e| &e.name == c) {
+                    out.push(finding(
+                        file,
+                        codes_line,
+                        format!(
+                            "error code `{c}` is documented but never \
+                             emitted — remove it from the `Codes:` \
+                             paragraph or emit it"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    match &events_doc {
+        None => out.push(finding(
+            file,
+            1,
+            "protocol doc has no `Event kinds:` paragraph listing the \
+             backticked event types"
+                .to_string(),
+        )),
+        Some(listed) => {
+            for e in &emitted_events {
+                if !listed.contains(&e.name) {
+                    out.push(finding(
+                        file,
+                        e.line,
+                        format!(
+                            "event kind `{}` is emitted but not listed \
+                             in the protocol doc's `Event kinds:` \
+                             paragraph",
+                            e.name
+                        ),
+                    ));
+                }
+            }
+            for c in listed {
+                if !emitted_events.iter().any(|e| &e.name == c) {
+                    out.push(finding(
+                        file,
+                        events_line,
+                        format!(
+                            "event kind `{c}` is documented but never \
+                             emitted — remove it from the `Event \
+                             kinds:` paragraph or emit it"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// Every string literal passed to `err_reply(..)` / `fail(..)` that
+/// looks like a kebab-case code.  Calls with no literal argument
+/// (re-emission of an already-parsed code) contribute nothing.
+fn emitted_error_codes(file: &SourceFile) -> Vec<Emission> {
+    let code = &file.code;
+    let mut out: Vec<Emission> = Vec::new();
+    for (i, t) in code.iter().enumerate() {
+        if file.is_test_line(t.line) {
+            continue;
+        }
+        let Some(name) = t.ident() else { continue };
+        if name != "err_reply" && name != "fail" {
+            continue;
+        }
+        // skip the definition (`fn err_reply(..)`, `let fail = ..`)
+        // and method calls on foreign receivers
+        if i > 0
+            && (code[i - 1].ident() == Some("fn")
+                || code[i - 1].is_punct('.'))
+        {
+            continue;
+        }
+        if !code.get(i + 1).is_some_and(|n| n.is_punct('(')) {
+            continue;
+        }
+        // first string literal inside the call's parentheses
+        let mut depth = 1usize;
+        let mut j = i + 2;
+        while depth > 0 {
+            let Some(t) = code.get(j) else { break };
+            if t.is_punct('(') {
+                depth += 1;
+            } else if t.is_punct(')') {
+                depth -= 1;
+            } else if let Tok::Str(s) = &t.tok {
+                if is_kebab(s) && !out.iter().any(|e| &e.name == s) {
+                    out.push(Emission { name: s.clone(), line: t.line });
+                }
+                break;
+            }
+            j += 1;
+        }
+    }
+    out
+}
+
+/// Every `("event", Json::str("<kind>"))` construction: a `"event"`
+/// string literal with another string literal within the next eight
+/// code tokens — exactly far enough for the `, Json :: str ( "<kind>"`
+/// shape, and one short of the first match arm in parsing code like
+/// `match j.req("event")?.as_str()? { "start" => .. }`.
+fn emitted_event_kinds(file: &SourceFile) -> Vec<Emission> {
+    let code = &file.code;
+    let mut out: Vec<Emission> = Vec::new();
+    for (i, t) in code.iter().enumerate() {
+        if file.is_test_line(t.line) {
+            continue;
+        }
+        if !matches!(&t.tok, Tok::Str(s) if s == "event") {
+            continue;
+        }
+        for n in code.iter().skip(i + 1).take(8) {
+            if let Tok::Str(s) = &n.tok {
+                if is_kebab(s) && !out.iter().any(|e| &e.name == s) {
+                    out.push(Emission { name: s.clone(), line: n.line });
+                }
+                break;
+            }
+        }
+    }
+    out
+}
+
+fn is_kebab(s: &str) -> bool {
+    !s.is_empty()
+        && s.starts_with(|c: char| c.is_ascii_lowercase())
+        && s.chars()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-')
+}
+
+/// Backticked kebab-case names in the paragraph that starts at
+/// `marker` and ends at the first blank line (None if no marker).
+fn backticked_after(doc: &str, marker: &str) -> Option<Vec<String>> {
+    let at = doc.find(marker)?;
+    let rest = &doc[at + marker.len()..];
+    let para = match rest.find("\n\n") {
+        Some(end) => &rest[..end],
+        None => rest,
+    };
+    let mut names = Vec::new();
+    let mut parts = para.split('`');
+    // odd-indexed split pieces are inside backticks
+    while let (Some(_outside), Some(inside)) =
+        (parts.next(), parts.next())
+    {
+        if is_kebab(inside) && !names.iter().any(|n| n == inside) {
+            names.push(inside.to_string());
+        }
+    }
+    Some(names)
+}
+
+/// Source line of the doc comment containing `marker` (1 if absent).
+fn marker_line(file: &SourceFile, marker: &str) -> usize {
+    file.toks
+        .iter()
+        .find(|t| {
+            t.comment_text().is_some_and(|c| c.contains(marker))
+        })
+        .map_or(1, |t| t.line)
+}
+
+fn finding(file: &SourceFile, line: usize, message: String) -> Finding {
+    Finding {
+        pass: "protocol-sync",
+        file: file.path.clone(),
+        line,
+        message,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::{run as run_all, LintInput, SourceFile};
+
+    fn input(src: &str) -> LintInput {
+        LintInput {
+            files: vec![SourceFile::from_source(
+                "rust/src/serve/server.rs",
+                src,
+            )],
+            design_md: String::new(),
+        }
+    }
+
+    #[test]
+    fn fixture_fires_in_both_directions() {
+        let src = include_str!("fixtures/protocol_server_bad.rs");
+        let fs = run(&input(src));
+        let msgs: Vec<&str> =
+            fs.iter().map(|f| f.message.as_str()).collect();
+        // emitted but undocumented
+        assert!(
+            msgs.iter().any(|m| m.contains("`bad-json`")
+                && m.contains("not listed")),
+            "{msgs:?}"
+        );
+        // documented but never emitted
+        assert!(
+            msgs.iter().any(|m| m.contains("`bad-phantom`")
+                && m.contains("never emitted")),
+            "{msgs:?}"
+        );
+        // event drift, both directions
+        assert!(
+            msgs.iter().any(|m| m.contains("`token`")
+                && m.contains("not listed")),
+            "{msgs:?}"
+        );
+        assert!(
+            msgs.iter().any(|m| m.contains("`heartbeat`")
+                && m.contains("never emitted")),
+            "{msgs:?}"
+        );
+    }
+
+    #[test]
+    fn missing_markers_are_a_finding() {
+        let fs = run(&input("fn quiet() {}\n"));
+        assert!(fs.iter().any(|f| f.message.contains("`Codes:`")));
+        assert!(fs.iter().any(|f| f.message.contains("`Event kinds:`")));
+    }
+
+    #[test]
+    fn fixture_waiver_suppresses_undocumented_emission() {
+        let src = include_str!("fixtures/protocol_server_waived.rs");
+        let report = run_all(&input(src));
+        let left: Vec<_> = report
+            .findings
+            .iter()
+            .filter(|f| f.pass == "protocol-sync")
+            .collect();
+        assert!(left.is_empty(), "waived fixture not clean: {left:?}");
+        let s = report
+            .summaries
+            .iter()
+            .find(|s| s.pass == "protocol-sync")
+            .unwrap_or_else(|| panic!("no protocol-sync summary"));
+        assert!(s.waivers_used >= 1);
+    }
+
+    #[test]
+    fn coherent_doc_and_code_are_clean() {
+        let src = "\
+//! Codes: `boom` (an example).\n\
+//!\n\
+//! Event kinds: `err`.\n\
+fn emit() -> Json {\n\
+    err_reply(None, \"boom\", \"x\")\n\
+}\n\
+fn ev() -> (&'static str, Json) {\n\
+    (\"event\", Json::str(\"err\"))\n\
+}\n";
+        let fs = run(&input(src));
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+}

@@ -1,0 +1,132 @@
+//! Pass `unsafe`: every `unsafe` carries a `// SAFETY:` comment.
+//!
+//! The repo has very little `unsafe` (the thread pool's lifetime
+//! erasure, the baselines' disjoint-write pointer) and each occurrence
+//! must say *why* it is sound, next to the code: a comment containing
+//! `SAFETY:` on the same line or within the six lines above (so a
+//! multi-line safety argument directly over the block counts).  This
+//! covers `unsafe` blocks, `unsafe fn`, and `unsafe impl` alike —
+//! `unsafe impl Send/Sync` is a soundness claim about aliasing and
+//! needs the argument most of all.
+
+use super::{Finding, LintInput, SourceFile};
+
+/// How many lines above an `unsafe` token a `SAFETY:` comment may
+/// start and still count as attached to it.
+const SAFETY_WINDOW: usize = 6;
+
+pub fn run(input: &LintInput) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for file in &input.files {
+        check_file(file, &mut out);
+    }
+    out
+}
+
+fn check_file(file: &SourceFile, out: &mut Vec<Finding>) {
+    let safety_lines: Vec<usize> = file
+        .toks
+        .iter()
+        .filter(|t| {
+            t.comment_text().is_some_and(|c| c.contains("SAFETY:"))
+        })
+        .map(|t| t.line)
+        .collect();
+    for t in &file.code {
+        if t.ident() != Some("unsafe") {
+            continue;
+        }
+        let covered = safety_lines.iter().any(|&sl| {
+            sl <= t.line && t.line - sl <= SAFETY_WINDOW
+        });
+        if !covered {
+            out.push(Finding {
+                pass: "unsafe",
+                file: file.path.clone(),
+                line: t.line,
+                message: format!(
+                    "`unsafe` without a `// SAFETY:` comment on the \
+                     same line or the {SAFETY_WINDOW} lines above it; \
+                     state the soundness argument"
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::{LintInput, SourceFile};
+
+    fn input(src: &str) -> LintInput {
+        LintInput {
+            files: vec![SourceFile::from_source(
+                "rust/src/util/thread_pool.rs",
+                src,
+            )],
+            design_md: String::new(),
+        }
+    }
+
+    #[test]
+    fn fixture_fires_on_each_undocumented_unsafe() {
+        let src = include_str!("fixtures/unsafe_bad.rs");
+        let fs = run(&input(src));
+        // one per `unsafe`: the block AND both unsafe impls
+        assert_eq!(fs.len(), 3, "{fs:?}");
+        assert!(fs.iter().all(|f| f.pass == "unsafe"));
+    }
+
+    #[test]
+    fn fixture_with_safety_comments_is_clean() {
+        let src = include_str!("fixtures/unsafe_ok.rs");
+        let fs = run(&input(src));
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn fixture_waiver_suppresses_without_safety_comment() {
+        let src = include_str!("fixtures/unsafe_waived.rs");
+        let report = crate::lint::run(&input(src));
+        let left: Vec<_> = report
+            .findings
+            .iter()
+            .filter(|f| f.pass == "unsafe")
+            .collect();
+        assert!(left.is_empty(), "waived fixture not clean: {left:?}");
+        let s = report
+            .summaries
+            .iter()
+            .find(|s| s.pass == "unsafe")
+            .unwrap_or_else(|| panic!("no unsafe summary"));
+        assert_eq!(s.waivers_used, 1);
+    }
+
+    #[test]
+    fn safety_comment_too_far_above_does_not_count() {
+        let src = "\
+// SAFETY: this argument is stranded eight lines up\n\
+//\n\
+//\n\
+//\n\
+//\n\
+//\n\
+//\n\
+//\n\
+fn f(p: *const i32) -> i32 {\n\
+    unsafe { *p }\n\
+}\n";
+        let fs = run(&input(src));
+        assert_eq!(fs.len(), 1, "{fs:?}");
+    }
+
+    #[test]
+    fn same_line_safety_comment_counts() {
+        let src = "\
+fn f(p: *const i32) -> i32 {\n\
+    unsafe { *p } // SAFETY: caller passes a valid pointer\n\
+}\n";
+        assert!(run(&input(src)).is_empty());
+    }
+}

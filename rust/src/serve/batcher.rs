@@ -212,8 +212,8 @@ impl Scheduler {
     /// then retires it without a batched step).  Returns empty for free
     /// slots, slots with no prefill work left, and `max == 0`.
     pub fn take_prefill(&mut self, slot: usize, max: usize) -> Vec<i32> {
-        let Slot::Active { prompt, cursor, max_new, .. } =
-            &mut self.slots[slot]
+        let Some(Slot::Active { prompt, cursor, max_new, .. }) =
+            self.slots.get_mut(slot)
         else {
             return Vec::new();
         };
@@ -222,7 +222,8 @@ impl Scheduler {
             return Vec::new();
         }
         let hi = (*cursor + max).min(prompt.len() - keep);
-        let out = prompt[*cursor..hi].to_vec();
+        // cursor < hi <= len - keep, both pinned by the guards above
+        let out = prompt[*cursor..hi].to_vec(); // lint: allow(panic, range bounded by the keep guard and min() above)
         *cursor = hi;
         out
     }
@@ -236,8 +237,8 @@ impl Scheduler {
     /// request therefore skips to `len - 1` and still samples from the
     /// restored state).  Returns how many tokens were actually skipped.
     pub fn skip_prefill(&mut self, slot: usize, offset: usize) -> usize {
-        let Slot::Active { prompt, cursor, max_new, .. } =
-            &mut self.slots[slot]
+        let Some(Slot::Active { prompt, cursor, max_new, .. }) =
+            self.slots.get_mut(slot)
         else {
             return 0;
         };
@@ -254,8 +255,8 @@ impl Scheduler {
     /// tokens are held back for the sampled `Feed::Decode` step, and
     /// whether the request opted into caching.  `None` for free slots.
     pub fn prefill_view(&self, slot: usize) -> Option<PrefillView<'_>> {
-        match &self.slots[slot] {
-            Slot::Active { prompt, cursor, max_new, cache, .. } => {
+        match self.slots.get(slot) {
+            Some(Slot::Active { prompt, cursor, max_new, cache, .. }) => {
                 Some(PrefillView {
                     prompt,
                     cursor: *cursor,
@@ -263,7 +264,7 @@ impl Scheduler {
                     cache: *cache,
                 })
             }
-            Slot::Free => None,
+            _ => None,
         }
     }
 
@@ -302,7 +303,7 @@ impl Scheduler {
                         // drift the cursor off the chunk grid
                         Feed::Idle
                     } else if *cursor < prompt.len() {
-                        let tok = prompt[*cursor];
+                        let tok = prompt[*cursor]; // lint: allow(panic, index guarded by the branch condition)
                         if *cursor + 1 == prompt.len() && *max_new > 0 {
                             Feed::Decode(tok) // last prompt token: sample
                         } else {
@@ -331,11 +332,11 @@ impl Scheduler {
     /// composition, slot assignment, or prefill chunking.
     pub fn sampling_lane(&self, slot: usize)
                          -> Option<(&SamplerConfig, u64, u64)> {
-        match &self.slots[slot] {
-            Slot::Active { sampler, key, generated, .. } => {
+        match self.slots.get(slot) {
+            Some(Slot::Active { sampler, key, generated, .. }) => {
                 Some((sampler, *key, generated.len() as u64))
             }
-            Slot::Free => None,
+            _ => None,
         }
     }
 
@@ -362,18 +363,26 @@ impl Scheduler {
             if chunked && *cursor + keep < prompt.len() {
                 continue;
             }
+            // tolerate a short `sampled` (fewer rows than slots): the
+            // lane simply keeps its pad — advance never panics on the
+            // engine's behalf
+            let tok = sampled.get(i).copied();
             let mut pushed = None;
             if *cursor < prompt.len() {
                 let sampled_now =
                     *cursor + 1 == prompt.len() && *max_new > 0;
                 *cursor += 1;
                 if sampled_now {
-                    generated.push(sampled[i]);
-                    pushed = Some(sampled[i]);
+                    if let Some(t) = tok {
+                        generated.push(t);
+                        pushed = Some(t);
+                    }
                 }
             } else if *max_new > 0 {
-                generated.push(sampled[i]);
-                pushed = Some(sampled[i]);
+                if let Some(t) = tok {
+                    generated.push(t);
+                    pushed = Some(t);
+                }
             }
             let stop_hit = pushed.is_some_and(|t| sampler.is_stop(t));
             if stop_hit
@@ -419,14 +428,16 @@ impl Scheduler {
     /// engine's per-token event stream uses it to route each sampled
     /// token to its request's sink.
     pub fn slot_id(&self, slot: usize) -> Option<u64> {
-        match &self.slots[slot] {
-            Slot::Active { id, .. } => Some(*id),
-            Slot::Free => None,
+        match self.slots.get(slot) {
+            Some(Slot::Active { id, .. }) => Some(*id),
+            _ => None,
         }
     }
 
     pub fn release(&mut self, slot: usize) {
-        self.slots[slot] = Slot::Free;
+        if let Some(s) = self.slots.get_mut(slot) {
+            *s = Slot::Free;
+        }
     }
 
     pub fn pad(&self) -> i32 {

@@ -529,7 +529,7 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
     // token ids are clamped into [0, vocab) before any backend call so
     // the trait contract holds for every backend (the XLA gather has no
     // clamp of its own)
-    let vmax = (backend.vocab() as i32 - 1).max(0);
+    let vmax = crate::util::cast::vocab_max_token(backend.vocab());
 
     while (!disconnected && !shutdown.load(Ordering::SeqCst))
         || sched.has_work()
@@ -740,9 +740,13 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
                                         && (v.cursor % pc.block() == 0
                                             || done)
                                     {
-                                        pc.insert(
-                                            fp, &v.prompt[..v.cursor],
-                                            cache.snapshot(slot));
+                                        if let Some(prefix) =
+                                            v.prompt.get(..v.cursor)
+                                        {
+                                            pc.insert(
+                                                fp, prefix,
+                                                cache.snapshot(slot));
+                                        }
                                     }
                                 }
                             }
@@ -884,14 +888,20 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
             // scaled temperature (an exact no-op at uncertainty_temp ==
             // 0, since tau_eff = tau * (1 + 0 * u)) and the token event
             let unc = cache.slot_uncertainty(slot);
-            let row = &logits.data()[slot * vocab..(slot + 1) * vocab];
-            sampled[slot] = sampling::sample(row, cfg, key, counter, unc);
+            let Some(row) =
+                logits.data().get(slot * vocab..(slot + 1) * vocab)
+            else {
+                continue; // backend returned fewer rows than lanes
+            };
+            let tok = sampling::sample(row, cfg, key, counter, unc);
+            if let Some(s) = sampled.get_mut(slot) {
+                *s = tok;
+            }
             // stream the token the moment it exists, tagged with the
             // slot's post-step posterior uncertainty; a failed send
             // latches the implicit cancel for next iteration's sweep
             if let Some(id) = sched.slot_id(slot) {
-                pending.emit_token(id, counter as usize, sampled[slot],
-                                   unc);
+                pending.emit_token(id, counter as usize, tok, unc);
             }
         }
         let finished = sched.advance(&sampled);

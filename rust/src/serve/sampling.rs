@@ -41,6 +41,7 @@ use anyhow::{bail, Result};
 
 use crate::config::ServeConfig;
 use crate::tensor::argmax_row;
+use crate::util::cast;
 
 /// Temperatures at or below this are treated as exactly greedy, so the
 /// "temperature -> 0 reproduces greedy" property holds token-for-token
@@ -181,11 +182,11 @@ pub fn sample(logits: &[f32], cfg: &SamplerConfig, key: u64, counter: u64,
               uncertainty: f32) -> i32 {
     debug_assert!(!logits.is_empty(), "sampling from an empty logits row");
     if cfg.is_greedy() {
-        return argmax_row(logits) as i32;
+        return cast::token_from_index(argmax_row(logits));
     }
     let tau = cfg.effective_temperature(uncertainty);
     if tau <= GREEDY_TEMPERATURE {
-        return argmax_row(logits) as i32;
+        return cast::token_from_index(argmax_row(logits));
     }
     let tau = tau as f64;
 
@@ -234,10 +235,10 @@ pub fn sample(logits: &[f32], cfg: &SamplerConfig, key: u64, counter: u64,
     for ((i, _), p) in cand.iter().zip(&probs) {
         acc += p;
         if u < acc {
-            return *i as i32;
+            return cast::token_from_index(*i);
         }
     }
-    cand.last().expect("non-empty candidate set").0 as i32
+    cast::token_from_index(cand.last().expect("non-empty candidate set").0)
 }
 
 #[cfg(test)]

@@ -107,19 +107,27 @@
 //! parseable:
 //!   <- {"event": "err", "id": 3, "err": {"code": "<kebab-case-code>",
 //!       "msg": "<human detail>"}}
-//! Codes: bad-json, unknown-cmd, bad-cmd, missing-id, bad-id,
-//! duplicate-id, too-many-inflight, missing-prompt, bad-prompt,
-//! bad-prompt-token (a prompt entry is not an integer in i32 range —
-//! previously truncated silently), bad-max-new, max-new-too-large (over
-//! the server's max_new_limit — previously clamped silently),
-//! bad-temperature, bad-top-k, bad-top-p, bad-seed, bad-stop-tokens,
-//! bad-eos, bad-uncertainty-temp, bad-cache, prefill-failed (this
-//! request's lane of a fused prefill round errored — terminal for the
-//! request only; the engine releases the slot and keeps serving every
-//! other lane), unavailable (the engine is gone — also the terminal
-//! event of any ACCEPTED request the engine dropped without answering,
-//! e.g. when its thread errors out mid-serve, so a stream never just
-//! goes silent).
+//! Codes: `bad-json`, `unknown-cmd`, `bad-cmd`, `missing-id`, `bad-id`,
+//! `duplicate-id`, `too-many-inflight`, `missing-prompt`, `bad-prompt`,
+//! `bad-prompt-token` (a prompt entry is not an integer in i32 range —
+//! previously truncated silently), `bad-max-new`, `max-new-too-large`
+//! (over the server's max_new_limit — previously clamped silently),
+//! `bad-temperature`, `bad-top-k`, `bad-top-p`, `bad-seed`,
+//! `bad-stop-tokens`, `bad-eos`, `bad-uncertainty-temp`, `bad-cache`,
+//! `prefill-failed` (this request's lane of a fused prefill round
+//! errored — terminal for the request only; the engine releases the
+//! slot and keeps serving every other lane), `unavailable` (the engine
+//! is gone — also the terminal event of any ACCEPTED request the engine
+//! dropped without answering, e.g. when its thread errors out
+//! mid-serve, so a stream never just goes silent; and the terminal
+//! reply when a connection's bookkeeping is poisoned and can accept no
+//! further work).  This list is pinned against the code by the
+//! protocol-sync pass of repro-lint: every code the server emits must
+//! appear backticked above, and vice versa.
+//!
+//! Event kinds: `start`, `token`, `done`, `err` — the complete set of
+//! `"event"` values a connection can emit, also pinned by
+//! protocol-sync.
 //!
 //! ## Configuration notes
 //!
@@ -221,7 +229,10 @@ impl ServerHandle {
             let _ = j.join();
         }
         match self.join.take() {
-            Some(j) => j.join().expect("engine thread panicked"),
+            Some(j) => match j.join() {
+                Ok(stats) => stats,
+                Err(_) => bail!("engine thread panicked"),
+            },
             None => Ok(EngineStats::default()),
         }
     }
@@ -446,7 +457,12 @@ impl EventSink for ConnSink {
             // enqueued — BEFORE the send, so a reader that saw `done`
             // can immediately resubmit the id without racing this map
             self.terminal_sent.store(true, Ordering::SeqCst);
-            self.active.lock().unwrap().remove(&self.id);
+            // a poisoned map must not panic the engine thread (it is
+            // the thread calling send): the id stays registered, which
+            // only costs a failed reuse on an already-dying connection
+            if let Ok(mut map) = self.active.lock() {
+                map.remove(&self.id);
+            }
         }
         self.writer.send(line.to_string()).map_err(|_| SinkClosed)
     }
@@ -511,8 +527,13 @@ fn handle_conn(stream: TcpStream, tx: Sender<EngineRequest>,
     // is implicitly cancelled, so the engine stops burning batch lanes
     // on a dead connection instead of decoding to max_new into the void
     closed.store(true, Ordering::SeqCst);
-    for (_, flag) in active.lock().unwrap().drain() {
-        flag.store(true, Ordering::SeqCst);
+    // poisoned map: the panicking thread already flagged nothing, but
+    // the sinks' `closed` check above still retires every in-flight
+    // request on the next engine event, so skip rather than panic
+    if let Ok(mut map) = active.lock() {
+        for (_, flag) in map.drain() {
+            flag.store(true, Ordering::SeqCst);
+        }
     }
     drop(wtx);
     let _ = writer_join.join();
@@ -606,12 +627,17 @@ fn handle_line(line: &str, ctx: &ConnCtx) -> Option<Json> {
                 // set the engine cancel flag; the entry itself is
                 // removed when the request's terminal (cancelled) done
                 // event goes out, keeping double-cancel a clean no-op
-                let found = match ctx.active.lock().unwrap().get(&id) {
-                    Some(flag) => {
-                        flag.store(true, Ordering::SeqCst);
-                        true
-                    }
-                    None => false,
+                let found = match ctx.active.lock() {
+                    Ok(map) => match map.get(&id) {
+                        Some(flag) => {
+                            flag.store(true, Ordering::SeqCst);
+                            true
+                        }
+                        None => false,
+                    },
+                    // poisoned map: nothing can be cancelled any more,
+                    // which is exactly what `ok: false` reports
+                    Err(_) => false,
                 };
                 return Some(Json::obj(vec![
                     ("ok", Json::Bool(found)),
@@ -631,7 +657,12 @@ fn handle_line(line: &str, ctx: &ConnCtx) -> Option<Json> {
         };
     let cancel = Arc::new(AtomicBool::new(false));
     {
-        let mut map = ctx.active.lock().unwrap();
+        let Ok(mut map) = ctx.active.lock() else {
+            // a poisoned connection map cannot accept new requests;
+            // `unavailable` is the documented terminal for that state
+            return Some(err_reply(Some(id), "unavailable",
+                                  "connection state poisoned"));
+        };
         if map.len() >= ctx.defaults.max_inflight {
             return Some(err_reply(Some(id), "too-many-inflight", &format!(
                 "connection already has {} requests in flight (limit {})",
@@ -686,7 +717,8 @@ fn int_in_range(x: &Json, lo: f64, hi: f64) -> Option<f64> {
 /// Parse one i32 token id, rejecting non-integers and out-of-range
 /// values (the old `x.as_i64()? as i32` silently truncated both).
 fn token_id(x: &Json) -> Option<i32> {
-    int_in_range(x, i32::MIN as f64, i32::MAX as f64).map(|n| n as i32)
+    let n = int_in_range(x, i32::MIN as f64, i32::MAX as f64)?;
+    i32::try_from(n as i64).ok()
 }
 
 /// Validate a generation request against the server defaults; any
@@ -925,7 +957,7 @@ impl StreamEvent {
             "token" => Ok(StreamEvent::Token {
                 id: id_of(j)?,
                 index: j.req("index")?.as_usize()?,
-                token: j.req("token")?.as_i64()? as i32,
+                token: i32::try_from(j.req("token")?.as_i64()?)?,
                 uncertainty: j.req("uncertainty")?.as_f64()?,
             }),
             "done" => Ok(StreamEvent::Done {
@@ -934,7 +966,7 @@ impl StreamEvent {
                     .req("tokens")?
                     .as_arr()?
                     .iter()
-                    .map(|t| Ok(t.as_i64()? as i32))
+                    .map(|t| Ok(i32::try_from(t.as_i64()?)?))
                     .collect::<Result<_>>()?,
                 queue_ms: j.req("queue_ms")?.as_f64()?,
                 total_ms: j.req("total_ms")?.as_f64()?,
@@ -1142,7 +1174,9 @@ impl Client {
             .iter()
             .position(|e| e.id() == Some(id) || e.id().is_none())
         {
-            return Ok(self.pending.remove(pos).expect("position exists"));
+            if let Some(ev) = self.pending.remove(pos) {
+                return Ok(ev);
+            }
         }
         loop {
             let ev = self.read_event()?;

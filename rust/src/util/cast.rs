@@ -1,0 +1,57 @@
+//! Checked/clamping integer conversions for token and vocab values.
+//!
+//! Token ids are `i32` end to end (`IntTensor`, the wire protocol's
+//! `bad-prompt-token` validation, the samplers), while row indices and
+//! vocab sizes are `usize`.  A bare `as i32` on that boundary silently
+//! truncates — the bug class PR 4 fixed on the protocol side and the
+//! `determinism` lint pass now bans in the serve modules (DESIGN.md
+//! §S18).  These helpers make the conversion explicit: values in range
+//! convert exactly; values out of range (impossible for real vocabs,
+//! which are far below `i32::MAX`) debug-assert and saturate instead
+//! of wrapping.
+
+/// A sampled row index as a token id.  Exact for `i < 2^31`; saturates
+/// (with a debug assertion) beyond, rather than wrapping negative.
+pub fn token_from_index(i: usize) -> i32 {
+    debug_assert!(
+        i32::try_from(i).is_ok(),
+        "token index {i} exceeds i32 range"
+    );
+    i32::try_from(i).unwrap_or(i32::MAX)
+}
+
+/// The largest valid token id of a `vocab`-sized model, never negative
+/// (an empty vocab yields 0 so clamping stays well-defined).
+pub fn vocab_max_token(vocab: usize) -> i32 {
+    debug_assert!(
+        i32::try_from(vocab).is_ok(),
+        "vocab size {vocab} exceeds i32 range"
+    );
+    let v = i32::try_from(vocab).unwrap_or(i32::MAX);
+    (v - 1).max(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_range_values_convert_exactly() {
+        assert_eq!(token_from_index(0), 0);
+        assert_eq!(token_from_index(65_535), 65_535);
+        assert_eq!(vocab_max_token(50_000), 49_999);
+    }
+
+    #[test]
+    fn degenerate_vocabs_clamp_to_zero() {
+        assert_eq!(vocab_max_token(0), 0);
+        assert_eq!(vocab_max_token(1), 0);
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn release_mode_saturates_instead_of_wrapping() {
+        assert_eq!(token_from_index(usize::MAX), i32::MAX);
+        assert_eq!(vocab_max_token(usize::MAX), i32::MAX - 1);
+    }
+}

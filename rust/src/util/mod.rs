@@ -4,6 +4,7 @@
 //! ecosystem crates (rand / serde_json / env_logger / rayon) are replaced
 //! by these minimal, tested in-repo equivalents (DESIGN.md §S16).
 
+pub mod cast;
 pub mod json;
 pub mod logging;
 pub mod pool;

@@ -347,6 +347,119 @@ mod tests {
         assert!(ThreadPool::global().num_threads() >= 1);
     }
 
+    /// Seeded stress sweep: random (threads, jobs, payload) permutations
+    /// must never lose a task.  Every job contributes a distinct weight
+    /// to a checksum; any dropped, duplicated, or unjoined job changes
+    /// the total.  Spin payloads are drawn per job so fast jobs race
+    /// slow ones across the steal paths.
+    #[test]
+    fn stress_no_lost_tasks_under_seeded_permutations() {
+        let mut rng = crate::util::Pcg64::seeded(0xC0FFEE);
+        for round in 0..24 {
+            let threads = 1 + rng.usize_below(6);
+            let jobs = 1 + rng.usize_below(97);
+            let spins: Vec<usize> =
+                (0..jobs).map(|_| rng.usize_below(200)).collect();
+            let pool = ThreadPool::new(threads);
+            let sum = AtomicUsize::new(0);
+            pool.scope(|s| {
+                for (i, &spin) in spins.iter().enumerate() {
+                    let sum = &sum;
+                    s.spawn(move || {
+                        // data-dependent busy work so job durations vary
+                        let mut acc = spin;
+                        for k in 0..spin {
+                            acc = acc.wrapping_mul(31).wrapping_add(k);
+                        }
+                        std::hint::black_box(acc);
+                        sum.fetch_add(i + 1, Ordering::Relaxed);
+                    });
+                }
+            });
+            let expect = jobs * (jobs + 1) / 2;
+            assert_eq!(
+                sum.load(Ordering::Relaxed),
+                expect,
+                "round {round}: threads={threads} jobs={jobs}"
+            );
+        }
+    }
+
+    /// Work-assist progress: a 1-thread pool whose only worker is parked
+    /// inside a job that BLOCKS until every other job has run.  The
+    /// scope caller must execute the remaining backlog itself or this
+    /// test deadlocks — i.e. it proves the assist path makes progress,
+    /// not just that it exists.
+    #[test]
+    fn stress_assist_unblocks_a_parked_worker() {
+        let mut rng = crate::util::Pcg64::seeded(7);
+        for _ in 0..8 {
+            let rest = 1 + rng.usize_below(31);
+            let pool = ThreadPool::new(1);
+            let done = AtomicUsize::new(0);
+            pool.scope(|s| {
+                let done = &done;
+                s.spawn(move || {
+                    // worker parks here until the backlog drains
+                    while done.load(Ordering::Acquire) < rest {
+                        std::thread::yield_now();
+                    }
+                });
+                for _ in 0..rest {
+                    s.spawn(move || {
+                        done.fetch_add(1, Ordering::Release);
+                    });
+                }
+            });
+            assert_eq!(done.load(Ordering::Acquire), rest);
+        }
+    }
+
+    /// Panic propagation under permutation: a seeded subset of jobs
+    /// panics; scope() must still run every non-panicking job, then
+    /// panic itself, and the pool must stay usable afterwards.
+    #[test]
+    fn stress_panics_propagate_without_losing_survivors() {
+        let mut rng = crate::util::Pcg64::seeded(42);
+        for round in 0..12 {
+            let threads = 1 + rng.usize_below(4);
+            let jobs = 2 + rng.usize_below(40);
+            // capped so the (expected) panic spew stays readable
+            let bombs = 1 + rng.usize_below((jobs - 1).min(4));
+            let bad = rng.choose_distinct(jobs, bombs);
+            let pool = ThreadPool::new(threads);
+            let ran = AtomicUsize::new(0);
+            let out = catch_unwind(AssertUnwindSafe(|| {
+                pool.scope(|s| {
+                    for i in 0..jobs {
+                        let ran = &ran;
+                        let boom = bad.contains(&i);
+                        s.spawn(move || {
+                            if boom {
+                                panic!("seeded bomb {i}");
+                            }
+                            ran.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }));
+            assert!(out.is_err(), "round {round}: panic was swallowed");
+            assert_eq!(
+                ran.load(Ordering::Relaxed),
+                jobs - bombs,
+                "round {round}: a non-panicking job was lost"
+            );
+            // same pool still serves a clean scope
+            let ok = AtomicUsize::new(0);
+            pool.scope(|s| {
+                s.spawn(|| {
+                    ok.fetch_add(1, Ordering::Relaxed);
+                });
+            });
+            assert_eq!(ok.load(Ordering::Relaxed), 1);
+        }
+    }
+
     #[test]
     fn sequential_results_on_reused_pool() {
         // many scopes back to back reuse the same workers
