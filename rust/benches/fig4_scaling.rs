@@ -26,7 +26,7 @@ use kla::api::{prefix_batch, Filter, GlaFilter, GlaInputs, GlaParams,
 use kla::bench::{black_box, Suite};
 use kla::kla::{random_inputs, random_params};
 use kla::runtime::{Runtime, Value};
-use kla::util::Pcg64;
+use kla::util::{Json, Pcg64};
 
 fn main() {
     let mut suite = Suite::new("fig4_scaling");
@@ -158,9 +158,38 @@ fn main() {
     let par = suite.results().iter()
         .find(|r| r.name.starts_with("scan/native-chunked")
             && r.name.ends_with("T=2048"));
-    if let (Some(r), Some(p)) = (rec, par) {
-        println!("\nheadline: chunked scan is {:.1}x faster than the \
-                  recurrent update at T=2048 (paper: ~350x on A100 CUDA \
-                  vs torch recurrent)", r.mean_ms / p.mean_ms);
+    let headline = if let (Some(r), Some(p)) = (rec, par) {
+        let ratio = r.mean_ms / p.mean_ms;
+        println!("\nheadline: chunked scan is {ratio:.1}x faster than \
+                  the recurrent update at T=2048 (paper: ~350x on A100 \
+                  CUDA vs torch recurrent)");
+        Json::num(ratio)
+    } else {
+        Json::Null
+    };
+
+    // machine-readable rows for BENCH_fig4.json (the CI scaling-curve
+    // artifact; `t` is parsed from the point name so downstream plots
+    // need no name grammar)
+    let rows: Vec<Json> = suite.results().iter().map(|r| {
+        let t = r.name.rsplit("T=").next()
+            .and_then(|s| s.parse::<f64>().ok())
+            .map_or(Json::Null, Json::num);
+        Json::obj(vec![
+            ("name", Json::str(&r.name)),
+            ("t", t),
+            ("iters", Json::num(r.iters as f64)),
+            ("mean_ms", Json::num(r.mean_ms)),
+            ("min_ms", Json::num(r.min_ms)),
+            ("p50_ms", Json::num(r.p50_ms)),
+        ])
+    }).collect();
+    let report = Json::obj(vec![
+        ("bench", Json::str("fig4_scaling")),
+        ("headline_speedup_t2048", headline),
+        ("rows", Json::Arr(rows)),
+    ]);
+    if std::fs::write("BENCH_fig4.json", report.to_pretty()).is_ok() {
+        println!("[bench] wrote BENCH_fig4.json");
     }
 }

@@ -153,13 +153,14 @@ pub fn linear_scan_channel_parallel(t_len: usize, s: usize, f: &[f32],
 }
 
 struct SendPtr(*mut f32);
-// SAFETY: SendPtr is only used inside linear_scan_channel_parallel, where
-// every thread writes a disjoint set of (t, i) cells (channel ranges are
-// split by parallel_ranges) and `out` outlives the parallel region.
+// SAFETY: the SendPtr raw pointer is only used inside
+// linear_scan_channel_parallel, where every thread writes a disjoint set
+// of (t, i) cells (channel ranges are split by parallel_ranges) and
+// `out` outlives the parallel region.
 unsafe impl Send for SendPtr {}
-// SAFETY: shared access is read-only on the pointer value itself; the
-// pointed-to cells are partitioned per thread as above, so no two threads
-// ever alias a write.
+// SAFETY: shared access to a SendPtr is read-only on the pointer value
+// itself; the pointed-to cells are partitioned per thread as above, so
+// no two threads ever alias a write.
 unsafe impl Sync for SendPtr {}
 
 #[cfg(test)]

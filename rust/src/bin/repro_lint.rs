@@ -4,37 +4,88 @@
 //! Usage:
 //!
 //! ```text
-//! cargo run --bin repro_lint --            # lint the repo this binary
-//!                                          # was built from
-//! cargo run --bin repro_lint -- <root>     # lint a checkout at <root>
+//! cargo run --bin repro_lint --                 # lint this repo
+//! cargo run --bin repro_lint -- <root>          # lint a checkout
+//! cargo run --bin repro_lint -- --pass <name>   # one pass only
+//! cargo run --bin repro_lint -- --json <file>   # also write the
+//!                                               # machine-readable
+//!                                               # report (CI artifact)
 //! ```
 //!
 //! Output is the per-pass result lines CI grep-pins
 //! (`repro-lint[<pass>]: N findings, M waivers used`), each surviving
 //! finding as `path:line: [pass] message`, and a final
 //! `repro-lint: clean (N files scanned)` / `repro-lint: DIRTY (..)`
-//! verdict.  See `rust/src/lint/mod.rs` and DESIGN.md §S18 for the
-//! pass and waiver semantics.
+//! verdict.  The `--json` report is written whether the tree is clean
+//! or dirty, so CI uploads it either way.  See `rust/src/lint/mod.rs`
+//! and DESIGN.md §S18 for the pass and waiver semantics.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
+fn usage(err: &str) -> ExitCode {
+    eprintln!("repro-lint: {err}");
+    eprintln!(
+        "usage: repro_lint [<root>] [--pass <name>] [--json <file>]"
+    );
+    ExitCode::from(2)
+}
+
 fn main() -> ExitCode {
-    let root = std::env::args()
-        .nth(1)
-        .map(PathBuf::from)
+    let mut root: Option<PathBuf> = None;
+    let mut json_path: Option<PathBuf> = None;
+    let mut only: Option<String> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => match args.next() {
+                Some(p) => json_path = Some(PathBuf::from(p)),
+                None => return usage("--json needs a file path"),
+            },
+            "--pass" => match args.next() {
+                Some(p) => only = Some(p),
+                None => return usage("--pass needs a pass name"),
+            },
+            _ if a.starts_with("--") => {
+                return usage(&format!("unknown flag {a:?}"));
+            }
+            _ if root.is_none() => root = Some(PathBuf::from(a)),
+            _ => return usage(&format!("unexpected argument {a:?}")),
+        }
+    }
+    if let Some(p) = &only {
+        if !kla::lint::PASS_NAMES.contains(&p.as_str()) {
+            return usage(&format!(
+                "unknown pass {p:?} (known: {})",
+                kla::lint::PASS_NAMES.join(", ")
+            ));
+        }
+    }
+    let root = root
         .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")));
-    let report = match kla::lint::run_repo(&root) {
-        Ok(r) => r,
-        Err(e) => {
+    let report =
+        match kla::lint::run_repo_filtered(&root, only.as_deref()) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!(
+                    "repro-lint: cannot scan {}: {e}",
+                    root.display()
+                );
+                return ExitCode::from(2);
+            }
+        };
+    print!("{}", report.render());
+    if let Some(path) = json_path {
+        if let Err(e) =
+            std::fs::write(&path, report.to_json().to_pretty())
+        {
             eprintln!(
-                "repro-lint: cannot scan {}: {e}",
-                root.display()
+                "repro-lint: cannot write {}: {e}",
+                path.display()
             );
             return ExitCode::from(2);
         }
-    };
-    print!("{}", report.render());
+    }
     if report.is_clean() {
         ExitCode::SUCCESS
     } else {

@@ -54,6 +54,7 @@ pub mod data;
 pub mod eval;
 pub mod kla;
 pub mod lint;
+pub mod mc;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;

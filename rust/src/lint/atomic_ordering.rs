@@ -1,0 +1,355 @@
+//! Pass `atomic-ordering`: every atomic memory ordering is either an
+//! allowlisted stats counter or carries a reviewed rationale.
+//!
+//! The model checker (`rust/src/mc/`) runs the shimmed code under a
+//! global total order, so it can never distinguish `Relaxed` from
+//! `SeqCst` — ordering bugs are exactly the class that survives it.
+//! This pass is the static complement.  A *site* is any
+//! `Ordering::<name>` argument in non-test code; its receiver is the
+//! last field of the call chain (`live.steps.fetch_add(1, ..)` →
+//! `steps`).  Rules:
+//!
+//! - **`Relaxed` allowlist** — `Relaxed` is only free on fields of
+//!   the `LiveStats` struct (monotonic stats counters read by the
+//!   `{"cmd":"stats"}` reply; drift there is cosmetic).  Any other
+//!   `Relaxed` site is a finding: either upgrade the ordering or
+//!   waive it with the invariant that makes relaxation safe.
+//! - **rationale** — every non-`Relaxed` site must have an `// ord:`
+//!   comment within [`ORD_WINDOW`] lines above it, and the comment
+//!   run from that anchor down to the site must name the ordering
+//!   actually used (`Acquire`, `Release`, `AcqRel`, `SeqCst`) — so a
+//!   site cannot silently change strength under a stale rationale.
+//! - **stale-ord audit** — an `// ord:` anchor with no atomic site
+//!   within [`ORD_WINDOW`] lines below it is itself a finding; ord
+//!   rationales cannot rot after a refactor moves the site away.
+//!
+//! `// ord:` is plain-comment syntax like the waiver syntax: doc
+//! comments (`///`, `//!`) never count, so prose about the mechanism
+//! cannot satisfy (or stale-trip) the audit.
+
+use super::{Finding, LintInput, SourceFile};
+use crate::lint::counter_sync::struct_fields;
+use crate::lint::lexer::Token;
+use crate::lint::lock_order::chain_last_ident;
+
+const PASS: &str = "atomic-ordering";
+
+/// How far above a site its `// ord:` rationale may sit, and how far
+/// below an anchor its site must exist.
+pub const ORD_WINDOW: usize = 10;
+
+const ORDERINGS: [&str; 5] =
+    ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+/// One `Ordering::<name>` argument occurrence.
+struct Site {
+    line: usize,
+    ordering: &'static str,
+    receiver: Option<String>,
+    in_test: bool,
+}
+
+/// One `// ord:` rationale comment.
+struct Anchor {
+    line: usize,
+}
+
+pub fn run(input: &LintInput) -> Vec<Finding> {
+    let mut out = Vec::new();
+
+    // The Relaxed allowlist: LiveStats stats-counter field names,
+    // wherever the struct is defined in the scanned set.
+    let mut allow: Vec<String> = Vec::new();
+    for f in &input.files {
+        if let Some(fields) = struct_fields(&f.code, "LiveStats") {
+            allow.extend(fields.into_iter().map(|fld| fld.name));
+        }
+    }
+
+    for file in &input.files {
+        check_file(file, &allow, &mut out);
+    }
+    out
+}
+
+fn check_file(file: &SourceFile, allow: &[String], out: &mut Vec<Finding>) {
+    let sites = collect_sites(file);
+    let anchors = collect_anchors(file);
+
+    for s in sites.iter().filter(|s| !s.in_test) {
+        let allowlisted = s
+            .receiver
+            .as_ref()
+            .is_some_and(|r| allow.iter().any(|a| a == r));
+        if s.ordering == "Relaxed" {
+            if !allowlisted {
+                out.push(Finding {
+                    pass: PASS,
+                    file: file.path.clone(),
+                    line: s.line,
+                    message: format!(
+                        "`Ordering::Relaxed` on `{}` which is not a \
+                         LiveStats stats counter; relaxed loads/stores \
+                         order nothing — upgrade the ordering or waive \
+                         with the invariant that makes relaxation safe",
+                        s.receiver.as_deref().unwrap_or("<unknown>")
+                    ),
+                });
+            }
+            continue;
+        }
+        // Non-Relaxed: require a reviewed rationale within the window.
+        let anchor = anchors
+            .iter()
+            .filter(|a| a.line <= s.line && s.line - a.line <= ORD_WINDOW)
+            .map(|a| a.line)
+            .max();
+        let Some(anchor_line) = anchor else {
+            out.push(Finding {
+                pass: PASS,
+                file: file.path.clone(),
+                line: s.line,
+                message: format!(
+                    "`Ordering::{}` without an `// ord:` rationale \
+                     within {ORD_WINDOW} lines above; state which \
+                     accesses this ordering pairs with",
+                    s.ordering
+                ),
+            });
+            continue;
+        };
+        let text = comment_run(file, anchor_line, s.line);
+        if !text.contains(s.ordering) {
+            out.push(Finding {
+                pass: PASS,
+                file: file.path.clone(),
+                line: s.line,
+                message: format!(
+                    "the `// ord:` rationale above does not name \
+                     `{}` — the site's ordering changed under a stale \
+                     rationale, or the rationale never matched; \
+                     rewrite it for the ordering actually used",
+                    s.ordering
+                ),
+            });
+        }
+    }
+
+    // Stale-ord audit: every anchor must still have a site below it.
+    // Test and allowlisted sites count — the anchor documents them
+    // just as well.
+    for a in &anchors {
+        let covered = sites
+            .iter()
+            .any(|s| s.line >= a.line && s.line - a.line <= ORD_WINDOW);
+        if !covered {
+            out.push(Finding {
+                pass: PASS,
+                file: file.path.clone(),
+                line: a.line,
+                message: format!(
+                    "stale `// ord:` rationale: no atomic ordering \
+                     site within {ORD_WINDOW} lines below it — the \
+                     site moved or died; move or remove the comment"
+                ),
+            });
+        }
+    }
+}
+
+/// Every `Ordering::<name>` occurrence in the code token stream.
+fn collect_sites(file: &SourceFile) -> Vec<Site> {
+    let code = &file.code;
+    let mut out = Vec::new();
+    for i in 3..code.len() {
+        let Some(name) = code[i].ident() else { continue };
+        let Some(ordering) = ORDERINGS.iter().find(|o| **o == name)
+        else {
+            continue;
+        };
+        if !(code[i - 1].is_punct(':')
+            && code[i - 2].is_punct(':')
+            && code[i - 3].ident() == Some("Ordering"))
+        {
+            continue;
+        }
+        out.push(Site {
+            line: code[i].line,
+            ordering,
+            receiver: call_receiver(code, i),
+            in_test: file.is_test_line(code[i].line),
+        });
+    }
+    out
+}
+
+/// The receiver field of the atomic call this `Ordering::` argument
+/// belongs to: walk back to the unmatched `(` opening the call, then
+/// name the chain before its method ident.
+fn call_receiver(code: &[Token], ord_idx: usize) -> Option<String> {
+    let mut depth = 0usize;
+    let mut k = ord_idx.checked_sub(3)?; // the `Ordering` ident
+    loop {
+        k = k.checked_sub(1)?;
+        if code[k].is_punct(')') {
+            depth += 1;
+        } else if code[k].is_punct('(') {
+            if depth == 0 {
+                break;
+            }
+            depth -= 1;
+        }
+    }
+    // `<chain> . <method> (` — the method ident sits right before the
+    // open paren, the chain before its dot.
+    let method = k.checked_sub(1)?;
+    code[method].ident()?;
+    let dot = method.checked_sub(1)?;
+    if !code[dot].is_punct('.') {
+        return None;
+    }
+    chain_last_ident(code, dot)
+}
+
+/// Every plain-comment `// ord:` anchor (doc comments excluded).
+fn collect_anchors(file: &SourceFile) -> Vec<Anchor> {
+    let mut out = Vec::new();
+    for t in &file.toks {
+        let Some(text) = t.comment_text() else { continue };
+        if text.starts_with('/') || text.starts_with('!') {
+            continue;
+        }
+        if text.trim_start().starts_with("ord:") {
+            out.push(Anchor { line: t.line });
+        }
+    }
+    out
+}
+
+/// All plain-comment text on lines `[from, to]` joined — the
+/// rationale run checked for the ordering name.
+fn comment_run(file: &SourceFile, from: usize, to: usize) -> String {
+    let mut text = String::new();
+    for t in &file.toks {
+        if t.line < from || t.line > to {
+            continue;
+        }
+        if let Some(c) = t.comment_text() {
+            if !c.starts_with('/') && !c.starts_with('!') {
+                text.push_str(c);
+                text.push('\n');
+            }
+        }
+    }
+    text
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::{run as run_all, LintInput, SourceFile};
+
+    fn input(path: &str, src: &str) -> LintInput {
+        LintInput {
+            files: vec![SourceFile::from_source(path, src)],
+            design_md: String::new(),
+        }
+    }
+
+    #[test]
+    fn fixture_fires_on_every_bad_site() {
+        let src = include_str!("fixtures/atomic_ordering_bad.rs");
+        let fs = run(&input("rust/src/util/thread_pool.rs", src));
+        let msgs: Vec<&str> =
+            fs.iter().map(|f| f.message.as_str()).collect();
+        assert!(
+            msgs.iter().any(|m| m.contains("not a LiveStats")),
+            "{msgs:?}"
+        );
+        assert!(
+            msgs.iter()
+                .any(|m| m.contains("without an `// ord:` rationale")),
+            "{msgs:?}"
+        );
+        assert!(
+            msgs.iter().any(|m| m.contains("does not name `Acquire`")),
+            "{msgs:?}"
+        );
+        assert!(
+            msgs.iter().any(|m| m.contains("stale `// ord:`")),
+            "{msgs:?}"
+        );
+        assert_eq!(fs.len(), 4, "{msgs:?}");
+    }
+
+    #[test]
+    fn fixture_waivers_suppress_and_are_counted() {
+        let src = include_str!("fixtures/atomic_ordering_waived.rs");
+        let report = run_all(&input("rust/src/util/thread_pool.rs", src));
+        assert!(
+            report.findings.is_empty(),
+            "waived fixture should be clean:\n{}",
+            report.render()
+        );
+        let s = report
+            .summaries
+            .iter()
+            .find(|s| s.pass == "atomic-ordering")
+            .unwrap_or_else(|| panic!("no atomic-ordering summary"));
+        assert!(s.waivers_used >= 2, "waivers used: {}", s.waivers_used);
+    }
+
+    #[test]
+    fn allowlisted_counters_and_good_rationales_are_clean() {
+        let src = "\
+use std::sync::atomic::{AtomicUsize, Ordering};\n\
+pub struct LiveStats {\n\
+    pub steps: AtomicUsize,\n\
+    pub tokens_out: AtomicUsize,\n\
+}\n\
+pub struct Gate {\n\
+    pub open: AtomicUsize,\n\
+}\n\
+pub fn f(s: &LiveStats, g: &Gate) -> usize {\n\
+    s.steps.fetch_add(1, Ordering::Relaxed);\n\
+    // ord: SeqCst — pairs with the store in close(); the reader\n\
+    // must observe the final counter value\n\
+    g.open.load(Ordering::SeqCst)\n\
+        + s.tokens_out.load(Ordering::Relaxed)\n\
+}\n";
+        let fs = run(&input("rust/src/serve/engine.rs", src));
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn test_code_sites_are_exempt_but_cover_anchors() {
+        let src = "\
+use std::sync::atomic::{AtomicUsize, Ordering};\n\
+#[cfg(test)]\n\
+mod tests {\n\
+    use super::*;\n\
+    #[test]\n\
+    fn t() {\n\
+        let n = AtomicUsize::new(0);\n\
+        n.store(1, Ordering::Release);\n\
+    }\n\
+}\n";
+        let fs = run(&input("rust/src/serve/engine.rs", src));
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn doc_comments_are_not_ord_anchors() {
+        // an `ord:` mention in a doc comment neither satisfies a site
+        // nor trips the stale audit
+        let src = "\
+//! ord: prose about the mechanism, not an anchor\n\
+use std::sync::atomic::{AtomicUsize, Ordering};\n\
+pub fn f(n: &AtomicUsize) {\n\
+    n.store(1, Ordering::Release);\n\
+}\n";
+        let fs = run(&input("rust/src/serve/engine.rs", src));
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert!(fs[0].message.contains("without an `// ord:`"));
+    }
+}

@@ -11,10 +11,11 @@
 //!   to pick a strategy) needs a per-line waiver naming why the clock
 //!   cannot leak into results;
 //! - **thread spawns** — free-running `std::thread::spawn` threads
-//!   belong to `util::thread_pool` and the server's connection
-//!   plumbing ([`SPAWN_ALLOW`]); everything else must use the scoped
-//!   helpers (`util::pool`, `std::thread::scope`) so no thread
-//!   outlives the data it touches;
+//!   belong to `util::thread_pool`, the server's connection
+//!   plumbing, and the model checker's controlled threads
+//!   ([`SPAWN_ALLOW`]); everything else must use the scoped helpers
+//!   (`util::pool`, `std::thread::scope`) so no thread outlives the
+//!   data it touches;
 //! - **narrowing casts** — bare `as` casts to a narrower integer type
 //!   silently truncate token/vocab ids (the PR 4 bug class).  In the
 //!   serve modules ([`CAST_SCOPE`]) they are banned outright: use
@@ -32,9 +33,11 @@ const CLOCK_ALLOW: [(&str, &str); 5] = [
 ];
 
 /// Modules allowed to start free-running threads.
-const SPAWN_ALLOW: [(&str, &str); 2] = [
+const SPAWN_ALLOW: [(&str, &str); 4] = [
     ("util/thread_pool.rs", "the pool owns its workers"),
     ("serve/server.rs", "listener/reader/writer/engine threads"),
+    ("mc/thread.rs", "the model checker's controlled threads"),
+    ("mc/sched.rs", "model executions own their explored threads"),
 ];
 
 /// Serve modules where narrowing `as` casts are banned outright.

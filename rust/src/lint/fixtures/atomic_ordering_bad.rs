@@ -1,0 +1,48 @@
+//! Known-bad fixture for the `atomic-ordering` pass: one snippet per
+//! finding class.  Never compiled — `include_str!`-ed by the pass's
+//! unit tests only.  The local `LiveStats` makes the allowlist
+//! self-contained.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub struct LiveStats {
+    pub steps: AtomicUsize,
+}
+
+pub struct Flags {
+    pub ready: AtomicUsize,
+}
+
+// `Relaxed` outside the LiveStats stats-counter allowlist.
+pub fn bad_relaxed(f: &Flags) -> usize {
+    f.ready.load(Ordering::Relaxed)
+}
+
+// A real ordering with no `// ord:` rationale anywhere near it.
+pub fn missing_rationale(f: &Flags) {
+    f.ready.store(1, Ordering::Release);
+}
+
+// The rationale names Relaxed but the site uses Acquire.
+pub fn mismatched(f: &Flags) -> usize {
+    // ord: Relaxed would do here, nothing is published
+    f.ready.load(Ordering::Acquire)
+}
+
+pub fn stale() -> usize {
+    // ord: Acquire pairs with a store that no longer exists
+    0
+}
+
+// Padding keeps the clean site below outside the stale anchor's
+// coverage window.
+//
+//
+//
+//
+//
+// A LiveStats counter may stay Relaxed with no rationale: drift in a
+// monotonic stats counter is cosmetic.
+pub fn clean(s: &LiveStats) -> usize {
+    s.steps.fetch_add(1, Ordering::Relaxed)
+}

@@ -1,0 +1,19 @@
+//! Waiver fixture for the `atomic-ordering` pass: both waivable
+//! finding classes suppressed by reasoned waivers.  Never compiled —
+//! `include_str!`-ed by unit tests only.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub struct Flags {
+    pub ready: AtomicUsize,
+}
+
+pub fn waived_relaxed(f: &Flags) -> usize {
+    // lint: allow(atomic-ordering, advisory flag; stale reads are safe)
+    f.ready.load(Ordering::Relaxed)
+}
+
+pub fn waived_missing(f: &Flags) {
+    // lint: allow(atomic-ordering, rationale lives on the paired load)
+    f.ready.store(1, Ordering::Release);
+}

@@ -1,0 +1,43 @@
+//! Known-bad fixture for the `lock-order` pass: a two-lock deadlock
+//! cycle plus both condvar-discipline violations.  Never compiled —
+//! `include_str!`-ed by the pass's unit tests only.
+
+use std::sync::{Condvar, Mutex};
+
+pub struct S {
+    pub a: Mutex<u32>,
+    pub b: Mutex<u32>,
+    pub cv: Condvar,
+}
+
+// One path locks `a` then `b`...
+pub fn ab(s: &S) {
+    let ga = s.a.lock().unwrap();
+    let gb = s.b.lock().unwrap();
+    drop(gb);
+    drop(ga);
+}
+
+// ...the other locks `b` then `a`: a deadlock cycle.
+pub fn ba(s: &S) {
+    let gb = s.b.lock().unwrap();
+    let ga = s.a.lock().unwrap();
+    drop(ga);
+    drop(gb);
+}
+
+// Waiting without a predicate-recheck loop loses wakeups.
+pub fn waits_wrong(s: &S) {
+    let ga = s.a.lock().unwrap();
+    let _g = s.cv.wait(ga).unwrap();
+}
+
+// Waiting while a second lock is held blocks its acquirers for the
+// whole sleep.
+pub fn waits_holding(s: &S) {
+    let gb = s.b.lock().unwrap();
+    let ga = s.a.lock().unwrap();
+    loop {
+        let _g = s.cv.wait(ga).unwrap();
+    }
+}

@@ -1,0 +1,43 @@
+//! Waiver fixture for the `lock-order` pass: every finding the bad
+//! fixture seeds is suppressed here by a reasoned waiver, so the
+//! waiver path (and its used-count accounting) is itself tested.
+//! Never compiled — `include_str!`-ed by unit tests only.
+
+use std::sync::{Condvar, Mutex};
+
+pub struct S {
+    pub a: Mutex<u32>,
+    pub b: Mutex<u32>,
+    pub cv: Condvar,
+}
+
+pub fn ab(s: &S) {
+    let ga = s.a.lock().unwrap();
+    // lint: allow(lock-order, fixture: b nests under a by construction)
+    let gb = s.b.lock().unwrap();
+    drop(gb);
+    drop(ga);
+}
+
+pub fn ba(s: &S) {
+    let gb = s.b.lock().unwrap();
+    // lint: allow(lock-order, fixture: teardown path, a is uncontended)
+    let ga = s.a.lock().unwrap();
+    drop(ga);
+    drop(gb);
+}
+
+pub fn waits_wrong(s: &S) {
+    let ga = s.a.lock().unwrap();
+    // lint: allow(lock-order, fixture: single wakeup by protocol)
+    let _g = s.cv.wait(ga).unwrap();
+}
+
+pub fn waits_holding(s: &S) {
+    let gb = s.b.lock().unwrap();
+    let ga = s.a.lock().unwrap();
+    loop {
+        // lint: allow(lock-order, fixture: gb intentionally held here)
+        let _g = s.cv.wait(ga).unwrap();
+    }
+}

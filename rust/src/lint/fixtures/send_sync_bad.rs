@@ -1,0 +1,16 @@
+//! Known-bad fixture for the `send-sync-audit` pass: a leaked raw
+//! pointer and the SAFETY-comment shapes the pass rejects.  Never
+//! compiled — `include_str!`-ed by the pass's unit tests only.
+
+// A public struct exposing a raw pointer: the SAFETY contract leaks
+// past the audited tree.
+pub struct LeakyPtr(*mut f32);
+
+struct Opaque {
+    data: *const u8,
+}
+
+unsafe impl Send for Opaque {}
+
+// SAFETY: this is fine.
+unsafe impl Sync for Opaque {}

@@ -1,0 +1,19 @@
+//! Waiver fixture for the `send-sync-audit` pass: the structural
+//! findings of the bad fixture suppressed by reasoned waivers (the
+//! SAFETY comments satisfy the generic `unsafe` pass but not the
+//! structural one).  Never compiled — `include_str!`-ed by tests.
+
+// lint: allow(send-sync-audit, fixture: device handle, hand-audited)
+pub struct WaivedPtr(*mut f32);
+
+struct Opaque {
+    data: *const u8,
+}
+
+// SAFETY: reviewed by hand in fixture form.
+// lint: allow(send-sync-audit, fixture: prose reviewed out of band)
+unsafe impl Send for Opaque {}
+
+// SAFETY: reviewed by hand in fixture form.
+// lint: allow(send-sync-audit, fixture: prose reviewed out of band)
+unsafe impl Sync for Opaque {}

@@ -1,0 +1,732 @@
+//! Pass `lock-order`: the may-hold-while-acquiring graph stays
+//! acyclic and agrees with the DESIGN.md §S19 lock hierarchy.
+//!
+//! The model checker (`rust/src/mc/`) explores interleavings of the
+//! protocols we wrote tests for; this pass is the static complement
+//! that covers every `.lock()` site in the concurrency scope
+//! ([`SCOPE`]: the serve modules and `util::thread_pool`) on every
+//! build.  It tracks, token by token, which lock guards are live —
+//! let-bound guards until their block closes (or an explicit
+//! `drop(guard)`), `.lock().unwrap().method()` temporaries until the
+//! end of the statement — and records an edge A → B whenever lock B
+//! is acquired while a guard on A is still live.  Locks are named by
+//! the last field identifier of the receiver chain
+//! (`self.shared.gate.lock()` → `gate`), so call sites aggregate
+//! across files.  Findings:
+//!
+//! - **cycle** — an edge A → B where B (transitively) reaches A:
+//!   a deadlock interleaving exists;
+//! - **hierarchy** — DESIGN.md §S19 carries a machine-parsed rank
+//!   table (`| rank | `lock` | ... |` rows).  Every observed lock
+//!   must be ranked, every ranked lock must still exist, and every
+//!   edge must go strictly rank-upward;
+//! - **condvar discipline** — `.wait()` / `.wait_timeout()` outside a
+//!   loop loses wakeups (no predicate recheck — exactly the seeded
+//!   bug `mc::invariants::regression_lost_wakeup_detected` proves the
+//!   model checker catches dynamically), and waiting while holding a
+//!   second lock blocks every acquirer of that lock for the whole
+//!   sleep.
+//!
+//! Known approximation: guards bound by `if let`/`match` on the lock
+//! result are treated as live for the whole dependent block, and a
+//! lock temporary inside a plain `if` condition is released at the
+//! opening brace — both match rustc's drop order for the patterns
+//! used in this repo.
+
+use std::collections::BTreeMap;
+
+use super::{Finding, LintInput, SourceFile};
+use crate::lint::lexer::{Tok, Token};
+
+/// The concurrency scope this pass audits.
+const SCOPE: [&str; 4] = [
+    "serve/engine.rs",
+    "serve/server.rs",
+    "serve/batcher.rs",
+    "util/thread_pool.rs",
+];
+
+const PASS: &str = "lock-order";
+
+/// A live lock guard.
+struct Held {
+    lock: String,
+    var: Option<String>,
+    /// Dropped when brace depth falls below this (ignored for temps).
+    release_depth: usize,
+    /// Statement temporary: dropped at the next `;` / `{` / `}`.
+    temp: bool,
+}
+
+/// One observed may-hold-while-acquiring edge.
+struct Edge {
+    from: String,
+    to: String,
+    file: String,
+    line: usize,
+}
+
+/// A row of the §S19 hierarchy table.
+struct Row {
+    rank: usize,
+    name: String,
+    line: usize,
+}
+
+pub fn run(input: &LintInput) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut edges: Vec<Edge> = Vec::new();
+    let mut first_site: BTreeMap<String, (String, usize)> = BTreeMap::new();
+    for file in &input.files {
+        if !SCOPE.iter().any(|s| file.path_ends_with(s)) {
+            continue;
+        }
+        scan_file(file, &mut out, &mut edges, &mut first_site);
+    }
+
+    // Aggregate parallel edges: keep the first site per (from, to).
+    let mut seen: Vec<(String, String)> = Vec::new();
+    edges.retain(|e| {
+        let key = (e.from.clone(), e.to.clone());
+        if seen.contains(&key) {
+            false
+        } else {
+            seen.push(key);
+            true
+        }
+    });
+
+    for e in &edges {
+        if reaches(&edges, &e.to, &e.from) {
+            out.push(Finding {
+                pass: PASS,
+                file: e.file.clone(),
+                line: e.line,
+                message: format!(
+                    "lock-order cycle: `{}` is held while acquiring \
+                     `{}`, and `{}` (transitively) reaches `{}` — a \
+                     deadlock interleaving exists; acquire in one \
+                     global order",
+                    e.from, e.to, e.to, e.from
+                ),
+            });
+        }
+    }
+
+    table_check(input, &edges, &first_site, &mut out);
+    out
+}
+
+/// True if `from` reaches `to` over the edge set (zero steps count,
+/// so a self-edge is reported as a cycle).
+fn reaches(edges: &[Edge], from: &str, to: &str) -> bool {
+    let mut stack = vec![from];
+    let mut visited: Vec<&str> = Vec::new();
+    while let Some(n) = stack.pop() {
+        if n == to {
+            return true;
+        }
+        if visited.contains(&n) {
+            continue;
+        }
+        visited.push(n);
+        for e in edges {
+            if e.from == n {
+                stack.push(&e.to);
+            }
+        }
+    }
+    false
+}
+
+fn scan_file(
+    file: &SourceFile,
+    out: &mut Vec<Finding>,
+    edges: &mut Vec<Edge>,
+    first_site: &mut BTreeMap<String, (String, usize)>,
+) {
+    let code = &file.code;
+    let mut depth = 0usize;
+    let mut held: Vec<Held> = Vec::new();
+    // Brace depths of loop bodies currently open.
+    let mut loops: Vec<usize> = Vec::new();
+    let mut pending_loop = false;
+    for i in 0..code.len() {
+        let t = &code[i];
+        if t.is_punct('{') {
+            depth += 1;
+            if pending_loop {
+                loops.push(depth);
+                pending_loop = false;
+            }
+            held.retain(|h| !h.temp);
+        } else if t.is_punct('}') {
+            held.retain(|h| !h.temp);
+            if loops.last() == Some(&depth) {
+                loops.pop();
+            }
+            depth = depth.saturating_sub(1);
+            held.retain(|h| h.release_depth <= depth);
+        } else if t.is_punct(';') {
+            held.retain(|h| !h.temp);
+        }
+        match t.ident() {
+            Some("loop") | Some("while") => pending_loop = true,
+            Some("for") if for_is_loop(code, i) => pending_loop = true,
+            Some("drop")
+                if code.get(i + 1).is_some_and(|n| n.is_punct('('))
+                    && code.get(i + 3).is_some_and(|n| n.is_punct(')')) =>
+            {
+                if let Some(name) = code.get(i + 2).and_then(|n| n.ident())
+                {
+                    held.retain(|h| h.var.as_deref() != Some(name));
+                }
+            }
+            Some("lock")
+                if i > 0
+                    && code[i - 1].is_punct('.')
+                    && code.get(i + 1).is_some_and(|n| n.is_punct('('))
+                    && code.get(i + 2).is_some_and(|n| n.is_punct(')')) =>
+            {
+                if !file.is_test_line(t.line) {
+                    acquire(
+                        file, code, i, depth, &mut held, edges, first_site,
+                    );
+                }
+            }
+            Some(w @ ("wait" | "wait_timeout"))
+                if i > 0
+                    && code[i - 1].is_punct('.')
+                    && code.get(i + 1).is_some_and(|n| n.is_punct('(')) =>
+            {
+                if !file.is_test_line(t.line) {
+                    if loops.is_empty() {
+                        out.push(Finding {
+                            pass: PASS,
+                            file: file.path.clone(),
+                            line: t.line,
+                            message: format!(
+                                "condvar `{w}` outside a loop: a missed \
+                                 or spurious wakeup is unrecoverable \
+                                 without re-checking the predicate; \
+                                 wrap the wait in a `while`/`loop` \
+                                 recheck"
+                            ),
+                        });
+                    }
+                    let consumed = code.get(i + 2).and_then(|n| n.ident());
+                    for h in &held {
+                        if h.var.as_deref() != consumed {
+                            out.push(Finding {
+                                pass: PASS,
+                                file: file.path.clone(),
+                                line: t.line,
+                                message: format!(
+                                    "condvar `{w}` while holding `{}`: \
+                                     the sleeping thread blocks every \
+                                     acquirer of that lock for the \
+                                     whole sleep; drop it first",
+                                    h.lock
+                                ),
+                            });
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Handle the `.lock()` whose `lock` ident sits at `i`.
+#[allow(clippy::too_many_arguments)]
+fn acquire(
+    file: &SourceFile,
+    code: &[Token],
+    i: usize,
+    depth: usize,
+    held: &mut Vec<Held>,
+    edges: &mut Vec<Edge>,
+    first_site: &mut BTreeMap<String, (String, usize)>,
+) {
+    let Some(lock) = chain_last_ident(code, i - 1) else {
+        return;
+    };
+    let line = code[i].line;
+    for h in held.iter() {
+        edges.push(Edge {
+            from: h.lock.clone(),
+            to: lock.clone(),
+            file: file.path.clone(),
+            line,
+        });
+    }
+    first_site
+        .entry(lock.clone())
+        .or_insert_with(|| (file.path.clone(), line));
+
+    // Skip the `.unwrap()` / `.expect(..)` / `.unwrap_or_else(..)`
+    // chain after the call to classify what the guard binds to.
+    let mut j = i + 3;
+    while code.get(j).is_some_and(|n| n.is_punct('.'))
+        && matches!(
+            code.get(j + 1).and_then(|n| n.ident()),
+            Some("unwrap" | "expect" | "unwrap_or_else")
+        )
+        && code.get(j + 2).is_some_and(|n| n.is_punct('('))
+    {
+        j = skip_balanced(code, j + 2);
+    }
+    let start = chain_start(code, i - 1);
+    let binding = binding_var(code, start);
+    let held_entry = match code.get(j) {
+        // `let g = x.lock().unwrap();` — guard lives in this block.
+        Some(n) if n.is_punct(';') && binding.is_some() => Held {
+            lock,
+            var: binding,
+            release_depth: depth,
+            temp: false,
+        },
+        // `if let Ok(g) = x.lock() {` / `match x.lock() {` — guard
+        // lives in the dependent block.
+        Some(n) if n.is_punct('{') => {
+            let is_match = start > 0
+                && code[start - 1].ident() == Some("match");
+            if binding.is_some() || is_match {
+                Held {
+                    lock,
+                    var: binding,
+                    release_depth: depth + 1,
+                    temp: false,
+                }
+            } else {
+                // plain `if cond {` temporary: dropped at the brace
+                Held { lock, var: None, release_depth: 0, temp: true }
+            }
+        }
+        // `let Ok(g) = x.lock() else { .. };` — guard lives here.
+        Some(n) if n.ident() == Some("else") => Held {
+            lock,
+            var: binding,
+            release_depth: depth,
+            temp: false,
+        },
+        // anything else (`.method()`, `+=`, `==`, ...) — temporary
+        _ => Held { lock, var: None, release_depth: 0, temp: true },
+    };
+    held.push(held_entry);
+}
+
+/// Index one past the `)` matching the `(` at `open`.
+fn skip_balanced(code: &[Token], open: usize) -> usize {
+    let mut d = 0usize;
+    let mut k = open;
+    while k < code.len() {
+        if code[k].is_punct('(') {
+            d += 1;
+        } else if code[k].is_punct(')') {
+            d -= 1;
+            if d == 0 {
+                return k + 1;
+            }
+        }
+        k += 1;
+    }
+    code.len()
+}
+
+/// Last field identifier of the receiver chain ending at the `.` at
+/// `dot_idx` (`self.shared.queues[victim].lock` → `queues`).  Shared
+/// with the `atomic-ordering` pass, which names atomic sites the
+/// same way.
+pub(crate) fn chain_last_ident(
+    code: &[Token],
+    dot_idx: usize,
+) -> Option<String> {
+    let mut k = dot_idx.checked_sub(1)?;
+    if code[k].is_punct(']') {
+        let mut d = 0usize;
+        loop {
+            if code[k].is_punct(']') {
+                d += 1;
+            } else if code[k].is_punct('[') {
+                d -= 1;
+                if d == 0 {
+                    break;
+                }
+            }
+            k = k.checked_sub(1)?;
+        }
+        k = k.checked_sub(1)?;
+    }
+    code[k].ident().map(str::to_string)
+}
+
+/// First token index of the receiver chain ending at the `.` at
+/// `dot_idx`.
+fn chain_start(code: &[Token], dot_idx: usize) -> usize {
+    let mut k = dot_idx;
+    loop {
+        let Some(prev) = k.checked_sub(1) else { return k };
+        if code[prev].is_punct(']') {
+            let mut d = 0usize;
+            let mut m = prev;
+            loop {
+                if code[m].is_punct(']') {
+                    d += 1;
+                } else if code[m].is_punct('[') {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                }
+                let Some(next) = m.checked_sub(1) else { return k };
+                m = next;
+            }
+            let Some(before) = m.checked_sub(1) else { return m };
+            if code[before].ident().is_none() {
+                return m;
+            }
+            k = before;
+        } else if code[prev].ident().is_some() {
+            k = prev;
+        } else {
+            return k;
+        }
+        let Some(pp) = k.checked_sub(1) else { return k };
+        if code[pp].is_punct('.') {
+            k = pp;
+        } else {
+            return k;
+        }
+    }
+}
+
+/// The variable a `let <pat> = <chain>.lock()...` binds, if the chain
+/// at `start` is the right-hand side of a plain `=` binding.
+fn binding_var(code: &[Token], start: usize) -> Option<String> {
+    let eq = start.checked_sub(1)?;
+    if !code[eq].is_punct('=') {
+        return None;
+    }
+    let before = eq.checked_sub(1)?;
+    // reject compound assignment (`+=`, `==`, ...)
+    if matches!(code[before].tok, Tok::Punct(c)
+        if "+-*/%&|^<>=!".contains(c))
+    {
+        return None;
+    }
+    if let Some(name) = code[before].ident() {
+        if name == "mut" || name == "let" {
+            return None;
+        }
+        return Some(name.to_string());
+    }
+    if code[before].is_punct(')') {
+        // tuple-struct pattern (`Ok(mut map)`): last ident inside
+        let mut d = 0usize;
+        let mut k = before;
+        let mut last: Option<String> = None;
+        loop {
+            if code[k].is_punct(')') {
+                d += 1;
+            } else if code[k].is_punct('(') {
+                d -= 1;
+                if d == 0 {
+                    break;
+                }
+            } else if let Some(n) = code[k].ident() {
+                if last.is_none() && n != "mut" {
+                    last = Some(n.to_string());
+                }
+            }
+            k = k.checked_sub(1)?;
+        }
+        return last;
+    }
+    None
+}
+
+/// True if the `for` at `i` heads a for-loop (an `in` appears before
+/// the body brace), not a trait impl (`impl Send for T`).
+fn for_is_loop(code: &[Token], i: usize) -> bool {
+    let mut k = i + 1;
+    while let Some(t) = code.get(k) {
+        if t.is_punct('{') || t.is_punct(';') {
+            return false;
+        }
+        if t.ident() == Some("in") {
+            return true;
+        }
+        k += 1;
+    }
+    false
+}
+
+fn table_check(
+    input: &LintInput,
+    edges: &[Edge],
+    first_site: &BTreeMap<String, (String, usize)>,
+    out: &mut Vec<Finding>,
+) {
+    if input.design_md.is_empty() {
+        return;
+    }
+    let Some(rows) = parse_table(&input.design_md) else {
+        if !first_site.is_empty() {
+            out.push(Finding {
+                pass: PASS,
+                file: "DESIGN.md".to_string(),
+                line: 1,
+                message: "locks exist in the concurrency scope but \
+                          DESIGN.md has no §S19 lock-hierarchy table \
+                          (`| <rank> | `<lock>` | ... |` rows under \
+                          the `## §S19` heading)"
+                    .to_string(),
+            });
+        }
+        return;
+    };
+    let rank: BTreeMap<&str, usize> =
+        rows.iter().map(|r| (r.name.as_str(), r.rank)).collect();
+    for (lock, (file, line)) in first_site {
+        if !rank.contains_key(lock.as_str()) {
+            out.push(Finding {
+                pass: PASS,
+                file: file.clone(),
+                line: *line,
+                message: format!(
+                    "lock `{lock}` is missing from the DESIGN.md §S19 \
+                     lock-hierarchy table; add a ranked row for it"
+                ),
+            });
+        }
+    }
+    for row in &rows {
+        if !first_site.contains_key(&row.name) {
+            out.push(Finding {
+                pass: PASS,
+                file: "DESIGN.md".to_string(),
+                line: row.line,
+                message: format!(
+                    "§S19 hierarchy row `{}` matches no `.lock()` site \
+                     in the concurrency scope — stale row, remove or \
+                     rename it",
+                    row.name
+                ),
+            });
+        }
+    }
+    for e in edges {
+        if let (Some(&rf), Some(&rt)) =
+            (rank.get(e.from.as_str()), rank.get(e.to.as_str()))
+        {
+            if rf >= rt {
+                out.push(Finding {
+                    pass: PASS,
+                    file: e.file.clone(),
+                    line: e.line,
+                    message: format!(
+                        "acquiring `{}` (rank {rt}) while holding `{}` \
+                         (rank {rf}) violates the §S19 hierarchy: hold \
+                         only strictly lower-rank locks while acquiring",
+                        e.to, e.from
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Parse the `| rank | `lock` | ... |` rows of the §S19 section.
+fn parse_table(design_md: &str) -> Option<Vec<Row>> {
+    let mut rows = Vec::new();
+    let mut in_section = false;
+    for (idx, line) in design_md.lines().enumerate() {
+        if line.starts_with("## ") {
+            in_section = line.starts_with("## §S19");
+            continue;
+        }
+        if !in_section {
+            continue;
+        }
+        let trimmed = line.trim();
+        if !trimmed.starts_with('|') {
+            continue;
+        }
+        let cells: Vec<&str> = trimmed.split('|').collect();
+        let (Some(rank_cell), Some(name_cell)) =
+            (cells.get(1), cells.get(2))
+        else {
+            continue;
+        };
+        let Ok(rank) = rank_cell.trim().parse::<usize>() else {
+            continue;
+        };
+        let name_cell = name_cell.trim();
+        let Some(rest) = name_cell.strip_prefix('`') else { continue };
+        let Some(name) = rest.split('`').next() else { continue };
+        rows.push(Row {
+            rank,
+            name: name.to_string(),
+            line: idx + 1,
+        });
+    }
+    if rows.is_empty() {
+        None
+    } else {
+        Some(rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::{run as run_all, LintInput, SourceFile};
+
+    fn input(path: &str, src: &str) -> LintInput {
+        LintInput {
+            files: vec![SourceFile::from_source(path, src)],
+            design_md: String::new(),
+        }
+    }
+
+    #[test]
+    fn fixture_fires_on_cycle_and_condvar_misuse() {
+        let src = include_str!("fixtures/lock_order_bad.rs");
+        let fs = run(&input("rust/src/util/thread_pool.rs", src));
+        let msgs: Vec<&str> =
+            fs.iter().map(|f| f.message.as_str()).collect();
+        assert_eq!(
+            msgs.iter().filter(|m| m.contains("lock-order cycle")).count(),
+            2,
+            "{msgs:?}"
+        );
+        assert!(
+            msgs.iter().any(|m| m.contains("outside a loop")),
+            "{msgs:?}"
+        );
+        assert!(
+            msgs.iter().any(|m| m.contains("while holding `b`")),
+            "{msgs:?}"
+        );
+    }
+
+    #[test]
+    fn fixture_waivers_suppress_every_finding() {
+        let src = include_str!("fixtures/lock_order_waived.rs");
+        let report = run_all(&input("rust/src/util/thread_pool.rs", src));
+        assert!(
+            report.findings.is_empty(),
+            "waived fixture not clean:\n{}",
+            report.render()
+        );
+        let s = report
+            .summaries
+            .iter()
+            .find(|s| s.pass == "lock-order")
+            .unwrap_or_else(|| panic!("no lock-order summary"));
+        assert!(s.waivers_used >= 4, "waivers used: {}", s.waivers_used);
+    }
+
+    #[test]
+    fn hierarchy_table_rank_violation_is_reported() {
+        let src = "\
+fn f(s: &S) {\n\
+    let gb = s.b.lock().unwrap();\n\
+    let ga = s.a.lock().unwrap();\n\
+    drop(ga);\n\
+    drop(gb);\n\
+}\n";
+        let design = "\
+## §S19 Concurrency\n\
+\n\
+| rank | lock | defined in |\n\
+|------|------|------------|\n\
+| 1 | `a` | x.rs |\n\
+| 2 | `b` | x.rs |\n";
+        let inp = LintInput {
+            files: vec![SourceFile::from_source(
+                "rust/src/util/thread_pool.rs",
+                src,
+            )],
+            design_md: design.to_string(),
+        };
+        let fs = run(&inp);
+        assert!(
+            fs.iter().any(|f| f.message.contains("violates the §S19")),
+            "{fs:?}"
+        );
+        // no cycle: the reverse edge does not exist
+        assert!(
+            !fs.iter().any(|f| f.message.contains("cycle")),
+            "{fs:?}"
+        );
+    }
+
+    #[test]
+    fn unranked_lock_and_stale_row_are_reported() {
+        let src = "\
+fn f(s: &S) {\n\
+    let g = s.c.lock().unwrap();\n\
+    drop(g);\n\
+}\n";
+        let design = "\
+## §S19 Concurrency\n\
+\n\
+| 1 | `d` | x.rs |\n";
+        let inp = LintInput {
+            files: vec![SourceFile::from_source(
+                "rust/src/serve/server.rs",
+                src,
+            )],
+            design_md: design.to_string(),
+        };
+        let fs = run(&inp);
+        assert!(
+            fs.iter().any(|f| f.message.contains("missing from the")),
+            "{fs:?}"
+        );
+        assert!(
+            fs.iter()
+                .any(|f| f.file == "DESIGN.md"
+                    && f.message.contains("stale row")),
+            "{fs:?}"
+        );
+    }
+
+    #[test]
+    fn sequential_temporaries_and_loop_waits_are_clean() {
+        // the real pool's shapes: statement temporaries, an if-let
+        // block guard, and a wait inside a loop with its own guard
+        let src = "\
+fn f(s: &S) {\n\
+    if let Some(j) = s.queues[0].lock().unwrap().pop_front() {\n\
+        run(j);\n\
+    }\n\
+    s.queues[1].lock().unwrap().push_back(1);\n\
+    loop {\n\
+        let mut g = s.gate.lock().unwrap();\n\
+        if g.shutdown {\n\
+            return;\n\
+        }\n\
+        g = s.wake.wait(g).unwrap();\n\
+        drop(g);\n\
+    }\n\
+}\n";
+        let fs = run(&input("rust/src/util/thread_pool.rs", src));
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn out_of_scope_files_are_ignored() {
+        let src = "\
+fn f(s: &S) {\n\
+    let ga = s.a.lock().unwrap();\n\
+    let gb = s.b.lock().unwrap();\n\
+    let _ = s.cv.wait(gb);\n\
+    drop(ga);\n\
+}\n";
+        assert!(run(&input("rust/src/kla/scan.rs", src)).is_empty());
+    }
+}

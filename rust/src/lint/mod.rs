@@ -10,16 +10,23 @@
 //! tokenizes the repo's own Rust sources (see [`lexer`]) and enforces
 //! those invariants as named, individually-testable passes:
 //!
-//! | pass            | invariant                                        |
-//! |-----------------|--------------------------------------------------|
-//! | `panic`         | no `unwrap`/`expect`/`panic!`-family macros or   |
-//! |                 | unguarded indexing in serve hot paths            |
-//! | `counter-sync`  | `EngineStats` ≡ `LiveStats` ≡ `{"cmd":"stats"}`  |
-//! |                 | reply ≡ server.rs doc ≡ DESIGN.md                |
-//! | `protocol-sync` | emitted err codes / event types ≡ protocol doc   |
-//! | `determinism`   | wall clocks, thread spawns, and narrowing `as`   |
-//! |                 | casts only where allowlisted                     |
-//! | `unsafe`        | every `unsafe` carries a `// SAFETY:` comment    |
+//! | pass              | invariant                                      |
+//! |-------------------|------------------------------------------------|
+//! | `panic`           | no `unwrap`/`expect`/`panic!`-family macros or |
+//! |                   | unguarded indexing in serve hot paths          |
+//! | `counter-sync`    | `EngineStats` ≡ `LiveStats` ≡ `{"cmd":"stats"}`|
+//! |                   | reply ≡ server.rs doc ≡ DESIGN.md              |
+//! | `protocol-sync`   | emitted err codes / event types ≡ protocol doc |
+//! | `determinism`     | wall clocks, thread spawns, and narrowing `as` |
+//! |                   | casts only where allowlisted                   |
+//! | `unsafe`          | every `unsafe` carries a `// SAFETY:` comment  |
+//! | `lock-order`      | the held-while-acquiring graph is acyclic,     |
+//! |                   | agrees with the DESIGN.md §S19 rank table, and |
+//! |                   | condvar waits recheck in a loop                |
+//! | `send-sync-audit` | `unsafe impl Send/Sync` SAFETY comments argue  |
+//! |                   | type + field + aliasing; no pub raw-ptr struct |
+//! | `atomic-ordering` | `Relaxed` only on LiveStats counters; every    |
+//! |                   | other ordering carries an `// ord:` rationale  |
 //!
 //! ## Waivers
 //!
@@ -41,11 +48,14 @@
 //! `rust/src/bin/repro_lint.rs`; CI runs it blocking and grep-pins
 //! the per-pass result lines.
 
+pub mod atomic_ordering;
 pub mod counter_sync;
 pub mod determinism;
 pub mod lexer;
+pub mod lock_order;
 pub mod panic_free;
 pub mod protocol_sync;
+pub mod send_sync;
 pub mod unsafe_audit;
 
 use lexer::{lex, Tok, Token};
@@ -54,8 +64,16 @@ use std::path::Path;
 
 /// Names of every pass, in report order.  Waiver comments must name
 /// one of these.
-pub const PASS_NAMES: [&str; 5] =
-    ["panic", "counter-sync", "protocol-sync", "determinism", "unsafe"];
+pub const PASS_NAMES: [&str; 8] = [
+    "panic",
+    "counter-sync",
+    "protocol-sync",
+    "determinism",
+    "unsafe",
+    "lock-order",
+    "send-sync-audit",
+    "atomic-ordering",
+];
 
 /// One lint finding, anchored to a repo-relative path and 1-based line.
 #[derive(Debug, Clone, PartialEq)]
@@ -286,6 +304,41 @@ impl Report {
         self.findings.is_empty()
     }
 
+    /// Machine-readable form of the report, written by the binary
+    /// front-end's `--json <file>` and uploaded as a CI artifact.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let passes = self
+            .summaries
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("pass", Json::str(s.pass)),
+                    ("findings", Json::num(s.findings as f64)),
+                    ("waivers_used", Json::num(s.waivers_used as f64)),
+                ])
+            })
+            .collect();
+        let findings = self
+            .findings
+            .iter()
+            .map(|f| {
+                Json::obj(vec![
+                    ("pass", Json::str(f.pass)),
+                    ("file", Json::str(&f.file)),
+                    ("line", Json::num(f.line as f64)),
+                    ("message", Json::str(&f.message)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("clean", Json::Bool(self.is_clean())),
+            ("files_scanned", Json::num(self.files_scanned as f64)),
+            ("passes", Json::Arr(passes)),
+            ("findings", Json::Arr(findings)),
+        ])
+    }
+
     /// Render the per-pass result lines CI grep-pins, then findings.
     pub fn render(&self) -> String {
         let mut out = String::new();
@@ -310,19 +363,42 @@ impl Report {
 /// Run every pass over `input`, resolve waivers, and audit the
 /// waivers themselves.
 pub fn run(input: &LintInput) -> Report {
-    let raw: Vec<(usize, Vec<Finding>)> = vec![
-        (0, panic_free::run(input)),
-        (1, counter_sync::run(input)),
-        (2, protocol_sync::run(input)),
-        (3, determinism::run(input)),
-        (4, unsafe_audit::run(input)),
+    run_filtered(input, None)
+}
+
+/// Like [`run`], restricted to a single pass when `only` is given
+/// (the front-end's `--pass`).  Waivers for non-selected passes stay
+/// out of the stale audit — a `--pass panic` run must not report
+/// another pass's (unexercised) waivers as stale — but unknown-pass
+/// waivers are always reported: they are wrong in every run.
+pub fn run_filtered(input: &LintInput, only: Option<&str>) -> Report {
+    let selected = |name: &str| only.is_none_or(|o| o == name);
+    let passes: [fn(&LintInput) -> Vec<Finding>; 8] = [
+        panic_free::run,
+        counter_sync::run,
+        protocol_sync::run,
+        determinism::run,
+        unsafe_audit::run,
+        lock_order::run,
+        send_sync::run,
+        atomic_ordering::run,
     ];
+    let raw: Vec<(usize, Vec<Finding>)> = passes
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| selected(PASS_NAMES[*i]))
+        .map(|(i, p)| (i, p(input)))
+        .collect();
 
     // Waivers per file, each with a used flag.
     let mut waivers: Vec<(usize, Waiver, bool)> = Vec::new();
     for (fi, file) in input.files.iter().enumerate() {
         for w in parse_waivers(file) {
-            waivers.push((fi, w, false));
+            if selected(w.pass.as_str())
+                || !PASS_NAMES.contains(&w.pass.as_str())
+            {
+                waivers.push((fi, w, false));
+            }
         }
     }
 
@@ -403,6 +479,14 @@ pub fn run(input: &LintInput) -> Report {
 /// except the lint fixtures, plus `DESIGN.md` for the doc-sync
 /// checks.
 pub fn run_repo(root: &Path) -> std::io::Result<Report> {
+    run_repo_filtered(root, None)
+}
+
+/// [`run_repo`] restricted to one pass (the front-end's `--pass`).
+pub fn run_repo_filtered(
+    root: &Path,
+    only: Option<&str>,
+) -> std::io::Result<Report> {
     let mut paths = Vec::new();
     collect_rs(&root.join("rust").join("src"), &mut paths)?;
     paths.sort();
@@ -421,7 +505,7 @@ pub fn run_repo(root: &Path) -> std::io::Result<Report> {
     }
     let design_md = std::fs::read_to_string(root.join("DESIGN.md"))
         .unwrap_or_default();
-    Ok(run(&LintInput { files, design_md }))
+    Ok(run_filtered(&LintInput { files, design_md }, only))
 }
 
 fn collect_rs(
@@ -596,6 +680,80 @@ fn hot(v: &[i32]) -> i32 {\n\
             "doc comments audited as waivers: {:?}",
             report.findings
         );
+    }
+
+    #[test]
+    fn filtered_run_reports_only_the_selected_pass() {
+        // a panic finding AND a foreign-pass waiver that would be
+        // stale in a full run — the filtered run must see neither the
+        // other passes' summaries nor that waiver
+        let src = "\
+fn hot(v: &[i32]) -> i32 {\n\
+    // lint: allow(determinism, not exercised in a --pass panic run)\n\
+    v[0]\n\
+}\n";
+        let input = LintInput {
+            files: vec![file("rust/src/serve/engine.rs", src)],
+            design_md: String::new(),
+        };
+        let report = run_filtered(&input, Some("panic"));
+        assert_eq!(report.summaries.len(), 1);
+        assert_eq!(report.summaries[0].pass, "panic");
+        assert_eq!(report.findings.len(), 1, "{:?}", report.findings);
+        assert_eq!(report.findings[0].pass, "panic");
+        // the full run DOES report that waiver as stale
+        let full = run(&input);
+        assert!(
+            full.findings
+                .iter()
+                .any(|f| f.pass == "waiver" && f.message.contains("stale")),
+            "{:?}",
+            full.findings
+        );
+    }
+
+    #[test]
+    fn filtered_run_still_reports_unknown_pass_waivers() {
+        let input = LintInput {
+            files: vec![file(
+                "rust/src/serve/engine.rs",
+                "fn f() {} // lint: allow(panics, typo'd pass name)\n",
+            )],
+            design_md: String::new(),
+        };
+        let report = run_filtered(&input, Some("unsafe"));
+        assert!(report
+            .findings
+            .iter()
+            .any(|f| f.pass == "waiver" && f.message.contains("unknown pass")));
+    }
+
+    #[test]
+    fn report_json_round_trips_through_the_repo_parser() {
+        let input = LintInput {
+            files: vec![file(
+                "rust/src/serve/engine.rs",
+                "fn hot(v: &[i32]) -> i32 { v[0] }\n",
+            )],
+            design_md: String::new(),
+        };
+        let report = run(&input);
+        let parsed = crate::util::json::parse(&report.to_json().to_pretty())
+            .expect("report JSON parses");
+        assert_eq!(
+            parsed.req("clean").and_then(|v| v.as_bool()).ok(),
+            Some(false)
+        );
+        let passes = parsed
+            .req("passes")
+            .and_then(|v| v.as_arr())
+            .expect("passes array");
+        assert_eq!(passes.len(), PASS_NAMES.len());
+        let findings = parsed
+            .req("findings")
+            .and_then(|v| v.as_arr())
+            .expect("findings array");
+        assert!(!findings.is_empty());
     }
 
     // The teeth of the whole PR: `cargo test` re-runs the lint over

@@ -1,0 +1,361 @@
+//! Pass `send-sync-audit`: `unsafe impl Send`/`Sync` must argue its
+//! soundness structurally, and raw pointers stay behind private types.
+//!
+//! The generic `unsafe` pass only demands that a `// SAFETY:` comment
+//! EXISTS; for `Send`/`Sync` impls that is not enough — "this is
+//! fine" passes that check while claiming, to every thread in the
+//! program, that aliasing a raw pointer is sound.  This pass parses
+//! the comment block directly above (and on) each `unsafe impl Send`
+//! / `unsafe impl Sync` line and requires it to:
+//!
+//! - start from a `// SAFETY:` marker at all;
+//! - name the **type** whose impl it justifies (so a copy-pasted
+//!   comment cannot drift onto a different type);
+//! - name a **guarded field** of that type — or, when the type is a
+//!   tuple/unit struct or defined elsewhere, at least the word
+//!   `pointer` — so the argument is about the data actually shared;
+//! - use an **aliasing vocabulary** word ([`ALIAS_WORDS`]: disjoint,
+//!   alias(ed/ing), read-only, exclusive, immutable, owned, unique)
+//!   — the shape every sound Send/Sync argument reduces to.
+//!
+//! Separately, a `pub struct` exposing a raw-pointer field is a
+//! finding regardless of impls: a public raw pointer lets any
+//! downstream module smuggle the pointer across threads without the
+//! SAFETY contract ever being restated (`pub(crate)` and private
+//! structs are fine — the contract stays inside the audited tree).
+
+use super::{Finding, LintInput, SourceFile};
+use crate::lint::counter_sync::struct_fields;
+
+const PASS: &str = "send-sync-audit";
+
+/// Vocabulary one of which every sound aliasing argument uses.
+pub const ALIAS_WORDS: [&str; 10] = [
+    "disjoint",
+    "alias",
+    "aliased",
+    "aliasing",
+    "read-only",
+    "readonly",
+    "exclusive",
+    "immutable",
+    "owned",
+    "unique",
+];
+
+pub fn run(input: &LintInput) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for file in &input.files {
+        check_impls(file, input, &mut out);
+        check_pub_raw_ptr_structs(file, &mut out);
+    }
+    out
+}
+
+fn check_impls(file: &SourceFile, input: &LintInput, out: &mut Vec<Finding>) {
+    let code = &file.code;
+    for i in 0..code.len() {
+        if code[i].ident() != Some("unsafe")
+            || code.get(i + 1).and_then(|t| t.ident()) != Some("impl")
+        {
+            continue;
+        }
+        if file.is_test_line(code[i].line) {
+            continue;
+        }
+        // Scan the impl header: `unsafe impl [<..>] Send|Sync for Ty`.
+        let mut trait_name: Option<&str> = None;
+        let mut ty: Option<&str> = None;
+        let mut k = i + 2;
+        while let Some(t) = code.get(k) {
+            if t.is_punct('{') || t.is_punct(';') {
+                break;
+            }
+            match t.ident() {
+                Some(w @ ("Send" | "Sync")) if trait_name.is_none() => {
+                    trait_name = Some(w);
+                }
+                Some("for") if trait_name.is_some() => {
+                    ty = code.get(k + 1).and_then(|n| n.ident());
+                    break;
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        let (Some(trait_name), Some(ty)) = (trait_name, ty) else {
+            continue;
+        };
+        audit_impl(file, input, code[i].line, trait_name, ty, out);
+    }
+}
+
+fn audit_impl(
+    file: &SourceFile,
+    input: &LintInput,
+    impl_line: usize,
+    trait_name: &str,
+    ty: &str,
+    out: &mut Vec<Finding>,
+) {
+    let text = comment_block(file, impl_line);
+    let mut push = |message: String| {
+        out.push(Finding {
+            pass: PASS,
+            file: file.path.clone(),
+            line: impl_line,
+            message,
+        });
+    };
+    if !text.contains("SAFETY:") {
+        push(format!(
+            "`unsafe impl {trait_name} for {ty}` without a \
+             `// SAFETY:` comment block directly above; a thread-\
+             safety claim needs its argument written down"
+        ));
+        return;
+    }
+    if !text.contains(ty) {
+        push(format!(
+            "the SAFETY comment for `unsafe impl {trait_name} for \
+             {ty}` never names `{ty}` — a copy-pasted argument can \
+             drift onto the wrong type; name the type it justifies"
+        ));
+    }
+    // The guarded data: a named field of the type, or at least the
+    // word `pointer` when the type has no named fields (tuple/unit
+    // struct) or is defined outside the scanned set.
+    let fields: Vec<String> = input
+        .files
+        .iter()
+        .find_map(|f| struct_fields(&f.code, ty))
+        .map(|fs| fs.into_iter().map(|f| f.name).collect())
+        .unwrap_or_default();
+    let names_field = fields.iter().any(|f| text.contains(f.as_str()));
+    if fields.is_empty() {
+        if !text.contains("pointer") {
+            push(format!(
+                "the SAFETY comment for `unsafe impl {trait_name} for \
+                 {ty}` does not say what data is shared (expected at \
+                 least the word `pointer` for a tuple/opaque type)"
+            ));
+        }
+    } else if !names_field {
+        push(format!(
+            "the SAFETY comment for `unsafe impl {trait_name} for \
+             {ty}` names none of its fields ({}); argue about the \
+             data actually shared",
+            fields.join(", ")
+        ));
+    }
+    let lower = text.to_lowercase();
+    if !ALIAS_WORDS.iter().any(|w| lower.contains(w)) {
+        push(format!(
+            "the SAFETY comment for `unsafe impl {trait_name} for \
+             {ty}` makes no aliasing argument (none of: {}) — state \
+             why concurrent access cannot alias a write",
+            ALIAS_WORDS.join(", ")
+        ));
+    }
+}
+
+/// The contiguous plain-comment block ending directly above
+/// `impl_line`, plus any comment on the line itself, joined.
+fn comment_block(file: &SourceFile, impl_line: usize) -> String {
+    // Gather candidate comment lines (doc comments excluded — a
+    // `///` above an impl is API prose, not its SAFETY argument).
+    let mut by_line: Vec<(usize, &str)> = Vec::new();
+    for t in &file.toks {
+        if let Some(c) = t.comment_text() {
+            if !c.starts_with('/') && !c.starts_with('!') {
+                by_line.push((t.line, c));
+            }
+        }
+    }
+    let mut lines: Vec<&str> = Vec::new();
+    // Walk up from the line above the impl while comments are
+    // contiguous.
+    let mut want = impl_line.saturating_sub(1);
+    while want > 0 {
+        let found: Vec<&str> = by_line
+            .iter()
+            .filter(|(l, _)| *l == want)
+            .map(|(_, c)| *c)
+            .collect();
+        if found.is_empty() {
+            break;
+        }
+        for c in found.into_iter().rev() {
+            lines.insert(0, c);
+        }
+        want -= 1;
+    }
+    for (l, c) in &by_line {
+        if *l == impl_line {
+            lines.push(c);
+        }
+    }
+    lines.join("\n")
+}
+
+/// `pub struct` (not `pub(crate)`) whose body holds a `*mut` /
+/// `*const` field.
+fn check_pub_raw_ptr_structs(file: &SourceFile, out: &mut Vec<Finding>) {
+    let code = &file.code;
+    for i in 0..code.len() {
+        if code[i].ident() != Some("struct") {
+            continue;
+        }
+        // `pub struct`: the token before must be the ident `pub`
+        // (for `pub(crate) struct` it is `)` — not flagged).
+        if i == 0 || code[i - 1].ident() != Some("pub") {
+            continue;
+        }
+        if file.is_test_line(code[i].line) {
+            continue;
+        }
+        let Some(name) = code.get(i + 1).and_then(|t| t.ident()) else {
+            continue;
+        };
+        // Scan the struct body: to the matching `}` of the first `{`,
+        // or to the terminating `;` (tuple / unit struct).
+        let mut depth = 0usize;
+        let mut k = i + 2;
+        let mut has_raw = false;
+        while let Some(t) = code.get(k) {
+            if t.is_punct('{') || t.is_punct('(') {
+                depth += 1;
+            } else if t.is_punct('}') || t.is_punct(')') {
+                depth = depth.saturating_sub(1);
+                if depth == 0 && t.is_punct('}') {
+                    break;
+                }
+            } else if t.is_punct(';') && depth == 0 {
+                break;
+            } else if t.is_punct('*')
+                && matches!(
+                    code.get(k + 1).and_then(|n| n.ident()),
+                    Some("mut" | "const")
+                )
+            {
+                has_raw = true;
+            }
+            k += 1;
+        }
+        if has_raw {
+            out.push(Finding {
+                pass: PASS,
+                file: file.path.clone(),
+                line: code[i].line,
+                message: format!(
+                    "`pub struct {name}` exposes a raw-pointer field: \
+                     any downstream module can move the pointer across \
+                     threads without restating the SAFETY contract; \
+                     make the struct or the field non-pub"
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::{run as run_all, LintInput, SourceFile};
+
+    fn input(path: &str, src: &str) -> LintInput {
+        LintInput {
+            files: vec![SourceFile::from_source(path, src)],
+            design_md: String::new(),
+        }
+    }
+
+    #[test]
+    fn fixture_fires_on_every_bad_shape() {
+        let src = include_str!("fixtures/send_sync_bad.rs");
+        let fs = run(&input("rust/src/baselines/mod.rs", src));
+        let msgs: Vec<&str> =
+            fs.iter().map(|f| f.message.as_str()).collect();
+        assert!(
+            msgs.iter().any(|m| m.contains("exposes a raw-pointer")),
+            "{msgs:?}"
+        );
+        assert!(
+            msgs.iter()
+                .any(|m| m.contains("without a `// SAFETY:` comment")),
+            "{msgs:?}"
+        );
+        assert!(
+            msgs.iter().any(|m| m.contains("never names `Opaque`")),
+            "{msgs:?}"
+        );
+        assert!(
+            msgs.iter().any(|m| m.contains("names none of its fields")),
+            "{msgs:?}"
+        );
+        assert!(
+            msgs.iter().any(|m| m.contains("no aliasing argument")),
+            "{msgs:?}"
+        );
+    }
+
+    #[test]
+    fn fixture_waivers_suppress_and_are_counted() {
+        let src = include_str!("fixtures/send_sync_waived.rs");
+        let report = run_all(&input("rust/src/baselines/mod.rs", src));
+        assert!(
+            report.findings.is_empty(),
+            "waived fixture should be clean:\n{}",
+            report.render()
+        );
+        let s = report
+            .summaries
+            .iter()
+            .find(|s| s.pass == "send-sync-audit")
+            .unwrap_or_else(|| panic!("no send-sync-audit summary"));
+        assert!(s.waivers_used >= 4, "waivers used: {}", s.waivers_used);
+    }
+
+    #[test]
+    fn structural_safety_comment_is_clean() {
+        // mirrors the real `baselines::SendPtr` pattern
+        let src = "\
+struct SendPtr(*mut f32);\n\
+// SAFETY: the SendPtr raw pointer is written through by threads\n\
+// holding disjoint channel ranges, and the buffer outlives them.\n\
+unsafe impl Send for SendPtr {}\n\
+// SAFETY: shared access to a SendPtr is read-only on the pointer\n\
+// itself; writes through it never alias across threads.\n\
+unsafe impl Sync for SendPtr {}\n";
+        let fs = run(&input("rust/src/baselines/mod.rs", src));
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn named_field_argument_is_required_and_sufficient() {
+        let src = "\
+struct Cell {\n\
+    buf: *mut u8,\n\
+    len: usize,\n\
+}\n\
+// SAFETY: Cell's `buf` region is owned by exactly one thread at a\n\
+// time; `len` never changes after construction.\n\
+unsafe impl Send for Cell {}\n";
+        let fs = run(&input("rust/src/util/pool.rs", src));
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn pub_crate_and_private_raw_ptr_structs_are_fine() {
+        let src = "\
+pub(crate) struct A(*mut f32);\n\
+struct B {\n\
+    p: *const u8,\n\
+}\n\
+pub struct C {\n\
+    n: usize,\n\
+}\n";
+        let fs = run(&input("rust/src/util/pool.rs", src));
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+}

@@ -1,0 +1,59 @@
+//! # mc — deterministic interleaving model checker (DESIGN.md §S19)
+//!
+//! A dependency-free, loom-style concurrency checker.  The concurrent
+//! modules of this repo (`util::thread_pool`, the serve engine's
+//! cancel flags, the server's `ConnSink` terminal latch) import their
+//! sync primitives from [`mc::sync`](sync) instead of `std::sync`:
+//!
+//! - **normal builds** (`mc-shim` feature off): the re-exports ARE the
+//!   `std::sync` types — same type identity, zero overhead;
+//! - **model-check builds** (`cargo test --features mc-shim`): the
+//!   re-exports are shims that route every acquire / release / load /
+//!   store / park through a controlled scheduler, so a test can
+//!   explore *every* interleaving of a small concurrent program up to
+//!   a context-switch bound, or thousands of seeded random schedules.
+//!
+//! ## How an exploration runs
+//!
+//! [`sched::model`] re-runs a closure under a cooperative scheduler:
+//! real OS threads, but exactly one is ever runnable — each shim
+//! operation is a *scheduling point* where the running thread parks
+//! and the scheduler picks who continues.  Two search policies:
+//!
+//! - [`sched::Policy::Dfs`] — bounded-exhaustive depth-first search
+//!   over schedules, replaying a forced choice prefix and bounding
+//!   *preemptions* (switching away from a runnable thread), the
+//!   CHESS-style bound that finds most real bugs at 2 preemptions;
+//! - [`sched::Policy::Pct`] — seeded PCT-style randomized schedules:
+//!   random thread priorities plus `d` priority-change points, fully
+//!   deterministic per seed so a failing seed is a pinned regression.
+//!
+//! A deadlock (no schedulable thread while unfinished threads exist —
+//! which is also how a *lost wakeup* manifests), a panic on any model
+//! thread, or a step-limit overrun aborts the execution and fails the
+//! enclosing test with the schedule trace and seed.
+//!
+//! ## What is modelled
+//!
+//! Mutex acquire order, condvar wait/notify (FIFO, with *spurious
+//! wakeups* for `wait_timeout` so timed waits stay live but bounded),
+//! channel send/recv/disconnect, thread spawn/join, and atomic
+//! access *interleavings*.  Memory orderings are accepted and
+//! recorded but the model explores sequentially-consistent
+//! interleavings only — ordering discipline is audited statically by
+//! the `atomic-ordering` lint pass instead (DESIGN.md §S19).
+//!
+//! The invariant suites live in `mc::invariants` (compiled only under
+//! `--features mc-shim`, test profile) and print one greppable
+//! `model-check[<invariant>]: ...` line per policy for CI.
+
+pub mod sync;
+pub mod thread;
+
+#[cfg(feature = "mc-shim")]
+pub mod sched;
+
+#[cfg(all(test, feature = "mc-shim"))]
+mod invariants;
+
+pub use sync::{channel, AtomicBool, AtomicUsize, Condvar, Mutex};

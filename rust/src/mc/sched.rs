@@ -1,0 +1,959 @@
+//! The controlled scheduler behind the `mc-shim` sync primitives.
+//!
+//! Real OS threads, cooperative execution: exactly one model thread is
+//! ever runnable.  Every visible operation of a shim primitive calls
+//! [`Exec::op`] — a *scheduling point* where the running thread parks,
+//! the scheduler picks the next thread among the currently *enabled*
+//! ones (mutex free, condvar notified, channel non-empty, join target
+//! finished, ...), and hands the baton over.  Recording each decision
+//! (the enabled set and the choice) makes a schedule replayable: the
+//! DFS driver re-runs the program under a forced choice prefix to
+//! enumerate schedules, the PCT driver derives all choices from a
+//! seed.  See DESIGN.md §S19 for the semantics and their limits.
+//!
+//! Teardown: when an execution aborts (deadlock, panic, step limit),
+//! every parked thread is woken and unwinds with the private
+//! [`McAbort`] panic payload; shim operations called *during* such an
+//! unwind bypass the model entirely (plain `std` behaviour) so guard
+//! drops and pool destructors cannot double-panic.
+
+use std::cell::RefCell;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex, Weak};
+
+use crate::util::Pcg64;
+
+/// Per-execution cap on spurious wakeups granted to `wait_timeout` /
+/// timed waiters.  Keeps timed waits *live* (a timed wait can always
+/// recover from a missed notification, like the real timeout does)
+/// while bounding the schedule space.
+const SPURIOUS_BUDGET: usize = 32;
+
+/// Model threads per execution; far above any invariant model's need.
+const MAX_THREADS: usize = 16;
+
+/// PCT samples its priority-change points uniformly from this many
+/// initial scheduling decisions (the classic algorithm's `k`).
+const PCT_EST_DECISIONS: usize = 256;
+
+// ---------------------------------------------------------------------
+// public configuration / results
+// ---------------------------------------------------------------------
+
+/// Schedule-exploration policy for [`model`].
+#[derive(Clone, Debug)]
+pub enum Policy {
+    /// Bounded-exhaustive DFS over schedules.  `max_preemptions`
+    /// bounds *forced* context switches away from a runnable thread
+    /// (the CHESS bound); switches at blocking points are free.
+    Dfs {
+        max_preemptions: usize,
+        max_schedules: usize,
+    },
+    /// Seeded PCT-style randomized schedules: random thread
+    /// priorities plus `change_points` priority demotions at random
+    /// decisions.  Deterministic per seed.
+    Pct {
+        seed: u64,
+        schedules: usize,
+        change_points: usize,
+    },
+}
+
+/// One exploration request: a policy plus the per-execution decision
+/// limit (a runaway-model backstop, not a tuning knob).
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub policy: Policy,
+    pub max_steps: usize,
+}
+
+impl Config {
+    /// The default DFS wall: preemption bound 2 (empirically where
+    /// most concurrency bugs live), generous schedule cap.
+    pub fn dfs() -> Config {
+        Config {
+            policy: Policy::Dfs {
+                max_preemptions: 2,
+                max_schedules: 4000,
+            },
+            max_steps: 20_000,
+        }
+    }
+
+    /// The default PCT wall used by CI: 200 seeded schedules.
+    pub fn pct(seed: u64) -> Config {
+        Config {
+            policy: Policy::Pct {
+                seed,
+                schedules: 200,
+                change_points: 3,
+            },
+            max_steps: 20_000,
+        }
+    }
+}
+
+/// What an exploration covered.
+#[derive(Clone, Copy, Debug)]
+pub struct Outcome {
+    /// Schedules actually executed.
+    pub schedules: usize,
+    /// DFS only: true when the bounded search space was exhausted
+    /// (every schedule within the preemption bound was run).
+    pub exhausted: bool,
+}
+
+// ---------------------------------------------------------------------
+// model state
+// ---------------------------------------------------------------------
+
+/// What a thread wants to do at its current scheduling point.
+#[derive(Clone, Debug)]
+pub(crate) enum Intent {
+    /// Freshly spawned, waiting for its first grant.
+    Start,
+    /// A non-blocking visible op (atomic access, send, notify, ...).
+    Step,
+    /// Acquire the mutex object.
+    Lock(usize),
+    /// Wait for the thread to finish.
+    Join(usize),
+    /// Receive from the channel object.
+    Recv(usize),
+    /// Condvar wait: parked on `cv`, will re-acquire `lock`; `timed`
+    /// waiters are eligible for bounded spurious wakeups.
+    Wait {
+        cv: usize,
+        lock: usize,
+        timed: bool,
+    },
+}
+
+/// How a grant resolved a blocking intent (returned by [`Exec::op`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Note {
+    Go,
+    /// Timed condvar wait resolved by timeout/spurious wakeup.
+    TimedOut,
+    /// Recv resolved with a queued message.
+    RecvReady,
+    /// Recv resolved by disconnection (all senders gone).
+    RecvClosed,
+}
+
+/// Modelled sync-object state.
+pub(crate) enum Obj {
+    Mutex { held_by: Option<usize> },
+    Condvar { waiters: Vec<usize> },
+    Channel { queued: usize, senders: usize },
+}
+
+/// Kind selector for [`ObjRef::register`].
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum ObjKind {
+    Mutex,
+    Condvar,
+    Channel,
+}
+
+struct ThreadSt {
+    name: String,
+    intent: Intent,
+    granted: bool,
+    note: Note,
+    notified: bool,
+    finished: bool,
+    priority: u64,
+}
+
+/// Why an execution stopped early.
+#[derive(Clone, Debug)]
+enum Abort {
+    Deadlock(String),
+    Panic(String),
+    StepLimit(usize),
+    /// Timed waiters starved of spurious-wakeup budget: the model is
+    /// inconclusive (the real program would recover via timeout).
+    SpuriousExhausted,
+    /// A forced replay choice was not enabled — the program under
+    /// test is not deterministic enough to model-check.
+    ReplayDivergence(usize),
+}
+
+/// One scheduling decision, recorded for replay and backtracking.
+#[derive(Clone, Debug)]
+struct Decision {
+    /// Enabled threads in canonical order (previous runner first when
+    /// it is still enabled, then ascending thread id).
+    alts: Vec<usize>,
+    chosen_idx: usize,
+    /// Whether `alts[0]` is the previous runner (so any other choice
+    /// costs one preemption).
+    prev_enabled: bool,
+}
+
+enum RunPolicy {
+    Dfs,
+    Pct {
+        rng: Pcg64,
+        change: Vec<usize>,
+        next_change: usize,
+        demote: u64,
+    },
+}
+
+struct ExecSt {
+    threads: Vec<ThreadSt>,
+    objects: Vec<Obj>,
+    replay: Vec<usize>,
+    decisions: Vec<Decision>,
+    spurious_left: usize,
+    aborted: Option<Abort>,
+    policy: RunPolicy,
+    max_steps: usize,
+}
+
+/// One controlled execution: the model state plus the park/wake pair
+/// every model thread blocks on.
+pub(crate) struct Exec {
+    m: StdMutex<ExecSt>,
+    cv: StdCondvar,
+}
+
+// ---------------------------------------------------------------------
+// thread-local execution context
+// ---------------------------------------------------------------------
+
+thread_local! {
+    static CTX: RefCell<Option<(Weak<Exec>, usize)>> =
+        const { RefCell::new(None) };
+}
+
+fn set_ctx(exec: &Arc<Exec>, tid: usize) {
+    CTX.with(|c| *c.borrow_mut() = Some((Arc::downgrade(exec), tid)));
+}
+
+/// Bind the calling OS thread to a model thread id (used by the
+/// `mc::thread` spawn shim).
+pub(crate) fn enter(exec: &Arc<Exec>, tid: usize) {
+    set_ctx(exec, tid);
+}
+
+/// Extract a printable message from a caught panic payload.
+pub(crate) fn panic_text(p: &(dyn std::any::Any + Send)) -> String {
+    panic_msg(p)
+}
+
+/// The calling thread's execution context, if it is a live model
+/// thread.  Everything outside a model (normal tests, post-model
+/// draining) gets `None` and falls through to plain `std` behaviour.
+pub(crate) fn current_ctx() -> Option<(Arc<Exec>, usize)> {
+    CTX.with(|c| {
+        let b = c.borrow();
+        let (w, tid) = b.as_ref()?;
+        Some((w.upgrade()?, *tid))
+    })
+}
+
+/// A non-blocking scheduling point for the calling thread, if it is a
+/// model thread.  Returns false outside a model.
+pub(crate) fn step_point() -> bool {
+    match current_ctx() {
+        Some((exec, me)) => {
+            exec.op(me, Intent::Step);
+            true
+        }
+        None => false,
+    }
+}
+
+// ---------------------------------------------------------------------
+// object handles held by shim primitives
+// ---------------------------------------------------------------------
+
+/// A shim object's link back into the execution it was created under
+/// (`None` when constructed outside any model — pure std behaviour).
+#[derive(Clone, Default)]
+pub(crate) struct ObjRef(Option<(Weak<Exec>, usize)>);
+
+impl std::fmt::Debug for ObjRef {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.0 {
+            Some((_, id)) => write!(f, "ObjRef(#{id})"),
+            None => write!(f, "ObjRef(std)"),
+        }
+    }
+}
+
+impl ObjRef {
+    /// Register a new object under the calling thread's execution (if
+    /// any).  Objects must be created by model threads to be modelled.
+    pub(crate) fn register(kind: ObjKind) -> ObjRef {
+        match current_ctx() {
+            Some((exec, _)) => {
+                let id = exec.register_obj(kind);
+                ObjRef(Some((Arc::downgrade(&exec), id)))
+            }
+            None => ObjRef(None),
+        }
+    }
+
+    /// `(exec, object id, calling thread id)` — only when the calling
+    /// thread belongs to the same live execution as the object.
+    pub(crate) fn handle(&self) -> Option<(Arc<Exec>, usize, usize)> {
+        let (w, obj) = self.0.as_ref()?;
+        let owner = w.upgrade()?;
+        let (cur, tid) = current_ctx()?;
+        if Arc::ptr_eq(&owner, &cur) {
+            Some((owner, *obj, tid))
+        } else {
+            None
+        }
+    }
+
+    /// The object id, independent of the calling thread.
+    pub(crate) fn obj_id(&self) -> Option<usize> {
+        self.0.as_ref().map(|(_, id)| *id)
+    }
+
+    /// Mutate the object's model state without a scheduling point.
+    /// Works from any thread (guard drops during unwind included);
+    /// no-op once the execution is gone.
+    pub(crate) fn update<R>(
+        &self,
+        f: impl FnOnce(&mut Obj) -> R,
+    ) -> Option<R> {
+        let (w, obj) = self.0.as_ref()?;
+        let exec = w.upgrade()?;
+        let mut st = lock_st(&exec.m);
+        Some(f(&mut st.objects[*obj]))
+    }
+}
+
+// ---------------------------------------------------------------------
+// abort plumbing
+// ---------------------------------------------------------------------
+
+/// Private panic payload used to unwind model threads at teardown.
+struct McAbort;
+
+fn mc_abort() -> ! {
+    panic::panic_any(McAbort)
+}
+
+pub(crate) fn is_mc_abort(p: &(dyn std::any::Any + Send)) -> bool {
+    p.is::<McAbort>()
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn lock_st(m: &StdMutex<ExecSt>) -> std::sync::MutexGuard<'_, ExecSt> {
+    // The scheduler never panics while holding this lock, so poison
+    // can only come from a foreign bug; recover rather than cascade.
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+// ---------------------------------------------------------------------
+// the scheduler
+// ---------------------------------------------------------------------
+
+impl Exec {
+    fn new(policy: RunPolicy, replay: Vec<usize>, max_steps: usize) -> Exec {
+        Exec {
+            m: StdMutex::new(ExecSt {
+                threads: Vec::new(),
+                objects: Vec::new(),
+                replay,
+                decisions: Vec::new(),
+                spurious_left: SPURIOUS_BUDGET,
+                aborted: None,
+                policy,
+                max_steps,
+            }),
+            cv: StdCondvar::new(),
+        }
+    }
+
+    /// Register a model thread; it starts parked with [`Intent::Start`].
+    pub(crate) fn register_thread(&self, name: &str) -> usize {
+        let mut st = lock_st(&self.m);
+        assert!(
+            st.threads.len() < MAX_THREADS,
+            "mc: model exceeds {MAX_THREADS} threads"
+        );
+        let priority = match &mut st.policy {
+            RunPolicy::Dfs => 0,
+            // keep random priorities strictly above every demotion
+            // value so demoted threads always sink to the bottom
+            RunPolicy::Pct { rng, .. } => rng.next_u64() | (1 << 32),
+        };
+        st.threads.push(ThreadSt {
+            name: name.to_string(),
+            intent: Intent::Start,
+            granted: false,
+            note: Note::Go,
+            notified: false,
+            finished: false,
+            priority,
+        });
+        st.threads.len() - 1
+    }
+
+    pub(crate) fn register_obj(&self, kind: ObjKind) -> usize {
+        let mut st = lock_st(&self.m);
+        st.objects.push(match kind {
+            ObjKind::Mutex => Obj::Mutex { held_by: None },
+            ObjKind::Condvar => Obj::Condvar { waiters: Vec::new() },
+            ObjKind::Channel => Obj::Channel { queued: 0, senders: 1 },
+        });
+        st.objects.len() - 1
+    }
+
+    /// The scheduling point: declare what the calling thread does
+    /// next, hand the baton to the scheduler, park until granted.
+    pub(crate) fn op(self: &Arc<Self>, me: usize, intent: Intent) -> Note {
+        if std::thread::panicking() {
+            // Unwinding (user panic or McAbort teardown): bypass the
+            // model so drops and destructors cannot double-panic.
+            return Note::Go;
+        }
+        let mut st = lock_st(&self.m);
+        if st.aborted.is_some() {
+            drop(st);
+            mc_abort();
+        }
+        if let Intent::Wait { cv, lock, .. } = intent {
+            // A condvar wait atomically releases the mutex and joins
+            // the wait set before anyone else can run.
+            if let Obj::Mutex { held_by } = &mut st.objects[lock] {
+                *held_by = None;
+            }
+            if let Obj::Condvar { waiters } = &mut st.objects[cv] {
+                waiters.push(me);
+            }
+            st.threads[me].notified = false;
+        }
+        st.threads[me].intent = intent;
+        st.threads[me].granted = false;
+        self.pick(&mut st, Some(me));
+        self.park(st, me)
+    }
+
+    /// Park a freshly spawned thread until its first grant.
+    pub(crate) fn park_start(self: &Arc<Self>, me: usize) {
+        let st = lock_st(&self.m);
+        self.park(st, me);
+    }
+
+    fn park(
+        self: &Arc<Self>,
+        mut st: std::sync::MutexGuard<'_, ExecSt>,
+        me: usize,
+    ) -> Note {
+        loop {
+            if st.threads[me].granted {
+                st.threads[me].granted = false;
+                return st.threads[me].note;
+            }
+            if st.aborted.is_some() {
+                drop(st);
+                mc_abort();
+            }
+            st = self
+                .cv
+                .wait(st)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+    }
+
+    /// Mark the calling thread finished and hand the baton on.
+    pub(crate) fn finish(self: &Arc<Self>, me: usize) {
+        let mut st = lock_st(&self.m);
+        st.threads[me].finished = true;
+        if st.aborted.is_none() {
+            self.pick(&mut st, None);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Like [`Exec::finish`], for a thread that unwound with a user
+    /// panic: records the failure and tears the execution down.
+    pub(crate) fn finish_panicked(self: &Arc<Self>, me: usize, msg: String) {
+        let mut st = lock_st(&self.m);
+        st.threads[me].finished = true;
+        if st.aborted.is_none() {
+            let name = st.threads[me].name.clone();
+            st.aborted =
+                Some(Abort::Panic(format!("thread '{name}' panicked: {msg}")));
+        }
+        self.cv.notify_all();
+    }
+
+    /// Move `notified` waiters out of the condvar's wait set (FIFO).
+    pub(crate) fn notify(&self, cv: usize, all: bool) {
+        let mut st = lock_st(&self.m);
+        let woken: Vec<usize> = match &mut st.objects[cv] {
+            Obj::Condvar { waiters } => {
+                if all {
+                    waiters.drain(..).collect()
+                } else if waiters.is_empty() {
+                    Vec::new()
+                } else {
+                    vec![waiters.remove(0)]
+                }
+            }
+            _ => Vec::new(),
+        };
+        for t in woken {
+            st.threads[t].notified = true;
+        }
+    }
+
+    /// Block until every model thread has finished (the harness
+    /// monitor; runs on the driving test thread, outside the model).
+    fn wait_done(&self) {
+        let mut st = lock_st(&self.m);
+        while !st.threads.iter().all(|t| t.finished) {
+            st = self
+                .cv
+                .wait(st)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+    }
+
+    fn take_result(&self) -> (Vec<Decision>, Option<Abort>) {
+        let mut st = lock_st(&self.m);
+        (std::mem::take(&mut st.decisions), st.aborted.clone())
+    }
+
+    /// Pick and grant the next thread.  Called with no thread running
+    /// (the previous runner is parked or finished).
+    fn pick(self: &Arc<Self>, st: &mut ExecSt, prev: Option<usize>) {
+        if st.threads.iter().all(|t| t.finished) {
+            self.cv.notify_all();
+            return;
+        }
+        let mut en: Vec<usize> = (0..st.threads.len())
+            .filter(|&t| enabled(st, t))
+            .collect();
+        if en.is_empty() {
+            st.aborted = Some(stall_kind(st));
+            self.cv.notify_all();
+            return;
+        }
+        if st.decisions.len() >= st.max_steps {
+            st.aborted = Some(Abort::StepLimit(st.max_steps));
+            self.cv.notify_all();
+            return;
+        }
+        // canonical order: previous runner first when still enabled
+        let prev_enabled = prev.is_some_and(|p| en.contains(&p));
+        if let Some(p) = prev {
+            if prev_enabled {
+                en.retain(|&t| t != p);
+                en.insert(0, p);
+            }
+        }
+        let k = st.decisions.len();
+        let chosen = if k < st.replay.len() {
+            let c = st.replay[k];
+            if !en.contains(&c) {
+                st.aborted = Some(Abort::ReplayDivergence(k));
+                self.cv.notify_all();
+                return;
+            }
+            c
+        } else {
+            match &mut st.policy {
+                RunPolicy::Dfs => en[0],
+                RunPolicy::Pct {
+                    change,
+                    next_change,
+                    demote,
+                    ..
+                } => {
+                    while *next_change < change.len()
+                        && change[*next_change] == k
+                    {
+                        // demote the current front-runner so a lower
+                        // priority thread takes over from here
+                        *next_change += 1;
+                        *demote = demote.saturating_sub(1);
+                        let d = *demote;
+                        if let Some(&top) = en.iter().max_by_key(|&&t| {
+                            st.threads[t].priority
+                        }) {
+                            st.threads[top].priority = d;
+                        }
+                    }
+                    *en.iter()
+                        .max_by_key(|&&t| {
+                            (st.threads[t].priority, std::cmp::Reverse(t))
+                        })
+                        .expect("mc: enabled set empty")
+                }
+            }
+        };
+        let chosen_idx = en
+            .iter()
+            .position(|&t| t == chosen)
+            .expect("mc: chosen thread not enabled");
+        st.decisions.push(Decision {
+            alts: en,
+            chosen_idx,
+            prev_enabled,
+        });
+        grant(st, chosen);
+        self.cv.notify_all();
+    }
+}
+
+fn enabled(st: &ExecSt, t: usize) -> bool {
+    let th = &st.threads[t];
+    if th.finished || th.granted {
+        return false;
+    }
+    match th.intent {
+        Intent::Start | Intent::Step => true,
+        Intent::Lock(m) => mutex_free(st, m),
+        Intent::Join(x) => st.threads[x].finished,
+        Intent::Recv(ch) => match st.objects[ch] {
+            Obj::Channel { queued, senders } => queued > 0 || senders == 0,
+            _ => false,
+        },
+        Intent::Wait { lock, timed, .. } => {
+            let free = mutex_free(st, lock);
+            if th.notified {
+                free
+            } else {
+                timed && free && st.spurious_left > 0
+            }
+        }
+    }
+}
+
+fn mutex_free(st: &ExecSt, m: usize) -> bool {
+    matches!(st.objects[m], Obj::Mutex { held_by: None })
+}
+
+/// Resolve the chosen thread's intent and mark it runnable.
+fn grant(st: &mut ExecSt, t: usize) {
+    let note = match st.threads[t].intent.clone() {
+        Intent::Start | Intent::Step | Intent::Join(_) => Note::Go,
+        Intent::Lock(m) => {
+            if let Obj::Mutex { held_by } = &mut st.objects[m] {
+                *held_by = Some(t);
+            }
+            Note::Go
+        }
+        Intent::Recv(ch) => {
+            if let Obj::Channel { queued, .. } = &mut st.objects[ch] {
+                if *queued > 0 {
+                    *queued -= 1;
+                    Note::RecvReady
+                } else {
+                    Note::RecvClosed
+                }
+            } else {
+                Note::Go
+            }
+        }
+        Intent::Wait { cv, lock, .. } => {
+            if let Obj::Mutex { held_by } = &mut st.objects[lock] {
+                *held_by = Some(t);
+            }
+            if st.threads[t].notified {
+                st.threads[t].notified = false;
+                Note::Go
+            } else {
+                // timeout / spurious wakeup: leave the wait set
+                if let Obj::Condvar { waiters } = &mut st.objects[cv] {
+                    waiters.retain(|&w| w != t);
+                }
+                st.spurious_left -= 1;
+                Note::TimedOut
+            }
+        }
+    };
+    st.threads[t].note = note;
+    st.threads[t].granted = true;
+}
+
+/// Classify a no-enabled-thread stall: a true deadlock, or a model
+/// artefact (timed waiters out of spurious budget).
+fn stall_kind(st: &ExecSt) -> Abort {
+    let starved_timed = st.threads.iter().any(|th| {
+        !th.finished
+            && !th.notified
+            && matches!(
+                th.intent,
+                Intent::Wait { timed: true, lock, .. }
+                    if mutex_free(st, lock)
+            )
+    });
+    if starved_timed && st.spurious_left == 0 {
+        return Abort::SpuriousExhausted;
+    }
+    let mut lines = Vec::new();
+    for (i, th) in st.threads.iter().enumerate() {
+        if th.finished {
+            continue;
+        }
+        lines.push(format!(
+            "  t{i} '{}': blocked on {:?}{}",
+            th.name,
+            th.intent,
+            if th.notified { " (notified)" } else { "" }
+        ));
+    }
+    Abort::Deadlock(lines.join("\n"))
+}
+
+// ---------------------------------------------------------------------
+// exploration drivers
+// ---------------------------------------------------------------------
+
+struct RunOutcome {
+    decisions: Vec<Decision>,
+    aborted: Option<Abort>,
+}
+
+fn run_once(
+    policy: RunPolicy,
+    replay: Vec<usize>,
+    max_steps: usize,
+    f: &Arc<dyn Fn() + Send + Sync>,
+) -> RunOutcome {
+    let exec = Arc::new(Exec::new(policy, replay, max_steps));
+    let t0 = exec.register_thread("main");
+    let e2 = Arc::clone(&exec);
+    let f2 = Arc::clone(f);
+    let h = std::thread::Builder::new()
+        .name("mc-main".to_string())
+        .spawn(move || {
+            set_ctx(&e2, t0);
+            let r = panic::catch_unwind(AssertUnwindSafe(|| {
+                e2.park_start(t0);
+                f2();
+            }));
+            match r {
+                Ok(()) => e2.finish(t0),
+                Err(p) if is_mc_abort(p.as_ref()) => e2.finish(t0),
+                Err(p) => e2.finish_panicked(t0, panic_msg(p.as_ref())),
+            }
+        })
+        .expect("mc: failed to spawn model main thread");
+    {
+        let mut st = lock_st(&exec.m);
+        exec.pick(&mut st, None);
+    }
+    exec.wait_done();
+    let _ = h.join();
+    let (decisions, aborted) = exec.take_result();
+    RunOutcome { decisions, aborted }
+}
+
+/// Preemption cost of choosing `alts[idx]` at a decision.
+fn alt_cost(d: &Decision, idx: usize) -> usize {
+    usize::from(d.prev_enabled && idx > 0)
+}
+
+/// The next DFS leaf in lexicographic order within the preemption
+/// budget, as a forced choice prefix; `None` when the space is done.
+fn next_prefix(
+    decisions: &[Decision],
+    max_preemptions: usize,
+) -> Option<Vec<usize>> {
+    let mut before = Vec::with_capacity(decisions.len());
+    let mut used = 0usize;
+    for d in decisions {
+        before.push(used);
+        used += alt_cost(d, d.chosen_idx);
+    }
+    for i in (0..decisions.len()).rev() {
+        let d = &decisions[i];
+        for j in (d.chosen_idx + 1)..d.alts.len() {
+            if before[i] + alt_cost(d, j) <= max_preemptions {
+                let mut p: Vec<usize> = decisions[..i]
+                    .iter()
+                    .map(|d| d.alts[d.chosen_idx])
+                    .collect();
+                p.push(d.alts[j]);
+                return Some(p);
+            }
+        }
+    }
+    None
+}
+
+/// A failing schedule, with enough detail to reproduce it.
+pub struct Failure {
+    /// 0-based index of the failing schedule under the policy.
+    pub schedule: usize,
+    /// Human-readable diagnosis (abort kind, trace, seed).
+    pub detail: String,
+}
+
+fn describe(abort: &Abort) -> String {
+    match abort {
+        Abort::Deadlock(d) => format!("deadlock (no schedulable thread):\n{d}"),
+        Abort::Panic(m) => format!("model thread panic: {m}"),
+        Abort::StepLimit(n) => format!("step limit exceeded ({n} decisions)"),
+        Abort::SpuriousExhausted => {
+            "spurious-wakeup budget exhausted (model inconclusive)"
+                .to_string()
+        }
+        Abort::ReplayDivergence(k) => format!(
+            "replay divergence at decision {k}: the model is not \
+             deterministic"
+        ),
+    }
+}
+
+fn trace_of(decisions: &[Decision]) -> String {
+    let ids: Vec<String> = decisions
+        .iter()
+        .map(|d| d.alts[d.chosen_idx].to_string())
+        .collect();
+    ids.join(" ")
+}
+
+/// The shared exploration loop.  `Ok` when every schedule passed,
+/// `Err` on the first failing schedule.
+fn explore(
+    name: &str,
+    cfg: &Config,
+    f: Arc<dyn Fn() + Send + Sync>,
+) -> Result<Outcome, Failure> {
+    let cap = schedule_cap();
+    match cfg.policy {
+        Policy::Dfs {
+            max_preemptions,
+            max_schedules,
+        } => {
+            let max_schedules = max_schedules.min(cap);
+            let mut prefix: Vec<usize> = Vec::new();
+            let mut schedules = 0;
+            loop {
+                let run = run_once(
+                    RunPolicy::Dfs,
+                    prefix.clone(),
+                    cfg.max_steps,
+                    &f,
+                );
+                if let Some(a) = &run.aborted {
+                    return Err(Failure {
+                        schedule: schedules,
+                        detail: format!(
+                            "model '{name}' failed under dfs schedule \
+                             {schedules}: {}\nschedule trace: [{}]",
+                            describe(a),
+                            trace_of(&run.decisions),
+                        ),
+                    });
+                }
+                schedules += 1;
+                if schedules >= max_schedules {
+                    return Ok(Outcome {
+                        schedules,
+                        exhausted: false,
+                    });
+                }
+                match next_prefix(&run.decisions, max_preemptions) {
+                    Some(p) => prefix = p,
+                    None => {
+                        return Ok(Outcome {
+                            schedules,
+                            exhausted: true,
+                        })
+                    }
+                }
+            }
+        }
+        Policy::Pct {
+            seed,
+            schedules,
+            change_points,
+        } => {
+            let schedules = schedules.min(cap);
+            for i in 0..schedules {
+                let s = seed
+                    ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                let mut rng = Pcg64::seeded(s);
+                let mut change: Vec<usize> = (0..change_points)
+                    .map(|_| rng.usize_below(PCT_EST_DECISIONS))
+                    .collect();
+                change.sort_unstable();
+                let policy = RunPolicy::Pct {
+                    rng,
+                    change,
+                    next_change: 0,
+                    demote: change_points as u64 + 1,
+                };
+                let run =
+                    run_once(policy, Vec::new(), cfg.max_steps, &f);
+                if let Some(a) = &run.aborted {
+                    return Err(Failure {
+                        schedule: i,
+                        detail: format!(
+                            "model '{name}' failed under pct schedule \
+                             {i} (seed {s:#x}): {}\nschedule trace: \
+                             [{}]",
+                            describe(a),
+                            trace_of(&run.decisions),
+                        ),
+                    });
+                }
+            }
+            Ok(Outcome {
+                schedules,
+                exhausted: false,
+            })
+        }
+    }
+}
+
+/// `KLA_MC_SCHEDULES` caps schedule counts (Miri runs the mc tests
+/// with a small cap; the interpreter is ~100x slower than native).
+fn schedule_cap() -> usize {
+    std::env::var("KLA_MC_SCHEDULES")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(usize::MAX)
+}
+
+/// Explore `f` under `cfg`; panic with a reproducible diagnosis on
+/// the first failing schedule.
+pub fn model<F>(name: &str, cfg: Config, f: F) -> Outcome
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    match explore(name, &cfg, Arc::new(f)) {
+        Ok(out) => out,
+        Err(fail) => panic!("{}", fail.detail),
+    }
+}
+
+/// Explore `f` expecting it to fail: returns the first failure, or
+/// `None` if every schedule passed (the regression tests use this to
+/// prove the checker *detects* seeded bug classes).
+pub fn model_expect_failure<F>(
+    name: &str,
+    cfg: Config,
+    f: F,
+) -> Option<Failure>
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    explore(name, &cfg, Arc::new(f)).err()
+}

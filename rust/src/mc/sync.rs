@@ -1,0 +1,543 @@
+//! Shimmable sync primitives (DESIGN.md §S19).
+//!
+//! Normal builds re-export `std::sync` — importing from `mc::sync`
+//! instead of `std::sync` is free and changes nothing.  Under
+//! `--features mc-shim` the same names resolve to shims that wrap the
+//! std primitive *and* mirror its state into the controlled scheduler
+//! ([`crate::mc::sched`]): every acquire, release, wait, notify,
+//! send, recv, load and store becomes a scheduling point.
+//!
+//! Shim objects constructed outside a model execution (no scheduler
+//! on the current thread) behave exactly like std forever, so the
+//! whole test suite can run with the feature enabled.  Objects that
+//! ARE modelled must be created *inside* the model closure; mixing a
+//! std-constructed lock into a model would block for real, outside
+//! the scheduler's control.
+//!
+//! In-model atomic accesses are sequentially consistent regardless of
+//! the `Ordering` argument — the checker explores interleavings, not
+//! weak-memory reorderings; ordering discipline is audited statically
+//! by the `atomic-ordering` lint pass.
+
+#[cfg(not(feature = "mc-shim"))]
+pub use std::sync::atomic::{AtomicBool, AtomicUsize};
+#[cfg(not(feature = "mc-shim"))]
+pub use std::sync::mpsc::{channel, Receiver, Sender};
+#[cfg(not(feature = "mc-shim"))]
+pub use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+
+#[cfg(feature = "mc-shim")]
+pub use shim::{
+    channel, AtomicBool, AtomicUsize, Condvar, Mutex, MutexGuard,
+    Receiver, Sender, WaitTimeoutResult,
+};
+
+#[cfg(feature = "mc-shim")]
+mod shim {
+    use std::sync::atomic::Ordering;
+    use std::sync::mpsc::{RecvError, SendError, TryRecvError};
+    use std::sync::{LockResult, PoisonError};
+    use std::time::Duration;
+
+    use crate::mc::sched::{self, Intent, Note, Obj, ObjKind, ObjRef};
+
+    // -----------------------------------------------------------------
+    // Mutex
+    // -----------------------------------------------------------------
+
+    // no Default impls for Mutex/Condvar: construction must go
+    // through `new` so the object registers with the scheduler.
+    #[derive(Debug)]
+    pub struct Mutex<T> {
+        inner: std::sync::Mutex<T>,
+        mc: ObjRef,
+    }
+
+    pub struct MutexGuard<'a, T> {
+        lock: &'a Mutex<T>,
+        inner: Option<std::sync::MutexGuard<'a, T>>,
+        /// True when the acquisition is tracked by the model (the
+        /// drop must then clear the model's `held_by`).
+        model: bool,
+    }
+
+    impl<T> Mutex<T> {
+        pub fn new(v: T) -> Mutex<T> {
+            Mutex {
+                inner: std::sync::Mutex::new(v),
+                mc: ObjRef::register(ObjKind::Mutex),
+            }
+        }
+
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            if let Some((exec, obj, me)) = self.mc.handle() {
+                exec.op(me, Intent::Lock(obj));
+                // The model granted us the lock, so the inner mutex
+                // is free (holders release it before parking).
+                let g = self
+                    .inner
+                    .lock()
+                    .unwrap_or_else(PoisonError::into_inner);
+                Ok(MutexGuard {
+                    lock: self,
+                    inner: Some(g),
+                    model: true,
+                })
+            } else {
+                match self.inner.lock() {
+                    Ok(g) => Ok(MutexGuard {
+                        lock: self,
+                        inner: Some(g),
+                        model: false,
+                    }),
+                    Err(e) => Err(PoisonError::new(MutexGuard {
+                        lock: self,
+                        inner: Some(e.into_inner()),
+                        model: false,
+                    })),
+                }
+            }
+        }
+    }
+
+    impl<T> std::ops::Deref for MutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.inner.as_ref().expect("mc: guard already released")
+        }
+    }
+
+    impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            self.inner.as_mut().expect("mc: guard already released")
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            // Release order matters: free the inner mutex BEFORE the
+            // model marks the lock free, so a model grant always
+            // finds the inner mutex uncontended.  Never a scheduling
+            // point (drops run during unwinding; the interleavings
+            // are covered by the next thread's op points).
+            drop(self.inner.take());
+            if self.model {
+                self.lock.mc.update(|o| {
+                    if let Obj::Mutex { held_by } = o {
+                        *held_by = None;
+                    }
+                });
+            }
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Condvar
+    // -----------------------------------------------------------------
+
+    /// Mirror of `std::sync::WaitTimeoutResult` (std's has no public
+    /// constructor, so the shim defines its own).
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub struct WaitTimeoutResult {
+        timed_out: bool,
+    }
+
+    impl WaitTimeoutResult {
+        pub fn timed_out(&self) -> bool {
+            self.timed_out
+        }
+    }
+
+    #[derive(Debug)]
+    pub struct Condvar {
+        inner: std::sync::Condvar,
+        mc: ObjRef,
+    }
+
+    impl Condvar {
+        pub fn new() -> Condvar {
+            Condvar {
+                inner: std::sync::Condvar::new(),
+                mc: ObjRef::register(ObjKind::Condvar),
+            }
+        }
+
+        pub fn wait<'a, T>(
+            &self,
+            guard: MutexGuard<'a, T>,
+        ) -> LockResult<MutexGuard<'a, T>> {
+            self.wait_inner(guard, None).map(|(g, _)| g)
+        }
+
+        pub fn wait_timeout<'a, T>(
+            &self,
+            guard: MutexGuard<'a, T>,
+            dur: Duration,
+        ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+            self.wait_inner(guard, Some(dur))
+        }
+
+        fn wait_inner<'a, T>(
+            &self,
+            mut guard: MutexGuard<'a, T>,
+            dur: Option<Duration>,
+        ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+            let lock = guard.lock;
+            if guard.model {
+                let (exec, cv, me) = self
+                    .mc
+                    .handle()
+                    .expect("mc: modelled mutex waited on foreign condvar");
+                let mobj = lock
+                    .mc
+                    .obj_id()
+                    .expect("mc: modelled guard without object id");
+                // The Wait intent releases the model lock atomically;
+                // disarm the guard so its drop does not double-free.
+                guard.model = false;
+                drop(guard);
+                let note = exec.op(
+                    me,
+                    Intent::Wait {
+                        cv,
+                        lock: mobj,
+                        timed: dur.is_some(),
+                    },
+                );
+                let g = lock
+                    .inner
+                    .lock()
+                    .unwrap_or_else(PoisonError::into_inner);
+                return Ok((
+                    MutexGuard {
+                        lock,
+                        inner: Some(g),
+                        model: true,
+                    },
+                    WaitTimeoutResult {
+                        timed_out: note == Note::TimedOut,
+                    },
+                ));
+            }
+            // outside any model: plain std behaviour
+            let g = guard.inner.take().expect("mc: guard already released");
+            drop(guard);
+            let remap = |g: std::sync::MutexGuard<'a, T>, t: bool| {
+                (
+                    MutexGuard {
+                        lock,
+                        inner: Some(g),
+                        model: false,
+                    },
+                    WaitTimeoutResult { timed_out: t },
+                )
+            };
+            match dur {
+                None => match self.inner.wait(g) {
+                    Ok(g) => Ok(remap(g, false)),
+                    Err(e) => Err(PoisonError::new(remap(
+                        e.into_inner(),
+                        false,
+                    ))),
+                },
+                Some(d) => match self.inner.wait_timeout(g, d) {
+                    Ok((g, t)) => Ok(remap(g, t.timed_out())),
+                    Err(e) => {
+                        let (g, t) = e.into_inner();
+                        Err(PoisonError::new(remap(g, t.timed_out())))
+                    }
+                },
+            }
+        }
+
+        pub fn notify_one(&self) {
+            if let Some((exec, cv, me)) = self.mc.handle() {
+                exec.op(me, Intent::Step);
+                exec.notify(cv, false);
+            } else {
+                self.inner.notify_one();
+            }
+        }
+
+        pub fn notify_all(&self) {
+            if let Some((exec, cv, me)) = self.mc.handle() {
+                exec.op(me, Intent::Step);
+                exec.notify(cv, true);
+            } else {
+                self.inner.notify_all();
+            }
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // atomics
+    // -----------------------------------------------------------------
+
+    // In-model accesses yield a scheduling point and then perform the
+    // real access; the model explores sequentially consistent
+    // interleavings only (module docs), so the in-model access uses
+    // SeqCst regardless of the requested ordering.
+
+    #[derive(Debug, Default)]
+    pub struct AtomicBool {
+        inner: std::sync::atomic::AtomicBool,
+    }
+
+    impl AtomicBool {
+        pub const fn new(v: bool) -> AtomicBool {
+            AtomicBool {
+                inner: std::sync::atomic::AtomicBool::new(v),
+            }
+        }
+
+        pub fn load(&self, ord: Ordering) -> bool {
+            if sched::step_point() {
+                // ord: in-model accesses are SeqCst by construction;
+                // the requested ordering is audited statically.
+                self.inner.load(Ordering::SeqCst)
+            } else {
+                self.inner.load(ord)
+            }
+        }
+
+        pub fn store(&self, v: bool, ord: Ordering) {
+            if sched::step_point() {
+                // ord: in-model accesses are SeqCst by construction;
+                // the requested ordering is audited statically.
+                self.inner.store(v, Ordering::SeqCst)
+            } else {
+                self.inner.store(v, ord)
+            }
+        }
+
+        pub fn swap(&self, v: bool, ord: Ordering) -> bool {
+            if sched::step_point() {
+                // ord: in-model accesses are SeqCst by construction;
+                // the requested ordering is audited statically.
+                self.inner.swap(v, Ordering::SeqCst)
+            } else {
+                self.inner.swap(v, ord)
+            }
+        }
+    }
+
+    #[derive(Debug, Default)]
+    pub struct AtomicUsize {
+        inner: std::sync::atomic::AtomicUsize,
+    }
+
+    impl AtomicUsize {
+        pub const fn new(v: usize) -> AtomicUsize {
+            AtomicUsize {
+                inner: std::sync::atomic::AtomicUsize::new(v),
+            }
+        }
+
+        pub fn load(&self, ord: Ordering) -> usize {
+            if sched::step_point() {
+                // ord: in-model accesses are SeqCst by construction;
+                // the requested ordering is audited statically.
+                self.inner.load(Ordering::SeqCst)
+            } else {
+                self.inner.load(ord)
+            }
+        }
+
+        pub fn store(&self, v: usize, ord: Ordering) {
+            if sched::step_point() {
+                // ord: in-model accesses are SeqCst by construction;
+                // the requested ordering is audited statically.
+                self.inner.store(v, Ordering::SeqCst)
+            } else {
+                self.inner.store(v, ord)
+            }
+        }
+
+        pub fn fetch_add(&self, v: usize, ord: Ordering) -> usize {
+            if sched::step_point() {
+                // ord: in-model accesses are SeqCst by construction;
+                // the requested ordering is audited statically.
+                self.inner.fetch_add(v, Ordering::SeqCst)
+            } else {
+                self.inner.fetch_add(v, ord)
+            }
+        }
+
+        pub fn fetch_sub(&self, v: usize, ord: Ordering) -> usize {
+            if sched::step_point() {
+                // ord: in-model accesses are SeqCst by construction;
+                // the requested ordering is audited statically.
+                self.inner.fetch_sub(v, Ordering::SeqCst)
+            } else {
+                self.inner.fetch_sub(v, ord)
+            }
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // mpsc channel
+    // -----------------------------------------------------------------
+
+    pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mc = ObjRef::register(ObjKind::Channel);
+        (
+            Sender {
+                inner: tx,
+                mc: mc.clone(),
+            },
+            Receiver { inner: rx, mc },
+        )
+    }
+
+    #[derive(Debug)]
+    pub struct Sender<T> {
+        inner: std::sync::mpsc::Sender<T>,
+        mc: ObjRef,
+    }
+
+    impl<T> Sender<T> {
+        pub fn send(&self, v: T) -> Result<(), SendError<T>> {
+            if let Some((exec, _, me)) = self.mc.handle() {
+                exec.op(me, Intent::Step);
+            }
+            let r = self.inner.send(v);
+            if r.is_ok() {
+                self.mc.update(|o| {
+                    if let Obj::Channel { queued, .. } = o {
+                        *queued += 1;
+                    }
+                });
+            }
+            r
+        }
+    }
+
+    impl<T> Clone for Sender<T> {
+        fn clone(&self) -> Sender<T> {
+            self.mc.update(|o| {
+                if let Obj::Channel { senders, .. } = o {
+                    *senders += 1;
+                }
+            });
+            Sender {
+                inner: self.inner.clone(),
+                mc: self.mc.clone(),
+            }
+        }
+    }
+
+    impl<T> Drop for Sender<T> {
+        fn drop(&mut self) {
+            // Dropping the last sender is visible (recv starts
+            // returning Disconnected) — give the scheduler a point,
+            // except during unwinds.
+            if !std::thread::panicking() {
+                if let Some((exec, _, me)) = self.mc.handle() {
+                    exec.op(me, Intent::Step);
+                }
+            }
+            self.mc.update(|o| {
+                if let Obj::Channel { senders, .. } = o {
+                    *senders = senders.saturating_sub(1);
+                }
+            });
+        }
+    }
+
+    #[derive(Debug)]
+    pub struct Receiver<T> {
+        inner: std::sync::mpsc::Receiver<T>,
+        mc: ObjRef,
+    }
+
+    impl<T> Receiver<T> {
+        pub fn recv(&self) -> Result<T, RecvError> {
+            if let Some((exec, obj, me)) = self.mc.handle() {
+                match exec.op(me, Intent::Recv(obj)) {
+                    Note::RecvClosed => Err(RecvError),
+                    _ => Ok(self
+                        .inner
+                        .try_recv()
+                        .expect("mc: channel queue out of sync")),
+                }
+            } else {
+                self.inner.recv()
+            }
+        }
+
+        pub fn iter(&self) -> Iter<'_, T> {
+            Iter { rx: self }
+        }
+
+        pub fn try_recv(&self) -> Result<T, TryRecvError> {
+            if let Some((exec, _, me)) = self.mc.handle() {
+                exec.op(me, Intent::Step);
+                let state = self
+                    .mc
+                    .update(|o| match o {
+                        Obj::Channel { queued, senders } => {
+                            if *queued > 0 {
+                                *queued -= 1;
+                                0
+                            } else if *senders == 0 {
+                                1
+                            } else {
+                                2
+                            }
+                        }
+                        _ => 2,
+                    })
+                    .unwrap_or(2);
+                match state {
+                    0 => Ok(self
+                        .inner
+                        .try_recv()
+                        .expect("mc: channel queue out of sync")),
+                    1 => Err(TryRecvError::Disconnected),
+                    _ => Err(TryRecvError::Empty),
+                }
+            } else {
+                self.inner.try_recv()
+            }
+        }
+    }
+
+    pub struct Iter<'a, T> {
+        rx: &'a Receiver<T>,
+    }
+
+    impl<T> Iterator for Iter<'_, T> {
+        type Item = T;
+        fn next(&mut self) -> Option<T> {
+            self.rx.recv().ok()
+        }
+    }
+
+    impl<'a, T> IntoIterator for &'a Receiver<T> {
+        type Item = T;
+        type IntoIter = Iter<'a, T>;
+        fn into_iter(self) -> Iter<'a, T> {
+            self.iter()
+        }
+    }
+
+    pub struct IntoIter<T> {
+        rx: Receiver<T>,
+    }
+
+    impl<T> Iterator for IntoIter<T> {
+        type Item = T;
+        fn next(&mut self) -> Option<T> {
+            self.rx.recv().ok()
+        }
+    }
+
+    impl<T> IntoIterator for Receiver<T> {
+        type Item = T;
+        type IntoIter = IntoIter<T>;
+        fn into_iter(self) -> IntoIter<T> {
+            IntoIter { rx: self }
+        }
+    }
+}

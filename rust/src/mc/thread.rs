@@ -1,0 +1,114 @@
+//! Thread spawn/join routed through the model checker.
+//!
+//! `util::thread_pool` (and any future concurrent module) spawns its
+//! OS threads through [`spawn_named`] instead of `std::thread`.  In
+//! normal builds this is a thin alias for `std::thread::Builder`;
+//! under `--features mc-shim`, threads spawned *inside* a model
+//! execution become controlled model threads: they run only when the
+//! scheduler grants them the baton, and `join` becomes a blocking
+//! model operation (enabled once the target thread finishes).
+//!
+//! A spawned model thread that unwinds with a user panic fails the
+//! whole execution (the diagnosis names the thread); the teardown
+//! unwind ([`crate::mc::sched`]'s private abort payload) is absorbed
+//! silently.
+
+#[cfg(not(feature = "mc-shim"))]
+pub type JoinHandle<T> = std::thread::JoinHandle<T>;
+
+/// Spawn a named thread (std passthrough in normal builds).
+#[cfg(not(feature = "mc-shim"))]
+pub fn spawn_named<T, F>(name: &str, f: F) -> std::io::Result<JoinHandle<T>>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    std::thread::Builder::new().name(name.to_string()).spawn(f)
+}
+
+#[cfg(feature = "mc-shim")]
+pub use shim::{spawn_named, JoinHandle};
+
+#[cfg(feature = "mc-shim")]
+mod shim {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::Arc;
+
+    use crate::mc::sched::{self, Exec, Intent};
+
+    pub struct JoinHandle<T> {
+        inner: std::thread::JoinHandle<Option<T>>,
+        mc: Option<(Arc<Exec>, usize)>,
+    }
+
+    impl<T> JoinHandle<T> {
+        pub fn join(self) -> std::thread::Result<T> {
+            if let Some((exec, tid)) = &self.mc {
+                if !std::thread::panicking() {
+                    if let Some((cur, me)) = sched::current_ctx() {
+                        if Arc::ptr_eq(&cur, exec) {
+                            // model join: enabled once `tid` finishes
+                            cur.op(me, Intent::Join(*tid));
+                        }
+                    }
+                }
+                // the target already ran finish(); the OS-level join
+                // below completes without model interaction
+            }
+            match self.inner.join() {
+                Ok(Some(v)) => Ok(v),
+                // the thread was torn down by a model abort; the
+                // joiner unwinds at its own next scheduling point
+                Ok(None) => Err(Box::new("mc: thread aborted")),
+                Err(e) => Err(e),
+            }
+        }
+    }
+
+    pub fn spawn_named<T, F>(
+        name: &str,
+        f: F,
+    ) -> std::io::Result<JoinHandle<T>>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        let builder =
+            std::thread::Builder::new().name(name.to_string());
+        if let Some((exec, me)) = sched::current_ctx() {
+            // the spawn itself is a visible op of the parent
+            exec.op(me, Intent::Step);
+            let tid = exec.register_thread(name);
+            let e2 = Arc::clone(&exec);
+            let inner = builder.spawn(move || {
+                sched::enter(&e2, tid);
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    e2.park_start(tid);
+                    f()
+                }));
+                match r {
+                    Ok(v) => {
+                        e2.finish(tid);
+                        Some(v)
+                    }
+                    Err(p) if sched::is_mc_abort(p.as_ref()) => {
+                        e2.finish(tid);
+                        None
+                    }
+                    Err(p) => {
+                        let msg = sched::panic_text(p.as_ref());
+                        e2.finish_panicked(tid, msg);
+                        None
+                    }
+                }
+            })?;
+            Ok(JoinHandle {
+                inner,
+                mc: Some((exec, tid)),
+            })
+        } else {
+            let inner = builder.spawn(move || Some(f()))?;
+            Ok(JoinHandle { inner, mc: None })
+        }
+    }
+}

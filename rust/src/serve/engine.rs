@@ -17,10 +17,16 @@
 //! entirely engine-side: backends keep returning raw logits, so every
 //! [`DecodeBackend`] inherits both for free (DESIGN.md §S17).
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+// Cancel flags and the LiveStats counters come from the model-checker
+// shims (std re-exports in normal builds, DESIGN.md §S19); the
+// request channel stays on std mpsc — intake is timeout-polled, not
+// interleaving-sensitive.
+use crate::mc::sync::{AtomicBool, AtomicUsize};
 
 use anyhow::Result;
 
@@ -405,6 +411,9 @@ impl PendingTable {
     /// Requests to retire at the next sweep: cancel flag set by the
     /// router, or sink observed closed (client gone — implicit cancel).
     fn dead_ids(&self) -> Vec<u64> {
+        // ord: SeqCst — the cancel flag is a cross-thread control
+        // edge (router store -> engine sweep load); strongest
+        // ordering, and it is nowhere near the hot path.
         self.rows
             .iter()
             .filter(|r| r.sink_closed || r.cancel.load(Ordering::SeqCst))
@@ -436,6 +445,8 @@ fn finish_request(f: &Finished, cache: &mut BeliefStateCache,
                   sched: &mut Scheduler, pending: &mut PendingTable,
                   stats: &mut EngineStats, live: &LiveStats) {
     stats.tokens_out += f.tokens.len();
+    // ord: Relaxed — monotonic stats counter mirrored for the stats
+    // endpoint; readers tolerate staleness, no ordering needed.
     live.tokens_out.fetch_add(f.tokens.len(), Ordering::Relaxed);
     let uncertainty = cache.slot_uncertainty(f.slot);
     cache.reset_slot(f.slot);
@@ -458,6 +469,9 @@ fn finish_request(f: &Finished, cache: &mut BeliefStateCache,
 /// the `{"cmd":"stats"}` protocol line answers during serving.
 fn sync_prefix_live(pc: &PrefixCache, live: &LiveStats) {
     let s = pc.stats();
+    // ord: Relaxed — stats mirror for the protocol endpoint; the
+    // seven stores need no ordering among themselves or with
+    // anything else, readers tolerate a torn snapshot.
     live.prefix_hits.store(s.hits, Ordering::Relaxed);
     live.prefix_partial_hits.store(s.partial_hits, Ordering::Relaxed);
     live.prefix_misses.store(s.misses, Ordering::Relaxed);
@@ -531,6 +545,8 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
     // clamp of its own)
     let vmax = crate::util::cast::vocab_max_token(backend.vocab());
 
+    // ord: SeqCst — process-wide shutdown latch; set once by the
+    // server, polled here between iterations.  Not hot, keep strong.
     while (!disconnected && !shutdown.load(Ordering::SeqCst))
         || sched.has_work()
     {
@@ -544,6 +560,8 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
                 match rx.recv_timeout(Duration::from_millis(20)) {
                     Ok(m) => Some(m),
                     Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                        // ord: SeqCst — same shutdown latch as the
+                        // loop condition above.
                         if shutdown.load(Ordering::SeqCst) {
                             disconnected = true;
                         }
@@ -595,6 +613,7 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
                         cache: req.cache,
                     });
                     stats.requests += 1;
+                    // ord: Relaxed — stats mirror, no ordering needed.
                     live.requests.fetch_add(1, Ordering::Relaxed);
                 }
                 None => break,
@@ -622,6 +641,7 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
                 Some(Cancelled::Queued) | None => (Vec::new(), 0.0),
             };
             stats.cancelled += 1;
+            // ord: Relaxed — stats mirrors, no ordering needed.
             live.cancelled.fetch_add(1, Ordering::Relaxed);
             stats.wasted_tokens += tokens.len();
             live.wasted_tokens.fetch_add(tokens.len(), Ordering::Relaxed);
@@ -720,6 +740,7 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
                         Ok((_, lane)) => {
                             cache.write_slot(slot, &lane)?;
                             stats.prefill_tokens += n_toks;
+                            // ord: Relaxed — stats mirror.
                             live.prefill_tokens
                                 .fetch_add(n_toks, Ordering::Relaxed);
                             // prefix cache: snapshot the slot at block-
@@ -761,6 +782,7 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
                                 let _ = sched.cancel(id);
                                 sched.release(slot);
                                 stats.failed += 1;
+                                // ord: Relaxed — stats mirror.
                                 live.failed
                                     .fetch_add(1, Ordering::Relaxed);
                                 if let Some((sink, ..)) =
@@ -859,6 +881,7 @@ pub fn run_engine_opts<B: DecodeBackend>(backend: &B,
             stats.step_ms.push(elapsed_ms * (1.0 - prefill_frac));
         }
         stats.steps += 1;
+        // ord: Relaxed — stats mirrors, no ordering needed.
         live.steps.fetch_add(1, Ordering::Relaxed);
         if legacy_prefill_lanes > 0 {
             stats.prefill_tokens += legacy_prefill_lanes;

@@ -155,10 +155,17 @@ use std::collections::hash_map::Entry;
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
 use std::time::Instant;
+
+// The connection-side sync state — shutdown latch, per-request cancel
+// flags, the active-request map and each connection's writer channel —
+// comes from the model-checker shims (std re-exports in normal
+// builds), so the ConnSink terminal-delivery protocol is
+// model-checked under `--features mc-shim` (DESIGN.md §S19).  The
+// engine request channel stays on std mpsc (see `serve_with`).
+use crate::mc::sync::{channel, AtomicBool, Mutex, Sender};
 
 use std::path::PathBuf;
 
@@ -222,6 +229,8 @@ pub struct ServerHandle {
 impl ServerHandle {
     /// Signal shutdown and collect engine stats.
     pub fn stop(mut self) -> Result<EngineStats> {
+        // ord: SeqCst — process-wide shutdown latch; set once here,
+        // polled by the engine and every router thread.
         self.shutdown.store(true, Ordering::SeqCst);
         // poke the listener so accept() returns
         let _ = TcpStream::connect(&self.addr);
@@ -308,7 +317,9 @@ pub fn serve_with(spec: EngineSpec, cfg: &ServeConfig)
     let listener = TcpListener::bind(&cfg.addr)
         .with_context(|| format!("binding {}", cfg.addr))?;
     let addr = listener.local_addr()?.to_string();
-    let (tx, rx) = channel::<EngineRequest>();
+    // the engine request queue stays on std mpsc: intake is polled
+    // with recv_timeout, which the model checker does not shim
+    let (tx, rx) = std::sync::mpsc::channel::<EngineRequest>();
     let opts = EngineOptions::from_serve(cfg);
     let shutdown = Arc::new(AtomicBool::new(false));
     let live = Arc::new(LiveStats::default());
@@ -334,6 +345,8 @@ pub fn serve_with(spec: EngineSpec, cfg: &ServeConfig)
     let self_addr = addr.clone();
     let listener_join = std::thread::spawn(move || {
         for stream in listener.incoming() {
+            // ord: SeqCst — control edge: any thread's shutdown store
+            // (handle_line, ServerHandle::stop) must be seen here
             if shutdown2.load(Ordering::SeqCst) {
                 break;
             }
@@ -365,14 +378,14 @@ pub fn serve_with(spec: EngineSpec, cfg: &ServeConfig)
 /// Shared by the reader thread (registration, `{"cmd":"cancel"}`,
 /// disconnect sweep) and the per-request sinks (a `done` event retires
 /// its entry).
-type ActiveMap = Arc<Mutex<HashMap<u64, Arc<AtomicBool>>>>;
+pub(crate) type ActiveMap = Arc<Mutex<HashMap<u64, Arc<AtomicBool>>>>;
 
 /// The engine-side event sink for one request on one connection:
 /// serialises events to protocol lines tagged with the wire id and hands
 /// them to the connection's writer thread.  Reports [`SinkClosed`] once
 /// the connection is known dead (reader saw EOF or the writer hit a
 /// write error), which the engine treats as an implicit cancel.
-struct ConnSink {
+pub(crate) struct ConnSink {
     id: u64,
     writer: Sender<String>,
     closed: Arc<AtomicBool>,
@@ -387,8 +400,30 @@ struct ConnSink {
     terminal_sent: AtomicBool,
 }
 
+#[cfg(test)]
+impl ConnSink {
+    /// Build a sink on caller-supplied plumbing.  Used by this file's
+    /// unit tests and by the model-checked terminal-delivery invariant
+    /// in `crate::mc` (which explores engine-drop vs. disconnect
+    /// interleavings against the REAL sink, not a model of it).
+    pub(crate) fn for_test(id: u64, writer: Sender<String>,
+                           closed: Arc<AtomicBool>, active: ActiveMap)
+                           -> Self {
+        ConnSink {
+            id,
+            writer,
+            closed,
+            active,
+            terminal_sent: AtomicBool::new(false),
+        }
+    }
+}
+
 impl Drop for ConnSink {
     fn drop(&mut self) {
+        // ord: SeqCst — pairs with the store in `send`; both run on the
+        // engine thread today, but the latch must stay correct if a
+        // sink ever outlives its request on another thread
         if self.terminal_sent.load(Ordering::SeqCst) {
             return;
         }
@@ -404,6 +439,8 @@ impl Drop for ConnSink {
 
 impl EventSink for ConnSink {
     fn send(&self, ev: EngineEvent) -> std::result::Result<(), SinkClosed> {
+        // ord: SeqCst — reader/writer threads store `closed`; the
+        // engine thread must observe it to stop decoding for the peer
         if self.closed.load(Ordering::SeqCst) {
             return Err(SinkClosed);
         }
@@ -456,6 +493,8 @@ impl EventSink for ConnSink {
             // the id becomes reusable the moment its terminal event is
             // enqueued — BEFORE the send, so a reader that saw `done`
             // can immediately resubmit the id without racing this map
+            // ord: SeqCst — latch store must be visible to Drop (which
+            // may run on the engine thread after an error path)
             self.terminal_sent.store(true, Ordering::SeqCst);
             // a poisoned map must not panic the engine thread (it is
             // the thread calling send): the id stays registered, which
@@ -468,7 +507,8 @@ impl EventSink for ConnSink {
     }
 }
 
-fn handle_conn(stream: TcpStream, tx: Sender<EngineRequest>,
+fn handle_conn(stream: TcpStream,
+               tx: std::sync::mpsc::Sender<EngineRequest>,
                defaults: Arc<ProtocolDefaults>, shutdown: Arc<AtomicBool>,
                live: Arc<LiveStats>, self_addr: String)
                -> Result<()> {
@@ -491,6 +531,8 @@ fn handle_conn(stream: TcpStream, tx: Sender<EngineRequest>,
             {
                 // peer gone: flag it so sinks stop producing, and stop
                 // consuming — remaining senders see a dropped receiver
+                // ord: SeqCst — must reach the engine thread's load in
+                // `ConnSink::send` so it retires the request
                 closed_writer.store(true, Ordering::SeqCst);
                 break;
             }
@@ -518,6 +560,8 @@ fn handle_conn(stream: TcpStream, tx: Sender<EngineRequest>,
                 break;
             }
         }
+        // ord: SeqCst — see the flag our own handle_line (or any other
+        // connection's) just stored, before blocking on the next line
         if shutdown.load(Ordering::SeqCst) {
             break;
         }
@@ -526,6 +570,9 @@ fn handle_conn(stream: TcpStream, tx: Sender<EngineRequest>,
     // marked closed and every request still in flight on this connection
     // is implicitly cancelled, so the engine stops burning batch lanes
     // on a dead connection instead of decoding to max_new into the void
+    // ord: SeqCst — both stores are cross-thread control edges read by
+    // the engine (`closed` in ConnSink::send, cancel flags in the
+    // sweep); the per-request flags below ride the same rationale
     closed.store(true, Ordering::SeqCst);
     // poisoned map: the panicking thread already flagged nothing, but
     // the sinks' `closed` check above still retires every in-flight
@@ -544,7 +591,9 @@ fn handle_conn(stream: TcpStream, tx: Sender<EngineRequest>,
 /// Everything a protocol line may need, bundled so `handle_line` stays
 /// testable and the reader loop readable.
 struct ConnCtx<'a> {
-    tx: &'a Sender<EngineRequest>,
+    // std channel on purpose: must match the engine thread's Receiver
+    // (see `serve_with`); the engine polls it with `recv_timeout`.
+    tx: &'a std::sync::mpsc::Sender<EngineRequest>,
     defaults: &'a ProtocolDefaults,
     shutdown: &'a AtomicBool,
     live: &'a LiveStats,
@@ -570,6 +619,8 @@ fn handle_line(line: &str, ctx: &ConnCtx) -> Option<Json> {
         };
         match cmd {
             "shutdown" => {
+                // ord: SeqCst — read by the listener loop, every
+                // reader loop, and the engine's per-step check
                 ctx.shutdown.store(true, Ordering::SeqCst);
                 // poke our own accept() so the listener observes the
                 // flag and exits — without this, a client-issued
@@ -630,6 +681,8 @@ fn handle_line(line: &str, ctx: &ConnCtx) -> Option<Json> {
                 let found = match ctx.active.lock() {
                     Ok(map) => match map.get(&id) {
                         Some(flag) => {
+                            // ord: SeqCst — engine sweeps this flag
+                            // from its own thread between steps
                             flag.store(true, Ordering::SeqCst);
                             true
                         }
@@ -1257,19 +1310,18 @@ impl Iterator for ClientStream<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::channel;
 
+    // `channel` here is the mc::sync one from the parent's imports: a
+    // std passthrough normally, a model-aware shim under `mc-shim`
+    // (where it degrades to std outside a model execution, so these
+    // tests behave identically under both builds).
     fn sink(id: u64, writer: Sender<String>, active: &ActiveMap)
             -> ConnSink {
         active.lock().unwrap()
             .insert(id, Arc::new(AtomicBool::new(false)));
-        ConnSink {
-            id,
-            writer,
-            closed: Arc::new(AtomicBool::new(false)),
-            active: active.clone(),
-            terminal_sent: AtomicBool::new(false),
-        }
+        ConnSink::for_test(id, writer,
+                           Arc::new(AtomicBool::new(false)),
+                           active.clone())
     }
 
     #[test]

@@ -17,6 +17,9 @@ static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 static START: OnceLock<Instant> = OnceLock::new();
 
 pub fn set_level(level: Level) {
+    // ord: Relaxed — single byte of config, no data published with it;
+    // a racing logger may use the old level for one line, harmless
+    // lint: allow(atomic-ordering, advisory config byte, no payload)
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
@@ -32,6 +35,8 @@ pub fn level_from_env() {
 }
 
 pub fn enabled(level: Level) -> bool {
+    // ord: Relaxed — see set_level; gating is advisory, not an edge
+    // lint: allow(atomic-ordering, advisory gate; see set_level)
     level as u8 >= LEVEL.load(Ordering::Relaxed)
 }
 

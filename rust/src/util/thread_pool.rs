@@ -14,13 +14,21 @@
 //! not return until every job spawned inside it has finished — the same
 //! structured-concurrency argument `std::thread::scope` makes, applied
 //! to persistent workers.
+//!
+//! The pool's sync primitives come from [`crate::mc::sync`] (std
+//! re-exports in normal builds), so the Gate/Scope protocols are
+//! model-checked under `--features mc-shim` — no deadlock, no lost
+//! wakeup, scope completion, panic propagation (DESIGN.md §S19).
 
 use std::collections::VecDeque;
 use std::marker::PhantomData;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, OnceLock};
 use std::time::Duration;
+
+use crate::mc::sync::{AtomicBool, AtomicUsize, Condvar, Mutex};
+use crate::mc::thread::{spawn_named, JoinHandle};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -60,8 +68,10 @@ impl Shared {
     /// Pop a job from any deque (used by assisting scope callers, which
     /// own no deque of their own).
     fn steal_any(&self) -> Option<Job> {
-        for q in &self.queues {
-            if let Some(job) = q.lock().unwrap().pop_back() {
+        for victim in 0..self.queues.len() {
+            if let Some(job) =
+                self.queues[victim].lock().unwrap().pop_back()
+            {
                 return Some(job);
             }
         }
@@ -69,6 +79,9 @@ impl Shared {
     }
 
     fn submit(&self, job: Job) {
+        // ord: Relaxed — the cursor only spreads load round-robin;
+        // job handoff is ordered by the deque mutex below.
+        // lint: allow(atomic-ordering, load-balance cursor only)
         let slot = self.next.fetch_add(1, Ordering::Relaxed)
             % self.queues.len();
         self.queues[slot].lock().unwrap().push_back(job);
@@ -108,7 +121,7 @@ fn worker_loop(shared: Arc<Shared>, me: usize) {
 /// work-stealing deques.
 pub struct ThreadPool {
     shared: Arc<Shared>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    handles: Vec<JoinHandle<()>>,
 }
 
 impl ThreadPool {
@@ -124,10 +137,10 @@ impl ThreadPool {
         let handles = (0..n)
             .map(|me| {
                 let shared = Arc::clone(&shared);
-                std::thread::Builder::new()
-                    .name(format!("kla-pool-{me}"))
-                    .spawn(move || worker_loop(shared, me))
-                    .expect("spawn pool worker")
+                spawn_named(&format!("kla-pool-{me}"), move || {
+                    worker_loop(shared, me)
+                })
+                .expect("spawn pool worker")
             })
             .collect();
         ThreadPool { shared, handles }
@@ -184,6 +197,13 @@ impl ThreadPool {
         }
         match out {
             Ok(r) => {
+                // ord: Acquire pairs with the Release store in the
+                // job wrapper.  The flag is written before the job's
+                // final pending-- under the mutex, and read here only
+                // after this thread observed pending == 0 under the
+                // same mutex — so the mutex alone already orders the
+                // handoff; Acquire/Release keeps the flag correct
+                // even if the wait loop is ever rewritten without it.
                 assert!(
                     !state.panicked.load(Ordering::Acquire),
                     "thread_pool: a scoped job panicked"
@@ -233,6 +253,9 @@ impl<'pool, 'scope> Scope<'pool, 'scope> {
         let state = Arc::clone(&self.state);
         let job: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
             if catch_unwind(AssertUnwindSafe(f)).is_err() {
+                // ord: Release makes the flag visible to the scope
+                // caller's Acquire load; the pending mutex below
+                // orders it too (see the load site in scope()).
                 state.panicked.store(true, Ordering::Release);
             }
             let mut pending = state.pending.lock().unwrap();
